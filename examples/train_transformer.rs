@@ -1,0 +1,62 @@
+//! End-to-end validation driver (DESIGN.md §7): data-parallel training of
+//! the AOT-compiled transformer with gradient allreduce over vcmpi.
+//!
+//! All three layers compose here: the Pallas/JAX model was lowered at
+//! build time (`make artifacts`), this binary executes it through PJRT,
+//! and every gradient byte crosses the vcmpi library the paper builds.
+//!
+//!     make artifacts && cargo run --release --example train_transformer -- \
+//!         [--steps 300] [--workers 2] [--buckets 4] [--lr 0.2]
+//!
+//! The loss curve is printed and the run is recorded in EXPERIMENTS.md.
+
+use vcmpi::coordinator::{train, TrainConfig};
+
+fn arg(args: &[String], key: &str, default: usize) -> usize {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let cfg = TrainConfig {
+        steps: arg(&args, "--steps", 300),
+        workers: arg(&args, "--workers", 2),
+        buckets: arg(&args, "--buckets", 4),
+        lr: arg(&args, "--lr-milli", 350) as f32 / 1000.0,
+        log_every: 20,
+        ..Default::default()
+    };
+    println!(
+        "training: {} workers, {} steps, {} gradient buckets (1 comm each), lr={}",
+        cfg.workers, cfg.steps, cfg.buckets, cfg.lr
+    );
+    let t0 = std::time::Instant::now();
+    let r = train(cfg)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!("\nparams:          {}", r.params);
+    println!("first loss:      {:.4}", r.first_loss);
+    println!("final loss:      {:.4}", r.final_loss);
+    println!("step time:       {:.1} ms (allreduce {:.1} ms)", r.step_ms, r.allreduce_ms);
+    println!("wallclock:       {secs:.1}s");
+    // Compact loss curve (every 10th step).
+    println!("\nloss curve (every 10 steps):");
+    for (i, chunk) in r.losses.chunks(10).enumerate() {
+        println!("  step {:4}: {:.4}", i * 10, chunk[0]);
+    }
+    // ln(512) ~ 6.24 is the uniform-prediction floor; a clear, sustained
+    // drop demonstrates the three layers compose (the affine-chain corpus
+    // saturates much lower with more steps).
+    anyhow::ensure!(
+        r.final_loss < r.first_loss - 0.4,
+        "training failed to reduce loss: {} -> {}",
+        r.first_loss,
+        r.final_loss
+    );
+    println!("\nloss reduced by {:.1}x — all three layers compose.",
+        r.first_loss / r.final_loss);
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT lowering: every compute graph the rust runtime executes, as HLO TEXT.
+
+HLO *text*, NOT serialized protos: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md and gen_hlo.py.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Outputs (per graph): <name>.hlo.txt plus a manifest.json describing
+argument/result shapes for the rust loader.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_of(x):
+    return {"shape": list(x.shape), "dtype": x.dtype.name}
+
+
+def lower_entry(fn, example_args, name):
+    """Lower `fn` (tupled results) and return (hlo_text, manifest entry)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out = jax.eval_shape(fn, *example_args)
+    outs = out if isinstance(out, tuple) else (out,)
+    entry = {
+        "name": name,
+        "inputs": [_spec_of(a) for a in example_args],
+        "outputs": [_spec_of(o) for o in outs],
+    }
+    return text, entry
+
+
+def build_all(out_dir: str, cfg: ModelConfig) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"model_config": dataclass_dict(cfg), "entries": []}
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    P = model.param_count(cfg)
+    spec = jax.ShapeDtypeStruct
+
+    graphs = [
+        (
+            "train_grad_step",
+            lambda p, t: model.grad_step(cfg, p, t),
+            (spec((P,), f32), spec((cfg.batch, cfg.seq), i32)),
+        ),
+        (
+            "train_sgd_step",
+            lambda p, g, lr: (model.sgd_step(p, g, lr),),
+            (spec((P,), f32), spec((P,), f32), spec((), f32)),
+        ),
+        (
+            "train_loss",
+            lambda p, t: (model.loss_fn(cfg, p, t),),
+            (spec((P,), f32), spec((cfg.batch, cfg.seq), i32)),
+        ),
+        (
+            "bspmm_tile",
+            lambda a, b, c: (model.bspmm_tile_step(a, b, c),),
+            (spec((128, 128), f32), spec((128, 128), f32), spec((128, 128), f32)),
+        ),
+        (
+            "stencil_block",
+            lambda u: (model.stencil_block_step(u),),
+            (spec((66, 66), f32),),
+        ),
+        (
+            "ebms_band",
+            lambda xs, idx, d: (model.ebms_band_step(xs, idx, d),),
+            (spec((4096,), f32), spec((2048,), i32), spec((2048,), f32)),
+        ),
+    ]
+
+    for name, fn, args in graphs:
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text, entry = lower_entry(fn, args, name)
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = f"{name}.hlo.txt"
+        manifest["entries"].append(entry)
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TSV twin for the rust loader (no JSON parser in the offline crate set):
+    #   name \t file \t in:shape:dtype;... \t out:shape:dtype;...
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        mc = manifest["model_config"]
+        f.write(
+            "#model_config\t"
+            + "\t".join(f"{k}={v}" for k, v in sorted(mc.items()))
+            + "\n"
+        )
+        for e in manifest["entries"]:
+            ins = ";".join(
+                "x".join(map(str, s["shape"])) + ":" + s["dtype"] for s in e["inputs"]
+            )
+            outs = ";".join(
+                "x".join(map(str, s["shape"])) + ":" + s["dtype"] for s in e["outputs"]
+            )
+            f.write(f"{e['name']}\t{e['file']}\t{ins}\t{outs}\n")
+    print(f"  wrote {os.path.join(out_dir, 'manifest.json')} (+ .tsv)")
+    return manifest
+
+
+def dataclass_dict(cfg: ModelConfig):
+    return {
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_head": cfg.n_head,
+        "n_layer": cfg.n_layer,
+        "d_ff": cfg.d_ff,
+        "seq": cfg.seq,
+        "batch": cfg.batch,
+        "param_count": model.param_count(cfg),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layer", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    cfg = ModelConfig(
+        d_model=args.d_model, n_layer=args.n_layer, seq=args.seq, batch=args.batch
+    )
+    print(f"AOT-lowering (params={model.param_count(cfg):,}) -> {args.out_dir}")
+    build_all(args.out_dir, cfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: BSPMM tile multiply-accumulate (NWChem §6.3).
+
+The get-compute-update worker's compute hot spot: C_acc += A @ B over
+dense f32 tiles fetched via MPI_Get.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation / §8):
+  * Tiles are MXU-shaped: the contraction runs over (TM, TK) x (TK, TN)
+    blocks with TM = TN = TK = 128 by default — one MXU systolic pass per
+    block pair, f32 accumulate.
+  * BlockSpec walks K in `grid` steps so each VMEM residency holds one
+    (TM, TK) A-block, one (TK, TN) B-block, and the (TM, TN) accumulator:
+    3 * 128*128*4 B = 192 KiB << 16 MiB VMEM.
+  * `interpret=True` everywhere in this environment: the CPU PJRT plugin
+    cannot execute Mosaic custom-calls; real-TPU numbers are estimated in
+    DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE = 128
+
+
+def _mac_kernel(a_ref, b_ref, c_ref, o_ref, *, k_steps):
+    """Grid point (i, j, k): o[i,j] (+)= a[i,k] @ b[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+    del k_steps
+
+
+def bspmm_tile(a, b, c_acc, *, block=DEFAULT_TILE):
+    """C_acc + A @ B via a K-stepped Pallas grid.
+
+    a: (M, K) f32; b: (K, N) f32; c_acc: (M, N) f32. M, K, N must be
+    multiples of `block`.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % block == 0 and n % block == 0 and k % block == 0, (
+        f"dims ({m},{k},{n}) must be multiples of {block}"
+    )
+    grid = (m // block, n // block, k // block)
+    kernel = functools.partial(_mac_kernel, k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, kk: (i, kk)),  # A
+            pl.BlockSpec((block, block), lambda i, j, kk: (kk, j)),  # B
+            pl.BlockSpec((block, block), lambda i, j, kk: (i, j)),   # C_acc
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT execution; see module docstring
+    )(a, b, c_acc)
+
+
+def vmem_bytes(block=DEFAULT_TILE):
+    """Estimated VMEM residency of one grid step (A + B + C blocks)."""
+    return 3 * block * block * 4

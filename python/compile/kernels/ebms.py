@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: EBMS per-particle attenuation (paper §6.2's compute).
+
+After a worker fetches one energy band of the cross-section table via
+MPI_Get, it tracks its share of particles through that band:
+out[n] = exp(-xs_band[idx[n]] * dist[n]).
+
+TPU mapping (DESIGN.md §8): the band (<= 256 KiB) stays VMEM-resident
+across the whole particle stream; particles stream through in blocks.
+Gather from the band + VPU transcendental per element. `interpret=True`
+as everywhere in this build (see bspmm.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ebms_kernel(xs_ref, idx_ref, dist_ref, o_ref):
+    xs = xs_ref[...]
+    idx = idx_ref[...]
+    dist = dist_ref[...]
+    sigma = xs[idx]
+    o_ref[...] = jnp.exp(-sigma * dist)
+
+
+def ebms_attenuate(xs_band, idx, dist, *, particle_block=1024):
+    """Attenuation of `len(idx)` particles through one band.
+
+    xs_band: (B,) f32 cross-sections; idx: (N,) i32 band indices in [0, B);
+    dist: (N,) f32 path lengths. N must be a multiple of `particle_block`
+    (pick particle_block = N for a single block).
+    """
+    (n,) = idx.shape
+    if n % particle_block != 0:
+        particle_block = n
+    grid = (n // particle_block,)
+    return pl.pallas_call(
+        functools.partial(_ebms_kernel),
+        grid=grid,
+        in_specs=[
+            # The whole band is resident for every particle block.
+            pl.BlockSpec(xs_band.shape, lambda b: (0,)),
+            pl.BlockSpec((particle_block,), lambda b: (b,)),
+            pl.BlockSpec((particle_block,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((particle_block,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(xs_band, idx, dist)
+
+
+def vmem_bytes(band, particle_block=1024):
+    """Estimated VMEM residency: band + one particle block (idx/dist/out)."""
+    return band * 4 + 3 * particle_block * 4

@@ -1,0 +1,33 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package must match its oracle to float tolerance;
+`python/tests/` enforces this with fixed cases plus hypothesis sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def bspmm_tile_ref(a, b, c_acc):
+    """One BSPMM work unit: C_acc += A @ B (f32 tiles)."""
+    return c_acc + jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def stencil_ref(u):
+    """5-point stencil over a padded (H+2, W+2) grid -> (H, W).
+
+    out = 0.25 * (N + S + E + W) - center   (Jacobi-style update)
+    """
+    center = u[1:-1, 1:-1]
+    north = u[:-2, 1:-1]
+    south = u[2:, 1:-1]
+    west = u[1:-1, :-2]
+    east = u[1:-1, 2:]
+    return 0.25 * (north + south + east + west) - center
+
+
+def ebms_attenuate_ref(xs_band, idx, dist):
+    """EBMS: per-particle attenuation through one energy band.
+
+    out[n] = exp(-xs_band[idx[n]] * dist[n])
+    """
+    return jnp.exp(-xs_band[idx] * dist)

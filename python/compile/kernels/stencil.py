@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: 5-point stencil update (paper §6.1's workload).
+
+Each MPI+threads worker owns a (H, W) sub-block (halo exchanged through
+vcmpi); the local update is this kernel over the halo-padded (H+2, W+2)
+input.
+
+TPU mapping (DESIGN.md §8): element-wise VPU work, no MXU. The padded
+block is held in VMEM in full — the default per-thread block in the paper's
+stencil runs is at most (514, 514) f32 ~ 1.06 MiB << 16 MiB, so a single
+VMEM residency with shifted-slice reads is the right schedule (halo bands
+would add copies without saving memory at these sizes). `interpret=True`
+as everywhere in this build (see bspmm.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil_kernel(u_ref, o_ref):
+    u = u_ref[...]
+    center = u[1:-1, 1:-1]
+    north = u[:-2, 1:-1]
+    south = u[2:, 1:-1]
+    west = u[1:-1, :-2]
+    east = u[1:-1, 2:]
+    o_ref[...] = 0.25 * (north + south + east + west) - center
+
+
+def stencil_step(u_padded):
+    """Apply the 5-point update to a halo-padded (H+2, W+2) f32 grid,
+    returning the (H, W) interior update."""
+    hp, wp = u_padded.shape
+    h, w = hp - 2, wp - 2
+    assert h >= 1 and w >= 1
+    return pl.pallas_call(
+        _stencil_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(u_padded)
+
+
+def vmem_bytes(h, w):
+    """Estimated VMEM residency: padded input + output."""
+    return ((h + 2) * (w + 2) + h * w) * 4

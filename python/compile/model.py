@@ -1,0 +1,186 @@
+"""L2: JAX compute graphs compiled AOT for the rust runtime.
+
+Two families:
+
+1. The dist-train tie-in (DESIGN.md §7): a small GPT-style causal LM with
+   **flat f32 parameters** so the rust coordinator can bucket one vector
+   into per-communicator allreduce chunks:
+     * grad_step(flat_params, tokens) -> (loss, flat_grads)
+     * sgd_step(flat_params, flat_grads, lr)   -> flat_params'
+   The transformer blocks use plain jnp (XLA-fused) — interpret-mode
+   Pallas in the training hot loop would be prohibitively slow on CPU; a
+   Pallas-MLP variant exists for correctness tests only.
+
+2. The paper's application compute (called from the rust app drivers):
+     * bspmm_tile_step — Pallas tile MAC (kernels/bspmm.py)
+     * stencil_block_step — Pallas 5-point update (kernels/stencil.py)
+     * ebms_band_step — Pallas attenuation (kernels/ebms.py)
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bspmm as bspmm_k
+from .kernels import ebms as ebms_k
+from .kernels import stencil as stencil_k
+
+
+# ---------------------------------------------------------------------------
+# Transformer (flat-parameter causal LM)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 256
+    n_head: int = 4
+    n_layer: int = 4
+    d_ff: int = 1024
+    seq: int = 64
+    batch: int = 8
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_head
+
+
+def param_shapes(cfg: ModelConfig):
+    """Ordered (name, shape) list defining the flat-parameter layout."""
+    shapes = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+    for layer in range(cfg.n_layer):
+        p = f"l{layer}."
+        shapes += [
+            (p + "ln1_g", (cfg.d_model,)),
+            (p + "ln1_b", (cfg.d_model,)),
+            (p + "wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_g", (cfg.d_model,)),
+            (p + "ln2_b", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    shapes += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    return shapes
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_shapes(cfg))
+
+
+def unflatten(cfg: ModelConfig, flat):
+    """Split the flat vector into the named parameter dict."""
+    params = {}
+    off = 0
+    for name, shape in param_shapes(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def init_flat_params(cfg: ModelConfig, key) -> jax.Array:
+    """Scaled-normal init, flattened in layout order."""
+    chunks = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            chunks.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        elif name.endswith(("_b",)):
+            chunks.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(
+                jnp.float32(fan_in)
+            )
+            chunks.append(w.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def _layernorm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _attn(cfg: ModelConfig, x, wqkv, wo):
+    b, t, d = x.shape
+    qkv = x @ wqkv  # (b, t, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, cfg.n_head, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(jnp.float32(cfg.head_dim))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo
+
+
+def forward(cfg: ModelConfig, flat_params, tokens):
+    """Causal-LM logits (B, T, vocab)."""
+    p = unflatten(cfg, flat_params)
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :, :]
+    for layer in range(cfg.n_layer):
+        pre = f"l{layer}."
+        h = _layernorm(x, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        x = x + _attn(cfg, h, p[pre + "wqkv"], p[pre + "wo"])
+        h = _layernorm(x, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        x = x + jax.nn.gelu(h @ p[pre + "w1"]) @ p[pre + "w2"]
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    # Weight-tied readout.
+    return x @ p["tok_emb"].T
+
+
+def loss_fn(cfg: ModelConfig, flat_params, tokens):
+    """Next-token cross-entropy over (B, T) token ids."""
+    logits = forward(cfg, flat_params, tokens)  # (B, T, V)
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1, :]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def grad_step(cfg: ModelConfig, flat_params, tokens):
+    """One worker's contribution: (loss, flat_grads)."""
+    loss, grads = jax.value_and_grad(functools.partial(loss_fn, cfg))(
+        flat_params, tokens
+    )
+    return loss, grads
+
+
+def sgd_step(flat_params, flat_grads, lr):
+    """Plain SGD on the flat vector (lr is a scalar array)."""
+    return flat_params - lr * flat_grads
+
+
+# ---------------------------------------------------------------------------
+# Application compute graphs (wrap the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def bspmm_tile_step(a, b, c_acc):
+    """One BSPMM work unit (Pallas inside)."""
+    return bspmm_k.bspmm_tile(a, b, c_acc)
+
+
+def stencil_block_step(u_padded):
+    """One stencil block update (Pallas inside)."""
+    return stencil_k.stencil_step(u_padded)
+
+
+def ebms_band_step(xs_band, idx, dist):
+    """One EBMS band-tracking step (Pallas inside)."""
+    return ebms_k.ebms_attenuate(xs_band, idx, dist)

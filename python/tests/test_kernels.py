@@ -1,0 +1,142 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Fixed cases plus hypothesis sweeps over shapes/values.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bspmm, ebms, ref, stencil
+
+
+def rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# BSPMM tile MAC
+# ---------------------------------------------------------------------------
+
+
+class TestBspmm:
+    def test_matches_ref_128(self):
+        a, b, c = rand(0, (128, 128)), rand(1, (128, 128)), rand(2, (128, 128))
+        got = bspmm.bspmm_tile(a, b, c)
+        want = ref.bspmm_tile_ref(a, b, c)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_multi_tile_grid(self):
+        # 256x384x512: exercises the (i, j, k) grid with k accumulation.
+        a, b, c = rand(3, (256, 384)), rand(4, (384, 512)), rand(5, (256, 512))
+        got = bspmm.bspmm_tile(a, b, c)
+        want = ref.bspmm_tile_ref(a, b, c)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_tiles_passthrough(self):
+        a = jnp.zeros((128, 128), jnp.float32)
+        b = jnp.zeros((128, 128), jnp.float32)
+        c = rand(6, (128, 128))
+        np.testing.assert_allclose(bspmm.bspmm_tile(a, b, c), c, rtol=1e-6)
+
+    def test_rejects_ragged_dims(self):
+        with pytest.raises(AssertionError):
+            bspmm.bspmm_tile(
+                jnp.zeros((100, 128)), jnp.zeros((128, 128)), jnp.zeros((100, 128))
+            )
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        m=st.sampled_from([1, 2, 3]),
+        k=st.sampled_from([1, 2]),
+        n=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**31 - 1),
+        block=st.sampled_from([32, 64]),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed, block):
+        a = rand(seed, (m * block, k * block))
+        b = rand(seed + 1, (k * block, n * block))
+        c = rand(seed + 2, (m * block, n * block))
+        got = bspmm.bspmm_tile(a, b, c, block=block)
+        want = ref.bspmm_tile_ref(a, b, c)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_vmem_estimate_under_budget(self):
+        assert bspmm.vmem_bytes(128) < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Stencil
+# ---------------------------------------------------------------------------
+
+
+class TestStencil:
+    def test_matches_ref(self):
+        u = rand(7, (66, 66))
+        np.testing.assert_allclose(
+            stencil.stencil_step(u), ref.stencil_ref(u), rtol=1e-6, atol=1e-6
+        )
+
+    def test_constant_field_fixed_point_structure(self):
+        # For u == 1 everywhere: update = 0.25*4*1 - 1 = 0.
+        u = jnp.ones((34, 34), jnp.float32)
+        np.testing.assert_allclose(
+            stencil.stencil_step(u), jnp.zeros((32, 32)), atol=1e-7
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        h=st.integers(1, 40),
+        w=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, h, w, seed):
+        u = rand(seed, (h + 2, w + 2), -10.0, 10.0)
+        np.testing.assert_allclose(
+            stencil.stencil_step(u), ref.stencil_ref(u), rtol=1e-5, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# EBMS attenuation
+# ---------------------------------------------------------------------------
+
+
+class TestEbms:
+    def test_matches_ref(self):
+        xs = rand(8, (4096,), 0.0, 3.0)
+        idx = jax.random.randint(jax.random.PRNGKey(9), (2048,), 0, 4096)
+        d = rand(10, (2048,), 0.0, 2.0)
+        np.testing.assert_allclose(
+            ebms.ebms_attenuate(xs, idx, d),
+            ref.ebms_attenuate_ref(xs, idx, d),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+    def test_zero_distance_is_unity(self):
+        xs = rand(11, (64,), 0.0, 5.0)
+        idx = jnp.arange(64, dtype=jnp.int32)
+        d = jnp.zeros(64, jnp.float32)
+        np.testing.assert_allclose(
+            ebms.ebms_attenuate(xs, idx, d), jnp.ones(64), atol=1e-7
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        band=st.sampled_from([16, 256, 1000]),
+        n=st.sampled_from([64, 1024, 1536]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, band, n, seed):
+        xs = rand(seed, (band,), 0.0, 4.0)
+        idx = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, band)
+        d = rand(seed + 2, (n,), 0.0, 1.0)
+        np.testing.assert_allclose(
+            ebms.ebms_attenuate(xs, idx, d),
+            ref.ebms_attenuate_ref(xs, idx, d),
+            rtol=1e-5,
+            atol=1e-6,
+        )

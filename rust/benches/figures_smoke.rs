@@ -1,0 +1,26 @@
+//! Bench: smoke-regenerate a representative subset of the paper
+//! figures/tables at reduced scale — proving the evaluation pipeline end
+//! to end while keeping `cargo bench` bounded on the 1-core host.
+//! (`repro figures all --scale 2` regenerates EVERYTHING; its output is
+//! committed as figures_output.txt.)
+
+use vcmpi::bench::figures;
+
+const SMOKE: &[&str] =
+    &["fig2", "fig4", "table1", "fig8", "fig17", "headline", "ablate-policy"];
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    for id in SMOKE.iter().copied() {
+        let f0 = std::time::Instant::now();
+        let csv = figures::run_figure(id, 1).expect("known id");
+        println!(
+            "### {id} ({} rows, {:.1}s)",
+            csv.rows.len(),
+            f0.elapsed().as_secs_f64()
+        );
+        csv.print();
+        println!();
+    }
+    println!("smoke subset regenerated in {:.1}s (full set: repro figures all)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,38 @@
+//! Bench: the §5 message-rate benchmark across all six execution modes —
+//! the end-to-end series behind Figs. 10/11/13. Deterministic DES runs;
+//! values are exact per configuration.
+
+use vcmpi::bench::{message_rate, Mode, Op, RateParams};
+use vcmpi::fabric::Interconnect;
+
+fn main() {
+    let msgs = std::env::var("BENCH_MSGS").ok().and_then(|v| v.parse().ok()).unwrap_or(1024);
+    println!("== message_rate: 8-byte Isend, 2 nodes, {msgs} msgs/core ==");
+    println!("{:<24} {:>8} {:>14}", "mode", "threads", "Mmsg/s");
+    for mode in Mode::all() {
+        for threads in [1usize, 4, 16] {
+            let r = message_rate(RateParams {
+                mode,
+                threads,
+                msgs_per_core: msgs,
+                ..Default::default()
+            });
+            println!("{:<24} {:>8} {:>14.3}", mode.label(), threads, r / 1e6);
+        }
+    }
+    println!("\n== message_rate: 8-byte Put, 16 cores ==");
+    println!("{:<24} {:>10} {:>14}", "mode", "fabric", "Mmsg/s");
+    for ic in [Interconnect::Opa, Interconnect::Ib] {
+        for mode in [Mode::Everywhere, Mode::ParCommVcis, Mode::Endpoints] {
+            let r = message_rate(RateParams {
+                mode,
+                interconnect: ic,
+                threads: 16,
+                op: Op::Put,
+                msgs_per_core: (msgs / 4).max(64),
+                ..Default::default()
+            });
+            println!("{:<24} {:>10} {:>14.3}", mode.label(), format!("{ic:?}"), r / 1e6);
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Bench: per-operation virtual-time costs of the MPI critical path under
+//! each critical-section mode — the microscopic view behind Table 1 and
+//! Figs. 2/12. Custom harness (criterion is unavailable offline): each
+//! measurement is a deterministic DES run, so a single sample is exact.
+
+use vcmpi::fabric::{FabricConfig, Interconnect};
+use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, Src, Tag};
+use vcmpi::platform::pnow;
+use vcmpi::sim::SimOutcome;
+
+fn op_costs(label: &str, cfg: MpiConfig) {
+    let spec = ClusterSpec::new(
+        FabricConfig {
+            interconnect: Interconnect::Opa,
+            nodes: 2,
+            procs_per_node: 1,
+            max_contexts_per_node: 64,
+        },
+        cfg,
+        1,
+    );
+    let label2 = label.to_string();
+    let r = run_cluster(spec, move |proc, _t| {
+        let world = proc.comm_world();
+        const N: u64 = 256;
+        if proc.rank() == 0 {
+            // Immediate isend+wait cost (amortized over N).
+            let t0 = pnow(proc.backend);
+            for _ in 0..N {
+                let req = proc.isend(&world, 1, 1, &[0u8; 8]);
+                proc.wait(req);
+            }
+            let isend_ns = (pnow(proc.backend) - t0) / N;
+            // Irecv post cost (no traffic yet for these tags).
+            let t0 = pnow(proc.backend);
+            let reqs: Vec<_> =
+                (0..N).map(|_| proc.irecv(&world, Src::Rank(1), Tag::Value(2))).collect();
+            let irecv_ns = (pnow(proc.backend) - t0) / N;
+            // Tell rank 1 to send the matching messages, then drain.
+            proc.send(&world, 1, 9, &[]);
+            proc.waitall(reqs);
+            // One empty progress iteration.
+            let t0 = pnow(proc.backend);
+            for _ in 0..N {
+                proc.progress_for_request(0);
+            }
+            let progress_ns = (pnow(proc.backend) - t0) / N;
+            println!(
+                "{label2:24} isend+wait(imm) {isend_ns:5} ns | irecv-post {irecv_ns:5} ns | progress-iter {progress_ns:5} ns"
+            );
+        } else {
+            for _ in 0..N {
+                let _ = proc.recv(&world, Src::Rank(0), Tag::Value(1));
+            }
+            let _ = proc.recv(&world, Src::Rank(0), Tag::Value(9));
+            for _ in 0..N {
+                proc.send(&world, 0, 2, &[0u8; 8]);
+            }
+        }
+        proc.barrier(&world);
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed);
+}
+
+fn main() {
+    println!("== op_costs: single-threaded critical-path costs (virtual ns) ==");
+    op_costs("global (original)", MpiConfig::original());
+    op_costs("fg single-vci", MpiConfig::fg_single_vci());
+    op_costs("fg+all-opts (16 vci)", MpiConfig::optimized(16));
+    let mut unsafe_cfg = MpiConfig::optimized(16);
+    unsafe_cfg.unsafe_no_thread_safety = true;
+    op_costs("no locks/atomics", unsafe_cfg);
+}

@@ -1,0 +1,40 @@
+//! The paper's three applications (§6), one per category:
+//!
+//! * [`stencil`] — 2-D 5-point halo exchange (category 1: directly usable
+//!   dedicated channels). Fig. 22.
+//! * [`ebms`] — OpenMC energy-band RMA fetch (categories 1+2: independent
+//!   gets, but shared progress on software-RMA fabrics). Figs. 24, 25.
+//! * [`bspmm`] — NWChem block-sparse matmul, get-compute-update
+//!   (category 3: accumulate semantics pin threads to one window).
+//!   Fig. 27.
+//!
+//! Each module provides a sim-backend benchmark (the paper's figure) and a
+//! native-backend driver with real PJRT compute (used by `examples/`).
+
+pub mod bspmm;
+pub mod ebms;
+pub mod stencil;
+
+/// App execution mode (the subset of §5 modes the app figures use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppMode {
+    Everywhere,
+    ParCommVcis,
+    ParCommOrig,
+    Endpoints,
+}
+
+impl AppMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AppMode::Everywhere => "everywhere",
+            AppMode::ParCommVcis => "par+vcis",
+            AppMode::ParCommOrig => "par+orig_mpich",
+            AppMode::Endpoints => "endpoints",
+        }
+    }
+
+    pub fn all() -> [AppMode; 4] {
+        [AppMode::Everywhere, AppMode::ParCommVcis, AppMode::ParCommOrig, AppMode::Endpoints]
+    }
+}

@@ -1,0 +1,305 @@
+//! 2-D 5-point stencil halo exchange (paper §6.1, Fig. 22).
+//!
+//! Topology: `nodes_x * nodes_y` nodes, each running a `tx * ty` block of
+//! workers (threads for MPI+threads, processes for MPI everywhere). The
+//! global mesh is partitioned into per-worker blocks; each iteration
+//! exchanges 1-cell halos with the four neighbors.
+//!
+//! * MPI+threads: internode halos go through MPI; intranode halos read
+//!   shared memory directly (modeled as a memcpy charge) — the paper's
+//!   setup.
+//! * MPI everywhere: every halo (intra- and internode) goes through MPI;
+//!   the fabric routes same-node traffic over the shm path.
+//!
+//! Communicator scheme for par_comm (paper Fig. 21): for each direction
+//! (NS, EW) and node-parity (even, odd) there is one communicator per
+//! boundary lane, so no two threads of a rank share a communicator.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::fabric::{FabricConfig, Interconnect};
+use crate::mpi::{run_cluster, ClusterSpec, Comm, MpiConfig, Src, Tag};
+use crate::platform::{pnow, Backend, PBarrier};
+use crate::sim::SimOutcome;
+
+use super::AppMode;
+
+#[derive(Clone)]
+pub struct StencilParams {
+    pub mode: AppMode,
+    pub interconnect: Interconnect,
+    /// Node grid (paper: 3x3 = 9 nodes).
+    pub nodes_x: usize,
+    pub nodes_y: usize,
+    /// Worker grid per node (paper: 4x4 = 16 cores).
+    pub tx: usize,
+    pub ty: usize,
+    /// Global square mesh dimension (cells per side).
+    pub mesh: usize,
+    pub iters: usize,
+}
+
+impl Default for StencilParams {
+    fn default() -> Self {
+        StencilParams {
+            mode: AppMode::ParCommVcis,
+            interconnect: Interconnect::Opa,
+            nodes_x: 3,
+            nodes_y: 3,
+            tx: 4,
+            ty: 4,
+            mesh: 3072,
+            iters: 6,
+        }
+    }
+}
+
+/// Returns the mean halo-exchange time per iteration (ns, virtual).
+pub fn halo_time(p: StencilParams) -> f64 {
+    let threads = p.tx * p.ty;
+    let nodes = p.nodes_x * p.nodes_y;
+    let (ppn, tpp, cfg) = match p.mode {
+        AppMode::Everywhere => (threads, 1, MpiConfig::everywhere()),
+        AppMode::ParCommVcis => (1, threads, MpiConfig::optimized(17)),
+        AppMode::ParCommOrig => (1, threads, MpiConfig::original()),
+        AppMode::Endpoints => (1, threads, MpiConfig::optimized(threads + 1)),
+    };
+    let mut spec = ClusterSpec::new(
+        FabricConfig {
+            interconnect: p.interconnect,
+            nodes,
+            procs_per_node: ppn,
+            max_contexts_per_node: 64,
+        },
+        cfg,
+        tpp,
+    );
+    spec.time_limit = Some(200_000_000);
+    let p = Arc::new(p);
+    let pp = p.clone();
+    let comms: Arc<Mutex<HashMap<usize, Vec<Comm>>>> = Arc::new(Mutex::new(HashMap::new()));
+    let eps: Arc<Mutex<HashMap<usize, Comm>>> = Arc::new(Mutex::new(HashMap::new()));
+    let bars: Arc<Mutex<HashMap<usize, Arc<PBarrier>>>> = Arc::new(Mutex::new(HashMap::new()));
+    {
+        let mut b = bars.lock().unwrap();
+        for proc in 0..nodes * ppn {
+            b.insert(proc, Arc::new(PBarrier::new(Backend::Sim, tpp)));
+        }
+    }
+
+    let r = run_cluster(spec, move |proc, t| {
+        let p = &*pp;
+        let world = proc.comm_world();
+        let me = proc.rank();
+        let bar = bars.lock().unwrap().get(&me).unwrap().clone();
+        let threads = p.tx * p.ty;
+
+        // Identity: global worker coordinates on the (nodes_x*tx, nodes_y*ty)
+        // worker grid.
+        let (node, worker) = match p.mode {
+            AppMode::Everywhere => (me / threads, me % threads),
+            _ => (me, t),
+        };
+        let (nx, ny) = (node % p.nodes_x, node / p.nodes_x);
+        let (wx, wy) = (worker % p.tx, worker / p.tx);
+        let gx = nx * p.tx + wx;
+        let gy = ny * p.ty + wy;
+        let gw = p.nodes_x * p.tx; // global workers per row
+        let gh = p.nodes_y * p.ty;
+        let block = p.mesh / gw.max(1); // cells per worker side
+        let halo_bytes = block * 4; // one row/col of f32
+
+        // par_comm communicator sets (created in identical order on every
+        // process): [dir 0=NS | 1=EW][parity][lane].
+        if t == 0 && matches!(p.mode, AppMode::ParCommVcis | AppMode::ParCommOrig) {
+            let mut v = Vec::new();
+            for _dir in 0..2 {
+                for _parity in 0..2 {
+                    for _lane in 0..p.tx.max(p.ty) {
+                        v.push(proc.comm_dup(&world));
+                    }
+                }
+            }
+            comms.lock().unwrap().insert(me, v);
+        }
+        if t == 0 && p.mode == AppMode::Endpoints {
+            let ep = proc.create_endpoints(&world, threads);
+            eps.lock().unwrap().insert(me, ep);
+        }
+        bar.wait();
+        if t == 0 {
+            proc.barrier(&world);
+        }
+        bar.wait();
+
+        // Neighbor in global worker coords -> (proc, worker) identity.
+        let locate = |x: isize, y: isize| -> Option<(usize, usize)> {
+            if x < 0 || y < 0 || x >= gw as isize || y >= gh as isize {
+                return None;
+            }
+            let (x, y) = (x as usize, y as usize);
+            let node = (y / p.ty) * p.nodes_x + (x / p.tx);
+            let worker = (y % p.ty) * p.tx + (x % p.tx);
+            let proc_id = match p.mode {
+                AppMode::Everywhere => node * threads + worker,
+                _ => node,
+            };
+            Some((proc_id, worker))
+        };
+
+        // Choose the communicator for an internode exchange in direction
+        // `dir` (0 = NS, 1 = EW). Both sides of an exchange must pick the
+        // same communicator, so the odd/even set is selected by the parity
+        // of the LOWER node of the pair along the exchange axis (the
+        // paper's odd/even scheme, Fig. 21).
+        let lanes = p.tx.max(p.ty);
+        let comm_for = |dir: usize, lane: usize, sign: i32| -> Comm {
+            let coord = if dir == 0 { ny } else { nx };
+            // sign 0 = exchanging toward the negative side (lower node is
+            // the neighbor), sign 1 = toward positive (lower node is us).
+            let lower = if sign == 0 { coord.wrapping_sub(1) } else { coord };
+            let parity = lower % 2;
+            match p.mode {
+                AppMode::ParCommVcis | AppMode::ParCommOrig => {
+                    comms.lock().unwrap().get(&me).unwrap()
+                        [dir * 2 * lanes + parity * lanes + lane]
+                        .clone()
+                }
+                _ => world.clone(),
+            }
+        };
+
+        let mut total = 0u64;
+        for it in 0..p.iters {
+            // Funneled barrier before each exchange (discards load
+            // imbalance, as the paper does).
+            if t == 0 {
+                proc.barrier(&world);
+            }
+            bar.wait();
+            let t0 = pnow(proc.backend);
+            // Four directions: (dx, dy, dir, lane).
+            // (dx, dy, dir, lane, sign): sign distinguishes the +/- side.
+            let dirs: [(isize, isize, usize, usize, i32); 4] = [
+                (0, -1, 0, wx, 0), // north
+                (0, 1, 0, wx, 1),  // south
+                (-1, 0, 1, wy, 0), // west
+                (1, 0, 1, wy, 1),  // east
+            ];
+            let mut reqs = Vec::new();
+            for &(dx, dy, dir, lane, sign) in &dirs {
+                let Some((nproc, nworker)) = locate(gx as isize + dx, gy as isize + dy)
+                else {
+                    continue;
+                };
+                let same_node = match p.mode {
+                    AppMode::Everywhere => nproc / threads == node,
+                    _ => nproc == me,
+                };
+                if same_node && p.mode != AppMode::Everywhere {
+                    // MPI+threads intranode: direct shared-memory read.
+                    crate::platform::padvance(
+                        proc.backend,
+                        proc.costs.memcpy_cost(halo_bytes),
+                    );
+                    continue;
+                }
+                let payload = vec![0u8; halo_bytes];
+                // A north-facing send matches the neighbor's south-facing
+                // receive: tag by direction axis + the *sender's* side; the
+                // receive uses the mirrored side.
+                let base = (it % 2) as i32 * 8 + dir as i32 * 2;
+                let send_tag = base + sign;
+                let recv_tag = base + (1 - sign);
+                match p.mode {
+                    AppMode::Endpoints => {
+                        let ep = eps.lock().unwrap().get(&me).unwrap().clone();
+                        let to = proc.endpoint_rank(&ep, nproc, nworker);
+                        reqs.push(proc.isend_ep(&ep, Some(t), to, send_tag, &payload, false));
+                        reqs.push(proc.irecv_ep(&ep, Some(t), Src::Rank(to), Tag::Value(recv_tag)));
+                    }
+                    AppMode::Everywhere => {
+                        reqs.push(proc.isend(&world, nproc, send_tag, &payload));
+                        reqs.push(proc.irecv(&world, Src::Rank(nproc), Tag::Value(recv_tag)));
+                    }
+                    _ => {
+                        let comm = comm_for(dir, lane, sign);
+                        reqs.push(proc.isend(&comm, nproc, send_tag, &payload));
+                        reqs.push(proc.irecv(&comm, Src::Rank(nproc), Tag::Value(recv_tag)));
+                    }
+                }
+            }
+            proc.waitall(reqs);
+            bar.wait();
+            if t == 0 {
+                proc.barrier(&world);
+            }
+            bar.wait();
+            total += pnow(proc.backend) - t0;
+        }
+        if me == 0 && t == 0 {
+            crate::mpi::world::record("halo_ns", total as f64 / p.iters as f64);
+        }
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed, "stencil run: {:?}", r.outcome);
+    r.measurements["halo_ns"]
+}
+
+/// Fig. 22 driver: halo time across mesh sizes for each mode.
+pub fn fig22(meshes: &[usize], iters: usize) -> crate::bench::Csv {
+    let mut csv = crate::bench::Csv::new(&["mode", "mesh", "halo_us"]);
+    for mode in [AppMode::Everywhere, AppMode::ParCommOrig, AppMode::ParCommVcis, AppMode::Endpoints]
+    {
+        for &mesh in meshes {
+            let ns = halo_time(StencilParams { mode, mesh, iters, ..Default::default() });
+            csv.row(&[mode.label().into(), mesh.to_string(), format!("{:.2}", ns / 1e3)]);
+        }
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_stencil_all_modes_complete() {
+        for mode in AppMode::all() {
+            let ns = halo_time(StencilParams {
+                mode,
+                nodes_x: 2,
+                nodes_y: 1,
+                tx: 2,
+                ty: 2,
+                mesh: 256,
+                iters: 2,
+                ..Default::default()
+            });
+            assert!(ns > 0.0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn bigger_halos_cost_more() {
+        let small = halo_time(StencilParams {
+            nodes_x: 2,
+            nodes_y: 1,
+            tx: 2,
+            ty: 2,
+            mesh: 256,
+            iters: 2,
+            ..Default::default()
+        });
+        let big = halo_time(StencilParams {
+            nodes_x: 2,
+            nodes_y: 1,
+            tx: 2,
+            ty: 2,
+            mesh: 4096,
+            iters: 2,
+            ..Default::default()
+        });
+        assert!(big > small, "big={big} small={small}");
+    }
+}

@@ -1,0 +1,363 @@
+//! The communication-intensive message-rate benchmark of paper §5:
+//! "the maximum rate at which multiple cores can inject messages into the
+//! network simultaneously. Each core on the host node targets a distinct
+//! core on the remote node."
+//!
+//! Six modes of execution (paper §5) plus config overrides for the §4.3
+//! ablations (Figs. 5-8, 12).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::fabric::{FabricConfig, Interconnect};
+use crate::mpi::{run_cluster, ClusterSpec, Comm, MpiConfig, MpiProc, Src, Tag};
+use crate::platform::{Backend, PBarrier};
+use crate::sim::SimOutcome;
+
+/// Execution modes from paper §5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// MPI everywhere: one single-threaded process per core.
+    Everywhere,
+    /// MPI+threads, no exposed parallelism, original (1 VCI, Global CS).
+    SerCommOrig,
+    /// MPI+threads, no exposed parallelism, optimized multi-VCI library.
+    SerCommVcis,
+    /// MPI+threads, per-thread communicators/windows, original library.
+    ParCommOrig,
+    /// MPI+threads, per-thread communicators/windows, multi-VCI library.
+    ParCommVcis,
+    /// MPI+threads with user-visible endpoints (one per thread).
+    Endpoints,
+}
+
+impl Mode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Mode::Everywhere => "everywhere",
+            Mode::SerCommOrig => "ser_comm+orig_mpich",
+            Mode::SerCommVcis => "ser_comm+vcis",
+            Mode::ParCommOrig => "par_comm+orig_mpich",
+            Mode::ParCommVcis => "par_comm+vcis",
+            Mode::Endpoints => "endpoints",
+        }
+    }
+
+    pub fn all() -> [Mode; 6] {
+        [
+            Mode::Everywhere,
+            Mode::SerCommOrig,
+            Mode::SerCommVcis,
+            Mode::ParCommOrig,
+            Mode::ParCommVcis,
+            Mode::Endpoints,
+        ]
+    }
+}
+
+/// Operation under test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Isend,
+    Put,
+}
+
+#[derive(Clone)]
+pub struct RateParams {
+    pub mode: Mode,
+    pub interconnect: Interconnect,
+    /// Cores per node engaged (threads for MPI+threads, processes for
+    /// MPI everywhere).
+    pub threads: usize,
+    pub msg_size: usize,
+    /// Messages issued per core.
+    pub msgs_per_core: usize,
+    /// Outstanding-operations window (batch size between waitalls/flushes).
+    pub window: usize,
+    pub op: Op,
+    /// Override the derived MpiConfig (ablations).
+    pub cfg_override: Option<MpiConfig>,
+}
+
+impl Default for RateParams {
+    fn default() -> Self {
+        RateParams {
+            mode: Mode::ParCommVcis,
+            interconnect: Interconnect::Opa,
+            threads: 16,
+            msg_size: 8,
+            msgs_per_core: 1500,
+            window: 64,
+            op: Op::Isend,
+            cfg_override: None,
+        }
+    }
+}
+
+/// Derive (fabric topology, mpi config, threads per proc) for a mode.
+fn derive(p: &RateParams) -> (FabricConfig, MpiConfig, usize) {
+    let t = p.threads;
+    let fabric = |ppn: usize| FabricConfig {
+        interconnect: p.interconnect,
+        nodes: 2,
+        procs_per_node: ppn,
+        max_contexts_per_node: 64,
+    };
+    let (fab, cfg, tpp) = match p.mode {
+        Mode::Everywhere => (fabric(t), MpiConfig::everywhere(), 1),
+        Mode::SerCommOrig | Mode::ParCommOrig => (fabric(1), MpiConfig::original(), t),
+        Mode::SerCommVcis | Mode::ParCommVcis => (fabric(1), MpiConfig::optimized(t + 1), t),
+        // +1 VCI: endpoints come from the pool (fallback excluded).
+        Mode::Endpoints => (fabric(1), MpiConfig::optimized(t + 1), t),
+    };
+    let cfg = p.cfg_override.clone().unwrap_or(cfg);
+    (fab, cfg, tpp)
+}
+
+/// Run the benchmark; returns aggregate messages/second (virtual time).
+pub fn message_rate(p: RateParams) -> f64 {
+    let (fab, cfg, tpp) = derive(&p);
+    let nodes_procs = fab.procs_per_node;
+    let mut spec = ClusterSpec::new(fab, cfg, tpp);
+    spec.time_limit = Some(600_000_000_000);
+    let p = Arc::new(p);
+    let pp = p.clone();
+
+    // Shared setup state (comms / windows / endpoints), per process.
+    type CommMap = HashMap<usize, Vec<Comm>>;
+    let comms: Arc<Mutex<CommMap>> = Arc::new(Mutex::new(HashMap::new()));
+    let wins: Arc<Mutex<HashMap<usize, Vec<Arc<crate::mpi::Window>>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let eps: Arc<Mutex<HashMap<usize, Comm>>> = Arc::new(Mutex::new(HashMap::new()));
+    let bars: Arc<Mutex<HashMap<usize, Arc<PBarrier>>>> = Arc::new(Mutex::new(HashMap::new()));
+    {
+        let mut b = bars.lock().unwrap();
+        for proc in 0..2 * nodes_procs {
+            b.insert(proc, Arc::new(PBarrier::new(Backend::Sim, tpp)));
+        }
+    }
+
+    let r = run_cluster(spec, move |proc, t| {
+        let p = &*pp;
+        let world = proc.comm_world();
+        let me = proc.rank();
+        let nprocs = proc.nprocs();
+        let half = nprocs / 2;
+        let is_sender_proc = me < half;
+        let bar = bars.lock().unwrap().get(&me).unwrap().clone();
+
+        // ---- setup: communication channels per mode ----
+        if t == 0 {
+            match p.mode {
+                Mode::ParCommOrig | Mode::ParCommVcis => {
+                    let v: Vec<Comm> = (0..p.threads).map(|_| proc.comm_dup(&world)).collect();
+                    comms.lock().unwrap().insert(me, v);
+                }
+                Mode::Endpoints => {
+                    let ep = proc.create_endpoints(&world, p.threads);
+                    eps.lock().unwrap().insert(me, ep);
+                }
+                _ => {}
+            }
+            if p.op == Op::Put {
+                let per_thread_wins = matches!(
+                    p.mode,
+                    Mode::ParCommOrig | Mode::ParCommVcis | Mode::Endpoints
+                );
+                let n_wins = if per_thread_wins { p.threads } else { 1 };
+                let v: Vec<Arc<crate::mpi::Window>> = (0..n_wins)
+                    .map(|_| proc.win_create(&world, p.msg_size.max(8) * p.threads * 2))
+                    .collect();
+                wins.lock().unwrap().insert(me, v);
+            }
+        }
+        // Funneled world barrier (collectives are per-process ops; only
+        // one thread may drive a given communicator's collective).
+        bar.wait();
+        if t == 0 {
+            proc.barrier(&world);
+        }
+        bar.wait();
+
+        // ---- the measured phase ----
+        let t0 = crate::platform::pnow(proc.backend);
+        match p.op {
+            Op::Isend => {
+                // Pairing: everywhere: proc i <-> proc half+i (tag 0);
+                // threads: thread t <-> thread t (tag t).
+                let (comm, my_ep, peer_rank, tag) = match p.mode {
+                    Mode::Everywhere => {
+                        let peer = if is_sender_proc { me + half } else { me - half };
+                        (world.clone(), None, peer, 0i32)
+                    }
+                    Mode::SerCommOrig | Mode::SerCommVcis => {
+                        let peer = 1 - me;
+                        (world.clone(), None, peer, t as i32)
+                    }
+                    Mode::ParCommOrig | Mode::ParCommVcis => {
+                        let c = comms.lock().unwrap().get(&me).unwrap()[t].clone();
+                        (c, None, 1 - me, t as i32)
+                    }
+                    Mode::Endpoints => {
+                        let ep = eps.lock().unwrap().get(&me).unwrap().clone();
+                        let peer_proc = 1 - me;
+                        let peer = peer_proc * p.threads + t;
+                        (ep, Some(t), peer, t as i32)
+                    }
+                };
+                let payload = vec![0u8; p.msg_size];
+                let batches = p.msgs_per_core / p.window;
+                if is_sender_proc {
+                    for _ in 0..batches {
+                        let reqs: Vec<_> = (0..p.window)
+                            .map(|_| {
+                                proc.isend_ep(&comm, my_ep, peer_rank, tag, &payload, false)
+                            })
+                            .collect();
+                        proc.waitall(reqs);
+                    }
+                } else {
+                    for _ in 0..batches {
+                        let reqs: Vec<_> = (0..p.window)
+                            .map(|_| {
+                                proc.irecv_ep(&comm, my_ep, Src::Rank(peer_rank), Tag::Value(tag))
+                            })
+                            .collect();
+                        proc.waitall(reqs);
+                    }
+                }
+            }
+            Op::Put => {
+                // Senders put into the peer's window; receivers wait in an
+                // MPI barrier (paper §5.2's benchmark shape).
+                if is_sender_proc {
+                    let (win, ep_vci) = put_channel(p, proc, t, &wins);
+                    let peer = match p.mode {
+                        Mode::Everywhere => me + half,
+                        _ => 1 - me,
+                    };
+                    let payload = vec![0u8; p.msg_size];
+                    let offset = (t * p.msg_size.max(8)) % win.size.max(1);
+                    let batches = p.msgs_per_core / p.window;
+                    for _ in 0..batches {
+                        for _ in 0..p.window {
+                            proc.put_via(&win, ep_vci, peer, offset, &payload);
+                        }
+                        proc.win_flush(&win);
+                    }
+                }
+            }
+        }
+        bar.wait();
+        if t == 0 {
+            proc.barrier(&world);
+        }
+        bar.wait();
+        let t1 = crate::platform::pnow(proc.backend);
+        if me == 0 && t == 0 {
+            let total = (half * p.threads / if p.mode == Mode::Everywhere { p.threads } else { 1 })
+                as f64;
+            // total sender cores:
+            let cores = match p.mode {
+                Mode::Everywhere => half,
+                _ => p.threads,
+            } as f64;
+            let _ = total;
+            let msgs = cores * p.msgs_per_core as f64;
+            crate::mpi::world::record("rate", msgs / ((t1 - t0) as f64 / 1e9));
+        }
+
+        // ---- teardown ----
+        bar.wait();
+        if t == 0 {
+            // Host lock must not be held across collective win_free (see
+            // apps::ebms teardown comment).
+            let mine = { wins.lock().unwrap().remove(&me) };
+            if let Some(v) = mine {
+                for w in v {
+                    proc.win_free(&world, w);
+                }
+            }
+        }
+    });
+    assert_eq!(
+        r.outcome,
+        SimOutcome::Completed,
+        "message_rate run failed ({:?}): {:?}",
+        p.mode,
+        r.outcome
+    );
+    r.measurements["rate"]
+}
+
+fn put_channel(
+    p: &RateParams,
+    proc: &Arc<MpiProc>,
+    t: usize,
+    wins: &Arc<Mutex<HashMap<usize, Vec<Arc<crate::mpi::Window>>>>>,
+) -> (Arc<crate::mpi::Window>, Option<usize>) {
+    let me = proc.rank();
+    match p.mode {
+        Mode::Everywhere | Mode::SerCommOrig | Mode::SerCommVcis => {
+            (wins.lock().unwrap().get(&me).unwrap()[0].clone(), None)
+        }
+        Mode::ParCommOrig | Mode::ParCommVcis => {
+            (wins.lock().unwrap().get(&me).unwrap()[t].clone(), None)
+        }
+        Mode::Endpoints => {
+            // Endpoint t drives its own VCI explicitly (paper: "each
+            // endpoint is a VCI"); window t provides the memory handle.
+            let win = wins.lock().unwrap().get(&me).unwrap()[t].clone();
+            let ep_vci = Some(1 + t); // pool VCIs 1..=threads
+            (win, ep_vci)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isend_rate_runs_and_is_positive() {
+        let r = message_rate(RateParams {
+            threads: 2,
+            msgs_per_core: 256,
+            window: 32,
+            ..Default::default()
+        });
+        assert!(r > 0.0);
+    }
+
+    #[test]
+    fn everywhere_beats_ser_comm_orig() {
+        let base = RateParams {
+            threads: 4,
+            msgs_per_core: 512,
+            window: 32,
+            ..Default::default()
+        };
+        let ew = message_rate(RateParams { mode: Mode::Everywhere, ..base.clone() });
+        let ser = message_rate(RateParams { mode: Mode::SerCommOrig, ..base });
+        assert!(
+            ew > 2.0 * ser,
+            "everywhere ({ew:.0}) should dwarf ser_comm+orig ({ser:.0})"
+        );
+    }
+
+    #[test]
+    fn par_comm_vcis_scales_with_threads() {
+        let base = RateParams {
+            mode: Mode::ParCommVcis,
+            msgs_per_core: 512,
+            window: 32,
+            ..Default::default()
+        };
+        let r1 = message_rate(RateParams { threads: 1, ..base.clone() });
+        let r8 = message_rate(RateParams { threads: 8, ..base });
+        assert!(
+            r8 > 3.0 * r1,
+            "8 threads ({r8:.0}) should scale over 1 thread ({r1:.0})"
+        );
+    }
+}

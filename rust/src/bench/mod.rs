@@ -1,0 +1,37 @@
+//! Benchmark harness: the workload generators and execution modes behind
+//! every figure in the paper's evaluation (§5, §6), plus the per-figure
+//! drivers in [`figures`] that print the same rows/series the paper plots.
+
+pub mod figures;
+pub mod message_rate;
+
+pub use message_rate::{message_rate, Mode, Op, RateParams};
+
+/// A simple CSV emitter for figure output.
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.header.join(","));
+        for r in &self.rows {
+            println!("{}", r.join(","));
+        }
+    }
+}
+
+/// Format a message rate in mmsgs/s with stable precision.
+pub fn fmt_rate(r: f64) -> String {
+    format!("{:.4}", r / 1e6)
+}

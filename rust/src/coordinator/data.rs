@@ -1,0 +1,57 @@
+//! Synthetic training corpus: a noisy affine token chain — structured
+//! enough that a small causal LM's loss drops quickly, cheap to generate,
+//! and fully deterministic per seed.
+
+use crate::util::SplitMix64;
+
+/// Deterministic synthetic token stream sharded across workers.
+pub struct SyntheticCorpus {
+    vocab: i32,
+    noise: f64,
+    rng: SplitMix64,
+    state: i32,
+}
+
+impl SyntheticCorpus {
+    /// `worker`-seeded shard: workers draw disjoint streams.
+    pub fn new(vocab: i32, noise: f64, seed: u64, worker: usize) -> Self {
+        let mut rng = SplitMix64::new(seed ^ (worker as u64).wrapping_mul(0x9E37_79B9));
+        let state = (rng.next_u64() % vocab as u64) as i32;
+        SyntheticCorpus { vocab, noise, rng, state }
+    }
+
+    fn next_token(&mut self) -> i32 {
+        if self.rng.gen_bool(self.noise) {
+            self.state = self.rng.gen_range(self.vocab as u64) as i32;
+        } else {
+            // Affine chain: highly learnable next-token structure.
+            self.state = (self.state.wrapping_mul(5).wrapping_add(17)) % self.vocab;
+        }
+        self.state
+    }
+
+    /// One (batch, seq) batch of token ids, flattened row-major.
+    pub fn batch(&mut self, batch: usize, seq: usize) -> Vec<i32> {
+        (0..batch * seq).map(|_| self.next_token()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed_and_worker() {
+        let mut a = SyntheticCorpus::new(512, 0.05, 42, 0);
+        let mut b = SyntheticCorpus::new(512, 0.05, 42, 0);
+        assert_eq!(a.batch(2, 16), b.batch(2, 16));
+        let mut c = SyntheticCorpus::new(512, 0.05, 42, 1);
+        assert_ne!(a.batch(2, 16), c.batch(2, 16), "workers draw distinct shards");
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let mut c = SyntheticCorpus::new(100, 0.5, 7, 3);
+        assert!(c.batch(4, 64).iter().all(|&t| (0..100).contains(&t)));
+    }
+}

@@ -1,0 +1,163 @@
+//! One NIC hardware context: the parallel unit of the network interface.
+//!
+//! A context is the physical realization of a VCI (paper §4.2): an OFI
+//! endpoint bound to a completion queue (OPA) or a UCX worker wrapping a
+//! Verbs QP (IB). Injection from the owning process and delivery from
+//! remote contexts both touch the context's rx queue; access costs are
+//! charged via the cost model. Contexts are independent — this independence
+//! is exactly what multi-VCI exploits.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::platform::{padvance, pnow, Backend};
+use crate::sim::CostModel;
+
+use super::wire::{Payload, ProcId, WireMsg};
+
+/// Receive side of a hardware context.
+pub struct HwContext {
+    /// Messages from remote contexts. A real adapter's recv queue is fed
+    /// by the wire with NO local software involvement — remote senders and
+    /// the local poller never contend on a lock. The host mutex below only
+    /// keeps the host-side data structure sane; it charges no virtual
+    /// time (the explicit rx/poll costs model the CQ reads).
+    rx: Mutex<VecDeque<WireMsg>>,
+    backend: Backend,
+}
+
+impl HwContext {
+    pub fn new(backend: Backend) -> Self {
+        HwContext { rx: Mutex::new(VecDeque::new()), backend }
+    }
+
+    /// Deliver a message (called by remote injectors / the wire).
+    pub fn deliver(&self, msg: WireMsg) {
+        self.rx.lock().unwrap_or_else(|e| e.into_inner()).push_back(msg);
+    }
+
+    /// Poll for one arrived message. Messages still "in flight" (arrival in
+    /// the virtual future) are invisible; conservative scheduling guarantees
+    /// senders run first, so arrival order is globally consistent.
+    pub fn poll(&self, costs: &CostModel) -> Option<WireMsg> {
+        let mut q = self.rx.lock().unwrap_or_else(|e| e.into_inner());
+        let now = pnow(self.backend);
+        match q.front() {
+            Some(m) if m.arrival <= now => {
+                padvance(self.backend, costs.nic_rx_deliver);
+                q.pop_front()
+            }
+            Some(m) => {
+                // Head-of-line message is still on the wire: model the CQ
+                // read that found nothing ready.
+                let _ = m;
+                padvance(self.backend, costs.poll_empty);
+                None
+            }
+            None => {
+                padvance(self.backend, costs.poll_empty);
+                None
+            }
+        }
+    }
+
+    /// Number of queued messages (arrived or in flight). Test/debug aid.
+    pub fn queued(&self) -> usize {
+        self.rx.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
+/// TX path handle: injects messages into remote contexts with modeled
+/// per-message cost. One `Injector` per (process, context-index); it is the
+/// resource a VCI owns exclusively.
+pub struct Injector {
+    pub proc: ProcId,
+    pub ctx_index: usize,
+    backend: Backend,
+    costs: Arc<CostModel>,
+}
+
+impl Injector {
+    pub fn new(proc: ProcId, ctx_index: usize, backend: Backend, costs: Arc<CostModel>) -> Self {
+        Injector { proc, ctx_index, backend, costs }
+    }
+
+    /// Inject `payload` toward `target` context. Charges descriptor +
+    /// doorbell to the caller; DMA and wire latency accrue on the message's
+    /// arrival stamp, not the caller's clock (the NIC works asynchronously).
+    pub fn inject(&self, target: &HwContext, payload: Payload) {
+        padvance(self.backend, self.costs.nic_inject);
+        let bytes = payload.wire_bytes();
+        let arrival = pnow(self.backend) + self.costs.dma_cost(bytes) + self.costs.wire_latency;
+        target.deliver(WireMsg {
+            arrival,
+            src_proc: self.proc,
+            src_ctx: self.ctx_index,
+            payload,
+        });
+    }
+
+    /// Time at which a hardware-executed RMA of `bytes` completes at the
+    /// initiator (IB personality): DMA + wire + NIC-level ack.
+    pub fn hw_rma_completion_time(&self, bytes: usize) -> u64 {
+        padvance(self.backend, self.costs.nic_inject);
+        pnow(self.backend) + self.costs.dma_cost(bytes) + 2 * self.costs.wire_latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Sim, SimOutcome};
+
+    #[test]
+    fn inflight_messages_invisible_until_arrival() {
+        let costs = Arc::new(CostModel::default());
+        let ctx = Arc::new(HwContext::new(Backend::Sim));
+        let inj = {
+            let costs = costs.clone();
+            Arc::new(Injector::new(0, 0, Backend::Sim, costs))
+        };
+        let mut sim = Sim::new((*costs).clone());
+        let c2 = ctx.clone();
+        let costs2 = costs.clone();
+        sim.spawn_setup("sender", move || {
+            inj.inject(&c2, Payload::SendAck { send_handle: 1 });
+        });
+        let c3 = ctx.clone();
+        sim.spawn_setup("receiver", move || {
+            // Immediately polling (clock ~0 after sender runs) must miss:
+            // the message is still on the wire.
+            let mut seen_early = false;
+            if c3.poll(&costs2).is_some() {
+                seen_early = true;
+            }
+            assert!(!seen_early, "message visible before wire latency elapsed");
+            // Spin in virtual time until it lands.
+            let mut got = None;
+            for _ in 0..100 {
+                crate::sim::advance(100);
+                if let Some(m) = c3.poll(&costs2) {
+                    got = Some(m);
+                    break;
+                }
+            }
+            let m = got.expect("message should arrive");
+            assert!(crate::sim::now() >= m.arrival);
+        });
+        assert_eq!(sim.run().outcome, SimOutcome::Completed);
+    }
+
+    #[test]
+    fn native_backend_delivers_immediately_visible() {
+        // Native: pnow is wallclock; arrival stamp is in the past by the
+        // time anyone polls (wire latency is sub-microsecond).
+        let costs = Arc::new(CostModel::default());
+        let ctx = HwContext::new(Backend::Native);
+        let inj = Injector::new(0, 0, Backend::Native, costs.clone());
+        inj.inject(&ctx, Payload::SendAck { send_handle: 7 });
+        std::thread::sleep(std::time::Duration::from_micros(5));
+        let m = ctx.poll(&costs).expect("delivered");
+        assert!(matches!(m.payload, Payload::SendAck { send_handle: 7 }));
+    }
+}

@@ -1,0 +1,36 @@
+//! Simulated interconnect: NIC hardware contexts, the wire, and the two
+//! interconnect personalities from the paper's testbeds.
+//!
+//! * [`Interconnect::Opa`] — Intel Omni-Path-like (paper: OFI netmod +
+//!   PSM2). RMA is **emulated in software**: a Put/Get becomes an active
+//!   message that the *target-side CPU* must process by polling the target
+//!   context; absent application polling, only a low-frequency PSM2-style
+//!   progress thread drains it. This is what makes the paper's Figs. 13-16,
+//!   24-25 and 27 behave the way they do.
+//! * [`Interconnect::Ib`] — Mellanox InfiniBand EDR-like (paper: UCX netmod
+//!   + Verbs). Contiguous Put/Get execute **fully in hardware**: the
+//!   initiating side moves the bytes with no target CPU involvement, so RMA
+//!   completes promptly regardless of what target threads are doing.
+//!
+//! A [`HwContext`] models one NIC hardware context (an OFI endpoint+CQ or a
+//! UCX worker/QP): an rx queue fed by remote injections, with per-message
+//! injection/DMA/wire costs charged in virtual time. Contexts per node are
+//! limited ([`FabricConfig::max_contexts_per_node`]) like real adapters
+//! (160 on the Intel HFI).
+
+mod context;
+mod registry;
+mod wire;
+
+pub use context::{HwContext, Injector};
+pub use registry::{FabricConfig, Network, ProcFabric, WindowMem};
+pub use wire::{AccOp, P2pProtocol, Payload, ProcId, RmaCompletion, WireMsg, WinId};
+
+/// Interconnect personality (paper §3: the two testbed families).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Interconnect {
+    /// Omni-Path-like: software-emulated RMA, target progress required.
+    Opa,
+    /// InfiniBand-like: hardware Put/Get, no target CPU involvement.
+    Ib,
+}

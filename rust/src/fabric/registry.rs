@@ -1,0 +1,374 @@
+//! Cluster-wide fabric state: context allocation (with per-node hardware
+//! limits), address exchange, and window-memory registration.
+//!
+//! The registry itself models *hardware* tables (the adapter's context
+//! table, the address vector, the memory-registration cache), so its host
+//! synchronization is free in virtual time; the software costs the paper
+//! measures (ctx create/destroy, AV insertion — Fig. 4) are charged
+//! explicitly by the callers through the cost model.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::platform::{padvance, Backend};
+use crate::sim::CostModel;
+
+use super::context::{HwContext, Injector};
+use super::wire::{ProcId, WinId};
+use super::Interconnect;
+
+/// Fabric/topology configuration.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    pub interconnect: Interconnect,
+    /// Number of nodes in the cluster.
+    pub nodes: usize,
+    /// Processes per node (1 for MPI+threads, cores-per-node for
+    /// MPI everywhere).
+    pub procs_per_node: usize,
+    /// Hardware contexts available per node (Intel HFI: 160; set low to
+    /// reproduce the Fig. 17 mapping-mismatch experiments).
+    pub max_contexts_per_node: usize,
+}
+
+impl FabricConfig {
+    pub fn nprocs(&self) -> usize {
+        self.nodes * self.procs_per_node
+    }
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            interconnect: Interconnect::Opa,
+            nodes: 2,
+            procs_per_node: 1,
+            max_contexts_per_node: 160,
+        }
+    }
+}
+
+/// Registered window memory. The buffer is guarded by a host mutex that
+/// models the DMA engine's coherent access — never contended in virtual
+/// time under the DES (single running thread) and cheap natively.
+pub struct WindowMem {
+    buf: Mutex<Vec<u8>>,
+}
+
+impl WindowMem {
+    pub fn new(size: usize) -> Arc<Self> {
+        Arc::new(WindowMem { buf: Mutex::new(vec![0; size]) })
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn write(&self, offset: usize, data: &[u8]) {
+        let mut b = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        b[offset..offset + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read(&self, offset: usize, len: usize) -> Vec<u8> {
+        let b = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        b[offset..offset + len].to_vec()
+    }
+
+    /// Read-modify-write with `f` applied under the memory lock — used by
+    /// accumulate handlers to guarantee element-wise atomicity.
+    pub fn rmw<R>(&self, f: impl FnOnce(&mut Vec<u8>) -> R) -> R {
+        let mut b = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        f(&mut b)
+    }
+}
+
+const MAX_CTXS: usize = 1024;
+
+struct ProcEntry {
+    /// Fixed-capacity context table (hardware context slots).
+    ctxs: Vec<OnceLock<Arc<HwContext>>>,
+    n_open: AtomicUsize,
+    windows: Mutex<Vec<(WinId, Arc<WindowMem>)>>,
+}
+
+/// The whole simulated network.
+pub struct Network {
+    cfg: FabricConfig,
+    backend: Backend,
+    costs: Arc<CostModel>,
+    procs: Vec<ProcEntry>,
+    /// Open contexts per node (hardware limit accounting).
+    node_open: Vec<AtomicUsize>,
+}
+
+impl Network {
+    pub fn new(cfg: FabricConfig, backend: Backend, costs: Arc<CostModel>) -> Arc<Network> {
+        let procs = (0..cfg.nprocs())
+            .map(|_| ProcEntry {
+                ctxs: (0..MAX_CTXS).map(|_| OnceLock::new()).collect(),
+                n_open: AtomicUsize::new(0),
+                windows: Mutex::new(Vec::new()),
+            })
+            .collect();
+        let node_open = (0..cfg.nodes).map(|_| AtomicUsize::new(0)).collect();
+        Arc::new(Network { cfg, backend, costs, procs, node_open })
+    }
+
+    pub fn config(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    pub fn interconnect(&self) -> Interconnect {
+        self.cfg.interconnect
+    }
+
+    pub fn costs(&self) -> &Arc<CostModel> {
+        &self.costs
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    pub fn node_of(&self, proc: ProcId) -> usize {
+        proc / self.cfg.procs_per_node
+    }
+
+    /// Per-process view.
+    pub fn proc_fabric(self: &Arc<Self>, proc: ProcId) -> ProcFabric {
+        assert!(proc < self.cfg.nprocs());
+        ProcFabric { net: self.clone(), proc }
+    }
+}
+
+/// A process's handle onto the fabric.
+#[derive(Clone)]
+pub struct ProcFabric {
+    net: Arc<Network>,
+    pub proc: ProcId,
+}
+
+impl ProcFabric {
+    pub fn interconnect(&self) -> Interconnect {
+        self.net.interconnect()
+    }
+
+    pub fn costs(&self) -> &Arc<CostModel> {
+        self.net.costs()
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.net.backend
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.net.cfg.nprocs()
+    }
+
+    pub fn node_of(&self, proc: ProcId) -> usize {
+        self.net.node_of(proc)
+    }
+
+    /// Open a hardware context. Charges creation cost; respects the node's
+    /// hardware limit (returns `None` when exhausted, in which case the MPI
+    /// layer falls back to sharing an existing VCI — paper §4.2).
+    pub fn open_context(&self) -> Option<(usize, Arc<HwContext>)> {
+        let node = self.net.node_of(self.proc);
+        let limit = self.net.cfg.max_contexts_per_node;
+        // Reserve a node slot.
+        let prev = self.net.node_open[node].fetch_add(1, Ordering::SeqCst);
+        if prev >= limit {
+            self.net.node_open[node].fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        padvance(self.net.backend, self.net.costs.ctx_create);
+        let entry = &self.net.procs[self.proc];
+        let idx = entry.n_open.fetch_add(1, Ordering::SeqCst);
+        assert!(idx < MAX_CTXS, "context table overflow");
+        let ctx = Arc::new(HwContext::new(self.net.backend));
+        entry.ctxs[idx].set(ctx.clone()).ok().expect("slot already set");
+        Some((idx, ctx))
+    }
+
+    /// Tear down a context (finalize path). The slot is not reused — real
+    /// adapters recycle lazily, and processes close only at finalize.
+    pub fn close_context(&self, _idx: usize) {
+        let node = self.net.node_of(self.proc);
+        padvance(self.net.backend, self.net.costs.ctx_destroy);
+        self.net.node_open[node].fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Model inserting one remote context address into this process's
+    /// address vector (connection establishment, Fig. 4).
+    pub fn insert_address(&self) {
+        padvance(self.net.backend, self.net.costs.av_insert);
+    }
+
+    /// Look up a remote (or local) context for injection/polling.
+    pub fn context(&self, proc: ProcId, idx: usize) -> Arc<HwContext> {
+        self.net.procs[proc].ctxs[idx]
+            .get()
+            .unwrap_or_else(|| panic!("context {idx} of proc {proc} not open"))
+            .clone()
+    }
+
+    /// Number of contexts this process has opened.
+    pub fn open_count(&self, proc: ProcId) -> usize {
+        self.net.procs[proc].n_open.load(Ordering::SeqCst)
+    }
+
+    /// TX handle bound to one of this process's contexts.
+    pub fn injector(&self, ctx_index: usize) -> Injector {
+        Injector::new(self.proc, ctx_index, self.net.backend, self.net.costs.clone())
+    }
+
+    /// Inject `payload` from local context `src_ctx` toward context
+    /// `dst_ctx` of `dst_proc`. Picks the internode NIC path or the
+    /// intranode shared-memory path by topology; charges the caller the
+    /// per-message injection cost, and stamps the arrival with DMA + wire
+    /// (or shm) latency.
+    pub fn inject(
+        &self,
+        src_ctx: usize,
+        dst_proc: ProcId,
+        dst_ctx: usize,
+        payload: crate::fabric::Payload,
+    ) {
+        let costs = &self.net.costs;
+        let backend = self.net.backend;
+        let bytes = payload.wire_bytes();
+        let intranode = self.net.node_of(self.proc) == self.net.node_of(dst_proc);
+        let arrival = if intranode {
+            padvance(backend, costs.shm_inject);
+            crate::platform::pnow(backend) + costs.shm_latency + costs.memcpy_cost(bytes)
+        } else {
+            padvance(backend, costs.nic_inject);
+            crate::platform::pnow(backend) + costs.dma_cost(bytes) + costs.wire_latency
+        };
+        let target = self.context(dst_proc, dst_ctx);
+        target.deliver(crate::fabric::WireMsg {
+            arrival,
+            src_proc: self.proc,
+            src_ctx,
+            payload,
+        });
+    }
+
+    /// Completion stamp for a hardware-executed RMA (IB personality):
+    /// DMA + round-trip wire, no target CPU involvement.
+    pub fn hw_rma_completion_time(&self, dst_proc: ProcId, bytes: usize) -> u64 {
+        let costs = &self.net.costs;
+        let backend = self.net.backend;
+        padvance(backend, costs.nic_inject);
+        let intranode = self.net.node_of(self.proc) == self.net.node_of(dst_proc);
+        if intranode {
+            crate::platform::pnow(backend) + costs.memcpy_cost(bytes) + costs.shm_latency
+        } else {
+            crate::platform::pnow(backend) + costs.dma_cost(bytes) + 2 * costs.wire_latency
+        }
+    }
+
+    /// Expose window memory for remote access.
+    pub fn register_window(&self, win: WinId, mem: Arc<WindowMem>) {
+        self.net.procs[self.proc]
+            .windows
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push((win, mem));
+    }
+
+    pub fn deregister_window(&self, win: WinId) {
+        let mut w = self.net.procs[self.proc].windows.lock().unwrap_or_else(|e| e.into_inner());
+        w.retain(|(id, _)| *id != win);
+    }
+
+    /// Resolve a (proc, window) pair to its memory — the hardware
+    /// address-translation path used by IB's hardware RMA.
+    pub fn window(&self, proc: ProcId, win: WinId) -> Arc<WindowMem> {
+        self.net.procs[proc]
+            .windows
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .find(|(id, _)| *id == win)
+            .map(|(_, m)| m.clone())
+            .unwrap_or_else(|| panic!("window {win} of proc {proc} not registered"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(limit: usize) -> Arc<Network> {
+        Network::new(
+            FabricConfig {
+                interconnect: Interconnect::Ib,
+                nodes: 1,
+                procs_per_node: 2,
+                max_contexts_per_node: limit,
+            },
+            Backend::Native,
+            Arc::new(CostModel::default()),
+        )
+    }
+
+    #[test]
+    fn context_limit_enforced_per_node() {
+        let n = net(3);
+        let f0 = n.proc_fabric(0);
+        let f1 = n.proc_fabric(1);
+        assert!(f0.open_context().is_some());
+        assert!(f0.open_context().is_some());
+        assert!(f1.open_context().is_some());
+        // Node limit of 3 reached across both procs.
+        assert!(f1.open_context().is_none());
+        // Closing frees a slot.
+        f0.close_context(0);
+        assert!(f1.open_context().is_some());
+    }
+
+    #[test]
+    fn window_registry_roundtrip() {
+        let n = net(8);
+        let f0 = n.proc_fabric(0);
+        let f1 = n.proc_fabric(1);
+        let mem = WindowMem::new(64);
+        f0.register_window(42, mem.clone());
+        mem.write(8, &[1, 2, 3]);
+        let view = f1.window(0, 42);
+        assert_eq!(view.read(8, 3), vec![1, 2, 3]);
+        f0.deregister_window(42);
+    }
+
+    #[test]
+    fn node_mapping() {
+        let n = Network::new(
+            FabricConfig {
+                interconnect: Interconnect::Opa,
+                nodes: 3,
+                procs_per_node: 4,
+                max_contexts_per_node: 16,
+            },
+            Backend::Native,
+            Arc::new(CostModel::default()),
+        );
+        assert_eq!(n.node_of(0), 0);
+        assert_eq!(n.node_of(3), 0);
+        assert_eq!(n.node_of(4), 1);
+        assert_eq!(n.node_of(11), 2);
+    }
+
+    #[test]
+    fn window_rmw_is_exclusive() {
+        let mem = WindowMem::new(8);
+        mem.rmw(|b| {
+            b[0] = 5;
+        });
+        assert_eq!(mem.read(0, 1), vec![5]);
+    }
+}

@@ -1,0 +1,121 @@
+//! On-the-wire message formats.
+
+/// Global process id (0..nprocs across all nodes).
+pub type ProcId = usize;
+
+/// Window id, unique per process that exposed it.
+pub type WinId = u64;
+
+/// Reduction op carried by Accumulate-class operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccOp {
+    /// Element-wise f64 sum (MPI_SUM).
+    SumF64,
+    /// Element-wise u64 sum.
+    SumU64,
+    /// Replace (MPI_REPLACE).
+    Replace,
+}
+
+/// Two-sided wire protocol step.
+#[derive(Clone, Debug)]
+pub enum P2pProtocol {
+    /// Payload rides along; matches and completes on arrival.
+    /// `send_handle` identifies the sender's request for synchronous-mode
+    /// acks (0 when no ack is needed).
+    Eager { send_handle: u64 },
+    /// Rendezvous request-to-send: payload stays at the sender until the
+    /// receiver matches and pulls it (clear-to-send).
+    Rts { send_handle: u64 },
+    /// Receiver's clear-to-send answering an Rts.
+    Cts { send_handle: u64, recv_handle: u64 },
+    /// Rendezvous payload delivery.
+    Data { recv_handle: u64 },
+}
+
+/// A message sitting in (or headed for) a hardware context's rx queue.
+#[derive(Clone, Debug)]
+pub struct WireMsg {
+    /// Virtual time at which the message becomes visible to the target.
+    pub arrival: u64,
+    pub src_proc: ProcId,
+    /// Index of the source context (for addressing replies).
+    pub src_ctx: usize,
+    pub payload: Payload,
+}
+
+/// What the message carries.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Two-sided traffic (send/ssend/isend).
+    TwoSided {
+        comm_id: u64,
+        src_rank: usize,
+        dst_rank: usize,
+        tag: i32,
+        /// Sender-side FIFO sequence number on this (comm, vci) stream —
+        /// preserves the nonovertaking order.
+        seq: u64,
+        protocol: P2pProtocol,
+        /// True for synchronous-mode sends (MPI_Ssend): an explicit ack is
+        /// returned on match.
+        needs_ack: bool,
+        data: Vec<u8>,
+    },
+    /// Ack for a matched synchronous send (or rendezvous completion).
+    SendAck { send_handle: u64 },
+    /// Software-emulated RMA put (OPA personality): target CPU applies it.
+    RmaPut { win: WinId, offset: usize, data: Vec<u8>, flush_handle: u64 },
+    /// Software-emulated RMA get request.
+    RmaGetReq { win: WinId, offset: usize, len: usize, get_handle: u64 },
+    /// Reply carrying the got bytes.
+    RmaGetReply { get_handle: u64, data: Vec<u8> },
+    /// Accumulate: applied by the target CPU on both personalities
+    /// (MPI datatype reductions are not NIC-offloadable in general).
+    RmaAcc { win: WinId, offset: usize, data: Vec<u8>, op: AccOp, flush_handle: u64 },
+    /// Fetch-and-op (e.g. MPI_Fetch_and_op on a u64 counter).
+    RmaFetchOp { win: WinId, offset: usize, operand: Vec<u8>, op: AccOp, fetch_handle: u64 },
+    /// Reply to a fetch-and-op with the previous value.
+    RmaFetchOpReply { fetch_handle: u64, data: Vec<u8> },
+    /// Remote completion ack for puts/accumulates (counts toward flush).
+    RmaAck { flush_handle: u64 },
+}
+
+/// Initiator-side record of an RMA operation's completion semantics.
+#[derive(Clone, Copy, Debug)]
+pub enum RmaCompletion {
+    /// Completes at a fixed virtual time (hardware RMA on IB): flushing is
+    /// just waiting until that time.
+    AtTime(u64),
+    /// Completes when the ack counter identified by `flush_handle` fires
+    /// (software RMA on OPA): flushing requires polling progress.
+    OnAck { flush_handle: u64 },
+}
+
+impl Payload {
+    /// Payload bytes that occupy wire bandwidth.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::TwoSided { data, .. } => data.len(),
+            Payload::RmaPut { data, .. } => data.len(),
+            Payload::RmaAcc { data, .. } => data.len(),
+            Payload::RmaGetReply { data, .. } => data.len(),
+            Payload::RmaFetchOp { operand, .. } => operand.len(),
+            Payload::RmaFetchOpReply { data, .. } => data.len(),
+            Payload::RmaGetReq { .. } | Payload::SendAck { .. } | Payload::RmaAck { .. } => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_counts_payload_only() {
+        let p = Payload::RmaPut { win: 1, offset: 0, data: vec![0; 4096], flush_handle: 9 };
+        assert_eq!(p.wire_bytes(), 4096);
+        let ack = Payload::RmaAck { flush_handle: 9 };
+        assert_eq!(ack.wire_bytes(), 0);
+    }
+}

@@ -1,0 +1,34 @@
+//! # vcmpi — "Stop Worrying about User-Visible Endpoints and Love MPI", reproduced
+//!
+//! A from-scratch reproduction of Zambre, Chandramowlishwaran & Balaji
+//! (ICS '20): an MPI-3.1-subset message-passing library whose internals map
+//! user-exposed communication parallelism (communicators, windows, ranks,
+//! tags) onto a pool of **virtual communication interfaces (VCIs)**, each
+//! bound to a dedicated NIC hardware context — plus the user-visible
+//! **MPI Endpoints** extension it argues against, so the two can be compared
+//! head-to-head on every experiment in the paper.
+//!
+//! The paper's testbed (16-core Skylake/Gomez sockets, Omni-Path and
+//! InfiniBand fabrics) is reproduced as a deterministic discrete-event
+//! simulation ([`sim`]) driving a NIC model ([`fabric`]); the library also
+//! runs on a native OS-thread backend ([`platform`]) for end-to-end
+//! applications whose compute is AOT-compiled JAX/Pallas executed through
+//! PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod sim;
+
+pub mod fabric;
+pub mod mpi;
+
+pub mod apps;
+pub mod bench;
+
+pub mod coordinator;
+
+pub mod runtime;
+pub mod platform;
+
+pub mod util;

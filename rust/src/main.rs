@@ -1,0 +1,94 @@
+//! `repro` — CLI entrypoint for the reproduction.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline environment):
+//!   repro figures <id>|all [--scale N]   regenerate a paper figure/table
+//!   repro train [opts]                   end-to-end training driver
+//!   repro app <stencil|ebms|bspmm>       application drivers
+//!   repro list                           list figure ids
+
+use vcmpi::bench::figures;
+
+fn arg_val(args: &[String], key: &str, default: usize) -> usize {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("list") => {
+            for id in figures::all_ids() {
+                println!("{id}");
+            }
+        }
+        Some("figures") => {
+            let id = args.get(1).map(String::as_str).unwrap_or("all");
+            let scale = arg_val(&args, "--scale", 1);
+            if id == "all" {
+                for id in figures::all_ids() {
+                    println!("### {id}");
+                    figures::run_figure(id, scale).unwrap().print();
+                    println!();
+                }
+            } else {
+                match figures::run_figure(id, scale) {
+                    Some(csv) => csv.print(),
+                    None => {
+                        eprintln!("unknown figure id: {id} (try `repro list`)");
+                        std::process::exit(2);
+                    }
+                }
+            }
+        }
+        Some("train") => {
+            let cfg = vcmpi::coordinator::TrainConfig {
+                steps: arg_val(&args, "--steps", 300),
+                workers: arg_val(&args, "--workers", 2),
+                buckets: arg_val(&args, "--buckets", 4),
+                ..Default::default()
+            };
+            match vcmpi::coordinator::train(cfg) {
+                Ok(r) => {
+                    println!(
+                        "loss {:.4} -> {:.4} over {} steps ({} params, {:.1} ms/step)",
+                        r.first_loss,
+                        r.final_loss,
+                        r.losses.len(),
+                        r.params,
+                        r.step_ms
+                    );
+                }
+                Err(e) => {
+                    eprintln!("train failed: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Some("app") => {
+            let scale = arg_val(&args, "--scale", 1);
+            match args.get(1).map(String::as_str) {
+                Some("stencil") => figures::run_figure("fig22", scale).unwrap().print(),
+                Some("ebms") => {
+                    figures::run_figure("fig24", scale).unwrap().print();
+                    figures::run_figure("fig25", scale).unwrap().print();
+                }
+                Some("bspmm") => figures::run_figure("fig27", scale).unwrap().print(),
+                other => {
+                    eprintln!("usage: repro app <stencil|ebms|bspmm>, got {other:?}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        Some(cmd) => {
+            eprintln!("unknown command: {cmd}");
+            std::process::exit(2);
+        }
+        None => {
+            eprintln!("usage: repro <figures|train|app|list> ...");
+            std::process::exit(2);
+        }
+    }
+}

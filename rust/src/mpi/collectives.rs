@@ -1,0 +1,187 @@
+//! Collectives built over point-to-point: barrier (dissemination), bcast
+//! (binomial), allgather (ring), allreduce (ring, bandwidth-optimal — used
+//! by the dist-train coordinator for gradient exchange).
+//!
+//! Collectives use a reserved internal tag space so they never match user
+//! traffic on the same communicator.
+
+use super::matching::{Src, Tag};
+use super::proc::MpiProc;
+use super::Comm;
+
+/// Base of the internal (collective) tag space.
+pub const INTERNAL_TAG_BASE: i32 = 1 << 24;
+
+impl MpiProc {
+    /// MPI_Barrier: dissemination algorithm — ceil(log2(n)) rounds.
+    pub fn barrier(&self, comm: &Comm) {
+        self.barrier_progressing(comm, None);
+    }
+
+    /// Barrier that additionally progresses `extra_vci` while waiting —
+    /// models MPI_Win_free's "keep progressing my window's VCI" behavior
+    /// (paper Fig. 15).
+    pub fn barrier_progressing(&self, comm: &Comm, extra_vci: Option<usize>) {
+        let n = comm.size;
+        if n <= 1 {
+            return;
+        }
+        let me = comm.rank;
+        let mut k = 0u32;
+        while (1usize << k) < n {
+            let dist = 1usize << k;
+            let dst = (me + dist) % n;
+            let src = (me + n - dist) % n;
+            let tag = INTERNAL_TAG_BASE + k as i32;
+            let sreq = self.isend(comm, dst, tag, &[]);
+            let rreq = self.irecv(comm, Src::Rank(src), Tag::Value(tag));
+            if let Some(v) = extra_vci {
+                // Poke the extra VCI between waits (win_free semantics).
+                let _cs = self.enter_cs();
+                self.progress_vci(v);
+            }
+            self.wait(sreq);
+            self.wait(rreq);
+            k += 1;
+        }
+    }
+
+    /// MPI_Bcast (binomial tree) of a byte buffer from `root`.
+    pub fn bcast(&self, comm: &Comm, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
+        let n = comm.size;
+        if n <= 1 {
+            return data.expect("root must supply data");
+        }
+        let me = (comm.rank + n - root) % n; // virtual rank with root at 0
+        let tag = INTERNAL_TAG_BASE + 1024;
+        let mut buf = data;
+        // Receive from parent (virtual rank: clear lowest set bit).
+        if me != 0 {
+            let parent_virt = me & (me - 1);
+            let parent = (parent_virt + root) % n;
+            let got = self.recv(comm, Src::Rank(parent), Tag::Value(tag));
+            buf = Some(got);
+        }
+        let buf = buf.expect("bcast buffer");
+        // Send to children: me + 2^j for j past my lowest set bit.
+        let lowbit = if me == 0 { usize::BITS } else { me.trailing_zeros() };
+        let mut j = 0u32;
+        while j < lowbit && (me | (1 << j)) < n {
+            if (1usize << j) > me {
+                // children are me + 2^j where 2^j > me's low bits region
+            }
+            let child_virt = me | (1 << j);
+            if child_virt != me && child_virt < n {
+                let child = (child_virt + root) % n;
+                self.send(comm, child, tag, &buf);
+            }
+            j += 1;
+        }
+        buf
+    }
+
+    /// MPI_Allgather of one u64 per rank (used by init's address exchange).
+    pub fn allgather_u64(&self, comm: &Comm, mine: u64) -> Vec<u64> {
+        let bytes =
+            self.allgather_bytes(comm, &mine.to_le_bytes());
+        bytes
+            .iter()
+            .map(|b| u64::from_le_bytes(b.as_slice().try_into().expect("8-byte entries")))
+            .collect()
+    }
+
+    /// MPI_Allgather (ring): every rank contributes `mine`, gets all
+    /// contributions in rank order.
+    pub fn allgather_bytes(&self, comm: &Comm, mine: &[u8]) -> Vec<Vec<u8>> {
+        let n = comm.size;
+        let me = comm.rank;
+        let mut out: Vec<Option<Vec<u8>>> = vec![None; n];
+        out[me] = Some(mine.to_vec());
+        if n == 1 {
+            return out.into_iter().map(|o| o.unwrap()).collect();
+        }
+        let right = (me + 1) % n;
+        let left = (me + n - 1) % n;
+        let tag = INTERNAL_TAG_BASE + 2048;
+        // Ring: at step s, send the block that originated at (me - s) and
+        // receive the block that originated at (me - s - 1).
+        for s in 0..n - 1 {
+            let send_origin = (me + n - s) % n;
+            let recv_origin = (me + n - s - 1) % n;
+            let block = out[send_origin].clone().expect("pipeline invariant");
+            let sreq = self.isend(comm, right, tag + s as i32, &block);
+            let rreq = self.irecv(comm, Src::Rank(left), Tag::Value(tag + s as i32));
+            let data = self.wait(rreq).expect("ring recv");
+            self.wait(sreq);
+            out[recv_origin] = Some(data);
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    /// Ring allreduce (sum) over an f32 buffer — the gradient-exchange
+    /// workhorse. Bandwidth-optimal: 2(n-1) steps over n chunks.
+    pub fn allreduce_f32(&self, comm: &Comm, data: &mut [f32]) {
+        let n = comm.size;
+        if n == 1 {
+            return;
+        }
+        let me = comm.rank;
+        let right = (me + 1) % n;
+        let left = (me + n - 1) % n;
+        let len = data.len();
+        // Chunk boundaries (n chunks, last may be ragged).
+        let bounds: Vec<(usize, usize)> = (0..n)
+            .map(|i| {
+                let per = len.div_ceil(n);
+                let lo = (i * per).min(len);
+                let hi = ((i + 1) * per).min(len);
+                (lo, hi)
+            })
+            .collect();
+        let tag = INTERNAL_TAG_BASE + 4096;
+        // Phase 1: reduce-scatter. After step s, rank r owns the full sum
+        // of chunk (r+1-... ) — standard ring schedule.
+        for s in 0..n - 1 {
+            let send_chunk = (me + n - s) % n;
+            let recv_chunk = (me + n - s - 1) % n;
+            let (lo, hi) = bounds[send_chunk];
+            let payload: Vec<u8> = data[lo..hi].iter().flat_map(|f| f.to_le_bytes()).collect();
+            let sreq = self.isend(comm, right, tag + s as i32, &payload);
+            let rreq = self.irecv(comm, Src::Rank(left), Tag::Value(tag + s as i32));
+            let got = self.wait(rreq).expect("ring recv");
+            self.wait(sreq);
+            let (rlo, rhi) = bounds[recv_chunk];
+            for (i, chunk) in got.chunks_exact(4).enumerate() {
+                if rlo + i < rhi {
+                    data[rlo + i] += f32::from_le_bytes(chunk.try_into().unwrap());
+                }
+            }
+        }
+        // Phase 2: allgather the reduced chunks.
+        let tag2 = tag + n as i32;
+        for s in 0..n - 1 {
+            let send_chunk = (me + 1 + n - s) % n;
+            let recv_chunk = (me + n - s) % n;
+            let (lo, hi) = bounds[send_chunk];
+            let payload: Vec<u8> = data[lo..hi].iter().flat_map(|f| f.to_le_bytes()).collect();
+            let sreq = self.isend(comm, right, tag2 + s as i32, &payload);
+            let rreq = self.irecv(comm, Src::Rank(left), Tag::Value(tag2 + s as i32));
+            let got = self.wait(rreq).expect("ring recv");
+            self.wait(sreq);
+            let (rlo, rhi) = bounds[recv_chunk];
+            for (i, chunk) in got.chunks_exact(4).enumerate() {
+                if rlo + i < rhi {
+                    data[rlo + i] = f32::from_le_bytes(chunk.try_into().unwrap());
+                }
+            }
+        }
+    }
+
+    /// Allreduce a single f64 (sum) — convenience for scalar metrics.
+    pub fn allreduce_scalar(&self, comm: &Comm, x: f64) -> f64 {
+        let all = self.allgather_bytes(comm, &x.to_le_bytes());
+        all.iter()
+            .map(|b| f64::from_le_bytes(b.as_slice().try_into().unwrap()))
+            .sum()
+    }
+}

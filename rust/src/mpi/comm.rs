@@ -1,0 +1,60 @@
+//! Communicators.
+
+use std::sync::Arc;
+
+/// What a communicator's rank space denotes.
+#[derive(Clone, Debug)]
+pub enum CommKind {
+    /// Ranks are processes (MPI_COMM_WORLD and its duplicates).
+    Procs,
+    /// User-visible endpoints communicator: `per_proc` endpoint ranks per
+    /// process; endpoint `e` of a process maps to local VCI `vcis[e]`
+    /// (symmetric across processes). Rank r = proc * per_proc + e.
+    Endpoints { per_proc: usize, vcis: Arc<Vec<usize>> },
+}
+
+/// A communicator handle (plain value: cheap to clone, like an MPI handle).
+#[derive(Clone, Debug)]
+pub struct Comm {
+    /// Globally agreed id (0 = MPI_COMM_WORLD); also the matching key.
+    pub id: u64,
+    /// VCI index this communicator funnels through (paper §4.2). For
+    /// endpoints communicators this is unused — each endpoint has its own.
+    pub vci: usize,
+    pub size: usize,
+    /// Calling process's rank (process id for `Procs` communicators).
+    pub rank: usize,
+    pub kind: CommKind,
+}
+
+impl Comm {
+    /// Number of endpoint ranks per process (1 for process communicators).
+    pub fn ranks_per_proc(&self) -> usize {
+        match &self.kind {
+            CommKind::Procs => 1,
+            CommKind::Endpoints { per_proc, .. } => *per_proc,
+        }
+    }
+
+    pub fn is_endpoints(&self) -> bool {
+        matches!(self.kind, CommKind::Endpoints { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_rank_math() {
+        let c = Comm {
+            id: 5,
+            vci: 0,
+            size: 8,
+            rank: 2,
+            kind: CommKind::Endpoints { per_proc: 4, vcis: Arc::new(vec![1, 2, 3, 4]) },
+        };
+        assert_eq!(c.ranks_per_proc(), 4);
+        assert!(c.is_endpoints());
+    }
+}

@@ -1,0 +1,155 @@
+//! Library configuration: every knob the paper ablates is here.
+
+/// Critical-section granularity (paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CsMode {
+    /// One process-wide lock around every MPI call ("state of the art").
+    /// Progress loops release and reacquire it per iteration so other
+    /// threads can make progress — which is exactly what serializes them.
+    Global,
+    /// Fine-grained: per-VCI locks + a request-class lock + per-hook locks,
+    /// with atomics for reference/completion counting.
+    Fg,
+}
+
+/// How communicators/windows are assigned VCIs from the pool (§5.2's
+/// "mismatch in expected mapping" and the ablations in DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VciPolicy {
+    /// First-come-first-served from the free pool; fall back to VCI 0 when
+    /// exhausted (the paper's design).
+    FirstComePool,
+    /// Round-robin over the pool ignoring free/active state (CRI-style;
+    /// Patinyasakdikul et al.).
+    RoundRobin,
+    /// Hash of the communicator/window id — stateless but collision-prone.
+    Hashed,
+}
+
+/// Full configuration of one vcmpi process.
+#[derive(Clone, Debug)]
+pub struct MpiConfig {
+    /// VCIs to create at init (1 = "original MPICH"). Limited by the
+    /// node's hardware context budget at runtime.
+    pub num_vcis: usize,
+    pub cs_mode: CsMode,
+    /// Per-VCI request caches (paper §4.3 "per-VCI request management").
+    pub per_vci_req_cache: bool,
+    /// Replicate the pre-completed lightweight request per VCI (vs one
+    /// global lightweight request updated with atomics).
+    pub per_vci_lightweight: bool,
+    /// Progress polls only the VCI recorded in the request (paper §4.3
+    /// "per-VCI progress") instead of all active VCIs.
+    pub per_vci_progress: bool,
+    /// Hybrid progress: after this many unsuccessful per-VCI progress
+    /// rounds, run one *global* round over all active VCIs (correctness for
+    /// Fig. 9's shared-progress patterns). `0` disables global fallback
+    /// entirely — pure per-VCI progress, which is fast but INCORRECT; it
+    /// exists to demonstrate the deadlock.
+    pub global_progress_interval: u32,
+    /// Cache-align the VCI array (Fig. 8). When false, adjacent VCIs share
+    /// modeled cache lines and false sharing is charged.
+    pub cache_aligned_vcis: bool,
+    /// Fig. 12's "what if we dropped thread safety": skip lock acquisition
+    /// and atomic charging. Only honored on the Sim backend (it would be
+    /// UB natively); still semantically safe there because the DES
+    /// serializes execution.
+    pub unsafe_no_thread_safety: bool,
+    pub vci_policy: VciPolicy,
+    /// Eagerly claimed hints (MPI-4.0 info-style, §7): see [`Hints`].
+    pub hints: Hints,
+}
+
+/// MPI-4.0-style info hints (paper §7) plus MPI-3.1's accumulate_ordering.
+#[derive(Clone, Debug, Default)]
+pub struct Hints {
+    /// `accumulate_ordering=none`: Accumulates need not apply in program
+    /// order, so they may fan out across VCIs (paper §6.3's closing point).
+    pub accumulate_ordering_none: bool,
+    /// `mpi_assert_no_any_source`: receives never use MPI_ANY_SOURCE, so
+    /// traffic within one communicator may be spread over VCIs by rank.
+    pub no_any_source: bool,
+    /// `mpi_assert_no_any_tag`: receives never use MPI_ANY_TAG; combined
+    /// with `no_any_source` this allows tag-level VCI spreading.
+    pub no_any_tag: bool,
+}
+
+impl MpiConfig {
+    /// "Original MPICH": single VCI, global critical section — the paper's
+    /// state-of-the-art baseline.
+    pub fn original() -> Self {
+        MpiConfig {
+            num_vcis: 1,
+            cs_mode: CsMode::Global,
+            per_vci_req_cache: false,
+            per_vci_lightweight: false,
+            per_vci_progress: false,
+            global_progress_interval: 1,
+            cache_aligned_vcis: false,
+            unsafe_no_thread_safety: false,
+            vci_policy: VciPolicy::FirstComePool,
+            hints: Hints::default(),
+        }
+    }
+
+    /// Fine-grained critical sections on a single VCI (paper §4.1's "FG").
+    pub fn fg_single_vci() -> Self {
+        MpiConfig { cs_mode: CsMode::Fg, ..Self::original() }
+    }
+
+    /// The fully optimized multi-VCI library (paper §4.3, "All opts").
+    pub fn optimized(num_vcis: usize) -> Self {
+        MpiConfig {
+            num_vcis,
+            cs_mode: CsMode::Fg,
+            per_vci_req_cache: true,
+            per_vci_lightweight: true,
+            per_vci_progress: true,
+            global_progress_interval: 64,
+            cache_aligned_vcis: true,
+            unsafe_no_thread_safety: false,
+            vci_policy: VciPolicy::FirstComePool,
+            hints: Hints::default(),
+        }
+    }
+
+    /// MPI-everywhere personality: a single-threaded process needs no
+    /// thread safety at all and owns one VCI outright.
+    pub fn everywhere() -> Self {
+        MpiConfig {
+            num_vcis: 1,
+            cs_mode: CsMode::Fg,
+            per_vci_req_cache: true,
+            per_vci_lightweight: true,
+            per_vci_progress: true,
+            global_progress_interval: 64,
+            cache_aligned_vcis: true,
+            unsafe_no_thread_safety: true, // no threads -> no locks, like a real rank-per-core build
+            vci_policy: VciPolicy::FirstComePool,
+            hints: Hints::default(),
+        }
+    }
+}
+
+impl Default for MpiConfig {
+    fn default() -> Self {
+        Self::optimized(16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_differ_where_expected() {
+        let orig = MpiConfig::original();
+        assert_eq!(orig.num_vcis, 1);
+        assert_eq!(orig.cs_mode, CsMode::Global);
+        let opt = MpiConfig::optimized(16);
+        assert_eq!(opt.num_vcis, 16);
+        assert_eq!(opt.cs_mode, CsMode::Fg);
+        assert!(opt.per_vci_req_cache && opt.per_vci_progress && opt.cache_aligned_vcis);
+        assert!(MpiConfig::everywhere().unsafe_no_thread_safety);
+    }
+}

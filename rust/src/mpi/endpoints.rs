@@ -1,0 +1,64 @@
+//! User-visible MPI Endpoints — the proposed-standard extension the paper
+//! argues against (Dinan et al.), implemented on top of the same VCI
+//! infrastructure ("each endpoint is a VCI", paper §5) so the two
+//! approaches can be compared per-experiment.
+//!
+//! `create_endpoints(parent, n)` is collective: every process derives an
+//! endpoints communicator whose rank space is `nprocs * n`, with endpoint
+//! `e` of process `p` at rank `p*n + e`, pinned to its own VCI. Threads
+//! then communicate *through* a specific endpoint, giving them explicit,
+//! direct control over the underlying hardware context — exactly what
+//! MPI-3.1 abstracts away.
+
+use std::sync::Arc;
+
+use super::comm::{Comm, CommKind};
+use super::proc::MpiProc;
+
+impl MpiProc {
+    /// Collective: create `n` endpoints per process on a new communicator.
+    ///
+    /// Panics if the VCI pool cannot supply `n` distinct VCIs (endpoints
+    /// expose hardware limits to the user — that is the point of them).
+    pub fn create_endpoints(&self, parent: &Comm, n: usize) -> Comm {
+        assert!(n >= 1);
+        let mut vcis = Vec::with_capacity(n);
+        for k in 0..n {
+            let idx = self.vcis().assign(0xEE00_0000_0000_0000 | k as u64);
+            vcis.push(idx);
+        }
+        // Endpoints demand dedicated channels; if the pool collapsed onto
+        // the fallback for any endpoint beyond the first, the hardware is
+        // oversubscribed — surface it rather than silently serializing.
+        let distinct: std::collections::HashSet<usize> = vcis.iter().copied().collect();
+        assert_eq!(
+            distinct.len(),
+            n,
+            "endpoint creation needs {n} distinct VCIs; pool exhausted (hardware limit)"
+        );
+        // Communicator ids must agree across processes: derive from the
+        // per-process creation counter (creation is collective and ordered).
+        let id = self.alloc_comm_id();
+        Comm {
+            id,
+            vci: vcis[0],
+            size: parent.size * n,
+            rank: parent.rank,
+            kind: CommKind::Endpoints { per_proc: n, vcis: Arc::new(vcis) },
+        }
+    }
+
+    /// Free the endpoints communicator, returning its VCIs to the pool.
+    pub fn free_endpoints(&self, comm: Comm) {
+        if let CommKind::Endpoints { vcis, .. } = &comm.kind {
+            for &v in vcis.iter() {
+                self.vcis().release(v);
+            }
+        }
+    }
+
+    /// Endpoint rank of endpoint `e` on process `p` within `comm`.
+    pub fn endpoint_rank(&self, comm: &Comm, p: usize, e: usize) -> usize {
+        p * comm.ranks_per_proc() + e
+    }
+}

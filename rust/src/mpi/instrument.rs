@@ -1,0 +1,169 @@
+//! Critical-path instrumentation: lock/atomic counting (reproduces Table 1)
+//! and modeled atomic counters.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::platform::{padvance, Backend};
+use crate::sim;
+
+thread_local! {
+    static LOCKS_VCI: Cell<u64> = const { Cell::new(0) };
+    static LOCKS_REQUEST: Cell<u64> = const { Cell::new(0) };
+    static LOCKS_GLOBAL: Cell<u64> = const { Cell::new(0) };
+    static LOCKS_HOOK: Cell<u64> = const { Cell::new(0) };
+    static ATOMIC_OPS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Which class of lock was taken (paper Table 1's columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockClass {
+    Global,
+    Vci,
+    Request,
+    Hook,
+}
+
+pub fn count_lock(class: LockClass) {
+    let cell = match class {
+        LockClass::Global => &LOCKS_GLOBAL,
+        LockClass::Vci => &LOCKS_VCI,
+        LockClass::Request => &LOCKS_REQUEST,
+        LockClass::Hook => &LOCKS_HOOK,
+    };
+    cell.with(|c| c.set(c.get() + 1));
+}
+
+pub fn count_atomic() {
+    ATOMIC_OPS.with(|c| c.set(c.get() + 1));
+}
+
+/// Snapshot of the calling thread's critical-path counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounters {
+    pub global_locks: u64,
+    pub vci_locks: u64,
+    pub request_locks: u64,
+    pub hook_locks: u64,
+    pub atomics: u64,
+}
+
+impl OpCounters {
+    pub fn total_locks(&self) -> u64 {
+        self.global_locks + self.vci_locks + self.request_locks + self.hook_locks
+    }
+}
+
+impl std::ops::Sub for OpCounters {
+    type Output = OpCounters;
+    fn sub(self, rhs: OpCounters) -> OpCounters {
+        OpCounters {
+            global_locks: self.global_locks - rhs.global_locks,
+            vci_locks: self.vci_locks - rhs.vci_locks,
+            request_locks: self.request_locks - rhs.request_locks,
+            hook_locks: self.hook_locks - rhs.hook_locks,
+            atomics: self.atomics - rhs.atomics,
+        }
+    }
+}
+
+/// Read the calling thread's counters (monotonic; diff two snapshots to
+/// count one operation, as `repro figures table1` does).
+pub fn snapshot() -> OpCounters {
+    OpCounters {
+        global_locks: LOCKS_GLOBAL.with(|c| c.get()),
+        vci_locks: LOCKS_VCI.with(|c| c.get()),
+        request_locks: LOCKS_REQUEST.with(|c| c.get()),
+        hook_locks: LOCKS_HOOK.with(|c| c.get()),
+        atomics: ATOMIC_OPS.with(|c| c.get()),
+    }
+}
+
+/// A completion/reference counter whose *data* is always a host atomic
+/// (correct on both backends) and whose *cost* is modeled explicitly:
+/// in FG mode the paper's implementation pays an atomic RMW plus a
+/// cache-line transfer when the previous toucher was another thread; under
+/// the Global critical section (or Fig. 12's no-thread-safety mode) the
+/// counter is a plain field and costs nothing extra.
+pub struct ModeledCounter {
+    v: AtomicU64,
+    last_toucher: AtomicUsize,
+    backend: Backend,
+}
+
+const NO_TOUCHER: usize = usize::MAX;
+
+impl ModeledCounter {
+    pub fn new(backend: Backend, v: u64) -> Self {
+        ModeledCounter {
+            v: AtomicU64::new(v),
+            last_toucher: AtomicUsize::new(NO_TOUCHER),
+            backend,
+        }
+    }
+
+    fn charge(&self, charged: bool) {
+        if !charged {
+            return;
+        }
+        count_atomic();
+        if self.backend == Backend::Sim {
+            let me = sim::current_tid();
+            let prev = self.last_toucher.swap(me, Ordering::Relaxed);
+            let costs = crate::mpi::proc::active_costs();
+            if prev != me {
+                padvance(self.backend, costs.cacheline_transfer);
+            }
+            padvance(self.backend, costs.atomic_rmw);
+        }
+        // Native: the host atomic op below *is* the cost.
+    }
+
+    pub fn load(&self) -> u64 {
+        self.v.load(Ordering::Acquire)
+    }
+
+    /// `charged`: whether this access models an atomic RMW (FG mode).
+    pub fn fetch_add(&self, d: u64, charged: bool) -> u64 {
+        self.charge(charged);
+        self.v.fetch_add(d, Ordering::AcqRel)
+    }
+
+    pub fn fetch_sub(&self, d: u64, charged: bool) -> u64 {
+        self.charge(charged);
+        self.v.fetch_sub(d, Ordering::AcqRel)
+    }
+
+    pub fn store(&self, v: u64, charged: bool) {
+        self.charge(charged);
+        self.v.store(v, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_thread() {
+        let base = snapshot();
+        count_lock(LockClass::Vci);
+        count_lock(LockClass::Vci);
+        count_lock(LockClass::Request);
+        count_atomic();
+        let d = snapshot() - base;
+        assert_eq!(d.vci_locks, 2);
+        assert_eq!(d.request_locks, 1);
+        assert_eq!(d.atomics, 1);
+        assert_eq!(d.total_locks(), 3);
+    }
+
+    #[test]
+    fn modeled_counter_native_is_plain_atomic() {
+        let c = ModeledCounter::new(Backend::Native, 5);
+        assert_eq!(c.fetch_add(2, true), 5);
+        assert_eq!(c.load(), 7);
+        c.store(0, false);
+        assert_eq!(c.load(), 0);
+    }
+}

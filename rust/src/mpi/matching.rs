@@ -1,0 +1,224 @@
+//! The two-sided matching engine: posted-receive and unexpected-message
+//! queues with MPI's matching rules (<communicator, rank, tag> with
+//! MPI_ANY_SOURCE / MPI_ANY_TAG wildcards) and nonovertaking order.
+//!
+//! One `MatchingState` lives inside each VCI: all traffic of the
+//! communicators mapped to that VCI funnels through it, which is precisely
+//! how the standard's ordering constraints are preserved (paper §2.1).
+
+use std::collections::VecDeque;
+
+use super::request::ReqId;
+
+/// Source matching pattern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Src {
+    Any,
+    Rank(usize),
+}
+
+/// Tag matching pattern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tag {
+    Any,
+    Value(i32),
+}
+
+/// A posted (pending) receive.
+#[derive(Clone, Debug)]
+pub struct PostedRecv {
+    pub comm_id: u64,
+    pub src: Src,
+    pub tag: Tag,
+    pub req: ReqId,
+}
+
+/// Sender-side info needed to respond to a matched message.
+#[derive(Clone, Copy, Debug)]
+pub struct SenderInfo {
+    pub src_proc: usize,
+    pub src_ctx: usize,
+    /// Sender's request handle for acks / rendezvous CTS.
+    pub send_handle: u64,
+}
+
+/// How the payload arrives.
+#[derive(Clone, Debug)]
+pub enum Arrival {
+    /// Eager: data travelled with the envelope.
+    Eager { data: Vec<u8>, needs_ack: bool },
+    /// Rendezvous request-to-send: data still at the sender.
+    Rts,
+}
+
+/// An arrived-but-unmatched message.
+#[derive(Clone, Debug)]
+pub struct UnexpectedMsg {
+    pub comm_id: u64,
+    pub src_rank: usize,
+    pub tag: i32,
+    pub seq: u64,
+    pub sender: SenderInfo,
+    pub arrival: Arrival,
+}
+
+/// Matching queues for one VCI.
+#[derive(Default)]
+pub struct MatchingState {
+    posted: VecDeque<PostedRecv>,
+    unexpected: VecDeque<UnexpectedMsg>,
+}
+
+fn envelope_matches(p: &PostedRecv, comm_id: u64, src_rank: usize, tag: i32) -> bool {
+    p.comm_id == comm_id
+        && match p.src {
+            Src::Any => true,
+            Src::Rank(r) => r == src_rank,
+        }
+        && match p.tag {
+            Tag::Any => true,
+            Tag::Value(t) => t == tag,
+        }
+}
+
+impl MatchingState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An envelope arrived: match it against the posted queue (in post
+    /// order — MPI's matching rule) or append it to the unexpected queue.
+    /// On a match, both the posted receive and the message are returned.
+    pub fn on_arrival(&mut self, msg: UnexpectedMsg) -> Option<(PostedRecv, UnexpectedMsg)> {
+        if let Some(pos) = self
+            .posted
+            .iter()
+            .position(|p| envelope_matches(p, msg.comm_id, msg.src_rank, msg.tag))
+        {
+            self.posted.remove(pos).map(|p| (p, msg))
+        } else {
+            self.unexpected.push_back(msg);
+            None
+        }
+    }
+
+    /// A receive is being posted: search the unexpected queue first (in
+    /// arrival order), otherwise append to the posted queue.
+    pub fn on_post(&mut self, recv: PostedRecv) -> Option<UnexpectedMsg> {
+        if let Some(pos) = self
+            .unexpected
+            .iter()
+            .position(|m| envelope_matches(&recv, m.comm_id, m.src_rank, m.tag))
+        {
+            // Nonovertaking: among queued messages matching this pattern,
+            // consume the earliest-arrived (lowest position; FIFO per
+            // stream implies lowest seq). `position()` guarantees it; the
+            // debug check makes the invariant explicit.
+            debug_assert!(!self.unexpected.iter().take(pos).any(|m| envelope_matches(
+                &recv,
+                m.comm_id,
+                m.src_rank,
+                m.tag
+            )));
+            let msg = self.unexpected.remove(pos).unwrap();
+            Some(msg)
+        } else {
+            self.posted.push_back(recv);
+            None
+        }
+    }
+
+    pub fn posted_len(&self) -> usize {
+        self.posted.len()
+    }
+
+    pub fn unexpected_len(&self) -> usize {
+        self.unexpected.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn umsg(comm: u64, src: usize, tag: i32, seq: u64) -> UnexpectedMsg {
+        UnexpectedMsg {
+            comm_id: comm,
+            src_rank: src,
+            tag,
+            seq,
+            sender: SenderInfo { src_proc: src, src_ctx: 0, send_handle: 0 },
+            arrival: Arrival::Eager { data: vec![], needs_ack: false },
+        }
+    }
+
+    fn precv(comm: u64, src: Src, tag: Tag, req: ReqId) -> PostedRecv {
+        PostedRecv { comm_id: comm, src, tag, req }
+    }
+
+    #[test]
+    fn exact_match_on_arrival() {
+        let mut m = MatchingState::new();
+        assert!(m.on_post(precv(1, Src::Rank(2), Tag::Value(7), 10)).is_none());
+        let hit = m.on_arrival(umsg(1, 2, 7, 1));
+        assert_eq!(hit.unwrap().0.req, 10);
+        assert_eq!(m.posted_len(), 0);
+    }
+
+    #[test]
+    fn mismatched_envelope_goes_unexpected() {
+        let mut m = MatchingState::new();
+        assert!(m.on_post(precv(1, Src::Rank(2), Tag::Value(7), 10)).is_none());
+        assert!(m.on_arrival(umsg(1, 3, 7, 1)).is_none(), "wrong src");
+        assert!(m.on_arrival(umsg(1, 2, 8, 1)).is_none(), "wrong tag");
+        assert!(m.on_arrival(umsg(2, 2, 7, 1)).is_none(), "wrong comm");
+        assert_eq!(m.unexpected_len(), 3);
+        assert_eq!(m.posted_len(), 1);
+    }
+
+    #[test]
+    fn any_source_any_tag_wildcards() {
+        let mut m = MatchingState::new();
+        m.on_post(precv(1, Src::Any, Tag::Any, 10));
+        let hit = m.on_arrival(umsg(1, 5, 99, 1));
+        assert_eq!(hit.unwrap().0.req, 10);
+    }
+
+    #[test]
+    fn unexpected_consumed_in_arrival_order() {
+        let mut m = MatchingState::new();
+        assert!(m.on_arrival(umsg(1, 2, 7, 1)).is_none());
+        assert!(m.on_arrival(umsg(1, 2, 7, 2)).is_none());
+        let first = m.on_post(precv(1, Src::Rank(2), Tag::Value(7), 10)).unwrap();
+        assert_eq!(first.seq, 1, "earliest arrival matches first");
+        let second = m.on_post(precv(1, Src::Any, Tag::Any, 11)).unwrap();
+        assert_eq!(second.seq, 2);
+    }
+
+    #[test]
+    fn posted_matched_in_post_order() {
+        let mut m = MatchingState::new();
+        m.on_post(precv(1, Src::Any, Tag::Any, 10));
+        m.on_post(precv(1, Src::Rank(2), Tag::Value(7), 11));
+        let hit = m.on_arrival(umsg(1, 2, 7, 1));
+        assert_eq!(hit.unwrap().0.req, 10, "first posted wins even vs exact match");
+    }
+
+    #[test]
+    fn different_tags_may_be_consumed_out_of_seq_order() {
+        // Legal MPI: recv(tag=20) posted before recv(tag=10) consumes the
+        // later-sequenced message first — nonovertaking only constrains
+        // messages that match the same pattern.
+        let mut m = MatchingState::new();
+        assert!(m.on_arrival(umsg_tag(1, 2, 10, 1)).is_none());
+        assert!(m.on_arrival(umsg_tag(1, 2, 20, 2)).is_none());
+        let got20 = m.on_post(precv(1, Src::Rank(2), Tag::Value(20), 11)).unwrap();
+        assert_eq!(got20.seq, 2);
+        let got10 = m.on_post(precv(1, Src::Rank(2), Tag::Value(10), 12)).unwrap();
+        assert_eq!(got10.seq, 1);
+    }
+
+    fn umsg_tag(comm: u64, src: usize, tag: i32, seq: u64) -> UnexpectedMsg {
+        umsg(comm, src, tag, seq)
+    }
+}

@@ -1,0 +1,40 @@
+//! `vcmpi` — the MPI-3.1-subset library with internal multi-VCI support
+//! (the paper's contribution) plus the user-visible Endpoints extension
+//! (the proposal it argues against).
+//!
+//! Module map (see DESIGN.md §5):
+//!  * [`config`] — every knob the paper ablates
+//!  * [`vci`] — VCI objects, pool, mapping policies, lock discipline
+//!  * [`matching`] — <comm, rank, tag> matching with wildcards + ordering
+//!  * [`request`] — global pool / per-VCI caches / lightweight requests
+//!  * [`p2p`] — isend/irecv/ssend/wait and the eager/rendezvous protocols
+//!  * [`progress`] — per-VCI / global / hybrid progress + wire handlers
+//!  * [`rma`] — windows, put/get/accumulate/fetch-op, flush, win_free
+//!  * [`collectives`] — barrier/bcast/allgather/allreduce over p2p
+//!  * [`endpoints`] — user-visible endpoints (comparison arm)
+//!  * [`proc`] — process state, MPI_Init/Finalize, connection setup
+//!  * [`world`] — cluster runner: spawns processes x threads on either
+//!    backend and runs a workload closure per thread
+//!  * [`instrument`] — lock/atomic counters (Table 1)
+
+pub mod collectives;
+pub mod comm;
+pub mod config;
+pub mod endpoints;
+pub mod instrument;
+pub mod matching;
+pub mod p2p;
+pub mod proc;
+pub mod progress;
+pub mod request;
+pub mod rma;
+pub mod vci;
+pub mod world;
+
+pub use comm::{Comm, CommKind};
+pub use config::{CsMode, Hints, MpiConfig, VciPolicy};
+pub use matching::{Src, Tag};
+pub use proc::MpiProc;
+pub use request::Request;
+pub use rma::{GetHandle, Window};
+pub use world::{run_cluster, ClusterSpec, RunReport};

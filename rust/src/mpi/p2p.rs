@@ -1,0 +1,372 @@
+//! Two-sided point-to-point: MPI_Isend / MPI_Issend / MPI_Irecv /
+//! MPI_Wait / MPI_Test and their blocking forms.
+//!
+//! Protocols (paper §4.1 and the CH4 design it builds on):
+//!  * immediate: small sends complete at injection; no request object is
+//!    allocated — a lightweight pre-completed request is referenced.
+//!  * eager: payload travels with the envelope; TX completes when the DMA
+//!    drains (tracked with `Completion::AtTime`).
+//!  * rendezvous: RTS/CTS/DATA exchange for large payloads.
+//!  * synchronous (Ssend): completes on the receiver's match ack.
+
+use crate::fabric::{P2pProtocol, Payload};
+use crate::platform::{padvance, pnow};
+
+use super::config::CsMode;
+use super::instrument::count_lock;
+use super::matching::{Arrival, PostedRecv, SenderInfo, Src, Tag, UnexpectedMsg};
+use super::proc::MpiProc;
+use super::request::{ReqId, Request};
+use super::vci::{Guard, VciState};
+use super::Comm;
+
+impl MpiProc {
+    /// True when completion counters must be updated atomically (FG mode
+    /// with thread safety enabled).
+    pub(super) fn charged_atomics(&self) -> bool {
+        self.cfg.cs_mode == CsMode::Fg && self.guard() != Guard::None
+    }
+
+    pub(super) fn take_pool_lock(&self) -> bool {
+        self.cfg.cs_mode == CsMode::Fg && self.guard() != Guard::None
+    }
+
+    /// Allocate a request with the VCI state already held (per-VCI cache
+    /// fast path — paper §4.3 "per-VCI request management"). Cache misses
+    /// refill a chunk from the global pool under one lock acquisition.
+    pub(super) fn alloc_request(&self, st: &mut VciState) -> ReqId {
+        if self.cfg.per_vci_req_cache {
+            if let Some(id) = st.req_cache.pop() {
+                padvance(self.backend, self.costs.request_cache_op);
+                self.slab.reset_slot(id);
+                return id;
+            }
+            let mut chunk = self.slab.alloc_chunk(&self.costs, self.take_pool_lock(), 32);
+            let id = chunk.pop().expect("chunk non-empty");
+            st.req_cache.extend(chunk);
+            self.slab.reset_slot(id);
+            return id;
+        }
+        self.slab.alloc_global(&self.costs, self.take_pool_lock())
+    }
+
+    /// Free a request after wait/test observes completion. Runs *outside*
+    /// the VCI critical section that observed completion (paper §4.3: the
+    /// VCI lock is taken a second time for the free).
+    pub(super) fn release_request(&self, id: ReqId, vci_idx: usize) {
+        let guard = self.guard();
+        if self.cfg.per_vci_req_cache {
+            // Return to the owning VCI's cache under the mode's guard
+            // discipline (VCI lock in FG; the big lock / nothing in
+            // Global / no-thread-safety modes).
+            let vci = self.vcis().get(vci_idx).clone();
+            vci.with_state(guard, |st| {
+                padvance(self.backend, self.costs.request_cache_op);
+                st.req_cache.push(id);
+            });
+        } else {
+            let take_lock = guard == Guard::VciLock;
+            self.slab.free_global(id, &self.costs, take_lock);
+        }
+    }
+
+    pub(super) fn lightweight_acquire(&self, st: &mut VciState) {
+        if self.cfg.per_vci_lightweight {
+            // Plain (uncharged) bump: protected by the VCI lock.
+            st.lw_refs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        } else {
+            // One global lightweight request: contended atomic in FG mode.
+            self.slab.global_lightweight_refs.fetch_add(1, self.charged_atomics());
+        }
+    }
+
+    fn lightweight_release(&self) {
+        if !self.cfg.per_vci_lightweight {
+            self.slab.global_lightweight_refs.fetch_sub(1, self.charged_atomics());
+        }
+        // Per-VCI lightweight: decrement is deferred to the next VCI-locked
+        // operation; MPI_Wait on it takes zero locks (paper Table 1).
+    }
+
+    /// MPI_Isend (standard mode).
+    pub fn isend(&self, comm: &Comm, dst: usize, tag: i32, data: &[u8]) -> Request {
+        self.isend_ep(comm, None, dst, tag, data, false)
+    }
+
+    /// MPI_Issend (synchronous mode: completes only once matched).
+    pub fn issend(&self, comm: &Comm, dst: usize, tag: i32, data: &[u8]) -> Request {
+        self.isend_ep(comm, None, dst, tag, data, true)
+    }
+
+    /// Endpoint-aware isend: `my_ep` selects the sending endpoint for
+    /// endpoints communicators (None for process communicators).
+    pub fn isend_ep(
+        &self,
+        comm: &Comm,
+        my_ep: Option<usize>,
+        dst: usize,
+        tag: i32,
+        data: &[u8],
+        sync: bool,
+    ) -> Request {
+        padvance(self.backend, self.costs.mpi_sw_send + self.costs.instructions(8));
+        let _cs = self.enter_cs();
+        let guard = self.guard();
+        // MPI-4.0 hints allow envelope-level VCI spreading (paper §7); the
+        // stream is keyed by the SENDER's rank + tag so the receiver can
+        // derive the same one (wildcards are asserted away).
+        let vci_idx = if my_ep.is_none() {
+            self.vci_for_envelope(comm, comm.rank, tag)
+        } else {
+            self.comm_vci(comm, my_ep)
+        };
+        let vci = self.vcis().get(vci_idx).clone();
+        let (dst_proc, base_dst_ctx) = self.route(comm, dst);
+        let dst_ctx = if my_ep.is_none() && vci_idx != self.comm_vci(comm, None) {
+            // Hinted spread: target the mirror context on the receiver.
+            self.remote_ctx_for_vci(dst_proc, vci_idx)
+        } else {
+            base_dst_ctx
+        };
+        let my_rank = match &comm.kind {
+            super::comm::CommKind::Procs => comm.rank,
+            super::comm::CommKind::Endpoints { per_proc, .. } => {
+                comm.rank * per_proc + my_ep.expect("endpoint identity required")
+            }
+        };
+        let eager = data.len() <= self.costs.rendezvous_threshold;
+        let immediate = eager && !sync && data.len() <= self.costs.immediate_completion_max;
+        vci.with_state(guard, |st| {
+            let seq = {
+                let e = st.send_seq.entry((comm.id, dst)).or_insert(0);
+                *e += 1;
+                *e
+            };
+            if immediate {
+                self.lightweight_acquire(st);
+                self.fabric.inject(vci.ctx_index, dst_proc, dst_ctx, Payload::TwoSided {
+                    comm_id: comm.id,
+                    src_rank: my_rank,
+                    dst_rank: dst,
+                    tag,
+                    seq,
+                    protocol: P2pProtocol::Eager { send_handle: 0 },
+                    needs_ack: false,
+                    data: data.to_vec(),
+                });
+                return Request::Lightweight { vci: vci_idx };
+            }
+            let id = self.alloc_request(st);
+            self.slab.slot(id).vci.store(vci_idx, std::sync::atomic::Ordering::Relaxed);
+            padvance(self.backend, self.costs.instructions(3)); // record VCI in request
+            if eager {
+                self.fabric.inject(vci.ctx_index, dst_proc, dst_ctx, Payload::TwoSided {
+                    comm_id: comm.id,
+                    src_rank: my_rank,
+                    dst_rank: dst,
+                    tag,
+                    seq,
+                    protocol: P2pProtocol::Eager { send_handle: id as u64 },
+                    needs_ack: sync,
+                    data: data.to_vec(),
+                });
+                if sync {
+                    // Completes on the receiver's SendAck.
+                } else {
+                    // TX completion when the DMA drains.
+                    let done = pnow(self.backend) + self.costs.dma_cost(data.len());
+                    self.slab
+                        .slot(id)
+                        .complete_at
+                        .store(done, std::sync::atomic::Ordering::Release);
+                }
+            } else {
+                // Rendezvous: park the payload, send RTS.
+                st.pending_sends.insert(
+                    id as u64,
+                    super::vci::PendingSend {
+                        data: data.to_vec(),
+                        comm_id: comm.id,
+                        dst_rank: dst,
+                        tag,
+                        req: id,
+                    },
+                );
+                self.fabric.inject(vci.ctx_index, dst_proc, dst_ctx, Payload::TwoSided {
+                    comm_id: comm.id,
+                    src_rank: my_rank,
+                    dst_rank: dst,
+                    tag,
+                    seq,
+                    protocol: P2pProtocol::Rts { send_handle: id as u64 },
+                    needs_ack: false,
+                    data: Vec::new(),
+                });
+            }
+            Request::Real { id, vci: vci_idx }
+        })
+    }
+
+    /// MPI_Irecv. Returns a request whose `wait` yields the payload.
+    pub fn irecv(&self, comm: &Comm, src: Src, tag: Tag) -> Request {
+        self.irecv_ep(comm, None, src, tag)
+    }
+
+    pub fn irecv_ep(&self, comm: &Comm, my_ep: Option<usize>, src: Src, tag: Tag) -> Request {
+        padvance(self.backend, self.costs.mpi_sw_recv + self.costs.instructions(8));
+        let _cs = self.enter_cs();
+        let guard = self.guard();
+        let hinted =
+            self.cfg.hints.no_any_source && self.cfg.hints.no_any_tag && !comm.is_endpoints();
+        let vci_idx = if hinted && my_ep.is_none() {
+            // The asserted hints forbid wildcards: the envelope is fully
+            // specified and selects the stream.
+            let (s, t) = match (src, tag) {
+                (Src::Rank(s), Tag::Value(t)) => (s, t),
+                _ => panic!(
+                    "mpi_assert_no_any_source/no_any_tag asserted, but a                      wildcard receive was posted (erroneous program)"
+                ),
+            };
+            self.vci_for_envelope(comm, s, t)
+        } else {
+            self.comm_vci(comm, my_ep)
+        };
+        let vci = self.vcis().get(vci_idx).clone();
+        vci.with_state(guard, |st| {
+            let id = self.alloc_request(st);
+            self.slab.slot(id).vci.store(vci_idx, std::sync::atomic::Ordering::Relaxed);
+            padvance(self.backend, self.costs.instructions(3) + self.costs.match_cost);
+            let posted = PostedRecv { comm_id: comm.id, src, tag, req: id };
+            if let Some(m) = st.matching.on_post(posted) {
+                self.consume_matched(st, vci.ctx_index, id, m);
+            }
+            Request::Real { id, vci: vci_idx }
+        })
+    }
+
+    /// Deliver a matched unexpected message into recv request `id`
+    /// (either eagerly, or by answering an RTS with a CTS).
+    pub(super) fn consume_matched(
+        &self,
+        _st: &mut VciState,
+        my_ctx_index: usize,
+        id: ReqId,
+        m: UnexpectedMsg,
+    ) {
+        match m.arrival {
+            Arrival::Eager { data, needs_ack } => {
+                padvance(
+                    self.backend,
+                    self.costs.memcpy_cost(data.len()) + self.costs.completion_process,
+                );
+                *self.slab.slot(id).data.lock().unwrap_or_else(|e| e.into_inner()) = Some(data);
+                self.slab.slot(id).completed.store(1, self.charged_atomics());
+                if needs_ack {
+                    self.reply(my_ctx_index, &m.sender, Payload::SendAck {
+                        send_handle: m.sender.send_handle,
+                    });
+                }
+            }
+            Arrival::Rts => {
+                self.reply(my_ctx_index, &m.sender, Payload::TwoSided {
+                    comm_id: m.comm_id,
+                    src_rank: 0,
+                    dst_rank: 0,
+                    tag: 0,
+                    seq: 0,
+                    protocol: P2pProtocol::Cts {
+                        send_handle: m.sender.send_handle,
+                        recv_handle: id as u64,
+                    },
+                    needs_ack: false,
+                    data: Vec::new(),
+                });
+            }
+        }
+    }
+
+    /// Inject a control reply toward the context a message came from.
+    pub(super) fn reply(&self, my_ctx_index: usize, sender: &SenderInfo, payload: Payload) {
+        self.fabric.inject(my_ctx_index, sender.src_proc, sender.src_ctx, payload);
+    }
+
+    /// Has this request completed? (Non-consuming check.)
+    pub(super) fn is_complete(&self, id: ReqId) -> bool {
+        let slot = self.slab.slot(id);
+        if slot.completed.load() == 1 {
+            return true;
+        }
+        let t = slot.complete_at.load(std::sync::atomic::Ordering::Acquire);
+        t > 0 && pnow(self.backend) >= t
+    }
+
+    /// MPI_Wait: progress until complete; returns received payload if any.
+    pub fn wait(&self, req: Request) -> Option<Vec<u8>> {
+        match req {
+            Request::Lightweight { .. } => {
+                if self.cfg.cs_mode == CsMode::Global && self.guard() != Guard::None {
+                    count_lock(super::instrument::LockClass::Global);
+                    let _g = self.global_cs.lock();
+                    self.lightweight_release();
+                } else {
+                    self.lightweight_release();
+                }
+                None
+            }
+            Request::Real { id, vci } => {
+                loop {
+                    if self.is_complete(id) {
+                        break;
+                    }
+                    self.progress_for_request(vci);
+                }
+                let data =
+                    self.slab.slot(id).data.lock().unwrap_or_else(|e| e.into_inner()).take();
+                if self.guard() == Guard::GlobalHeld {
+                    let _cs = self.enter_cs();
+                    self.release_request(id, vci);
+                } else {
+                    self.release_request(id, vci);
+                }
+                data
+            }
+        }
+    }
+
+    /// MPI_Test: one progress pass, then a completion check.
+    pub fn test(&self, req: &Request) -> bool {
+        match req {
+            Request::Lightweight { .. } => true,
+            Request::Real { id, vci } => {
+                if self.is_complete(*id) {
+                    return true;
+                }
+                self.progress_for_request(*vci);
+                self.is_complete(*id)
+            }
+        }
+    }
+
+    /// MPI_Waitall.
+    pub fn waitall(&self, reqs: impl IntoIterator<Item = Request>) -> Vec<Option<Vec<u8>>> {
+        reqs.into_iter().map(|r| self.wait(r)).collect()
+    }
+
+    /// Blocking standard send.
+    pub fn send(&self, comm: &Comm, dst: usize, tag: i32, data: &[u8]) {
+        let r = self.isend(comm, dst, tag, data);
+        self.wait(r);
+    }
+
+    /// Blocking synchronous send.
+    pub fn ssend(&self, comm: &Comm, dst: usize, tag: i32, data: &[u8]) {
+        let r = self.issend(comm, dst, tag, data);
+        self.wait(r);
+    }
+
+    /// Blocking receive; returns the payload.
+    pub fn recv(&self, comm: &Comm, src: Src, tag: Tag) -> Vec<u8> {
+        let r = self.irecv(comm, src, tag);
+        self.wait(r).expect("recv request must carry data")
+    }
+}

@@ -1,0 +1,306 @@
+//! `MpiProc` — one MPI process: VCI pool, request slab, communicator and
+//! window tables, the Global critical section, progress hooks, and the
+//! connection-establishment logic of MPI_Init/Finalize (paper §4.2).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::fabric::{Interconnect, ProcFabric};
+use crate::platform::{padvance, pyield, Backend, PMutex};
+use crate::sim::CostModel;
+
+use super::comm::{Comm, CommKind};
+use super::config::{CsMode, MpiConfig};
+use super::instrument::{count_lock, LockClass};
+use super::request::{RequestSlab, DEFAULT_SLAB_CAPACITY};
+use super::rma::Window;
+use super::vci::{guard_for, Guard, VciPool, FALLBACK_VCI};
+
+thread_local! {
+    static ACTIVE_COSTS: RefCell<Option<Arc<CostModel>>> = const { RefCell::new(None) };
+    static THREAD_TOKEN: RefCell<Option<u64>> = const { RefCell::new(None) };
+}
+
+/// Install the cost model for the calling thread (done by the world runner
+/// and test harnesses before any MPI call).
+pub fn set_active_costs(c: Arc<CostModel>) {
+    ACTIVE_COSTS.with(|a| *a.borrow_mut() = Some(c));
+}
+
+pub fn active_costs() -> Arc<CostModel> {
+    ACTIVE_COSTS
+        .with(|a| a.borrow().clone())
+        .unwrap_or_else(|| Arc::new(CostModel::default()))
+}
+
+/// A stable per-thread token for per-thread RMA completion tracking.
+pub fn thread_token() -> u64 {
+    if crate::sim::in_sim() {
+        return crate::sim::current_tid() as u64;
+    }
+    THREAD_TOKEN.with(|t| {
+        let mut t = t.borrow_mut();
+        if t.is_none() {
+            static NEXT: AtomicU64 = AtomicU64::new(1 << 32);
+            *t = Some(NEXT.fetch_add(1, Ordering::Relaxed));
+        }
+        t.unwrap()
+    })
+}
+
+/// MPI progress hooks (MPICH/CH4 maintains two — paper §4.1). Each has its
+/// own lock, acquired per progress-engine iteration in FG mode.
+pub struct ProgressHook {
+    pub lock: PMutex<()>,
+    pub active: AtomicBool,
+}
+
+/// One MPI process.
+pub struct MpiProc {
+    pub cfg: MpiConfig,
+    pub fabric: ProcFabric,
+    pub backend: Backend,
+    pub costs: Arc<CostModel>,
+    /// Set by `init()`.
+    vcis: OnceLock<VciPool>,
+    pub slab: RequestSlab,
+    /// The Global critical section (CsMode::Global).
+    pub global_cs: PMutex<()>,
+    pub hooks: [ProgressHook; 2],
+    /// Live communicators (host table; creation is off the critical path).
+    comms: Mutex<Vec<Comm>>,
+    pub(super) windows: Mutex<Vec<Arc<Window>>>,
+    next_comm_id: AtomicU64,
+    pub(super) next_win_id: AtomicU64,
+    /// Signals service threads (PSM2-style progress) to stop.
+    pub finalized: AtomicBool,
+    pub initialized: AtomicBool,
+}
+
+impl MpiProc {
+    /// Construct the (uninitialized) process. Call [`MpiProc::init`] from
+    /// exactly one of its threads before communicating.
+    pub fn new(fabric: ProcFabric, cfg: MpiConfig) -> Arc<MpiProc> {
+        let backend = fabric.backend();
+        let costs = fabric.costs().clone();
+        Arc::new(MpiProc {
+            cfg,
+            backend,
+            costs,
+            vcis: OnceLock::new(),
+            slab: RequestSlab::new(backend, DEFAULT_SLAB_CAPACITY),
+            global_cs: PMutex::new(backend, ()),
+            hooks: [
+                ProgressHook { lock: PMutex::new(backend, ()), active: AtomicBool::new(false) },
+                ProgressHook { lock: PMutex::new(backend, ()), active: AtomicBool::new(false) },
+            ],
+            comms: Mutex::new(Vec::new()),
+            windows: Mutex::new(Vec::new()),
+            next_comm_id: AtomicU64::new(1),
+            next_win_id: AtomicU64::new(1),
+            finalized: AtomicBool::new(false),
+            initialized: AtomicBool::new(false),
+            fabric,
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.fabric.proc
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.fabric.nprocs()
+    }
+
+    pub fn interconnect(&self) -> Interconnect {
+        self.fabric.interconnect()
+    }
+
+    pub fn vcis(&self) -> &VciPool {
+        self.vcis.get().expect("MpiProc::init not called")
+    }
+
+    pub fn guard(&self) -> Guard {
+        guard_for(&self.cfg, self.backend)
+    }
+
+    /// Enter the Global critical section if configured (no-op in FG mode).
+    /// Returns a guard to hold for the duration of the MPI call.
+    pub fn enter_cs(&self) -> Option<crate::platform::PMutexGuard<'_, ()>> {
+        if self.cfg.unsafe_no_thread_safety && self.backend == Backend::Sim {
+            return None;
+        }
+        match self.cfg.cs_mode {
+            CsMode::Global => {
+                count_lock(LockClass::Global);
+                Some(self.global_cs.lock())
+            }
+            CsMode::Fg => None,
+        }
+    }
+
+    /// MPI_Init: open hardware contexts (one per requested VCI, bounded by
+    /// the node's budget), build the VCI pool, and establish connections:
+    /// PMI-style out-of-band exchange for the fallback VCI, then an
+    /// allgather of the remaining VCI addresses *over* the fallback VCI
+    /// (paper §4.2 "Connection establishment" — the Fig. 4 overhead).
+    pub fn init(self: &Arc<Self>) {
+        assert!(!self.initialized.load(Ordering::Acquire), "double init");
+        let mut ctx_indices = Vec::new();
+        for _ in 0..self.cfg.num_vcis.max(1) {
+            match self.fabric.open_context() {
+                Some((idx, _ctx)) => ctx_indices.push(idx),
+                None => break, // hardware exhausted: smaller pool
+            }
+        }
+        assert!(
+            !ctx_indices.is_empty(),
+            "node out of hardware contexts for even the fallback VCI"
+        );
+        let pool = VciPool::new(
+            self.backend,
+            &ctx_indices,
+            self.cfg.cache_aligned_vcis,
+            self.cfg.vci_policy,
+        );
+        self.vcis.set(pool).ok().expect("init raced");
+
+        // PMI exchange of fallback addresses: every rank inserts every other
+        // rank's fallback address into its address vector. PMI is an
+        // out-of-band rendezvous — it cannot complete until every process
+        // has opened (and published) its fallback context, so wait for
+        // that before the in-band allgather below.
+        for p in 0..self.nprocs() {
+            if p != self.rank() {
+                while self.fabric.open_count(p) == 0 {
+                    padvance(self.backend, 200); // PMI poll interval
+                    pyield(self.backend);
+                }
+                self.fabric.insert_address();
+            }
+        }
+        self.initialized.store(true, Ordering::Release);
+        // Address allgather for the remaining VCIs rides over the fallback
+        // VCI (world communicator), exactly as the paper does it.
+        let world = self.comm_world();
+        let my_nvcis = self.vcis().len() as u64;
+        let counts = self.allgather_u64(&world, my_nvcis);
+        for (p, &n) in counts.iter().enumerate() {
+            if p != self.rank() {
+                for _ in 0..n.saturating_sub(1) {
+                    self.fabric.insert_address();
+                }
+            }
+        }
+        self.barrier(&world);
+    }
+
+    /// MPI_Finalize: drain, tear down contexts (cost grows with the number
+    /// of VCIs — Fig. 4's finalize series), release service threads.
+    pub fn finalize(self: &Arc<Self>) {
+        let world = self.comm_world();
+        self.barrier(&world);
+        let n = self.vcis().len();
+        for i in 0..n {
+            self.fabric.close_context(self.vcis().get(i).ctx_index);
+        }
+        self.finalized.store(true, Ordering::Release);
+    }
+
+    /// MPI_COMM_WORLD: rank = process id, mapped to the fallback VCI.
+    pub fn comm_world(&self) -> Comm {
+        Comm {
+            id: 0,
+            vci: FALLBACK_VCI,
+            size: self.nprocs(),
+            rank: self.rank(),
+            kind: CommKind::Procs,
+        }
+    }
+
+    /// Allocate the next communicator id (shared by dup and endpoint
+    /// creation so that symmetric collective creation orders yield
+    /// identical ids on every process).
+    pub(super) fn alloc_comm_id(&self) -> u64 {
+        self.next_comm_id.fetch_add(1, Ordering::AcqRel)
+    }
+
+    /// MPI_Comm_dup: a new communicator with its own VCI from the pool
+    /// (or the fallback when the pool is empty). Collective: call on every
+    /// process in creation order; assignment is symmetric because pools
+    /// start identical and assignment order matches.
+    pub fn comm_dup(&self, parent: &Comm) -> Comm {
+        let id = self.alloc_comm_id();
+        padvance(self.backend, self.costs.instructions(200)); // comm bookkeeping
+        let vci = self.vcis().assign(id);
+        let c = Comm { id, vci, size: parent.size, rank: parent.rank, kind: parent.kind.clone() };
+        self.comms.lock().unwrap_or_else(|e| e.into_inner()).push(c.clone());
+        c
+    }
+
+    /// MPI_Comm_free: return the VCI to the pool.
+    pub fn comm_free(&self, comm: Comm) {
+        self.vcis().release(comm.vci);
+        let mut t = self.comms.lock().unwrap_or_else(|e| e.into_inner());
+        t.retain(|c| c.id != comm.id);
+    }
+
+    /// Resolve a communicator rank to (target process, target ctx index).
+    pub fn route(&self, comm: &Comm, rank: usize) -> (usize, usize) {
+        match &comm.kind {
+            CommKind::Procs => {
+                let proc = rank;
+                let remote_ctxs = self.fabric.open_count(proc).max(1);
+                (proc, comm.vci % remote_ctxs)
+            }
+            CommKind::Endpoints { per_proc, vcis } => {
+                let proc = rank / per_proc;
+                let ep = rank % per_proc;
+                let remote_ctxs = self.fabric.open_count(proc).max(1);
+                (proc, vcis[ep] % remote_ctxs)
+            }
+        }
+    }
+
+    /// The local VCI index an operation on `comm` (issued by the calling
+    /// thread, in the given role) maps to.
+    pub fn comm_vci(&self, comm: &Comm, my_endpoint: Option<usize>) -> usize {
+        match &comm.kind {
+            CommKind::Procs => comm.vci % self.vcis().len(),
+            CommKind::Endpoints { vcis, .. } => {
+                let ep = my_endpoint.expect("endpoint comms require an endpoint identity");
+                vcis[ep] % self.vcis().len()
+            }
+        }
+    }
+
+    /// MPI-4.0 hint path (paper §7): with `mpi_assert_no_any_source` +
+    /// `mpi_assert_no_any_tag` asserted, traffic within ONE communicator
+    /// may spread over VCIs by its fully-specified envelope — matching
+    /// stays correct because both sides can compute the same stream from
+    /// (comm, source rank, tag). Falls back to the communicator's VCI when
+    /// the hints are not asserted (or with a single-VCI pool).
+    pub fn vci_for_envelope(&self, comm: &Comm, src_rank: usize, tag: i32) -> usize {
+        if comm.is_endpoints()
+            || !(self.cfg.hints.no_any_source && self.cfg.hints.no_any_tag)
+            || self.vcis().len() <= 1
+        {
+            return self.comm_vci(comm, None);
+        }
+        // SplitMix-style scramble of the full envelope.
+        let mut z = comm
+            .id
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((src_rank as u64) << 32)
+            .wrapping_add(tag as u32 as u64);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z ^= z >> 27;
+        1 + (z % (self.vcis().len() as u64 - 1)) as usize
+    }
+
+    /// Cooperative yield used inside progress/wait loops.
+    pub fn relax(&self) {
+        pyield(self.backend);
+    }
+}

@@ -1,0 +1,427 @@
+//! One-sided communication: windows, MPI_Put / MPI_Get / MPI_Accumulate /
+//! MPI_Fetch_and_op, and passive-target synchronization (MPI_Win_flush).
+//!
+//! Interconnect split (paper §5.2):
+//!  * IB personality: contiguous Put/Get execute in hardware — the
+//!    initiator moves the bytes and completion is a fixed time stamp; no
+//!    target CPU involvement (`RmaCompletion::AtTime`).
+//!  * OPA personality: RMA is emulated in software — Put/Get become active
+//!    messages the *target* must process by polling the target VCI
+//!    (`RmaCompletion::OnAck`), which is the root of the paper's
+//!    shared-progress findings (Figs. 13-16, 24-25, 27).
+//!  * Accumulates ride the active-message path on both personalities
+//!    (datatype reductions are not NIC-offloadable in general).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::fabric::{AccOp, Interconnect, Payload, WindowMem};
+use crate::platform::{padvance, pnow};
+
+use super::proc::{thread_token, MpiProc};
+
+/// An RMA window.
+pub struct Window {
+    pub id: u64,
+    /// VCI this window funnels through (paper §4.2: VCIs are assigned per
+    /// window just as per communicator).
+    pub vci: usize,
+    pub size: usize,
+    mem: Arc<WindowMem>,
+    /// Per-thread outstanding-operation records (host table; threads only
+    /// ever touch their own entry).
+    outstanding: Mutex<HashMap<u64, Vec<OpRecord>>>,
+    /// Get results retrieved at flush time, keyed by the GetHandle.
+    get_results: Mutex<HashMap<u64, Vec<u8>>>,
+    next_handle: AtomicU64,
+    /// `accumulate_ordering=none` was hinted at creation: accumulates may
+    /// spread across VCIs (paper §6.3's closing recommendation).
+    pub relaxed_accumulate: bool,
+}
+
+/// Handle to retrieve MPI_Get data after the next flush. Carries the VCI
+/// the get was issued on (replies land there).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GetHandle(pub u64, pub usize);
+
+/// Initiator-side completion record for one outstanding RMA op.
+#[derive(Clone, Copy, Debug)]
+enum OpRecord {
+    /// Hardware completion at a fixed virtual time (IB personality).
+    AtTime(u64),
+    /// Ack-based completion (software RMA): the ack arrives on `vci`.
+    OnAck { flush_handle: u64, vci: usize },
+}
+
+/// Apply an accumulate op element-wise under the window-memory lock
+/// (guarantees MPI's per-element atomicity for same-location accumulates).
+pub fn apply_accumulate(mem: &WindowMem, offset: usize, data: &[u8], op: AccOp) {
+    mem.rmw(|buf| match op {
+        AccOp::Replace => buf[offset..offset + data.len()].copy_from_slice(data),
+        AccOp::SumF64 => {
+            assert!(data.len() % 8 == 0, "SumF64 needs 8-byte elements");
+            for (i, chunk) in data.chunks_exact(8).enumerate() {
+                let o = offset + i * 8;
+                let cur = f64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
+                let add = f64::from_le_bytes(chunk.try_into().unwrap());
+                buf[o..o + 8].copy_from_slice(&(cur + add).to_le_bytes());
+            }
+        }
+        AccOp::SumU64 => {
+            assert!(data.len() % 8 == 0, "SumU64 needs 8-byte elements");
+            for (i, chunk) in data.chunks_exact(8).enumerate() {
+                let o = offset + i * 8;
+                let cur = u64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
+                let add = u64::from_le_bytes(chunk.try_into().unwrap());
+                buf[o..o + 8].copy_from_slice(&cur.wrapping_add(add).to_le_bytes());
+            }
+        }
+    });
+}
+
+/// Fetch-and-op: returns the previous bytes at the location.
+pub fn apply_fetch_op(mem: &WindowMem, offset: usize, operand: &[u8], op: AccOp) -> Vec<u8> {
+    mem.rmw(|buf| {
+        let prev = buf[offset..offset + operand.len()].to_vec();
+        match op {
+            AccOp::Replace => buf[offset..offset + operand.len()].copy_from_slice(operand),
+            AccOp::SumU64 => {
+                let cur = u64::from_le_bytes(buf[offset..offset + 8].try_into().unwrap());
+                let add = u64::from_le_bytes(operand[..8].try_into().unwrap());
+                buf[offset..offset + 8].copy_from_slice(&cur.wrapping_add(add).to_le_bytes());
+            }
+            AccOp::SumF64 => {
+                let cur = f64::from_le_bytes(buf[offset..offset + 8].try_into().unwrap());
+                let add = f64::from_le_bytes(operand[..8].try_into().unwrap());
+                buf[offset..offset + 8].copy_from_slice(&(cur + add).to_le_bytes());
+            }
+        }
+        prev
+    })
+}
+
+impl Window {
+    /// Local direct read (the window owner touching its own memory).
+    pub fn read_local(&self, offset: usize, len: usize) -> Vec<u8> {
+        self.mem.read(offset, len)
+    }
+
+    /// Local direct write.
+    pub fn write_local(&self, offset: usize, data: &[u8]) {
+        self.mem.write(offset, data);
+    }
+
+    fn record(&self, c: OpRecord) {
+        let mut t = self.outstanding.lock().unwrap_or_else(|e| e.into_inner());
+        t.entry(thread_token()).or_default().push(c);
+    }
+
+    fn fresh_handle(&self) -> u64 {
+        // Window id in the high bits keeps handles globally unique.
+        (self.id << 40) | self.next_handle.fetch_add(1, Ordering::AcqRel)
+    }
+}
+
+impl MpiProc {
+    /// MPI_Win_create (collective over `comm`): exposes `size` bytes.
+    /// `relaxed_accumulate` maps the `accumulate_ordering=none` info hint.
+    pub fn win_create(&self, comm: &super::Comm, size: usize) -> Arc<Window> {
+        self.win_create_with(comm, size, self.cfg.hints.accumulate_ordering_none)
+    }
+
+    pub fn win_create_with(
+        &self,
+        comm: &super::Comm,
+        size: usize,
+        relaxed_accumulate: bool,
+    ) -> Arc<Window> {
+        let id = self.next_win_id.fetch_add(1, Ordering::AcqRel);
+        padvance(self.backend, self.costs.instructions(300)); // win bookkeeping
+        let vci = self.vcis().assign(1 << 32 | id); // distinct id-space from comms
+        let mem = WindowMem::new(size);
+        self.fabric.register_window(id, mem.clone());
+        let win = Arc::new(Window {
+            id,
+            vci,
+            size,
+            mem,
+            outstanding: Mutex::new(HashMap::new()),
+            get_results: Mutex::new(HashMap::new()),
+            next_handle: AtomicU64::new(1),
+            relaxed_accumulate,
+        });
+        self.windows.lock().unwrap_or_else(|e| e.into_inner()).push(win.clone());
+        self.barrier(comm); // collective creation
+        win
+    }
+
+    /// The VCI an RMA op on `win` uses for the calling thread: normally the
+    /// window's VCI; accumulates under `accumulate_ordering=none` (or any
+    /// op via an endpoint) may use a thread-spread VCI.
+    fn rma_vci(&self, win: &Window, spread: bool) -> usize {
+        if spread && self.vcis().len() > 1 {
+            1 + (thread_token() as usize) % (self.vcis().len() - 1)
+        } else {
+            win.vci % self.vcis().len()
+        }
+    }
+
+    /// MPI_Put (passive target).
+    pub fn put(&self, win: &Window, target: usize, offset: usize, data: &[u8]) {
+        self.put_via(win, None, target, offset, data)
+    }
+
+    /// Endpoint-aware put: `ep_vci` overrides the VCI (user-visible
+    /// endpoints give each thread direct VCI control — paper §5).
+    pub fn put_via(
+        &self,
+        win: &Window,
+        ep_vci: Option<usize>,
+        target: usize,
+        offset: usize,
+        data: &[u8],
+    ) {
+        padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
+        let _cs = self.enter_cs();
+        let vci_idx = ep_vci.unwrap_or_else(|| self.rma_vci(win, false));
+        let vci = self.vcis().get(vci_idx).clone();
+        match self.interconnect() {
+            Interconnect::Ib => {
+                // Hardware put: initiator-side DMA into the target window.
+                let t = vci.with_state(self.guard(), |_st| {
+                    let t = self.fabric.hw_rma_completion_time(target, data.len());
+                    let mem = self.fabric.window(target, win.id);
+                    mem.write(offset, data);
+                    t
+                });
+                win.record(OpRecord::AtTime(t));
+            }
+            Interconnect::Opa => {
+                // Software-emulated put: active message to the target.
+                let h = win.fresh_handle();
+                vci.with_state(self.guard(), |_st| {
+                    let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
+                    self.fabric.inject(vci.ctx_index, target, dst_ctx, Payload::RmaPut {
+                        win: win.id,
+                        offset,
+                        data: data.to_vec(),
+                        flush_handle: h,
+                    });
+                });
+                win.record(OpRecord::OnAck { flush_handle: h, vci: vci_idx });
+            }
+        }
+    }
+
+    /// MPI_Get (passive target). Data is available via [`MpiProc::get_data`]
+    /// after the next `win_flush`.
+    pub fn get(&self, win: &Window, target: usize, offset: usize, len: usize) -> GetHandle {
+        self.get_via(win, None, target, offset, len)
+    }
+
+    pub fn get_via(
+        &self,
+        win: &Window,
+        ep_vci: Option<usize>,
+        target: usize,
+        offset: usize,
+        len: usize,
+    ) -> GetHandle {
+        padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
+        let _cs = self.enter_cs();
+        let vci_idx = ep_vci.unwrap_or_else(|| self.rma_vci(win, false));
+        let vci = self.vcis().get(vci_idx).clone();
+        let h = win.fresh_handle();
+        match self.interconnect() {
+            Interconnect::Ib => {
+                let t = vci.with_state(self.guard(), |_st| {
+                    let t = self.fabric.hw_rma_completion_time(target, len);
+                    let mem = self.fabric.window(target, win.id);
+                    let data = mem.read(offset, len);
+                    win.get_results.lock().unwrap_or_else(|e| e.into_inner()).insert(h, data);
+                    t
+                });
+                win.record(OpRecord::AtTime(t));
+            }
+            Interconnect::Opa => {
+                vci.with_state(self.guard(), |_st| {
+                    let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
+                    self.fabric.inject(vci.ctx_index, target, dst_ctx, Payload::RmaGetReq {
+                        win: win.id,
+                        offset,
+                        len,
+                        get_handle: h,
+                    });
+                });
+                win.record(OpRecord::OnAck { flush_handle: h, vci: vci_idx });
+            }
+        }
+        GetHandle(h, vci_idx)
+    }
+
+    /// MPI_Accumulate. Active-message path on both interconnects; ordered
+    /// through the window's single VCI unless `accumulate_ordering=none`
+    /// was hinted (then spread across VCIs — §6.3) or an endpoint VCI is
+    /// given.
+    pub fn accumulate(
+        &self,
+        win: &Window,
+        target: usize,
+        offset: usize,
+        data: &[u8],
+        op: AccOp,
+    ) {
+        self.accumulate_via(win, None, target, offset, data, op)
+    }
+
+    pub fn accumulate_via(
+        &self,
+        win: &Window,
+        ep_vci: Option<usize>,
+        target: usize,
+        offset: usize,
+        data: &[u8],
+        op: AccOp,
+    ) {
+        padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
+        let _cs = self.enter_cs();
+        let vci_idx = ep_vci.unwrap_or_else(|| self.rma_vci(win, win.relaxed_accumulate));
+        let vci = self.vcis().get(vci_idx).clone();
+        let h = win.fresh_handle();
+        vci.with_state(self.guard(), |_st| {
+            let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
+            self.fabric.inject(vci.ctx_index, target, dst_ctx, Payload::RmaAcc {
+                win: win.id,
+                offset,
+                data: data.to_vec(),
+                op,
+                flush_handle: h,
+            });
+        });
+        win.record(OpRecord::OnAck { flush_handle: h, vci: vci_idx });
+    }
+
+    /// MPI_Fetch_and_op on a u64/f64 cell; blocking (fetch + flush fused,
+    /// as the BSPMM work-counter idiom uses it).
+    pub fn fetch_and_op(
+        &self,
+        win: &Window,
+        target: usize,
+        offset: usize,
+        operand: &[u8],
+        op: AccOp,
+    ) -> Vec<u8> {
+        padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
+        let vci_idx = self.rma_vci(win, false);
+        let vci = self.vcis().get(vci_idx).clone();
+        let h = win.fresh_handle();
+        {
+            let _cs = self.enter_cs();
+            vci.with_state(self.guard(), |_st| {
+                let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
+                self.fabric.inject(vci.ctx_index, target, dst_ctx, Payload::RmaFetchOp {
+                    win: win.id,
+                    offset,
+                    operand: operand.to_vec(),
+                    op,
+                    fetch_handle: h,
+                });
+            });
+        }
+        // Wait for the reply on this VCI.
+        loop {
+            let got = {
+                let _cs = self.enter_cs();
+                let vci = self.vcis().get(vci_idx).clone();
+                vci.with_state(self.guard(), |st| st.fetch_done.remove(&h))
+            };
+            if let Some(data) = got {
+                return data;
+            }
+            self.progress_for_request(vci_idx);
+        }
+    }
+
+    /// MPI_Win_flush (all targets): wait for completion of all RMA ops the
+    /// calling thread issued on `win`.
+    pub fn win_flush(&self, win: &Window) {
+        padvance(self.backend, self.costs.instructions(20));
+        let mine = {
+            let mut t = win.outstanding.lock().unwrap_or_else(|e| e.into_inner());
+            t.remove(&thread_token()).unwrap_or_default()
+        };
+        for c in mine {
+            match c {
+                OpRecord::AtTime(t) => {
+                    // Hardware completion: just wait out the NIC.
+                    while pnow(self.backend) < t {
+                        padvance(self.backend, self.costs.poll_empty);
+                        self.relax();
+                        if self.backend == crate::platform::Backend::Native {
+                            break; // wallclock has passed in practice
+                        }
+                    }
+                }
+                OpRecord::OnAck { flush_handle, vci } => {
+                    // Software completion: needs progress (ours and the
+                    // target's). This is where OPA's shared-progress pain
+                    // lives (Figs. 13-16, 24-25).
+                    loop {
+                        let acked = {
+                            let _cs = self.enter_cs();
+                            let v = self.vcis().get(vci).clone();
+                            v.with_state(self.guard(), |st| {
+                                // Puts/accs complete via RmaAck; gets via
+                                // their parked RmaGetReply (consumed later
+                                // by get_data, so only peek).
+                                st.acked.remove(&flush_handle)
+                                    || st.get_done.contains_key(&flush_handle)
+                            })
+                        };
+                        if acked {
+                            break;
+                        }
+                        self.progress_for_request(vci);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Retrieve MPI_Get data after a flush.
+    pub fn get_data(&self, win: &Window, h: GetHandle) -> Vec<u8> {
+        if let Some(d) =
+            win.get_results.lock().unwrap_or_else(|e| e.into_inner()).remove(&h.0)
+        {
+            return d;
+        }
+        // OPA path: the reply was parked in the issuing VCI's state.
+        let vci = self.vcis().get(h.1).clone();
+        let _cs = self.enter_cs();
+        vci.with_state(self.guard(), |st| {
+            st.get_done.remove(&h.0).expect("get_data before flush completed")
+        })
+    }
+
+    /// MPI_Win_free (collective): flush, then a barrier during which the
+    /// caller keeps progressing the window's VCI — the behavior behind the
+    /// paper's Fig. 15 ("parallel Win_free restores progress").
+    pub fn win_free(&self, comm: &super::Comm, win: Arc<Window>) {
+        self.win_flush(&win);
+        self.barrier_progressing(comm, Some(win.vci % self.vcis().len()));
+        self.fabric.deregister_window(win.id);
+        self.vcis().release(win.vci);
+        let mut t = self.windows.lock().unwrap_or_else(|e| e.into_inner());
+        t.retain(|w| w.id != win.id);
+    }
+}
+
+impl MpiProc {
+    /// Remote context index corresponding to local VCI `vci_idx` (symmetric
+    /// pools; reduced modulo the remote pool size).
+    pub(super) fn remote_ctx_for_vci(&self, target: usize, vci_idx: usize) -> usize {
+        let remote = self.fabric.open_count(target).max(1);
+        vci_idx % remote
+    }
+}

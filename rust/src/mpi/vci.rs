@@ -1,0 +1,328 @@
+//! Virtual communication interfaces: the paper's central abstraction.
+//!
+//! A VCI is an abstract communication stream bound 1:1 to a NIC hardware
+//! context, holding its own matching engine, rendezvous state, request
+//! cache, lightweight request, and RMA completion records — all protected
+//! by the VCI's own lock (paper §4.2). The pool hands VCIs to communicators
+//! and windows as they are created.
+
+use std::cell::UnsafeCell;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::platform::{Backend, PMutex, PMutexGuard};
+use crate::sim::CacheLine;
+
+use super::config::{CsMode, MpiConfig, VciPolicy};
+use super::instrument::{count_lock, LockClass};
+use super::matching::MatchingState;
+use super::request::ReqId;
+
+/// Sender-side record of a rendezvous in flight.
+#[derive(Clone, Debug)]
+pub struct PendingSend {
+    pub data: Vec<u8>,
+    pub comm_id: u64,
+    pub dst_rank: usize,
+    pub tag: i32,
+    pub req: ReqId,
+}
+
+/// Mutable state owned by one VCI (guarded by the VCI lock).
+#[derive(Default)]
+pub struct VciState {
+    pub matching: MatchingState,
+    /// Rendezvous payloads waiting for CTS, by send handle (= request id).
+    pub pending_sends: HashMap<u64, PendingSend>,
+    /// Per-VCI request cache (paper §4.3).
+    pub req_cache: Vec<ReqId>,
+    /// Per-VCI lightweight request refcount. Host atomic for correctness
+    /// on the native backend, but *modeled* as a plain counter protected by
+    /// the VCI lock — no atomic/cacheline cost is charged (the point of the
+    /// per-VCI replication, paper §4.3).
+    pub lw_refs: std::sync::atomic::AtomicU64,
+    /// RMA: flush handles acked by targets (software-RMA completion).
+    pub acked: HashSet<u64>,
+    /// RMA: get replies that have arrived, by get handle.
+    pub get_done: HashMap<u64, Vec<u8>>,
+    /// RMA: fetch-and-op replies.
+    pub fetch_done: HashMap<u64, Vec<u8>>,
+    /// Send-side FIFO sequence per (comm, dst_rank).
+    pub send_seq: HashMap<(u64, usize), u64>,
+}
+
+/// How VCI state access is guarded for this call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Guard {
+    /// Take this VCI's lock (FG mode).
+    VciLock,
+    /// A coarser lock (the Global CS) is already held — access directly.
+    GlobalHeld,
+    /// No thread safety at all (Fig. 12 mode / single-threaded processes).
+    None,
+}
+
+struct StateCell(UnsafeCell<VciState>);
+// SAFETY: access is serialized either by the VCI lock, the Global CS, or
+// (Guard::None) by the caller's guarantee of single-threaded / DES-serial
+// execution. See `Vci::with_state`.
+unsafe impl Sync for StateCell {}
+
+/// One virtual communication interface.
+pub struct Vci {
+    pub idx: usize,
+    /// Fabric hardware context this VCI is bound to.
+    pub ctx_index: usize,
+    /// THE VCI lock. May share a modeled cache line with neighbors when the
+    /// pool is built without cache alignment (Fig. 8).
+    lock: PMutex<()>,
+    state: StateCell,
+    /// Assigned to at least one live communicator/window?
+    active: AtomicBool,
+    /// Per-VCI progress bookkeeping: consecutive unsuccessful polls (drives
+    /// the hybrid global-progress fallback).
+    pub progress_failures: AtomicUsize,
+}
+
+impl Vci {
+    fn new(idx: usize, ctx_index: usize, backend: Backend, line: Option<Arc<CacheLine>>) -> Self {
+        let mut lock = PMutex::new(backend, ());
+        if let Some(line) = line {
+            lock = lock.on_line(line);
+        }
+        Vci {
+            idx,
+            ctx_index,
+            lock,
+            state: StateCell(UnsafeCell::new(VciState::default())),
+            active: AtomicBool::new(false),
+            progress_failures: AtomicUsize::new(0),
+        }
+    }
+
+    /// Run `f` with exclusive access to the VCI state, honoring the guard
+    /// discipline of the configured critical-section mode.
+    pub fn with_state<R>(&self, guard: Guard, f: impl FnOnce(&mut VciState) -> R) -> R {
+        let _held: Option<PMutexGuard<'_, ()>> = match guard {
+            Guard::VciLock => {
+                count_lock(LockClass::Vci);
+                Some(self.lock.lock())
+            }
+            Guard::GlobalHeld | Guard::None => None,
+        };
+        // SAFETY: serialized per the `Guard` contract (see StateCell).
+        let st = unsafe { &mut *self.state.0.get() };
+        f(st)
+    }
+
+    /// Attempt the same under `try_lock`; `None` if the VCI is busy.
+    pub fn try_with_state<R>(&self, guard: Guard, f: impl FnOnce(&mut VciState) -> R) -> Option<R> {
+        match guard {
+            Guard::VciLock => {
+                let g = self.lock.try_lock()?;
+                count_lock(LockClass::Vci);
+                let st = unsafe { &mut *self.state.0.get() };
+                let r = f(st);
+                drop(g);
+                Some(r)
+            }
+            Guard::GlobalHeld | Guard::None => {
+                let st = unsafe { &mut *self.state.0.get() };
+                Some(f(st))
+            }
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active.load(Ordering::Acquire)
+    }
+}
+
+/// The per-process VCI pool (paper §4.2's "VCI pool design").
+pub struct VciPool {
+    vcis: Vec<Arc<Vci>>,
+    /// Free-list for the FirstComePool policy. Host mutex: pool maintenance
+    /// happens at communicator/window creation, off the critical path; its
+    /// modeled cost is charged explicitly by the callers.
+    free: Mutex<Vec<usize>>,
+    rr_next: AtomicUsize,
+    policy: VciPolicy,
+}
+
+/// Index of the fallback VCI (assigned to MPI_COMM_WORLD).
+pub const FALLBACK_VCI: usize = 0;
+
+impl VciPool {
+    /// Build `n` VCIs bound to fabric contexts `ctx_indices[i]`.
+    /// `cache_aligned=false` packs lock words two-per-modeled-line.
+    pub fn new(
+        backend: Backend,
+        ctx_indices: &[usize],
+        cache_aligned: bool,
+        policy: VciPolicy,
+    ) -> Self {
+        let n = ctx_indices.len();
+        assert!(n >= 1, "need at least the fallback VCI");
+        let mut vcis = Vec::with_capacity(n);
+        let mut shared_line: Option<Arc<CacheLine>> = None;
+        for (i, &ctx) in ctx_indices.iter().enumerate() {
+            let line = if backend == Backend::Sim {
+                if cache_aligned {
+                    Some(CacheLine::new())
+                } else {
+                    // Two adjacent VCI lock words per 64B line.
+                    if i % 2 == 0 {
+                        shared_line = Some(CacheLine::new());
+                    }
+                    shared_line.clone()
+                }
+            } else {
+                None
+            };
+            vcis.push(Arc::new(Vci::new(i, ctx, backend, line)));
+        }
+        // VCI 0 is the fallback: never in the free pool, always active.
+        vcis[FALLBACK_VCI].active.store(true, Ordering::Release);
+        let free = (1..n).rev().collect();
+        VciPool { vcis, free: Mutex::new(free), rr_next: AtomicUsize::new(1), policy }
+    }
+
+    pub fn len(&self) -> usize {
+        self.vcis.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vcis.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> &Arc<Vci> {
+        &self.vcis[idx]
+    }
+
+    pub fn all(&self) -> &[Arc<Vci>] {
+        &self.vcis
+    }
+
+    /// Assign a VCI for a newly created communicator/window with id `id`.
+    /// Falls back to [`FALLBACK_VCI`] when the pool is exhausted (paper
+    /// §4.2) — the source of the Fig. 17 mapping-mismatch effect.
+    pub fn assign(&self, id: u64) -> usize {
+        let idx = match self.policy {
+            VciPolicy::FirstComePool => self
+                .free
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .pop()
+                .unwrap_or(FALLBACK_VCI),
+            VciPolicy::RoundRobin => {
+                if self.vcis.len() == 1 {
+                    FALLBACK_VCI
+                } else {
+                    let k = self.rr_next.fetch_add(1, Ordering::AcqRel);
+                    1 + (k - 1) % (self.vcis.len() - 1)
+                }
+            }
+            VciPolicy::Hashed => {
+                if self.vcis.len() == 1 {
+                    FALLBACK_VCI
+                } else {
+                    // SplitMix-style scramble of the id.
+                    let mut z = id.wrapping_add(0x9E3779B97F4A7C15);
+                    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+                    1 + (z % (self.vcis.len() as u64 - 1)) as usize
+                }
+            }
+        };
+        self.vcis[idx].active.store(true, Ordering::Release);
+        idx
+    }
+
+    /// Return a VCI on communicator/window free. Only FirstComePool
+    /// recycles; the fallback VCI is never recycled.
+    pub fn release(&self, idx: usize) {
+        if idx == FALLBACK_VCI {
+            return;
+        }
+        if self.policy == VciPolicy::FirstComePool {
+            self.vcis[idx].active.store(false, Ordering::Release);
+            self.free.lock().unwrap_or_else(|e| e.into_inner()).push(idx);
+        }
+    }
+}
+
+/// Resolve the guard discipline for a VCI access given the configuration.
+pub fn guard_for(cfg: &MpiConfig, backend: Backend) -> Guard {
+    if cfg.unsafe_no_thread_safety && backend == Backend::Sim {
+        Guard::None
+    } else {
+        match cfg.cs_mode {
+            CsMode::Global => Guard::GlobalHeld,
+            CsMode::Fg => Guard::VciLock,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(n: usize, policy: VciPolicy) -> VciPool {
+        let ctxs: Vec<usize> = (0..n).collect();
+        VciPool::new(Backend::Native, &ctxs, true, policy)
+    }
+
+    #[test]
+    fn first_come_assigns_then_falls_back() {
+        let p = pool(3, VciPolicy::FirstComePool);
+        let a = p.assign(100);
+        let b = p.assign(101);
+        assert_ne!(a, FALLBACK_VCI);
+        assert_ne!(b, FALLBACK_VCI);
+        assert_ne!(a, b);
+        // Pool (vcis 1,2) exhausted -> fallback.
+        assert_eq!(p.assign(102), FALLBACK_VCI);
+        p.release(a);
+        assert_eq!(p.assign(103), a);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let p = pool(3, VciPolicy::RoundRobin);
+        let seq: Vec<usize> = (0..4).map(|i| p.assign(i)).collect();
+        assert_eq!(seq, vec![1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn hashed_is_deterministic() {
+        let p = pool(4, VciPolicy::Hashed);
+        assert_eq!(p.assign(42), p.assign(42));
+    }
+
+    #[test]
+    fn single_vci_pool_always_fallback() {
+        let p = pool(1, VciPolicy::FirstComePool);
+        assert_eq!(p.assign(1), FALLBACK_VCI);
+        let p = pool(1, VciPolicy::RoundRobin);
+        assert_eq!(p.assign(1), FALLBACK_VCI);
+    }
+
+    #[test]
+    fn with_state_grants_exclusive_access() {
+        let p = pool(2, VciPolicy::FirstComePool);
+        let v = p.get(1);
+        v.with_state(Guard::VciLock, |st| {
+            st.lw_refs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        let refs =
+            v.with_state(Guard::None, |st| st.lw_refs.load(std::sync::atomic::Ordering::Relaxed));
+        assert_eq!(refs, 1);
+    }
+
+    #[test]
+    fn fallback_never_recycled() {
+        let p = pool(2, VciPolicy::FirstComePool);
+        p.release(FALLBACK_VCI);
+        assert!(p.get(FALLBACK_VCI).is_active());
+    }
+}

@@ -1,0 +1,204 @@
+//! Cluster runner: builds the network, spawns `nprocs x threads_per_proc`
+//! workers (plus OPA-style service progress threads), runs MPI_Init /
+//! user body / MPI_Finalize per process, on either backend.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::fabric::{FabricConfig, Interconnect, Network};
+use crate::platform::{padvance, pnow, Backend, PBarrier};
+use crate::sim::{CostModel, Sim, SimOutcome};
+
+use super::config::MpiConfig;
+use super::proc::{set_active_costs, MpiProc};
+
+/// Everything needed to stand up a cluster run.
+#[derive(Clone)]
+pub struct ClusterSpec {
+    pub fabric: FabricConfig,
+    pub costs: CostModel,
+    pub backend: Backend,
+    pub mpi: MpiConfig,
+    pub threads_per_proc: usize,
+    /// Virtual-time cap for the DES (detects livelock; None = 300s).
+    pub time_limit: Option<u64>,
+    /// Run a low-frequency service progress thread per process (defaults
+    /// to `interconnect == Opa` via [`ClusterSpec::default_services`]).
+    pub service_threads: bool,
+}
+
+impl ClusterSpec {
+    pub fn new(fabric: FabricConfig, mpi: MpiConfig, threads_per_proc: usize) -> Self {
+        let service_threads = fabric.interconnect == Interconnect::Opa;
+        ClusterSpec {
+            fabric,
+            costs: CostModel::default(),
+            backend: Backend::Sim,
+            mpi,
+            threads_per_proc,
+            time_limit: None,
+            service_threads,
+        }
+    }
+}
+
+/// Result of a cluster run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub outcome: SimOutcome,
+    /// Virtual end time (sim) or elapsed wallclock ns (native).
+    pub time_ns: u64,
+    pub measurements: HashMap<String, f64>,
+    pub wall_ms: f64,
+}
+
+static NATIVE_MEASUREMENTS: OnceLock<Mutex<HashMap<String, f64>>> = OnceLock::new();
+
+/// Record a named measurement from inside a workload body (both backends).
+pub fn record(name: impl Into<String>, value: f64) {
+    if crate::sim::in_sim() {
+        crate::sim::record(name, value);
+    } else {
+        NATIVE_MEASUREMENTS
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(name.into(), value);
+    }
+}
+
+/// Run `body(proc, thread_idx)` on every thread of every process.
+pub fn run_cluster<F>(spec: ClusterSpec, body: F) -> RunReport
+where
+    F: Fn(&Arc<MpiProc>, usize) + Send + Sync + 'static,
+{
+    let wall_start = std::time::Instant::now();
+    let costs = Arc::new(spec.costs.clone());
+    let net = Network::new(spec.fabric.clone(), spec.backend, costs.clone());
+    let nprocs = spec.fabric.nprocs();
+    let procs: Vec<Arc<MpiProc>> =
+        (0..nprocs).map(|p| MpiProc::new(net.proc_fabric(p), spec.mpi.clone())).collect();
+    let body: Arc<F> = Arc::new(body);
+    let tpp = spec.threads_per_proc;
+
+    // One thread barrier per process (the "#pragma omp barrier" around the
+    // parallel region).
+    let barriers: Vec<Arc<PBarrier>> =
+        (0..nprocs).map(|_| Arc::new(PBarrier::new(spec.backend, tpp))).collect();
+
+    let worker = |proc: Arc<MpiProc>, bar: Arc<PBarrier>, t: usize, body: Arc<F>,
+                  costs: Arc<CostModel>| {
+        move || {
+            set_active_costs(costs.clone());
+            if t == 0 {
+                let t0 = pnow(proc.backend);
+                proc.init();
+                record(format!("init_ns_p{}", proc.rank()), (pnow(proc.backend) - t0) as f64);
+            }
+            bar.wait();
+            body(&proc, t);
+            bar.wait();
+            if t == 0 {
+                let t0 = pnow(proc.backend);
+                proc.finalize();
+                record(
+                    format!("finalize_ns_p{}", proc.rank()),
+                    (pnow(proc.backend) - t0) as f64,
+                );
+            }
+        }
+    };
+
+    let service = |proc: Arc<MpiProc>, costs: Arc<CostModel>| {
+        move || {
+            set_active_costs(costs.clone());
+            loop {
+                if proc.finalized.load(std::sync::atomic::Ordering::Acquire) {
+                    break;
+                }
+                match proc.backend {
+                    Backend::Sim => padvance(Backend::Sim, costs.psm2_progress_interval),
+                    Backend::Native => std::thread::sleep(std::time::Duration::from_micros(
+                        costs.psm2_progress_interval / 1000,
+                    )),
+                }
+                proc.service_progress_round();
+                crate::platform::pyield(proc.backend);
+            }
+        }
+    };
+
+    match spec.backend {
+        Backend::Sim => {
+            let mut sim = Sim::new(spec.costs.clone());
+            sim.set_time_limit(spec.time_limit.unwrap_or(300_000_000_000));
+            for (p, proc) in procs.iter().enumerate() {
+                for t in 0..tpp {
+                    sim.spawn_setup(
+                        format!("p{p}t{t}"),
+                        worker(proc.clone(), barriers[p].clone(), t, body.clone(), costs.clone()),
+                    );
+                }
+                if spec.service_threads {
+                    sim.spawn_setup(format!("p{p}-svc"), service(proc.clone(), costs.clone()));
+                }
+            }
+            let r = sim.run();
+            RunReport {
+                outcome: r.outcome,
+                time_ns: r.end_time,
+                measurements: r.measurements,
+                wall_ms: wall_start.elapsed().as_secs_f64() * 1e3,
+            }
+        }
+        Backend::Native => {
+            if let Some(m) = NATIVE_MEASUREMENTS.get() {
+                m.lock().unwrap_or_else(|e| e.into_inner()).clear();
+            }
+            let t0 = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for (p, proc) in procs.iter().enumerate() {
+                for t in 0..tpp {
+                    let f =
+                        worker(proc.clone(), barriers[p].clone(), t, body.clone(), costs.clone());
+                    handles.push(std::thread::Builder::new()
+                        .name(format!("p{p}t{t}"))
+                        .spawn(f)
+                        .expect("spawn"));
+                }
+                if spec.service_threads {
+                    let f = service(proc.clone(), costs.clone());
+                    handles.push(std::thread::Builder::new()
+                        .name(format!("p{p}-svc"))
+                        .spawn(f)
+                        .expect("spawn"));
+                }
+            }
+            let mut panicked = None;
+            for h in handles {
+                if let Err(e) = h.join() {
+                    let msg = e
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "worker panicked".into());
+                    panicked = Some(msg);
+                }
+            }
+            let measurements = NATIVE_MEASUREMENTS
+                .get_or_init(|| Mutex::new(HashMap::new()))
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .clone();
+            RunReport {
+                outcome: match panicked {
+                    Some(m) => SimOutcome::Panicked(m),
+                    None => SimOutcome::Completed,
+                },
+                time_ns: t0.elapsed().as_nanos() as u64,
+                measurements,
+                wall_ms: wall_start.elapsed().as_secs_f64() * 1e3,
+            }
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! Backend abstraction: every synchronization primitive and time source in
+//! the library comes in two flavors,
+//!
+//!   * [`Backend::Sim`] — virtual-time DES primitives ([`crate::sim`]),
+//!     used for all paper-figure experiments (deterministic, models a
+//!     16-core node on a 1-core host), and
+//!   * [`Backend::Native`] — real `std::sync` primitives and wallclock,
+//!     used by the end-to-end examples (PJRT compute, training driver) and
+//!     the concurrency stress tests.
+//!
+//! The MPI library, fabric, and apps are written once against `PMutex`,
+//! `PAtomicU64`, `PBarrier`, `pyield`, `pnow`, `padvance` and run unchanged
+//! on both backends.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::sim;
+
+/// Which execution substrate a component runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Deterministic virtual-time simulation of the paper's testbed.
+    Sim,
+    /// Real OS threads and wallclock on the host.
+    Native,
+}
+
+// ---------------------------------------------------------------------------
+// time
+// ---------------------------------------------------------------------------
+
+fn native_epoch() -> Instant {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Current time in nanoseconds (virtual or wallclock-since-start).
+pub fn pnow(backend: Backend) -> u64 {
+    match backend {
+        Backend::Sim => sim::now(),
+        Backend::Native => native_epoch().elapsed().as_nanos() as u64,
+    }
+}
+
+/// Charge `ns` of *modeled* cost. In the simulation this advances virtual
+/// time; natively it is free (the real work being modeled actually runs).
+pub fn padvance(backend: Backend, ns: u64) {
+    if backend == Backend::Sim {
+        sim::advance(ns);
+    }
+}
+
+/// Spend `ns` of *compute* (busy-target knobs, modeled application work).
+/// Advances virtual time in sim; busy-spins natively.
+pub fn pcompute(backend: Backend, ns: u64) {
+    match backend {
+        Backend::Sim => sim::advance(ns),
+        Backend::Native => {
+            let start = Instant::now();
+            while (start.elapsed().as_nanos() as u64) < ns {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+/// Cooperative yield for polling loops.
+pub fn pyield(backend: Backend) {
+    match backend {
+        Backend::Sim => sim::yield_now(),
+        Backend::Native => std::thread::yield_now(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mutex
+// ---------------------------------------------------------------------------
+
+enum MutexImpl<T: Send> {
+    Native(Mutex<T>),
+    Sim(sim::SimMutex<T>),
+}
+
+/// Dual-backend mutex.
+pub struct PMutex<T: Send> {
+    inner: MutexImpl<T>,
+}
+
+impl<T: Send> PMutex<T> {
+    pub fn new(backend: Backend, value: T) -> Self {
+        let inner = match backend {
+            Backend::Native => MutexImpl::Native(Mutex::new(value)),
+            Backend::Sim => MutexImpl::Sim(sim::SimMutex::new(value)),
+        };
+        PMutex { inner }
+    }
+
+    /// Sim-only: place the lock word on an explicit modeled cache line
+    /// (false-sharing experiments, Fig. 8). No-op for native mutexes.
+    pub fn on_line(self, line: std::sync::Arc<sim::CacheLine>) -> Self {
+        match self.inner {
+            MutexImpl::Sim(m) => PMutex { inner: MutexImpl::Sim(m.on_line(line)) },
+            native => PMutex { inner: native },
+        }
+    }
+
+    pub fn lock(&self) -> PMutexGuard<'_, T> {
+        match &self.inner {
+            MutexImpl::Native(m) => {
+                PMutexGuard::Native(m.lock().unwrap_or_else(|e| e.into_inner()))
+            }
+            MutexImpl::Sim(m) => PMutexGuard::Sim(m.lock()),
+        }
+    }
+
+    pub fn try_lock(&self) -> Option<PMutexGuard<'_, T>> {
+        match &self.inner {
+            MutexImpl::Native(m) => match m.try_lock() {
+                Ok(g) => Some(PMutexGuard::Native(g)),
+                Err(std::sync::TryLockError::Poisoned(e)) => {
+                    Some(PMutexGuard::Native(e.into_inner()))
+                }
+                Err(std::sync::TryLockError::WouldBlock) => None,
+            },
+            MutexImpl::Sim(m) => m.try_lock().map(PMutexGuard::Sim),
+        }
+    }
+}
+
+pub enum PMutexGuard<'a, T: Send> {
+    Native(MutexGuard<'a, T>),
+    Sim(sim::SimMutexGuard<'a, T>),
+}
+
+impl<T: Send> Deref for PMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match self {
+            PMutexGuard::Native(g) => g,
+            PMutexGuard::Sim(g) => g,
+        }
+    }
+}
+
+impl<T: Send> DerefMut for PMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match self {
+            PMutexGuard::Native(g) => g,
+            PMutexGuard::Sim(g) => g,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// atomic u64
+// ---------------------------------------------------------------------------
+
+enum AtomicImpl {
+    Native(AtomicU64),
+    Sim(sim::SimAtomicU64),
+}
+
+/// Dual-backend atomic counter (reference/completion counting).
+pub struct PAtomicU64 {
+    inner: AtomicImpl,
+}
+
+impl PAtomicU64 {
+    pub fn new(backend: Backend, v: u64) -> Self {
+        let inner = match backend {
+            Backend::Native => AtomicImpl::Native(AtomicU64::new(v)),
+            Backend::Sim => AtomicImpl::Sim(sim::SimAtomicU64::new(v)),
+        };
+        PAtomicU64 { inner }
+    }
+
+    pub fn load(&self) -> u64 {
+        match &self.inner {
+            AtomicImpl::Native(a) => a.load(Ordering::Acquire),
+            AtomicImpl::Sim(a) => a.load(),
+        }
+    }
+
+    pub fn store(&self, v: u64) {
+        match &self.inner {
+            AtomicImpl::Native(a) => a.store(v, Ordering::Release),
+            AtomicImpl::Sim(a) => a.store(v),
+        }
+    }
+
+    pub fn fetch_add(&self, d: u64) -> u64 {
+        match &self.inner {
+            AtomicImpl::Native(a) => a.fetch_add(d, Ordering::AcqRel),
+            AtomicImpl::Sim(a) => a.fetch_add(d),
+        }
+    }
+
+    pub fn fetch_sub(&self, d: u64) -> u64 {
+        match &self.inner {
+            AtomicImpl::Native(a) => a.fetch_sub(d, Ordering::AcqRel),
+            AtomicImpl::Sim(a) => a.fetch_sub(d),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// barrier (thread barrier within a process, "#pragma omp barrier")
+// ---------------------------------------------------------------------------
+
+enum BarrierImpl {
+    Native(NativeBarrier),
+    Sim(sim::SimBarrier),
+}
+
+/// Reusable dual-backend barrier.
+pub struct PBarrier {
+    inner: BarrierImpl,
+}
+
+struct NativeBarrier {
+    state: Mutex<(usize, u64)>, // (arrived, generation)
+    cv: Condvar,
+    parties: usize,
+}
+
+impl PBarrier {
+    pub fn new(backend: Backend, parties: usize) -> Self {
+        let inner = match backend {
+            Backend::Native => BarrierImpl::Native(NativeBarrier {
+                state: Mutex::new((0, 0)),
+                cv: Condvar::new(),
+                parties,
+            }),
+            Backend::Sim => BarrierImpl::Sim(sim::SimBarrier::new(parties)),
+        };
+        PBarrier { inner }
+    }
+
+    pub fn wait(&self) {
+        match &self.inner {
+            BarrierImpl::Sim(b) => b.wait(),
+            BarrierImpl::Native(b) => {
+                let mut g = b.state.lock().unwrap_or_else(|e| e.into_inner());
+                let gen = g.1;
+                g.0 += 1;
+                if g.0 == b.parties {
+                    g.0 = 0;
+                    g.1 += 1;
+                    b.cv.notify_all();
+                } else {
+                    while g.1 == gen {
+                        g = b.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn native_mutex_works() {
+        let m = Arc::new(PMutex::new(Backend::Native, 0u64));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    *m.lock() += 1;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*m.lock(), 4000);
+    }
+
+    #[test]
+    fn native_barrier_synchronizes() {
+        let b = Arc::new(PBarrier::new(Backend::Native, 3));
+        let counter = Arc::new(PAtomicU64::new(Backend::Native, 0));
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let b = b.clone();
+            let c = counter.clone();
+            handles.push(std::thread::spawn(move || {
+                c.fetch_add(1);
+                b.wait();
+                assert_eq!(c.load(), 3);
+                b.wait();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sim_mutex_via_platform() {
+        let m = Arc::new(PMutex::new(Backend::Sim, 0u64));
+        let mut s = sim::Sim::new(sim::CostModel::default());
+        for _ in 0..2 {
+            let m = m.clone();
+            s.spawn_setup("t", move || {
+                for _ in 0..10 {
+                    *m.lock() += 1;
+                }
+            });
+        }
+        let r = s.run();
+        assert_eq!(r.outcome, sim::SimOutcome::Completed);
+    }
+
+    #[test]
+    fn pnow_native_monotone() {
+        let a = pnow(Backend::Native);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let b = pnow(Backend::Native);
+        assert!(b > a);
+    }
+}

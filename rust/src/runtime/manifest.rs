@@ -1,0 +1,134 @@
+//! Parse `artifacts/manifest.tsv` (the JSON twin exists for humans; the
+//! offline crate set has no serde, so aot.py also emits this TSV).
+//!
+//! Format:
+//!   #model_config\tk=v\tk=v...
+//!   name\tfile\tSHAPE:dtype;SHAPE:dtype...\tSHAPE:dtype...
+//! where SHAPE is `d0xd1x...` (empty for scalars).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub model_config: HashMap<String, i64>,
+    entries: Vec<ArtifactSpec>,
+}
+
+fn parse_tensor(s: &str) -> Result<TensorSpec> {
+    let (shape_s, dtype) = s.rsplit_once(':').ok_or_else(|| anyhow!("bad tensor spec {s}"))?;
+    let shape = if shape_s.is_empty() {
+        Vec::new()
+    } else {
+        shape_s
+            .split('x')
+            .map(|d| d.parse::<usize>().with_context(|| format!("bad dim in {s}")))
+            .collect::<Result<_>>()?
+    };
+    Ok(TensorSpec { shape, dtype: dtype.to_string() })
+}
+
+fn parse_tensor_list(s: &str) -> Result<Vec<TensorSpec>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(';').map(parse_tensor).collect()
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for line in text.lines() {
+            let line = line.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("#model_config\t") {
+                for kv in rest.split('\t') {
+                    if let Some((k, v)) = kv.split_once('=') {
+                        if let Ok(v) = v.parse::<i64>() {
+                            m.model_config.insert(k.to_string(), v);
+                        }
+                    }
+                }
+                continue;
+            }
+            let mut cols = line.split('\t');
+            let name = cols.next().ok_or_else(|| anyhow!("missing name"))?;
+            let file = cols.next().ok_or_else(|| anyhow!("missing file"))?;
+            let ins = cols.next().unwrap_or("");
+            let outs = cols.next().unwrap_or("");
+            m.entries.push(ArtifactSpec {
+                name: name.to_string(),
+                file: file.to_string(),
+                inputs: parse_tensor_list(ins)?,
+                outputs: parse_tensor_list(outs)?,
+            });
+        }
+        Ok(m)
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn entries(&self) -> &[ArtifactSpec] {
+        &self.entries
+    }
+
+    /// Model-config value (e.g. "param_count"), if present.
+    pub fn config(&self, key: &str) -> Option<i64> {
+        self.model_config.get(key).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "#model_config\tbatch=8\tparam_count=3297792\n\
+train_sgd_step\ttrain_sgd_step.hlo.txt\t3297792:float32;3297792:float32;:float32\t3297792:float32\n\
+stencil_block\tstencil_block.hlo.txt\t66x66:float32\t64x64:float32\n";
+
+    #[test]
+    fn parses_config_and_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config("batch"), Some(8));
+        assert_eq!(m.config("param_count"), Some(3_297_792));
+        assert_eq!(m.entries().len(), 2);
+        let sgd = m.entry("train_sgd_step").unwrap();
+        assert_eq!(sgd.inputs.len(), 3);
+        assert_eq!(sgd.inputs[2].shape, Vec::<usize>::new(), "scalar lr");
+        let st = m.entry("stencil_block").unwrap();
+        assert_eq!(st.inputs[0].shape, vec![66, 66]);
+        assert_eq!(st.outputs[0].shape, vec![64, 64]);
+    }
+
+    #[test]
+    fn missing_entry_is_none() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.entry("nope").is_none());
+    }
+}

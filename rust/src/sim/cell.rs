@@ -1,0 +1,48 @@
+//! Interior mutability for simulation-owned state.
+
+use std::cell::UnsafeCell;
+
+/// A cell whose contents may be freely mutated by simulated threads.
+///
+/// # Safety invariant
+/// The conservative scheduler guarantees that **exactly one** simulated
+/// thread executes at any host instant, and baton handoffs go through a host
+/// `Mutex`+`Condvar` pair, which establishes happens-before edges between
+/// consecutive accessors. Under that regime, `&self` access to the interior
+/// is data-race-free even though multiple OS threads hold references.
+///
+/// `SimCell` must therefore only be touched from *running* simulated threads
+/// (i.e. between scheduler grants). All users in this crate follow the
+/// pattern `sync-point -> mutate -> continue`, where the sync point is a
+/// scheduler interaction ([`super::sched::advance`]/lock/queue ops).
+pub struct SimCell<T> {
+    inner: UnsafeCell<T>,
+}
+
+// SAFETY: see type-level invariant above — mutual exclusion and ordering are
+// provided externally by the scheduler.
+unsafe impl<T: Send> Send for SimCell<T> {}
+unsafe impl<T: Send> Sync for SimCell<T> {}
+
+impl<T> SimCell<T> {
+    pub fn new(value: T) -> Self {
+        SimCell { inner: UnsafeCell::new(value) }
+    }
+
+    /// Shared view. Caller must be the running simulated thread.
+    #[allow(clippy::mut_from_ref)]
+    pub fn get(&self) -> &mut T {
+        // SAFETY: scheduler-enforced mutual exclusion (see type docs).
+        unsafe { &mut *self.inner.get() }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner()
+    }
+}
+
+impl<T: Default> Default for SimCell<T> {
+    fn default() -> Self {
+        SimCell::new(T::default())
+    }
+}

@@ -1,0 +1,30 @@
+//! Virtual time. One unit = one nanosecond of simulated wallclock.
+
+/// Virtual nanoseconds.
+pub type Nanos = u64;
+
+/// Human-readable formatting of a virtual duration.
+pub fn fmt_ns(ns: Nanos) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3}us", ns as f64 / 1e3)
+    } else {
+        format!("{}ns", ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_scales() {
+        assert_eq!(fmt_ns(17), "17ns");
+        assert_eq!(fmt_ns(1_500), "1.500us");
+        assert_eq!(fmt_ns(2_500_000), "2.500ms");
+        assert_eq!(fmt_ns(3_200_000_000), "3.200s");
+    }
+}

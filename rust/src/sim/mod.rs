@@ -1,0 +1,38 @@
+//! Deterministic discrete-event simulation (DES) of a multicore node.
+//!
+//! The paper's testbed is a 16-core socket driving a multi-context NIC; this
+//! host exposes a single CPU core, so thread-*scaling* results cannot be
+//! reproduced with wallclock threads. Instead, this module provides a
+//! conservative virtual-time executor: every simulated hardware thread is a
+//! real OS thread running *real* library code (the matching engine, request
+//! pools, VCI mapping, ... all execute for real), but
+//!
+//!   * time is virtual — code charges cycles via [`advance`],
+//!   * synchronization primitives ([`SimMutex`], [`SimAtomicU64`]) charge a
+//!     calibrated cost model and model contention in virtual time, and
+//!   * only the thread with the minimum virtual clock runs at any instant
+//!     (a baton-passing conservative scheduler), which makes every run
+//!     bit-for-bit deterministic regardless of host parallelism.
+//!
+//! Throughput results are then `messages / virtual time`, reproducing the
+//! *shape* of the paper's figures deterministically.
+//!
+//! # Memory model
+//! Because exactly one simulated thread executes at a time and batons are
+//! handed through a host `Mutex`/`Condvar`, all simulated-shared state is
+//! totally ordered with proper happens-before edges; [`SimCell`] exploits
+//! this to provide zero-cost interior mutability for simulation state.
+
+mod cell;
+mod clock;
+mod costs;
+mod sched;
+mod sync;
+
+pub use cell::SimCell;
+pub use clock::{Nanos, fmt_ns};
+pub use costs::CostModel;
+pub use sched::{
+    advance, current_tid, in_sim, now, record, yield_now, Sim, SimAbort, SimOutcome, SimReport,
+};
+pub use sync::{CacheLine, SimAtomicU64, SimBarrier, SimEvent, SimMutex, SimMutexGuard};

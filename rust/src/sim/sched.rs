@@ -1,0 +1,541 @@
+//! The conservative min-clock scheduler ("baton passing").
+//!
+//! Each simulated thread is an OS thread. A thread may execute simulation
+//! code only while its slot is `Running`; exactly one slot is `Running` at a
+//! time. Threads accumulate virtual time locally via [`advance`] and
+//! synchronize with the scheduler at *interaction points* (lock/queue/event
+//! operations, explicit [`yield_now`]): if any other runnable thread has a
+//! smaller virtual clock, the baton is handed to the minimum-clock thread.
+//! This conservative rule totally orders all shared-state interactions by
+//! virtual time (ties broken by thread id), making runs deterministic.
+
+use std::collections::HashMap;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::clock::Nanos;
+use super::costs::CostModel;
+
+/// Why a simulation run ended.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SimOutcome {
+    /// All threads ran to completion.
+    Completed,
+    /// Every unfinished thread was blocked on a primitive — a true deadlock
+    /// (used to demonstrate the paper's Fig. 9 scenarios).
+    Deadlock,
+    /// Virtual time exceeded the configured limit — a livelock/unbounded
+    /// wait (e.g. pure per-VCI progress spinning forever).
+    TimeLimit,
+    /// A simulated thread panicked with an application error.
+    Panicked(String),
+}
+
+/// Result of [`Sim::run`].
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub outcome: SimOutcome,
+    /// Maximum virtual clock reached by any thread.
+    pub end_time: Nanos,
+    /// Final virtual clock per thread, in spawn order.
+    pub thread_clocks: Vec<Nanos>,
+    /// Named measurements recorded by threads via [`Sim::record`].
+    pub measurements: HashMap<String, f64>,
+}
+
+/// Internal abort signal, delivered by unwinding simulated threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimAbort {
+    Deadlock,
+    TimeLimit,
+    Cascade, // another thread aborted first; unwind quietly
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RunState {
+    /// Waiting for the baton.
+    Runnable,
+    /// Holds the baton; executing simulation code.
+    Running,
+    /// Parked on a primitive (mutex/event); not schedulable until unparked.
+    Blocked,
+    Finished,
+}
+
+struct Slot {
+    state: RunState,
+    clock: Nanos,
+    cv: Arc<Condvar>,
+    #[allow(dead_code)]
+    name: String,
+}
+
+struct Sched {
+    slots: Vec<Slot>,
+    /// Set when the run must be torn down (deadlock/time limit/panic).
+    abort: Option<SimAbort>,
+    panic_msg: Option<String>,
+    time_limit: Nanos,
+    unfinished: usize,
+    measurements: HashMap<String, f64>,
+}
+
+pub(crate) struct SimCore {
+    sched: Mutex<Sched>,
+    pub costs: CostModel,
+}
+
+thread_local! {
+    static CURRENT: std::cell::RefCell<Option<ThreadCtx>> = const { std::cell::RefCell::new(None) };
+}
+
+#[derive(Clone)]
+struct ThreadCtx {
+    core: Arc<SimCore>,
+    tid: usize,
+    /// Locally accumulated clock; authoritative while Running. Flushed to
+    /// the slot at every scheduler interaction.
+    clock: std::rc::Rc<std::cell::Cell<Nanos>>,
+}
+
+fn with_ctx<R>(f: impl FnOnce(&ThreadCtx) -> R) -> R {
+    CURRENT.with(|c| {
+        let b = c.borrow();
+        let ctx = b
+            .as_ref()
+            .expect("sim primitive used outside a simulated thread (native backend code path?)");
+        f(ctx)
+    })
+}
+
+/// True when called from inside a simulated thread.
+pub fn in_sim() -> bool {
+    CURRENT.with(|c| c.borrow().is_some())
+}
+
+/// Current virtual time of the calling simulated thread.
+pub fn now() -> Nanos {
+    with_ctx(|ctx| ctx.clock.get())
+}
+
+/// Id of the calling simulated thread (spawn order).
+pub fn current_tid() -> usize {
+    with_ctx(|ctx| ctx.tid)
+}
+
+/// Charge `ns` of virtual compute time to the calling thread. Purely local —
+/// the scheduler is consulted at the next interaction point.
+pub fn advance(ns: Nanos) {
+    with_ctx(|ctx| ctx.clock.set(ctx.clock.get() + ns));
+}
+
+/// Charge time and release the baton if another thread is now behind us.
+/// Poll loops must call this (directly or via primitive ops) to let virtual
+/// time interleave.
+pub fn yield_now() {
+    with_ctx(|ctx| ctx.core.clone().interaction(ctx));
+}
+
+impl SimCore {
+    /// Interaction point: flush the local clock and run the min-clock rule.
+    /// On return the calling thread is `Running` again (possibly after
+    /// having lost and regained the baton) and its local clock is valid.
+    fn interaction(self: &Arc<Self>, ctx: &ThreadCtx) {
+        let mut s = self.sched.lock().unwrap_or_else(|e| e.into_inner());
+        s.slots[ctx.tid].clock = ctx.clock.get();
+        self.check_abort(&s);
+        if ctx.clock.get() > s.time_limit {
+            self.raise_abort(&mut s, SimAbort::TimeLimit, None);
+        }
+        // Find the minimum-clock runnable slot (Running counts as runnable).
+        if let Some(j) = min_runnable(&s) {
+            if j != ctx.tid {
+                // Hand the baton over.
+                s.slots[ctx.tid].state = RunState::Runnable;
+                grant(&mut s, j);
+                s = self.wait_for_baton(s, ctx.tid);
+            }
+        }
+        drop(s);
+        // Reload clock: an unparker may have advanced it while we waited.
+        with_slot_clock(self, ctx);
+    }
+
+    /// Park the calling thread (state -> Blocked) after `register` has
+    /// queued it on some primitive's wait list. Returns when unparked.
+    pub(crate) fn park(self: &Arc<Self>, register: impl FnOnce()) {
+        with_ctx(|ctx| {
+            debug_assert!(Arc::ptr_eq(&ctx.core, self), "cross-sim primitive use");
+            // We still hold the baton: safe to touch primitive state.
+            register();
+            let mut s = self.sched.lock().unwrap_or_else(|e| e.into_inner());
+            s.slots[ctx.tid].clock = ctx.clock.get();
+            self.check_abort(&s);
+            s.slots[ctx.tid].state = RunState::Blocked;
+            match min_runnable(&s) {
+                Some(j) => grant(&mut s, j),
+                None => {
+                    // Everyone is blocked or finished: deadlock.
+                    self.raise_abort(&mut s, SimAbort::Deadlock, None);
+                }
+            }
+            let s = self.wait_for_baton(s, ctx.tid);
+            drop(s);
+            with_slot_clock(self, ctx);
+        });
+    }
+
+    /// Unpark thread `tid`, advancing its clock to at least `wake_clock`.
+    /// Caller keeps the baton; the woken thread becomes Runnable and will be
+    /// scheduled by the min-clock rule at the next interaction.
+    pub(crate) fn unpark(self: &Arc<Self>, tid: usize, wake_clock: Nanos) {
+        let mut s = self.sched.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert_eq!(s.slots[tid].state, RunState::Blocked, "unpark of non-blocked thread");
+        s.slots[tid].clock = s.slots[tid].clock.max(wake_clock);
+        s.slots[tid].state = RunState::Runnable;
+    }
+
+    fn wait_for_baton<'a>(
+        &'a self,
+        mut s: std::sync::MutexGuard<'a, Sched>,
+        tid: usize,
+    ) -> std::sync::MutexGuard<'a, Sched> {
+        let cv = s.slots[tid].cv.clone();
+        while s.slots[tid].state != RunState::Running {
+            if s.abort.is_some() {
+                drop(s);
+                panic::panic_any(SimAbort::Cascade);
+            }
+            s = cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        self.check_abort(&s);
+        s
+    }
+
+    fn check_abort(&self, s: &Sched) {
+        if let Some(a) = s.abort {
+            panic::panic_any(a);
+        }
+    }
+
+    /// Mark the run aborted, wake every parked/waiting thread so it can
+    /// unwind, and unwind the caller.
+    fn raise_abort(&self, s: &mut Sched, abort: SimAbort, msg: Option<String>) -> ! {
+        if s.abort.is_none() {
+            s.abort = Some(abort);
+            s.panic_msg = msg;
+        }
+        for slot in s.slots.iter_mut() {
+            if slot.state != RunState::Finished {
+                slot.state = RunState::Running; // let them observe abort
+                slot.cv.notify_all();
+            }
+        }
+        panic::panic_any(abort);
+    }
+
+    /// Thread termination: release the baton permanently.
+    fn finish(self: &Arc<Self>, tid: usize, clock: Nanos, app_panic: Option<String>) {
+        let mut s = self.sched.lock().unwrap_or_else(|e| e.into_inner());
+        if s.slots[tid].state == RunState::Finished {
+            return;
+        }
+        s.slots[tid].clock = s.slots[tid].clock.max(clock);
+        s.slots[tid].state = RunState::Finished;
+        s.unfinished -= 1;
+        if let Some(msg) = app_panic {
+            if s.abort.is_none() {
+                s.abort = Some(SimAbort::Cascade);
+                s.panic_msg = Some(msg);
+            }
+            for slot in s.slots.iter_mut() {
+                if slot.state != RunState::Finished {
+                    slot.state = RunState::Running;
+                    slot.cv.notify_all();
+                }
+            }
+            return;
+        }
+        if s.abort.is_some() {
+            return;
+        }
+        if s.unfinished > 0 {
+            match min_runnable(&s) {
+                Some(j) => grant(&mut s, j),
+                None => {
+                    // Remaining threads all blocked -> deadlock.
+                    s.abort = Some(SimAbort::Deadlock);
+                    for slot in s.slots.iter_mut() {
+                        if slot.state != RunState::Finished {
+                            slot.state = RunState::Running;
+                            slot.cv.notify_all();
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn min_runnable(s: &Sched) -> Option<usize> {
+    s.slots
+        .iter()
+        .enumerate()
+        .filter(|(_, sl)| matches!(sl.state, RunState::Runnable | RunState::Running))
+        .min_by_key(|(i, sl)| (sl.clock, *i))
+        .map(|(i, _)| i)
+}
+
+fn grant(s: &mut Sched, j: usize) {
+    if s.slots[j].state != RunState::Running {
+        s.slots[j].state = RunState::Running;
+        s.slots[j].cv.notify_all();
+    }
+}
+
+fn with_slot_clock(core: &Arc<SimCore>, ctx: &ThreadCtx) {
+    let s = core.sched.lock().unwrap_or_else(|e| e.into_inner());
+    ctx.clock.set(s.slots[ctx.tid].clock);
+}
+
+/// A simulation instance: build with [`Sim::new`], add threads with
+/// [`Sim::spawn_setup`], then [`Sim::run`].
+pub struct Sim {
+    core: Arc<SimCore>,
+    threads: Vec<(String, Box<dyn FnOnce() + Send>)>,
+    time_limit: Nanos,
+}
+
+impl Sim {
+    pub fn new(costs: CostModel) -> Self {
+        Sim {
+            core: Arc::new(SimCore {
+                sched: Mutex::new(Sched {
+                    slots: Vec::new(),
+                    abort: None,
+                    panic_msg: None,
+                    time_limit: Nanos::MAX,
+                    unfinished: 0,
+                    measurements: HashMap::new(),
+                }),
+                costs,
+            }),
+            threads: Vec::new(),
+            time_limit: Nanos::MAX,
+        }
+    }
+
+    /// Abort the run (outcome `TimeLimit`) if virtual time passes `ns`.
+    pub fn set_time_limit(&mut self, ns: Nanos) {
+        self.time_limit = ns;
+    }
+
+    pub fn costs(&self) -> &CostModel {
+        &self.core.costs
+    }
+
+    /// Register a simulated thread started at virtual time 0.
+    pub fn spawn_setup(&mut self, name: impl Into<String>, f: impl FnOnce() + Send + 'static) {
+        self.threads.push((name.into(), Box::new(f)));
+    }
+
+    /// Execute the simulation to completion. Consumes the builder.
+    pub fn run(self) -> SimReport {
+        let Sim { core, threads, time_limit } = self;
+        {
+            let mut s = core.sched.lock().unwrap_or_else(|e| e.into_inner());
+            s.time_limit = time_limit;
+            for (name, _) in &threads {
+                s.slots.push(Slot {
+                    state: RunState::Runnable,
+                    clock: 0,
+                    cv: Arc::new(Condvar::new()),
+                    name: name.clone(),
+                });
+            }
+            s.unfinished = threads.len();
+            if !threads.is_empty() {
+                s.slots[0].state = RunState::Running;
+            }
+        }
+        let mut joins = Vec::new();
+        for (tid, (name, f)) in threads.into_iter().enumerate() {
+            let core = core.clone();
+            let jh = std::thread::Builder::new()
+                .name(format!("sim-{name}"))
+                .stack_size(1 << 21)
+                .spawn(move || {
+                    let ctx = ThreadCtx {
+                        core: core.clone(),
+                        tid,
+                        clock: std::rc::Rc::new(std::cell::Cell::new(0)),
+                    };
+                    CURRENT.with(|c| *c.borrow_mut() = Some(ctx.clone()));
+                    // Wait for the initial baton grant.
+                    {
+                        let s = core.sched.lock().unwrap_or_else(|e| e.into_inner());
+                        let s = core.wait_for_baton_entry(s, tid);
+                        drop(s);
+                        ctx.clock.set({
+                            let s = core.sched.lock().unwrap_or_else(|e| e.into_inner());
+                            s.slots[tid].clock
+                        });
+                    }
+                    let result = panic::catch_unwind(AssertUnwindSafe(f));
+                    let app_panic = match result {
+                        Ok(()) => None,
+                        Err(e) => {
+                            if e.downcast_ref::<SimAbort>().is_some() {
+                                None // scheduler-initiated unwind
+                            } else if let Some(s) = e.downcast_ref::<&str>() {
+                                Some((*s).to_string())
+                            } else if let Some(s) = e.downcast_ref::<String>() {
+                                Some(s.clone())
+                            } else {
+                                Some("simulated thread panicked".to_string())
+                            }
+                        }
+                    };
+                    let clock = ctx.clock.get();
+                    CURRENT.with(|c| *c.borrow_mut() = None);
+                    core.finish(tid, clock, app_panic);
+                })
+                .expect("spawn sim thread");
+            joins.push(jh);
+        }
+        for jh in joins {
+            let _ = jh.join();
+        }
+        let s = core.sched.lock().unwrap_or_else(|e| e.into_inner());
+        let outcome = match (&s.abort, &s.panic_msg) {
+            (Some(SimAbort::Deadlock), _) => SimOutcome::Deadlock,
+            (Some(SimAbort::TimeLimit), _) => SimOutcome::TimeLimit,
+            (Some(SimAbort::Cascade), Some(m)) => SimOutcome::Panicked(m.clone()),
+            (Some(SimAbort::Cascade), None) => SimOutcome::Panicked("aborted".into()),
+            (None, Some(m)) => SimOutcome::Panicked(m.clone()),
+            (None, None) => SimOutcome::Completed,
+        };
+        SimReport {
+            outcome,
+            end_time: s.slots.iter().map(|sl| sl.clock).max().unwrap_or(0),
+            thread_clocks: s.slots.iter().map(|sl| sl.clock).collect(),
+            measurements: s.measurements.clone(),
+        }
+    }
+}
+
+impl SimCore {
+    fn wait_for_baton_entry<'a>(
+        &'a self,
+        mut s: std::sync::MutexGuard<'a, Sched>,
+        tid: usize,
+    ) -> std::sync::MutexGuard<'a, Sched> {
+        let cv = s.slots[tid].cv.clone();
+        while s.slots[tid].state != RunState::Running {
+            if s.abort.is_some() {
+                drop(s);
+                panic::panic_any(SimAbort::Cascade);
+            }
+            s = cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        s
+    }
+}
+
+/// Record a named scalar measurement, retrievable from the [`SimReport`].
+pub fn record(name: impl Into<String>, value: f64) {
+    with_ctx(|ctx| {
+        let mut s = ctx.core.sched.lock().unwrap_or_else(|e| e.into_inner());
+        s.measurements.insert(name.into(), value);
+    });
+}
+
+pub(crate) fn current_core() -> Arc<SimCore> {
+    with_ctx(|ctx| ctx.core.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_thread_advances_clock() {
+        let mut sim = Sim::new(CostModel::default());
+        sim.spawn_setup("t0", || {
+            advance(100);
+            yield_now();
+            advance(50);
+            assert_eq!(now(), 150);
+        });
+        let r = sim.run();
+        assert_eq!(r.outcome, SimOutcome::Completed);
+        assert_eq!(r.end_time, 150);
+    }
+
+    #[test]
+    fn min_clock_interleaving_is_deterministic() {
+        // Two threads advancing by different steps must interleave by
+        // virtual time: the trace of (tid, time) pairs is fixed.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let order = Arc::new(AtomicU64::new(0));
+        let run = |order: Arc<AtomicU64>| {
+            let mut sim = Sim::new(CostModel::default());
+            let o1 = order.clone();
+            sim.spawn_setup("fast", move || {
+                for _ in 0..3 {
+                    advance(10);
+                    yield_now();
+                    o1.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            let o2 = order;
+            sim.spawn_setup("slow", move || {
+                advance(25);
+                yield_now();
+                o2.fetch_add(100, Ordering::SeqCst);
+            });
+            sim.run()
+        };
+        let r = run(order.clone());
+        assert_eq!(r.outcome, SimOutcome::Completed);
+        assert_eq!(r.end_time, 30);
+        assert_eq!(order.load(Ordering::SeqCst), 103);
+    }
+
+    #[test]
+    fn time_limit_reports_livelock() {
+        let mut sim = Sim::new(CostModel::default());
+        sim.set_time_limit(1_000);
+        sim.spawn_setup("spinner", || loop {
+            advance(100);
+            yield_now();
+        });
+        let r = sim.run();
+        assert_eq!(r.outcome, SimOutcome::TimeLimit);
+    }
+
+    #[test]
+    fn app_panic_propagates() {
+        let mut sim = Sim::new(CostModel::default());
+        sim.spawn_setup("bad", || panic!("boom"));
+        sim.spawn_setup("other", || {
+            for _ in 0..1000 {
+                advance(1);
+                yield_now();
+            }
+        });
+        let r = sim.run();
+        assert!(matches!(r.outcome, SimOutcome::Panicked(ref m) if m.contains("boom")));
+    }
+
+    #[test]
+    fn measurements_are_returned() {
+        let mut sim = Sim::new(CostModel::default());
+        sim.spawn_setup("m", || {
+            advance(5);
+            record("rate", 42.5);
+        });
+        let r = sim.run();
+        assert_eq!(r.measurements.get("rate"), Some(&42.5));
+    }
+}

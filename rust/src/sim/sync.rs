@@ -1,0 +1,474 @@
+//! Virtual-time synchronization primitives.
+//!
+//! These model the *cost* of real primitives (lock fast paths, contended
+//! handoffs, atomic RMWs, cache-line migration) while providing real mutual
+//! exclusion semantics in virtual time. They are the levers behind the
+//! paper's Figures 2, 3, 7, 8 and 12: critical-section granularity, atomic
+//! counting overhead, and false sharing all surface through them.
+
+use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
+use super::cell::SimCell;
+use super::sched::{advance, current_core, current_tid, now, yield_now};
+
+/// Models one 64-byte cache line's ownership for false-sharing accounting.
+///
+/// Whenever a thread touches a line last owned by a different thread, a
+/// line-transfer cost is charged. Placing two hot locks on the *same*
+/// `CacheLine` reproduces the paper's Fig. 8 false-sharing penalty; giving
+/// each its own line models `__attribute__((aligned(64)))`.
+pub struct CacheLine {
+    last_owner: SimCell<Option<usize>>,
+}
+
+impl CacheLine {
+    pub fn new() -> Arc<Self> {
+        Arc::new(CacheLine { last_owner: SimCell::new(None) })
+    }
+
+    /// Charge the calling thread for touching this line.
+    pub fn touch(&self) {
+        let me = current_tid();
+        let owner = self.last_owner.get();
+        if *owner != Some(me) {
+            let c = current_core();
+            advance(c.costs.cacheline_transfer);
+            *owner = Some(me);
+        }
+    }
+}
+
+struct MutexState {
+    held_by: Option<usize>,
+    waiters: VecDeque<usize>,
+}
+
+/// A virtual-time mutex.
+///
+/// Uncontended acquire/release charge the fast-path cost; a contended
+/// acquire parks the thread until the holder releases, then charges the
+/// handoff cost (futex wake + lock-word migration) — the term that builds
+/// the paper's "lock convoy" under a global critical section.
+pub struct SimMutex<T> {
+    state: SimCell<MutexState>,
+    data: SimCell<T>,
+    line: Option<Arc<CacheLine>>,
+}
+
+impl<T: Send> SimMutex<T> {
+    pub fn new(data: T) -> Self {
+        SimMutex {
+            state: SimCell::new(MutexState { held_by: None, waiters: VecDeque::new() }),
+            data: SimCell::new(data),
+            line: None,
+        }
+    }
+
+    /// Place this mutex's lock word on an explicit cache line (for
+    /// false-sharing experiments). Without this, the lock word is assumed
+    /// exclusively-owned (perfectly aligned).
+    pub fn on_line(mut self, line: Arc<CacheLine>) -> Self {
+        self.line = Some(line);
+        self
+    }
+
+    pub fn lock(&self) -> SimMutexGuard<'_, T> {
+        let core = current_core();
+        let me = current_tid();
+        yield_now(); // ordering point for this interaction
+        if let Some(line) = &self.line {
+            line.touch();
+        }
+        advance(core.costs.lock_acquire);
+        // Convoy semantics: once a lock has waiters, ownership is handed
+        // through the queue (each transfer pays FUTEX_WAKE on the releaser
+        // and wake-up latency on the waiter). This is the regime a
+        // contended global critical section degrades into — the 10-100x
+        // collapse of paper Figs. 3/10.
+        let st = self.state.get();
+        debug_assert_ne!(st.held_by, Some(me), "recursive SimMutex lock");
+        if st.held_by.is_none() && st.waiters.is_empty() {
+            st.held_by = Some(me);
+        } else {
+            st.waiters.push_back(me);
+            core.park(|| {});
+            // Woken by the releaser, which transferred ownership to us.
+            debug_assert_eq!(self.state.get().held_by, Some(me));
+        }
+        SimMutexGuard { mutex: self }
+    }
+
+    /// Non-blocking acquire.
+    pub fn try_lock(&self) -> Option<SimMutexGuard<'_, T>> {
+        let core = current_core();
+        let me = current_tid();
+        yield_now();
+        if let Some(line) = &self.line {
+            line.touch();
+        }
+        advance(core.costs.lock_acquire);
+        let st = self.state.get();
+        if st.held_by.is_none() {
+            st.held_by = Some(me);
+            Some(SimMutexGuard { mutex: self })
+        } else {
+            None
+        }
+    }
+
+    fn unlock(&self) {
+        let core = current_core();
+        advance(core.costs.lock_release);
+        yield_now();
+        let st = self.state.get();
+        debug_assert_eq!(st.held_by, Some(current_tid()));
+        if let Some(next) = st.waiters.pop_front() {
+            // FUTEX_WAKE: the releaser pays the syscall + line migration;
+            // the waiter additionally pays its wake-up latency. Ownership
+            // transfers directly (queue fairness — the convoy regime).
+            st.held_by = Some(next);
+            advance(core.costs.lock_wake);
+            core.unpark(next, now() + core.costs.lock_handoff);
+        } else {
+            st.held_by = None;
+        }
+    }
+}
+
+pub struct SimMutexGuard<'a, T: Send> {
+    mutex: &'a SimMutex<T>,
+}
+
+impl<T: Send> Deref for SimMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.mutex.data.get()
+    }
+}
+
+impl<T: Send> DerefMut for SimMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.mutex.data.get()
+    }
+}
+
+impl<T: Send> Drop for SimMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            // Unwinding (possibly a scheduler-initiated abort): the run is
+            // being torn down; skip scheduler interaction entirely — a
+            // panic inside drop would abort the whole process.
+            return;
+        }
+        self.mutex.unlock();
+    }
+}
+
+/// A virtual-time atomic counter. Every RMW charges the atomic cost plus a
+/// cache-line transfer when the previous toucher was a different thread —
+/// the "atomics for reference and completion counters" overhead of the
+/// paper's fine-grained mode (§4.1, Fig. 12).
+pub struct SimAtomicU64 {
+    v: SimCell<u64>,
+    owner: SimCell<Option<usize>>,
+}
+
+impl SimAtomicU64 {
+    pub fn new(v: u64) -> Self {
+        SimAtomicU64 { v: SimCell::new(v), owner: SimCell::new(None) }
+    }
+
+    fn charge(&self, rmw: bool) {
+        let core = current_core();
+        let me = current_tid();
+        let owner = self.owner.get();
+        if *owner != Some(me) {
+            advance(core.costs.cacheline_transfer);
+            *owner = Some(me);
+        }
+        if rmw {
+            advance(core.costs.atomic_rmw);
+        }
+    }
+
+    pub fn load(&self) -> u64 {
+        yield_now();
+        self.charge(false);
+        *self.v.get()
+    }
+
+    pub fn store(&self, v: u64) {
+        yield_now();
+        self.charge(true);
+        *self.v.get() = v;
+    }
+
+    pub fn fetch_add(&self, d: u64) -> u64 {
+        yield_now();
+        self.charge(true);
+        let p = self.v.get();
+        let old = *p;
+        *p = old.wrapping_add(d);
+        old
+    }
+
+    pub fn fetch_sub(&self, d: u64) -> u64 {
+        yield_now();
+        self.charge(true);
+        let p = self.v.get();
+        let old = *p;
+        *p = old.wrapping_sub(d);
+        old
+    }
+}
+
+/// A one-shot / resettable event: threads park until signaled.
+pub struct SimEvent {
+    state: SimCell<EventState>,
+}
+
+struct EventState {
+    signaled: bool,
+    waiters: Vec<usize>,
+}
+
+impl SimEvent {
+    pub fn new() -> Self {
+        SimEvent { state: SimCell::new(EventState { signaled: false, waiters: Vec::new() }) }
+    }
+
+    pub fn wait(&self) {
+        let core = current_core();
+        yield_now();
+        let st = self.state.get();
+        if st.signaled {
+            return;
+        }
+        let me = current_tid();
+        st.waiters.push(me);
+        core.park(|| {});
+    }
+
+    pub fn signal(&self) {
+        let core = current_core();
+        yield_now();
+        let st = self.state.get();
+        st.signaled = true;
+        let t = now();
+        for w in st.waiters.drain(..) {
+            core.unpark(w, t);
+        }
+    }
+
+    pub fn is_signaled(&self) -> bool {
+        yield_now();
+        self.state.get().signaled
+    }
+
+    pub fn reset(&self) {
+        yield_now();
+        self.state.get().signaled = false;
+    }
+}
+
+impl Default for SimEvent {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A reusable n-party barrier (models `#pragma omp barrier`).
+pub struct SimBarrier {
+    state: SimCell<BarrierState>,
+    parties: usize,
+}
+
+struct BarrierState {
+    arrived: usize,
+    waiters: Vec<usize>,
+}
+
+impl SimBarrier {
+    pub fn new(parties: usize) -> Self {
+        assert!(parties > 0);
+        SimBarrier {
+            state: SimCell::new(BarrierState { arrived: 0, waiters: Vec::new() }),
+            parties,
+        }
+    }
+
+    /// Block until all parties arrive. The last arriver releases everyone
+    /// at its (maximal) clock — barrier semantics in virtual time.
+    pub fn wait(&self) {
+        let core = current_core();
+        yield_now();
+        advance(core.costs.atomic_rmw); // barrier arrival counter
+        let st = self.state.get();
+        st.arrived += 1;
+        if st.arrived == self.parties {
+            st.arrived = 0;
+            let t = now();
+            for w in st.waiters.drain(..) {
+                core.unpark(w, t);
+            }
+        } else {
+            st.waiters.push(current_tid());
+            core.park(|| {});
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{CostModel, Sim, SimOutcome};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn mutex_provides_mutual_exclusion_and_charges_time() {
+        let m = Arc::new(SimMutex::new(0u64));
+        let mut sim = Sim::new(CostModel::default());
+        for _ in 0..4 {
+            let m = m.clone();
+            sim.spawn_setup("worker", move || {
+                for _ in 0..100 {
+                    let mut g = m.lock();
+                    *g += 1;
+                    advance(10);
+                    drop(g);
+                }
+            });
+        }
+        let r = sim.run();
+        assert_eq!(r.outcome, SimOutcome::Completed);
+        // 400 total increments.
+        let m = Arc::try_unwrap(m).ok().expect("sole owner");
+        assert_eq!(m.data.into_inner(), 400);
+        // Virtual time must reflect serialization: 400 * (hold + lock costs).
+        assert!(r.end_time >= 400 * 10);
+    }
+
+    #[test]
+    fn contended_lock_costs_more_than_uncontended() {
+        let run = |threads: usize| -> u64 {
+            let m = Arc::new(SimMutex::new(()));
+            let mut sim = Sim::new(CostModel::default());
+            let per_thread = 2000 / threads;
+            for _ in 0..threads {
+                let m = m.clone();
+                sim.spawn_setup("w", move || {
+                    for _ in 0..per_thread {
+                        let g = m.lock();
+                        advance(50);
+                        drop(g);
+                    }
+                });
+            }
+            sim.run().end_time
+        };
+        let uncontended = run(1);
+        let contended = run(8);
+        // Same total critical work, but contention adds handoff latency.
+        assert!(
+            contended > uncontended,
+            "contended={contended} uncontended={uncontended}"
+        );
+    }
+
+    #[test]
+    fn barrier_releases_all_at_max_clock() {
+        let b = Arc::new(SimBarrier::new(3));
+        let after = Arc::new(AtomicU64::new(0));
+        let mut sim = Sim::new(CostModel::default());
+        for i in 0..3u64 {
+            let b = b.clone();
+            let after = after.clone();
+            sim.spawn_setup("p", move || {
+                advance(100 * (i + 1));
+                b.wait();
+                // All must resume at >= 300 (slowest party).
+                assert!(crate::sim::now() >= 300);
+                after.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let r = sim.run();
+        assert_eq!(r.outcome, SimOutcome::Completed);
+        assert_eq!(after.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn event_wakes_waiters() {
+        let e = Arc::new(SimEvent::new());
+        let mut sim = Sim::new(CostModel::default());
+        let e1 = e.clone();
+        sim.spawn_setup("waiter", move || {
+            e1.wait();
+            assert!(crate::sim::now() >= 500);
+        });
+        let e2 = e.clone();
+        sim.spawn_setup("signaler", move || {
+            advance(500);
+            e2.signal();
+        });
+        let r = sim.run();
+        assert_eq!(r.outcome, SimOutcome::Completed);
+    }
+
+    #[test]
+    fn false_sharing_costs_show_up() {
+        // Two threads hammering two locks on the SAME line vs separate lines.
+        let run = |shared: bool| -> u64 {
+            let line = CacheLine::new();
+            let m1 = Arc::new(if shared {
+                SimMutex::new(()).on_line(line.clone())
+            } else {
+                SimMutex::new(()).on_line(CacheLine::new())
+            });
+            let m2 = Arc::new(if shared {
+                SimMutex::new(()).on_line(line)
+            } else {
+                SimMutex::new(()).on_line(CacheLine::new())
+            });
+            let mut sim = Sim::new(CostModel::default());
+            for m in [m1, m2] {
+                sim.spawn_setup("t", move || {
+                    for _ in 0..500 {
+                        let g = m.lock();
+                        advance(20);
+                        drop(g);
+                    }
+                });
+            }
+            sim.run().end_time
+        };
+        let same_line = run(true);
+        let own_lines = run(false);
+        assert!(same_line > own_lines, "same={same_line} own={own_lines}");
+    }
+
+    #[test]
+    fn atomic_counter_is_coherent() {
+        let a = Arc::new(SimAtomicU64::new(0));
+        let mut sim = Sim::new(CostModel::default());
+        for _ in 0..4 {
+            let a = a.clone();
+            sim.spawn_setup("inc", move || {
+                for _ in 0..250 {
+                    a.fetch_add(1);
+                    advance(5);
+                }
+            });
+        }
+        let r = sim.run();
+        assert_eq!(r.outcome, SimOutcome::Completed);
+        // Read back on a fresh single-thread sim.
+        let a2 = a.clone();
+        let mut sim2 = Sim::new(CostModel::default());
+        sim2.spawn_setup("check", move || {
+            assert_eq!(a2.load(), 1000);
+        });
+        assert_eq!(sim2.run().outcome, SimOutcome::Completed);
+    }
+}

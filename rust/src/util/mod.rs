@@ -1,0 +1,7 @@
+//! Small self-contained utilities (offline environment: no external crates).
+
+mod rng;
+mod stats;
+
+pub use rng::SplitMix64;
+pub use stats::{mean, percentile, stddev, Summary};

@@ -1,0 +1,105 @@
+//! Application-driver integration tests: each paper application completes
+//! on realistic (scaled-down) topologies and reproduces its figure's
+//! qualitative shape.
+
+use vcmpi::apps::bspmm::{run_bspmm, BspmmParams};
+use vcmpi::apps::ebms::{fetch_time, EbmsParams};
+use vcmpi::apps::stencil::{halo_time, StencilParams};
+use vcmpi::apps::AppMode;
+use vcmpi::fabric::Interconnect;
+
+#[test]
+fn fig22_shape_par_comm_close_to_everywhere() {
+    // Paper: par_comm+vcis halo time matches MPI everywhere (within noise)
+    // and beats the original library.
+    let mk = |mode| StencilParams {
+        mode,
+        nodes_x: 2,
+        nodes_y: 2,
+        tx: 2,
+        ty: 2,
+        mesh: 1024,
+        iters: 3,
+        ..Default::default()
+    };
+    let ew = halo_time(mk(AppMode::Everywhere));
+    let par = halo_time(mk(AppMode::ParCommVcis));
+    let orig = halo_time(mk(AppMode::ParCommOrig));
+    let ep = halo_time(mk(AppMode::Endpoints));
+    assert!(par < orig, "multi-VCI ({par}) must beat original ({orig})");
+    assert!(par < 3.0 * ew, "par_comm ({par}) should be in everywhere's ({ew}) ballpark");
+    assert!(ep < orig, "endpoints ({ep}) must beat original ({orig})");
+}
+
+#[test]
+fn fig24_shape_ib_fetch_flat_opa_fetch_slow() {
+    let mk = |ic, mode| EbmsParams {
+        mode,
+        interconnect: ic,
+        nodes: 2,
+        threads: 4,
+        fetch_bytes: 32 * 1024,
+        iters: 3,
+        compute_ns: 30_000,
+        ..Default::default()
+    };
+    // On IB, par_comm fetch ~= everywhere fetch (hardware RMA).
+    let (g_ew, f_ew) = fetch_time(mk(Interconnect::Ib, AppMode::Everywhere));
+    let (g_par, f_par) = fetch_time(mk(Interconnect::Ib, AppMode::ParCommVcis));
+    let ib_ew = g_ew + f_ew;
+    let ib_par = g_par + f_par;
+    assert!(
+        ib_par < 3.0 * ib_ew,
+        "IB par fetch ({ib_par}) should be close to everywhere ({ib_ew})"
+    );
+    // On OPA, the flush (not the get) dominates for par_comm (Fig. 25).
+    let (g_opa, f_opa) = fetch_time(mk(Interconnect::Opa, AppMode::ParCommVcis));
+    assert!(
+        f_opa > g_opa,
+        "software-RMA flush ({f_opa}) should dominate get ({g_opa})"
+    );
+}
+
+#[test]
+fn fig27_shape_endpoints_beat_single_window_accumulates() {
+    let mk = |mode, relaxed| BspmmParams {
+        mode,
+        nodes: 2,
+        threads: 4,
+        tile_dim: 128,
+        units_per_worker: 2,
+        relaxed_acc: relaxed,
+        ..Default::default()
+    };
+    let par = run_bspmm(mk(AppMode::ParCommVcis, false));
+    let ep = run_bspmm(mk(AppMode::Endpoints, false));
+    let relaxed = run_bspmm(mk(AppMode::ParCommVcis, true));
+    // All three complete and report sane per-phase times; the quantitative
+    // 16-thread comparison is the fig27 CSV (`repro figures fig27`) — at
+    // this mini-scale per-phase samples are too few for ratio assertions.
+    for (label, t) in [("par", &par), ("ep", &ep), ("relaxed", &relaxed)] {
+        assert!(t.get_init > 0.0, "{label}: get_init");
+        assert!(t.get_flush >= 0.0, "{label}: get_flush");
+        assert!(t.acc_init > 0.0, "{label}: acc_init");
+        assert!(t.acc_flush >= 0.0, "{label}: acc_flush");
+    }
+}
+
+#[test]
+fn stencil_modes_ordering_is_stable_across_meshes() {
+    for mesh in [512, 2048] {
+        let mk = |mode| StencilParams {
+            mode,
+            nodes_x: 2,
+            nodes_y: 1,
+            tx: 2,
+            ty: 2,
+            mesh,
+            iters: 2,
+            ..Default::default()
+        };
+        let par = halo_time(mk(AppMode::ParCommVcis));
+        let orig = halo_time(mk(AppMode::ParCommOrig));
+        assert!(par <= orig * 1.05, "mesh {mesh}: par {par} vs orig {orig}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Fig. 9 reproduction: the progress corner cases that make pure per-VCI
+//! progress INCORRECT — and that the hybrid model fixes.
+//!
+//! These are valid MPI programs. With per-VCI-only progress
+//! (`global_progress_interval = 0`) they livelock; with the hybrid model
+//! they complete. Prior endpoint work ignored exactly this (paper §1, §8).
+
+use std::sync::{Arc, Mutex};
+
+use vcmpi::fabric::{FabricConfig, Interconnect};
+use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, Src, Tag};
+use vcmpi::platform::{Backend, PBarrier};
+use vcmpi::sim::SimOutcome;
+
+fn fabric(ic: Interconnect) -> FabricConfig {
+    FabricConfig { interconnect: ic, nodes: 2, procs_per_node: 1, max_contexts_per_node: 64 }
+}
+
+/// Fig. 9 (left), transcribed:
+/// Rank 0:              MPI_Ssend(comm1); MPI_Ssend(comm2);
+/// Rank 1 / Thread 0:   MPI_Irecv(comm1, req1); B; B; MPI_Wait(req1);
+/// Rank 1 / Thread 1:   MPI_Irecv(comm2, req2); B; MPI_Wait(req2); B;
+///
+/// Ssend(comm1)'s ack requires rank 1 to *process* comm1's message; under
+/// pure per-VCI progress, MPI_Wait(req2) polls only comm2's VCI, so the
+/// ack never goes out, Ssend(comm2) is never issued, and nobody advances.
+fn fig9_p2p(cfg: MpiConfig) -> SimOutcome {
+    let mut spec = ClusterSpec::new(fabric(Interconnect::Ib), cfg, 2);
+    spec.time_limit = Some(10_000_000); // 10 virtual ms: plenty for valid runs
+    spec.service_threads = false; // isolate: no PSM2-style savior
+    let comms: Arc<Mutex<std::collections::HashMap<usize, (vcmpi::mpi::Comm, vcmpi::mpi::Comm)>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let setup: Arc<Vec<PBarrier>> =
+        Arc::new((0..2).map(|_| PBarrier::new(Backend::Sim, 2)).collect());
+    let omp = Arc::new(PBarrier::new(Backend::Sim, 2)); // rank 1's thread barrier
+    let c2 = comms.clone();
+    let r = run_cluster(spec, move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let c1 = proc.comm_dup(&world);
+            let c2_ = proc.comm_dup(&world);
+            c2.lock().unwrap().insert(proc.rank(), (c1, c2_));
+        }
+        setup[proc.rank()].wait();
+        let (comm1, comm2) = c2.lock().unwrap().get(&proc.rank()).unwrap().clone();
+        if proc.rank() == 0 {
+            if t == 0 {
+                proc.ssend(&comm1, 1, 1, &[1]);
+                proc.ssend(&comm2, 1, 2, &[2]);
+            }
+            // t == 1 idles.
+        } else if t == 0 {
+            let req1 = proc.irecv(&comm1, Src::Rank(0), Tag::Value(1));
+            omp.wait();
+            omp.wait();
+            proc.wait(req1);
+        } else {
+            let req2 = proc.irecv(&comm2, Src::Rank(0), Tag::Value(2));
+            omp.wait();
+            proc.wait(req2);
+            omp.wait();
+        }
+    });
+    r.outcome
+}
+
+#[test]
+fn fig9_p2p_pure_per_vci_progress_hangs() {
+    let mut cfg = MpiConfig::optimized(8);
+    cfg.global_progress_interval = 0; // pure per-VCI: INCORRECT
+    let out = fig9_p2p(cfg);
+    assert!(
+        matches!(out, SimOutcome::TimeLimit | SimOutcome::Deadlock),
+        "expected livelock/deadlock, got {out:?}"
+    );
+}
+
+#[test]
+fn fig9_p2p_hybrid_progress_completes() {
+    let cfg = MpiConfig::optimized(8); // hybrid (interval=64)
+    assert_eq!(fig9_p2p(cfg), SimOutcome::Completed);
+}
+
+#[test]
+fn fig9_p2p_single_vci_original_completes() {
+    // With one VCI there is no distinction between per-VCI and global
+    // progress — current MPI libraries complete this program.
+    assert_eq!(fig9_p2p(MpiConfig::original()), SimOutcome::Completed);
+}
+
+/// Fig. 9 (right), transcribed (software-RMA fabric, large Gets):
+/// Rank 0:              Get(win1); Get(win2); flush(win1); flush(win2);
+/// Rank 1 / Thread 0:   Get(win1); B; B; flush(win1);
+/// Rank 1 / Thread 1:   Get(win2); B; flush(win2); B;
+///
+/// Every flush needs the *remote* side to serve the Get's active message;
+/// under pure per-VCI progress each spinner serves only its own window's
+/// VCI and the four flushes starve each other.
+fn fig9_rma(cfg: MpiConfig) -> SimOutcome {
+    let mut spec = ClusterSpec::new(fabric(Interconnect::Opa), cfg, 2);
+    spec.time_limit = Some(10_000_000);
+    spec.service_threads = false;
+    let wins: Arc<Mutex<std::collections::HashMap<usize, (Arc<vcmpi::mpi::Window>, Arc<vcmpi::mpi::Window>)>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let setup: Arc<Vec<PBarrier>> =
+        Arc::new((0..2).map(|_| PBarrier::new(Backend::Sim, 2)).collect());
+    let omp = Arc::new(PBarrier::new(Backend::Sim, 2));
+    let w2 = wins.clone();
+    const LEN: usize = 32 * 1024;
+    let r = run_cluster(spec, move |proc, t| {
+        let world = proc.comm_world();
+        if t == 0 {
+            let a = proc.win_create(&world, LEN);
+            let b = proc.win_create(&world, LEN);
+            w2.lock().unwrap().insert(proc.rank(), (a, b));
+        }
+        setup[proc.rank()].wait();
+        let (win1, win2) = w2.lock().unwrap().get(&proc.rank()).unwrap().clone();
+        let peer = 1 - proc.rank();
+        if proc.rank() == 0 {
+            if t == 0 {
+                let h1 = proc.get(&win1, peer, 0, LEN);
+                let h2 = proc.get(&win2, peer, 0, LEN);
+                proc.win_flush(&win1);
+                proc.win_flush(&win2);
+                let _ = (proc.get_data(&win1, h1), proc.get_data(&win2, h2));
+            }
+        } else if t == 0 {
+            let h = proc.get(&win1, peer, 0, LEN);
+            omp.wait();
+            omp.wait();
+            proc.win_flush(&win1);
+            let _ = proc.get_data(&win1, h);
+        } else {
+            let h = proc.get(&win2, peer, 0, LEN);
+            omp.wait();
+            proc.win_flush(&win2);
+            let _ = proc.get_data(&win2, h);
+            omp.wait();
+        }
+    });
+    r.outcome
+}
+
+#[test]
+fn fig9_rma_pure_per_vci_progress_hangs() {
+    let mut cfg = MpiConfig::optimized(8);
+    cfg.global_progress_interval = 0;
+    let out = fig9_rma(cfg);
+    assert!(
+        matches!(out, SimOutcome::TimeLimit | SimOutcome::Deadlock),
+        "expected livelock/deadlock, got {out:?}"
+    );
+}
+
+#[test]
+fn fig9_rma_hybrid_progress_completes() {
+    let cfg = MpiConfig::optimized(8);
+    assert_eq!(fig9_rma(cfg), SimOutcome::Completed);
+}
+
+#[test]
+fn psm2_service_thread_rescues_pure_per_vci() {
+    // With the OPA service thread enabled (the deployment default), even
+    // pure per-VCI progress eventually completes — slowly. This is the
+    // paper's "relies on its low-frequency progress thread" observation.
+    let mut cfg = MpiConfig::optimized(8);
+    cfg.global_progress_interval = 0;
+    let mut spec = ClusterSpec::new(fabric(Interconnect::Opa), cfg, 1);
+    spec.time_limit = Some(60_000_000_000);
+    spec.service_threads = true;
+    let r = run_cluster(spec, move |proc, _t| {
+        let world = proc.comm_world();
+        let win = proc.win_create(&world, 4096);
+        if proc.rank() == 0 {
+            proc.put(&win, 1, 0, &[5u8; 1024]);
+            proc.win_flush(&win); // completes only via target's svc thread
+            proc.send(&world, 1, 3, &[]);
+        } else {
+            let done = proc.irecv(&world, Src::Rank(0), Tag::Value(3));
+            proc.wait(done);
+            assert_eq!(win.read_local(0, 1024), vec![5u8; 1024]);
+        }
+        proc.barrier(&world);
+        proc.win_free(&world, win);
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed);
+}

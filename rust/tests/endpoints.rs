@@ -1,0 +1,119 @@
+//! User-visible MPI Endpoints: the comparison arm. Endpoint ranks address
+//! (process, VCI) pairs directly.
+
+use std::sync::{Arc, Mutex};
+
+use vcmpi::fabric::{FabricConfig, Interconnect};
+use vcmpi::mpi::{run_cluster, ClusterSpec, Comm, MpiConfig, MpiProc, Src, Tag};
+use vcmpi::platform::{Backend, PBarrier};
+use vcmpi::sim::SimOutcome;
+
+fn spec(threads: usize, nvcis: usize) -> ClusterSpec {
+    ClusterSpec::new(
+        FabricConfig {
+            interconnect: Interconnect::Ib,
+            nodes: 2,
+            procs_per_node: 1,
+            max_contexts_per_node: 64,
+        },
+        MpiConfig::optimized(nvcis),
+        threads,
+    )
+}
+
+fn run_ok(s: ClusterSpec, body: impl Fn(&Arc<MpiProc>, usize) + Send + Sync + 'static) {
+    let r = run_cluster(s, body);
+    assert_eq!(r.outcome, SimOutcome::Completed, "{:?}", r.outcome);
+}
+
+/// Helper: thread 0 creates the endpoints comm; all threads share it.
+fn with_endpoints(
+    threads: usize,
+    nvcis: usize,
+    per_proc: usize,
+    body: impl Fn(&Arc<MpiProc>, usize, &Comm) + Send + Sync + 'static,
+) {
+    let shared: Arc<Mutex<std::collections::HashMap<usize, Comm>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let bars: Arc<Vec<PBarrier>> =
+        Arc::new((0..2).map(|_| PBarrier::new(Backend::Sim, threads)).collect());
+    let s2 = shared.clone();
+    run_ok(spec(threads, nvcis), move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let ep = proc.create_endpoints(&world, per_proc);
+            s2.lock().unwrap().insert(proc.rank(), ep);
+        }
+        bars[proc.rank()].wait();
+        let ep = s2.lock().unwrap().get(&proc.rank()).unwrap().clone();
+        body(proc, t, &ep);
+        bars[proc.rank()].wait();
+    });
+}
+
+#[test]
+fn endpoint_pairs_exchange_directly() {
+    // 4 threads x 2 procs; thread t uses endpoint t and talks to the same
+    // endpoint on the peer process.
+    with_endpoints(4, 8, 4, |proc, t, ep| {
+        let peer_proc = 1 - proc.rank();
+        let my_rank = proc.endpoint_rank(ep, proc.rank(), t);
+        let peer_rank = proc.endpoint_rank(ep, peer_proc, t);
+        let sreq = proc.isend_ep(ep, Some(t), peer_rank, t as i32, &[t as u8; 8], false);
+        let rreq = proc.irecv_ep(ep, Some(t), Src::Rank(peer_rank), Tag::Value(t as i32));
+        let got = proc.wait(rreq).unwrap();
+        proc.wait(sreq);
+        assert_eq!(got, vec![t as u8; 8]);
+        let _ = my_rank;
+    });
+}
+
+#[test]
+fn endpoints_demand_distinct_vcis() {
+    // Asking for more endpoints than the pool has VCIs must fail loudly
+    // (endpoints expose hardware limits — that's their point).
+    let result = std::panic::catch_unwind(|| {
+        with_endpoints(1, 2, 4, |_proc, _t, _ep| {});
+    });
+    assert!(result.is_err(), "endpoint over-subscription should panic");
+}
+
+#[test]
+fn cross_endpoint_addressing() {
+    // Any endpoint can send to any other endpoint rank, not just its twin.
+    with_endpoints(2, 8, 2, |proc, t, ep| {
+        let peer_proc = 1 - proc.rank();
+        // Thread t sends to peer endpoint (1 - t): a crossed pattern.
+        let to = proc.endpoint_rank(ep, peer_proc, 1 - t);
+        let sreq = proc.isend_ep(ep, Some(t), to, 77, &[proc.rank() as u8, t as u8], false);
+        // And receives whatever lands on ITS endpoint.
+        let rreq = proc.irecv_ep(ep, Some(t), Src::Any, Tag::Value(77));
+        let got = proc.wait(rreq).unwrap();
+        proc.wait(sreq);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0] as usize, peer_proc, "from the peer process");
+        assert_eq!(got[1] as usize, 1 - t, "from the crossed endpoint");
+    });
+}
+
+#[test]
+fn endpoints_and_world_coexist() {
+    with_endpoints(2, 8, 2, |proc, t, ep| {
+        let world = proc.comm_world();
+        let peer_proc = 1 - proc.rank();
+        if t == 0 {
+            // World traffic alongside endpoint traffic.
+            let sreq = proc.isend(&world, peer_proc, 5, b"world");
+            let rreq = proc.irecv(&world, Src::Rank(peer_proc), Tag::Value(5));
+            let got = proc.wait(rreq).unwrap();
+            proc.wait(sreq);
+            assert_eq!(got, b"world");
+        }
+        let to = proc.endpoint_rank(ep, peer_proc, t);
+        let sreq = proc.isend_ep(ep, Some(t), to, 6, b"ep", false);
+        let rreq = proc.irecv_ep(ep, Some(t), Src::Rank(to), Tag::Value(6));
+        let got = proc.wait(rreq).unwrap();
+        proc.wait(sreq);
+        assert_eq!(got, b"ep");
+    });
+}

@@ -1,0 +1,158 @@
+//! Native-backend (real OS threads) correctness: the same library code
+//! under genuine concurrency, plus stress tests for the host-safety of
+//! the shared structures.
+
+use std::sync::{Arc, Mutex};
+
+use vcmpi::fabric::{AccOp, FabricConfig, Interconnect};
+use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, Src, Tag};
+use vcmpi::platform::Backend;
+use vcmpi::sim::SimOutcome;
+
+fn native_spec(ic: Interconnect, nodes: usize, tpp: usize, cfg: MpiConfig) -> ClusterSpec {
+    let mut spec = ClusterSpec::new(
+        FabricConfig { interconnect: ic, nodes, procs_per_node: 1, max_contexts_per_node: 64 },
+        cfg,
+        tpp,
+    );
+    spec.backend = Backend::Native;
+    spec
+}
+
+#[test]
+fn native_multithreaded_streams() {
+    // 4 real threads per process exchanging on dedicated comms.
+    let spec = native_spec(Interconnect::Ib, 2, 4, MpiConfig::optimized(8));
+    let comms: Arc<Mutex<std::collections::HashMap<usize, Vec<vcmpi::mpi::Comm>>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let bars: Arc<Vec<vcmpi::platform::PBarrier>> = Arc::new(
+        (0..2).map(|_| vcmpi::platform::PBarrier::new(Backend::Native, 4)).collect(),
+    );
+    let c2 = comms.clone();
+    let r = run_cluster(spec, move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let v: Vec<_> = (0..4).map(|_| proc.comm_dup(&world)).collect();
+            c2.lock().unwrap().insert(proc.rank(), v);
+        }
+        bars[proc.rank()].wait();
+        let comm = c2.lock().unwrap().get(&proc.rank()).unwrap()[t].clone();
+        let peer = 1 - proc.rank();
+        for i in 0..200u32 {
+            let sreq = proc.isend(&comm, peer, t as i32, &i.to_le_bytes());
+            let got = proc.recv(&comm, Src::Rank(peer), Tag::Value(t as i32));
+            assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+            proc.wait(sreq);
+        }
+        bars[proc.rank()].wait();
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed, "{:?}", r.outcome);
+}
+
+#[test]
+fn native_global_cs_serializes_correctly() {
+    // The Global critical section must stay correct under real threads.
+    let spec = native_spec(Interconnect::Ib, 2, 4, MpiConfig::original());
+    let r = run_cluster(spec, move |proc, t| {
+        let world = proc.comm_world();
+        let peer = 1 - proc.rank();
+        for i in 0..50u32 {
+            let sreq = proc.isend(&world, peer, t as i32, &i.to_le_bytes());
+            let got = proc.recv(&world, Src::Rank(peer), Tag::Value(t as i32));
+            assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+            proc.wait(sreq);
+        }
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed, "{:?}", r.outcome);
+}
+
+#[test]
+fn native_rma_and_fetch_op() {
+    let spec = native_spec(Interconnect::Opa, 2, 2, MpiConfig::optimized(4));
+    let bars: Arc<Vec<vcmpi::platform::PBarrier>> = Arc::new(
+        (0..2).map(|_| vcmpi::platform::PBarrier::new(Backend::Native, 2)).collect(),
+    );
+    let wins: Arc<Mutex<std::collections::HashMap<usize, Arc<vcmpi::mpi::Window>>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let w2 = wins.clone();
+    let r = run_cluster(spec, move |proc, t| {
+        let world = proc.comm_world();
+        let me = proc.rank();
+        if t == 0 {
+            let win = proc.win_create(&world, 1024);
+            w2.lock().unwrap().insert(me, win);
+        }
+        bars[me].wait();
+        let win = w2.lock().unwrap().get(&me).unwrap().clone();
+        // Both threads of both procs bump a counter on rank 0: 4 x 25.
+        for _ in 0..25 {
+            proc.fetch_and_op(&win, 0, 0, &1u64.to_le_bytes(), AccOp::SumU64);
+        }
+        bars[me].wait();
+        if t == 0 {
+            proc.barrier(&world);
+        }
+        bars[me].wait();
+        if me == 0 && t == 0 {
+            let v = u64::from_le_bytes(win.read_local(0, 8).try_into().unwrap());
+            assert_eq!(v, 100);
+        }
+        bars[me].wait();
+        if t == 0 {
+            let win = { w2.lock().unwrap().remove(&me).unwrap() };
+            proc.win_free(&world, win);
+        }
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed, "{:?}", r.outcome);
+}
+
+#[test]
+fn native_collectives() {
+    let spec = native_spec(Interconnect::Ib, 4, 1, MpiConfig::optimized(4));
+    let r = run_cluster(spec, move |proc, _t| {
+        let world = proc.comm_world();
+        let mut xs: Vec<f32> = (0..257).map(|i| (proc.rank() + 1) as f32 * i as f32).collect();
+        proc.allreduce_f32(&world, &mut xs);
+        for (i, &v) in xs.iter().enumerate() {
+            let want = 10.0 * i as f32;
+            assert!((v - want).abs() <= want.abs() * 1e-5 + 1e-3);
+        }
+        let all = proc.allgather_bytes(&world, &[proc.rank() as u8]);
+        assert_eq!(all.len(), 4);
+        for (r, b) in all.iter().enumerate() {
+            assert_eq!(b, &vec![r as u8]);
+        }
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed, "{:?}", r.outcome);
+}
+
+#[test]
+fn native_endpoints() {
+    let spec = native_spec(Interconnect::Ib, 2, 2, MpiConfig::optimized(6));
+    let eps: Arc<Mutex<std::collections::HashMap<usize, vcmpi::mpi::Comm>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let bars: Arc<Vec<vcmpi::platform::PBarrier>> = Arc::new(
+        (0..2).map(|_| vcmpi::platform::PBarrier::new(Backend::Native, 2)).collect(),
+    );
+    let e2 = eps.clone();
+    let r = run_cluster(spec, move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let ep = proc.create_endpoints(&world, 2);
+            e2.lock().unwrap().insert(proc.rank(), ep);
+        }
+        bars[proc.rank()].wait();
+        let ep = e2.lock().unwrap().get(&proc.rank()).unwrap().clone();
+        let peer_proc = 1 - proc.rank();
+        let to = proc.endpoint_rank(&ep, peer_proc, t);
+        let sreq = proc.isend_ep(&ep, Some(t), to, 3, &[t as u8; 4], false);
+        let got = {
+            let rreq = proc.irecv_ep(&ep, Some(t), Src::Rank(to), Tag::Value(3));
+            proc.wait(rreq).unwrap()
+        };
+        proc.wait(sreq);
+        assert_eq!(got, vec![t as u8; 4]);
+        bars[proc.rank()].wait();
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed, "{:?}", r.outcome);
+}

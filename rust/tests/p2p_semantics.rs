@@ -1,0 +1,286 @@
+//! Integration tests: two-sided semantics across the full stack
+//! (DES scheduler -> fabric -> vcmpi), under every library configuration.
+
+use vcmpi::fabric::{FabricConfig, Interconnect};
+use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, Src, Tag};
+use vcmpi::sim::SimOutcome;
+
+fn fabric(interconnect: Interconnect, nodes: usize, ppn: usize) -> FabricConfig {
+    FabricConfig { interconnect, nodes, procs_per_node: ppn, max_contexts_per_node: 64 }
+}
+
+fn run_ok(
+    spec: ClusterSpec,
+    body: impl Fn(&std::sync::Arc<vcmpi::mpi::MpiProc>, usize) + Send + Sync + 'static,
+) {
+    let r = run_cluster(spec, body);
+    assert_eq!(r.outcome, SimOutcome::Completed, "cluster run failed: {:?}", r.outcome);
+}
+
+fn all_configs() -> Vec<(&'static str, MpiConfig)> {
+    vec![
+        ("original", MpiConfig::original()),
+        ("fg_single", MpiConfig::fg_single_vci()),
+        ("optimized4", MpiConfig::optimized(4)),
+        ("optimized16", MpiConfig::optimized(16)),
+    ]
+}
+
+#[test]
+fn ping_pong_all_configs_both_fabrics() {
+    for ic in [Interconnect::Opa, Interconnect::Ib] {
+        for (name, cfg) in all_configs() {
+            let spec = ClusterSpec::new(fabric(ic, 2, 1), cfg, 1);
+            run_ok(spec, move |proc, _t| {
+                let world = proc.comm_world();
+                let payload = vec![0xAB; 64];
+                if proc.rank() == 0 {
+                    proc.send(&world, 1, 7, &payload);
+                    let back = proc.recv(&world, Src::Rank(1), Tag::Value(8));
+                    assert_eq!(back, vec![0xCD; 32], "echo payload ({name})");
+                } else {
+                    let got = proc.recv(&world, Src::Rank(0), Tag::Value(7));
+                    assert_eq!(got, vec![0xAB; 64], "ping payload ({name})");
+                    proc.send(&world, 0, 8, &vec![0xCD; 32]);
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn large_messages_use_rendezvous_and_arrive_intact() {
+    // 256 KiB >> rendezvous threshold (16 KiB).
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2, 1), MpiConfig::optimized(4), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let n = 256 * 1024;
+        if proc.rank() == 0 {
+            let data: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+            proc.send(&world, 1, 1, &data);
+        } else {
+            let got = proc.recv(&world, Src::Rank(0), Tag::Value(1));
+            assert_eq!(got.len(), n);
+            assert!(got.iter().enumerate().all(|(i, &b)| b == (i % 251) as u8));
+        }
+    });
+}
+
+#[test]
+fn nonovertaking_same_comm_same_rank() {
+    // 50 back-to-back sends with the same envelope must be received in
+    // program order (MPI's nonovertaking rule).
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 2, 1), MpiConfig::optimized(8), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        if proc.rank() == 0 {
+            for i in 0..50u32 {
+                proc.send(&world, 1, 3, &i.to_le_bytes());
+            }
+        } else {
+            for i in 0..50u32 {
+                let got = proc.recv(&world, Src::Rank(0), Tag::Value(3));
+                assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+            }
+        }
+    });
+}
+
+#[test]
+fn any_source_receives_from_all() {
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 4, 1), MpiConfig::optimized(4), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        if proc.rank() == 0 {
+            let mut seen = [false; 4];
+            for _ in 0..3 {
+                let got = proc.recv(&world, Src::Any, Tag::Any);
+                let who = got[0] as usize;
+                assert!(!seen[who], "duplicate sender {who}");
+                seen[who] = true;
+            }
+            assert!(seen[1] && seen[2] && seen[3]);
+        } else {
+            proc.send(&world, 0, proc.rank() as i32, &[proc.rank() as u8]);
+        }
+    });
+}
+
+#[test]
+fn tags_disambiguate_within_a_comm() {
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 2, 1), MpiConfig::optimized(4), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        if proc.rank() == 0 {
+            proc.send(&world, 1, 10, b"ten");
+            proc.send(&world, 1, 20, b"twenty");
+        } else {
+            // Post in reverse tag order: matching must honor tags.
+            let twenty = proc.recv(&world, Src::Rank(0), Tag::Value(20));
+            let ten = proc.recv(&world, Src::Rank(0), Tag::Value(10));
+            assert_eq!(twenty, b"twenty");
+            assert_eq!(ten, b"ten");
+        }
+    });
+}
+
+#[test]
+fn ssend_completes_only_after_match() {
+    // An Ssend must not complete before the receiver posts. We verify
+    // completion ordering via virtual time: the receiver delays its post
+    // by 1ms; the sender's ssend return time must be after that.
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2, 1), MpiConfig::optimized(4), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        if proc.rank() == 0 {
+            proc.ssend(&world, 1, 5, &[1, 2, 3]);
+            let t = vcmpi::sim::now();
+            assert!(t >= 1_000_000, "ssend returned at {t}ns, before receiver posted");
+        } else {
+            vcmpi::sim::advance(1_000_000); // compute before posting
+            let got = proc.recv(&world, Src::Rank(0), Tag::Value(5));
+            assert_eq!(got, vec![1, 2, 3]);
+        }
+    });
+}
+
+#[test]
+fn isend_immediate_completion_for_small_messages() {
+    // Small standard-mode sends complete at injection: wait() must not
+    // require the receiver to have posted anything.
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2, 1), MpiConfig::optimized(4), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        if proc.rank() == 0 {
+            let reqs: Vec<_> = (0..10).map(|i| proc.isend(&world, 1, 9, &[i])).collect();
+            for r in &reqs {
+                assert!(matches!(r, vcmpi::mpi::Request::Lightweight { .. }));
+            }
+            proc.waitall(reqs);
+            // Tell the receiver it can start now.
+            proc.send(&world, 1, 99, &[]);
+        } else {
+            proc.recv(&world, Src::Rank(0), Tag::Value(99));
+            for i in 0..10u8 {
+                let got = proc.recv(&world, Src::Rank(0), Tag::Value(9));
+                assert_eq!(got, vec![i]);
+            }
+        }
+    });
+}
+
+#[test]
+fn multi_threaded_distinct_comms_exchange() {
+    // 4 threads per process, each pair on its own duplicated communicator
+    // (the paper's par_comm pattern). Thread 0 creates the communicators
+    // collectively; a per-process OnceLock hands them to the other threads.
+    use std::sync::{Arc, Mutex};
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2, 1), MpiConfig::optimized(8), 4);
+    let comms: Arc<Mutex<std::collections::HashMap<usize, Vec<vcmpi::mpi::Comm>>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let bars: Arc<Vec<vcmpi::platform::PBarrier>> = Arc::new(
+        (0..2).map(|_| vcmpi::platform::PBarrier::new(vcmpi::platform::Backend::Sim, 4)).collect(),
+    );
+    let c2 = comms.clone();
+    run_ok(spec, move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let v: Vec<_> = (0..4).map(|_| proc.comm_dup(&world)).collect();
+            c2.lock().unwrap().insert(proc.rank(), v);
+        }
+        bars[proc.rank()].wait();
+        let comm = c2.lock().unwrap().get(&proc.rank()).unwrap()[t].clone();
+        let peer = 1 - proc.rank();
+        let msg = [t as u8; 16];
+        let sreq = proc.isend(&comm, peer, t as i32, &msg);
+        let rreq = proc.irecv(&comm, Src::Rank(peer), Tag::Value(t as i32));
+        let got = proc.wait(rreq).unwrap();
+        proc.wait(sreq);
+        assert_eq!(got, vec![t as u8; 16]);
+        bars[proc.rank()].wait();
+    });
+}
+
+#[test]
+fn native_backend_ping_pong() {
+    let mut spec = ClusterSpec::new(fabric(Interconnect::Ib, 2, 1), MpiConfig::optimized(4), 1);
+    spec.backend = vcmpi::platform::Backend::Native;
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        if proc.rank() == 0 {
+            proc.send(&world, 1, 7, b"native");
+            let got = proc.recv(&world, Src::Rank(1), Tag::Value(8));
+            assert_eq!(got, b"pong");
+        } else {
+            let got = proc.recv(&world, Src::Rank(0), Tag::Value(7));
+            assert_eq!(got, b"native");
+            proc.send(&world, 0, 8, b"pong");
+        }
+    });
+}
+
+#[test]
+fn mpi4_hints_spread_one_comm_and_stay_correct() {
+    // Paper §7: with mpi_assert_no_any_source + no_any_tag, tag-level
+    // parallelism within ONE communicator maps to multiple VCIs — and
+    // ordered delivery per (src, tag) stream is preserved.
+    let mut cfg = MpiConfig::optimized(8);
+    cfg.hints.no_any_source = true;
+    cfg.hints.no_any_tag = true;
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2, 1), cfg, 4);
+    run_ok(spec, |proc, t| {
+        let world = proc.comm_world(); // the ONE communicator
+        let peer = 1 - proc.rank();
+        for i in 0..40u32 {
+            let sreq = proc.isend(&world, peer, t as i32, &i.to_le_bytes());
+            let got = proc.recv(&world, Src::Rank(peer), Tag::Value(t as i32));
+            assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+            proc.wait(sreq);
+        }
+    });
+}
+
+#[test]
+fn mpi4_hints_make_wildcards_erroneous() {
+    let mut cfg = MpiConfig::optimized(4);
+    cfg.hints.no_any_source = true;
+    cfg.hints.no_any_tag = true;
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2, 1), cfg, 1);
+    let r = vcmpi::mpi::run_cluster(spec, |proc, _t| {
+        let world = proc.comm_world();
+        if proc.rank() == 0 {
+            // Erroneous: wildcard under the asserted hints.
+            let _ = proc.irecv(&world, Src::Any, Tag::Any);
+        }
+    });
+    assert!(
+        matches!(r.outcome, SimOutcome::Panicked(ref m) if m.contains("wildcard")),
+        "expected the wildcard to be rejected, got {:?}",
+        r.outcome
+    );
+}
+
+#[test]
+fn mpi4_hints_scale_a_single_communicator() {
+    // The §7 payoff: ser_comm (one communicator) scales once hints allow
+    // envelope spreading.
+    use vcmpi::bench::{message_rate, Mode, RateParams};
+    let run = |hinted: bool| {
+        let mut cfg = MpiConfig::optimized(9);
+        cfg.hints.no_any_source = hinted;
+        cfg.hints.no_any_tag = hinted;
+        message_rate(RateParams {
+            mode: Mode::SerCommVcis,
+            threads: 8,
+            msgs_per_core: 512,
+            cfg_override: Some(cfg),
+            ..Default::default()
+        })
+    };
+    let off = run(false);
+    let on = run(true);
+    assert!(
+        on > 4.0 * off,
+        "hints should unlock single-comm scaling: on={on:.0} off={off:.0}"
+    );
+}

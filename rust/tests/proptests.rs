@@ -1,0 +1,257 @@
+//! Hand-rolled property tests (no proptest crate offline): randomized
+//! scenario generation with a deterministic PRNG + fixed seeds, asserting
+//! the library's core invariants across hundreds of generated cases.
+
+use vcmpi::fabric::{FabricConfig, Interconnect};
+use vcmpi::mpi::matching::{MatchingState, PostedRecv, SenderInfo, Src, Tag, UnexpectedMsg};
+use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig};
+use vcmpi::sim::SimOutcome;
+use vcmpi::util::SplitMix64;
+
+// ---------------------------------------------------------------------
+// Matching-engine invariants (pure data structure: thousands of cases)
+// ---------------------------------------------------------------------
+
+fn umsg(comm: u64, src: usize, tag: i32, seq: u64) -> UnexpectedMsg {
+    UnexpectedMsg {
+        comm_id: comm,
+        src_rank: src,
+        tag,
+        seq,
+        sender: SenderInfo { src_proc: src, src_ctx: 0, send_handle: seq },
+        arrival: vcmpi::mpi::matching::Arrival::Eager { data: vec![], needs_ack: false },
+    }
+}
+
+/// Invariant: every arrival is matched at most once, matches always agree
+/// on (comm, src-pattern, tag-pattern), and per-stream consumption is FIFO.
+#[test]
+fn prop_matching_agrees_and_preserves_fifo() {
+    for seed in 0..60u64 {
+        let mut rng = SplitMix64::new(seed);
+        let mut m = MatchingState::new();
+        let mut next_seq = std::collections::HashMap::<(u64, usize), u64>::new();
+        let mut last_matched_seq = std::collections::HashMap::<(u64, usize, i32), u64>::new();
+        for step in 0..400 {
+            if rng.gen_bool(0.5) {
+                // Arrival with a random envelope.
+                let comm = rng.gen_range(3);
+                let src = rng.gen_usize(3);
+                let tag = rng.gen_range(3) as i32;
+                let seq = {
+                    let e = next_seq.entry((comm, src)).or_insert(1);
+                    let s = *e;
+                    *e += 1;
+                    s
+                };
+                if let Some((p, got)) = m.on_arrival(umsg(comm, src, tag, seq)) {
+                    assert_eq!(got.comm_id, comm);
+                    assert!(matches!(p.src, Src::Any) || p.src == Src::Rank(src));
+                    assert!(matches!(p.tag, Tag::Any) || p.tag == Tag::Value(tag));
+                }
+            } else {
+                // Post with random wildcards.
+                let comm = rng.gen_range(3);
+                let src =
+                    if rng.gen_bool(0.3) { Src::Any } else { Src::Rank(rng.gen_usize(3)) };
+                let tag =
+                    if rng.gen_bool(0.3) { Tag::Any } else { Tag::Value(rng.gen_range(3) as i32) };
+                let posted = PostedRecv { comm_id: comm, src, tag, req: step };
+                if let Some(got) = m.on_post(posted) {
+                    assert_eq!(got.comm_id, comm);
+                    assert!(matches!(src, Src::Any) || src == Src::Rank(got.src_rank));
+                    assert!(matches!(tag, Tag::Any) || tag == Tag::Value(got.tag));
+                    // FIFO per exact (comm, src, tag) stream.
+                    let key = (got.comm_id, got.src_rank, got.tag);
+                    let last = last_matched_seq.entry(key).or_insert(0);
+                    assert!(
+                        got.seq > *last,
+                        "seed {seed}: stream {key:?} regressed {} -> {}",
+                        last,
+                        got.seq
+                    );
+                    *last = got.seq;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end randomized traffic: all payloads delivered exactly once,
+// in FIFO order per stream, under every library configuration.
+// ---------------------------------------------------------------------
+
+fn random_traffic_case(seed: u64, cfg: MpiConfig, ic: Interconnect) {
+    let nprocs = 3;
+    let spec = ClusterSpec::new(
+        FabricConfig { interconnect: ic, nodes: nprocs, procs_per_node: 1, max_contexts_per_node: 64 },
+        cfg,
+        1,
+    );
+    let r = run_cluster(spec, move |proc, _t| {
+        let world = proc.comm_world();
+        let me = proc.rank();
+        let n = proc.nprocs();
+        let mut rng = SplitMix64::new(seed ^ (me as u64) << 8);
+        // Deterministic plan shared by all: who sends how many to whom.
+        // plan[i][j] = messages from i to j (derived from the seed only).
+        let mut plan = vec![vec![0usize; n]; n];
+        let mut prng = SplitMix64::new(seed);
+        for row in plan.iter_mut() {
+            for cell in row.iter_mut() {
+                *cell = prng.gen_usize(14);
+            }
+        }
+        // Sends: to each peer, a numbered stream (payload = index).
+        let mut sreqs = Vec::new();
+        for dst in 0..n {
+            if dst == me {
+                continue;
+            }
+            for k in 0..plan[me][dst] {
+                let size = 1 + rng.gen_usize(2000); // mixes immediate + eager
+                let mut data = vec![0u8; size];
+                data[0] = k as u8;
+                sreqs.push(proc.isend(&world, dst, 5, &data));
+            }
+        }
+        // Receives: expect plan[src][me] messages from each src, in order.
+        for src in 0..n {
+            if src == me {
+                continue;
+            }
+            for k in 0..plan[src][me] {
+                let got = proc.recv(
+                    &world,
+                    vcmpi::mpi::Src::Rank(src),
+                    vcmpi::mpi::Tag::Value(5),
+                );
+                assert_eq!(got[0], k as u8, "stream {src}->{me} out of order");
+            }
+        }
+        proc.waitall(sreqs);
+        proc.barrier(&world);
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed, "seed {seed}");
+}
+
+#[test]
+fn prop_random_traffic_delivered_in_order_optimized() {
+    for seed in 0..12 {
+        random_traffic_case(seed, MpiConfig::optimized(6), Interconnect::Opa);
+    }
+}
+
+#[test]
+fn prop_random_traffic_delivered_in_order_original() {
+    for seed in 0..6 {
+        random_traffic_case(seed, MpiConfig::original(), Interconnect::Ib);
+    }
+}
+
+#[test]
+fn prop_random_traffic_all_policies() {
+    use vcmpi::mpi::VciPolicy;
+    for policy in [VciPolicy::FirstComePool, VciPolicy::RoundRobin, VciPolicy::Hashed] {
+        let mut cfg = MpiConfig::optimized(4);
+        cfg.vci_policy = policy;
+        random_traffic_case(99, cfg, Interconnect::Opa);
+    }
+}
+
+// ---------------------------------------------------------------------
+// RMA: random put/get programs leave window memory in the expected state.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_rma_random_puts_land_exactly() {
+    for seed in 0..8u64 {
+        for ic in [Interconnect::Ib, Interconnect::Opa] {
+            let spec = ClusterSpec::new(
+                FabricConfig {
+                    interconnect: ic,
+                    nodes: 2,
+                    procs_per_node: 1,
+                    max_contexts_per_node: 64,
+                },
+                MpiConfig::optimized(4),
+                1,
+            );
+            let r = run_cluster(spec, move |proc, _t| {
+                let world = proc.comm_world();
+                let win = proc.win_create(&world, 4096);
+                if proc.rank() == 0 {
+                    let mut rng = SplitMix64::new(seed);
+                    // Non-overlapping slots: slot i gets value derived from i.
+                    let mut writes = Vec::new();
+                    for slot in 0..16 {
+                        if rng.gen_bool(0.7) {
+                            let val = (seed as u8) ^ (slot as u8) | 0x40;
+                            proc.put(&win, 1, slot * 64, &[val; 64]);
+                            writes.push((slot, val));
+                        }
+                    }
+                    proc.win_flush(&win);
+                    let payload: Vec<u8> =
+                        writes.iter().flat_map(|&(s, v)| [s as u8, v]).collect();
+                    proc.send(&world, 1, 9, &payload);
+                } else {
+                    let manifest = proc.recv(&world, vcmpi::mpi::Src::Rank(0), vcmpi::mpi::Tag::Value(9));
+                    for pair in manifest.chunks_exact(2) {
+                        let (slot, val) = (pair[0] as usize, pair[1]);
+                        assert_eq!(
+                            win.read_local(slot * 64, 64),
+                            vec![val; 64],
+                            "seed {seed} {ic:?} slot {slot}"
+                        );
+                    }
+                }
+                proc.barrier(&world);
+                proc.win_free(&world, win);
+            });
+            assert_eq!(r.outcome, SimOutcome::Completed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Determinism: identical seeds -> bit-identical virtual end times.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_simulation_is_deterministic() {
+    let run = || {
+        let spec = ClusterSpec::new(
+            FabricConfig {
+                interconnect: Interconnect::Opa,
+                nodes: 2,
+                procs_per_node: 1,
+                max_contexts_per_node: 64,
+            },
+            MpiConfig::optimized(8),
+            4,
+        );
+        let r = run_cluster(spec, |proc, t| {
+            let world = proc.comm_world();
+            let peer = 1 - proc.rank();
+            for i in 0..40 {
+                let sreq = proc.isend(&world, peer, t as i32, &[i; 32]);
+                let rreq = proc.irecv(
+                    &world,
+                    vcmpi::mpi::Src::Rank(peer),
+                    vcmpi::mpi::Tag::Value(t as i32),
+                );
+                proc.wait(rreq);
+                proc.wait(sreq);
+            }
+        });
+        assert_eq!(r.outcome, SimOutcome::Completed);
+        r.time_ns
+    };
+    let a = run();
+    let b = run();
+    let c = run();
+    assert_eq!(a, b);
+    assert_eq!(b, c);
+}

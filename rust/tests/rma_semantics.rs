@@ -1,0 +1,198 @@
+//! RMA semantics across both interconnect personalities: put/get/
+//! accumulate/fetch-and-op correctness, flush completion, atomicity.
+
+use std::sync::Arc;
+
+use vcmpi::fabric::{AccOp, FabricConfig, Interconnect};
+use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, MpiProc};
+use vcmpi::sim::SimOutcome;
+
+fn fabric(interconnect: Interconnect, nodes: usize) -> FabricConfig {
+    FabricConfig { interconnect, nodes, procs_per_node: 1, max_contexts_per_node: 64 }
+}
+
+fn run_ok(spec: ClusterSpec, body: impl Fn(&Arc<MpiProc>, usize) + Send + Sync + 'static) {
+    let r = run_cluster(spec, body);
+    assert_eq!(r.outcome, SimOutcome::Completed, "cluster run failed: {:?}", r.outcome);
+}
+
+#[test]
+fn put_then_flush_is_visible_both_fabrics() {
+    for ic in [Interconnect::Ib, Interconnect::Opa] {
+        let spec = ClusterSpec::new(fabric(ic, 2), MpiConfig::optimized(4), 1);
+        run_ok(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let win = proc.win_create(&world, 256);
+            if proc.rank() == 0 {
+                proc.put(&win, 1, 16, &[7u8; 32]);
+                proc.win_flush(&win);
+                proc.send(&world, 1, 1, &[]); // "put is flushed"
+            } else {
+                proc.recv(&world, vcmpi::mpi::Src::Rank(0), vcmpi::mpi::Tag::Value(1));
+                assert_eq!(win.read_local(16, 32), vec![7u8; 32], "{ic:?}");
+            }
+            proc.win_free(&world, win);
+        });
+    }
+}
+
+#[test]
+fn get_round_trip_both_fabrics() {
+    for ic in [Interconnect::Ib, Interconnect::Opa] {
+        let spec = ClusterSpec::new(fabric(ic, 2), MpiConfig::optimized(4), 1);
+        run_ok(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let win = proc.win_create(&world, 128);
+            if proc.rank() == 1 {
+                win.write_local(0, &[0xEE; 64]);
+            }
+            proc.barrier(&world);
+            if proc.rank() == 0 {
+                let h = proc.get(&win, 1, 0, 64);
+                proc.win_flush(&win);
+                assert_eq!(proc.get_data(&win, h), vec![0xEE; 64], "{ic:?}");
+            }
+            proc.barrier(&world);
+            proc.win_free(&world, win);
+        });
+    }
+}
+
+#[test]
+fn accumulate_sums_from_many_ranks() {
+    // 4 ranks each accumulate 1.5 into the same f64 cell on rank 0, twice.
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 4), MpiConfig::optimized(4), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let win = proc.win_create(&world, 64);
+        for _ in 0..2 {
+            proc.accumulate(&win, 0, 8, &1.5f64.to_le_bytes(), AccOp::SumF64);
+        }
+        proc.win_flush(&win);
+        proc.barrier(&world);
+        if proc.rank() == 0 {
+            let bytes = win.read_local(8, 8);
+            let v = f64::from_le_bytes(bytes.try_into().unwrap());
+            assert!((v - 12.0).abs() < 1e-12, "4 ranks x 2 x 1.5 = 12, got {v}");
+        }
+        proc.win_free(&world, win);
+    });
+}
+
+#[test]
+fn accumulate_program_order_preserved_by_default() {
+    // Two ordered Replace accumulates from the same origin to the same
+    // location: the later one must win (default accumulate_ordering).
+    for ic in [Interconnect::Ib, Interconnect::Opa] {
+        let spec = ClusterSpec::new(fabric(ic, 2), MpiConfig::optimized(4), 1);
+        run_ok(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let win = proc.win_create(&world, 64);
+            if proc.rank() == 0 {
+                proc.accumulate(&win, 1, 0, &[1u8; 8], AccOp::Replace);
+                proc.accumulate(&win, 1, 0, &[2u8; 8], AccOp::Replace);
+                proc.win_flush(&win);
+                proc.send(&world, 1, 1, &[]);
+            } else {
+                proc.recv(&world, vcmpi::mpi::Src::Rank(0), vcmpi::mpi::Tag::Value(1));
+                assert_eq!(win.read_local(0, 8), vec![2u8; 8], "{ic:?}: program order");
+            }
+            proc.win_free(&world, win);
+        });
+    }
+}
+
+#[test]
+fn fetch_and_op_is_an_atomic_counter() {
+    // All 4 ranks hammer a shared u64 counter with fetch-and-add(1) x 8:
+    // every rank must see a unique sequence of values, and the final count
+    // must be 32.
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 4), MpiConfig::optimized(4), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let win = proc.win_create(&world, 64);
+        let mut fetched = Vec::new();
+        for _ in 0..8 {
+            let prev = proc.fetch_and_op(&win, 0, 0, &1u64.to_le_bytes(), AccOp::SumU64);
+            fetched.push(u64::from_le_bytes(prev.try_into().unwrap()));
+        }
+        // Monotonically increasing per rank (no duplicated grants).
+        for w in fetched.windows(2) {
+            assert!(w[1] > w[0], "fetch_and_op must grant increasing values");
+        }
+        proc.barrier(&world);
+        if proc.rank() == 0 {
+            let v = u64::from_le_bytes(win.read_local(0, 8).try_into().unwrap());
+            assert_eq!(v, 32);
+        }
+        proc.win_free(&world, win);
+    });
+}
+
+#[test]
+fn multiple_windows_are_independent_streams() {
+    // Threads on distinct windows run concurrent RMA without interference.
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2), MpiConfig::optimized(8), 4);
+    use std::sync::Mutex;
+    let wins: Arc<Mutex<std::collections::HashMap<usize, Vec<Arc<vcmpi::mpi::Window>>>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let bars: Arc<Vec<vcmpi::platform::PBarrier>> = Arc::new(
+        (0..2).map(|_| vcmpi::platform::PBarrier::new(vcmpi::platform::Backend::Sim, 4)).collect(),
+    );
+    let w2 = wins.clone();
+    run_ok(spec, move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let v: Vec<_> = (0..4).map(|_| proc.win_create(&world, 1024)).collect();
+            w2.lock().unwrap().insert(proc.rank(), v);
+        }
+        bars[proc.rank()].wait();
+        let win = w2.lock().unwrap().get(&proc.rank()).unwrap()[t].clone();
+        let peer = 1 - proc.rank();
+        let pattern = vec![t as u8 + 1; 128];
+        proc.put(&win, peer, t * 128, &pattern);
+        proc.win_flush(&win);
+        bars[proc.rank()].wait();
+        // Peer wrote into OUR window at the same offset with their pattern.
+        assert_eq!(win.read_local(t * 128, 128), vec![t as u8 + 1; 128]);
+        bars[proc.rank()].wait();
+    });
+}
+
+#[test]
+fn opa_put_needs_target_progress_ib_does_not() {
+    // Measure flush latency on both fabrics while the target is busy
+    // (no polling for 2ms). IB's hardware RMA should flush in ~wire time;
+    // OPA's software RMA must wait for the target's service thread.
+    let mut times = std::collections::HashMap::new();
+    for ic in [Interconnect::Ib, Interconnect::Opa] {
+        let spec = ClusterSpec::new(fabric(ic, 2), MpiConfig::optimized(4), 1);
+        let r = run_cluster(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let win = proc.win_create(&world, 4096);
+            if proc.rank() == 0 {
+                let t0 = vcmpi::sim::now();
+                proc.put(&win, 1, 0, &[1u8; 2048]);
+                proc.win_flush(&win);
+                vcmpi::mpi::world::record("flush_ns", (vcmpi::sim::now() - t0) as f64);
+            } else {
+                // Busy target: no MPI calls for 2ms.
+                vcmpi::sim::advance(2_000_000);
+            }
+            proc.barrier(&world);
+            proc.win_free(&world, win);
+        });
+        assert_eq!(r.outcome, SimOutcome::Completed);
+        times.insert(ic, r.measurements["flush_ns"]);
+    }
+    let ib = times[&Interconnect::Ib];
+    let opa = times[&Interconnect::Opa];
+    assert!(
+        ib < 100_000.0,
+        "IB hardware put should flush in ~wire time, took {ib}ns"
+    );
+    assert!(
+        opa > 5.0 * ib,
+        "OPA software put should be much slower than IB with a busy target: opa={opa} ib={ib}"
+    );
+}

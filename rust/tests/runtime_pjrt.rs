@@ -1,0 +1,115 @@
+//! PJRT runtime integration: load the real artifacts, execute, and check
+//! numerics against closed-form expectations. Requires `make artifacts`.
+
+use vcmpi::runtime::{Runtime, Tensor};
+
+fn runtime() -> Runtime {
+    Runtime::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_all_graphs() {
+    let rt = runtime();
+    for name in [
+        "train_grad_step",
+        "train_sgd_step",
+        "train_loss",
+        "bspmm_tile",
+        "stencil_block",
+        "ebms_band",
+    ] {
+        assert!(rt.manifest.entry(name).is_some(), "{name} missing");
+    }
+    assert!(rt.manifest.config("param_count").unwrap() > 1_000_000);
+}
+
+#[test]
+fn sgd_step_is_axpy() {
+    let rt = runtime();
+    let exe = rt.load("train_sgd_step").unwrap();
+    let p = rt.manifest.config("param_count").unwrap() as usize;
+    let params = Tensor::f32(&[p], vec![1.0; p]);
+    let grads = Tensor::f32(&[p], vec![0.5; p]);
+    let lr = Tensor::scalar_f32(0.2);
+    let out = exe.run(&[params, grads, lr]).unwrap();
+    let new = out[0].as_f32();
+    assert!(new.iter().all(|&x| (x - 0.9).abs() < 1e-6), "1.0 - 0.2*0.5 = 0.9");
+}
+
+#[test]
+fn bspmm_tile_is_mac() {
+    let rt = runtime();
+    let exe = rt.load("bspmm_tile").unwrap();
+    // A = I, B = 2s, C = 1s  =>  C + A@B = 1 + 2 = 3 everywhere.
+    let mut a = vec![0.0f32; 128 * 128];
+    for i in 0..128 {
+        a[i * 128 + i] = 1.0;
+    }
+    let b = Tensor::f32(&[128, 128], vec![2.0; 128 * 128]);
+    let c = Tensor::f32(&[128, 128], vec![1.0; 128 * 128]);
+    let out = exe.run(&[Tensor::f32(&[128, 128], a), b, c]).unwrap();
+    assert!(out[0].as_f32().iter().all(|&x| (x - 3.0).abs() < 1e-5));
+}
+
+#[test]
+fn stencil_block_matches_formula() {
+    let rt = runtime();
+    let exe = rt.load("stencil_block").unwrap();
+    // u(i,j) = i: neighbors avg = i, update = i - i = ... N+S+E+W = (i-1)+(i+1)+i+i = 4i
+    // => 0.25*4i - i = 0.
+    let mut u = vec![0.0f32; 66 * 66];
+    for i in 0..66 {
+        for j in 0..66 {
+            u[i * 66 + j] = i as f32;
+        }
+    }
+    let out = exe.run(&[Tensor::f32(&[66, 66], u)]).unwrap();
+    assert!(out[0].as_f32().iter().all(|&x| x.abs() < 1e-5));
+}
+
+#[test]
+fn ebms_band_attenuates() {
+    let rt = runtime();
+    let exe = rt.load("ebms_band").unwrap();
+    let xs = Tensor::f32(&[4096], vec![1.0; 4096]);
+    let idx = Tensor::i32(&[2048], (0..2048).collect());
+    let dist = Tensor::f32(&[2048], vec![0.0; 2048]);
+    let out = exe.run(&[xs, idx, dist]).unwrap();
+    assert!(out[0].as_f32().iter().all(|&x| (x - 1.0).abs() < 1e-6), "exp(0) = 1");
+}
+
+#[test]
+fn grad_step_loss_starts_near_uniform() {
+    let rt = runtime();
+    let exe = rt.load("train_grad_step").unwrap();
+    let p = rt.manifest.config("param_count").unwrap() as usize;
+    let b = rt.manifest.config("batch").unwrap() as usize;
+    let t = rt.manifest.config("seq").unwrap() as usize;
+    let vocab = rt.manifest.config("vocab").unwrap() as i32;
+    // Small deterministic init.
+    let params: Vec<f32> =
+        (0..p).map(|i| ((i as f32 * 0.6180339887).fract() - 0.5) * 0.04).collect();
+    let tokens: Vec<i32> = (0..b * t).map(|i| (i as i32 * 7 + 3) % vocab).collect();
+    let out = exe
+        .run(&[Tensor::f32(&[p], params), Tensor::i32(&[b, t], tokens)])
+        .unwrap();
+    let loss = out[0].as_f32()[0];
+    let uniform = (vocab as f32).ln();
+    assert!(
+        (loss - uniform).abs() < 1.0,
+        "fresh-model loss {loss} should be near ln(V) = {uniform}"
+    );
+    let grads = out[1].as_f32();
+    assert_eq!(grads.len(), p);
+    assert!(grads.iter().all(|g| g.is_finite()));
+    assert!(grads.iter().any(|&g| g.abs() > 1e-8), "gradients must be nonzero");
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let rt = runtime();
+    let exe = rt.load("stencil_block").unwrap();
+    let bad = Tensor::f32(&[10, 10], vec![0.0; 100]);
+    assert!(exe.run(&[bad]).is_err());
+}
