@@ -20,6 +20,21 @@ fn main() {
             println!("{:<24} {:>8} {:>14.3}", mode.label(), threads, r / 1e6);
         }
     }
+    println!("\n== message_rate: 8-byte Isend, ONE hot communicator ==");
+    println!("(striped = per-message VCI striping + receiver-side seq reordering)");
+    println!("{:<24} {:>8} {:>14}", "mode", "threads", "Mmsg/s");
+    for mode in [Mode::SerCommVcis, Mode::SerCommStriped, Mode::ParCommVcis, Mode::Endpoints] {
+        for threads in [4usize, 16] {
+            let r = message_rate(RateParams {
+                mode,
+                threads,
+                msgs_per_core: msgs,
+                ..Default::default()
+            });
+            println!("{:<24} {:>8} {:>14.3}", mode.label(), threads, r / 1e6);
+        }
+    }
+
     println!("\n== message_rate: 8-byte Put, 16 cores ==");
     println!("{:<24} {:>10} {:>14}", "mode", "fabric", "Mmsg/s");
     for ic in [Interconnect::Opa, Interconnect::Ib] {

@@ -61,6 +61,27 @@ impl HwContext {
         }
     }
 
+    /// Like [`HwContext::poll`], but pops the head message only when it
+    /// has arrived AND satisfies `pred`. Used by the striped progress
+    /// path to drain a contiguous run of re-routable messages in one
+    /// sweep; a failed predicate charges nothing (the CQ entry was
+    /// already read by the preceding poll of this sweep).
+    pub fn poll_if(
+        &self,
+        costs: &CostModel,
+        pred: impl FnOnce(&WireMsg) -> bool,
+    ) -> Option<WireMsg> {
+        let mut q = self.rx.lock().unwrap_or_else(|e| e.into_inner());
+        let now = pnow(self.backend);
+        match q.front() {
+            Some(m) if m.arrival <= now && pred(m) => {
+                padvance(self.backend, costs.nic_rx_deliver);
+                q.pop_front()
+            }
+            _ => None,
+        }
+    }
+
     /// Number of queued messages (arrived or in flight). Test/debug aid.
     pub fn queued(&self) -> usize {
         self.rx.lock().unwrap_or_else(|e| e.into_inner()).len()

@@ -286,9 +286,10 @@ impl ProcFabric {
         w.retain(|(id, _)| *id != win);
     }
 
-    /// Resolve a (proc, window) pair to its memory — the hardware
-    /// address-translation path used by IB's hardware RMA.
-    pub fn window(&self, proc: ProcId, win: WinId) -> Arc<WindowMem> {
+    /// Like [`ProcFabric::window`], but `None` for an unknown window —
+    /// used by wire-message handlers, where a malformed window id must be
+    /// droppable rather than a panic.
+    pub fn find_window(&self, proc: ProcId, win: WinId) -> Option<Arc<WindowMem>> {
         self.net.procs[proc]
             .windows
             .lock()
@@ -296,6 +297,12 @@ impl ProcFabric {
             .iter()
             .find(|(id, _)| *id == win)
             .map(|(_, m)| m.clone())
+    }
+
+    /// Resolve a (proc, window) pair to its memory — the hardware
+    /// address-translation path used by IB's hardware RMA.
+    pub fn window(&self, proc: ProcId, win: WinId) -> Arc<WindowMem> {
+        self.find_window(proc, win)
             .unwrap_or_else(|| panic!("window {win} of proc {proc} not registered"))
     }
 }

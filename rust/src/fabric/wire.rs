@@ -53,9 +53,21 @@ pub enum Payload {
         src_rank: usize,
         dst_rank: usize,
         tag: i32,
-        /// Sender-side FIFO sequence number on this (comm, vci) stream —
-        /// preserves the nonovertaking order.
+        /// Sender-side FIFO sequence number. Without striping this counts
+        /// per (comm, vci) stream and merely documents injection order
+        /// (FIFO queues preserve it). With VCI striping it counts the
+        /// single logical (comm, destination) stream across ALL VCIs, and
+        /// the receiver's reorder stage admits messages to matching
+        /// strictly in this order (nonovertaking despite independent
+        /// per-VCI delivery).
         seq: u64,
+        /// `Some(home)` marks a striped envelope (Eager/Rts): `home` is
+        /// the communicator's assigned VCI, whose matching engine on the
+        /// receiver owns the stream's reorder buffer and queues (reduced
+        /// modulo the receiver's pool size). `None` for unstriped traffic
+        /// and for out-of-stripe control steps (CTS/DATA/acks), which
+        /// bypass the reorder stage.
+        stripe_home: Option<usize>,
         protocol: P2pProtocol,
         /// True for synchronous-mode sends (MPI_Ssend): an explicit ack is
         /// returned on match.

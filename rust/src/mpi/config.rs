@@ -26,6 +26,31 @@ pub enum VciPolicy {
     Hashed,
 }
 
+/// Per-message VCI striping of a single communicator's two-sided traffic
+/// (the step beyond §7's envelope hints: no wildcard assertions needed).
+///
+/// With striping on, `isend` picks a (possibly different) VCI for every
+/// message and targets the mirror hardware context on the receiver; MPI's
+/// nonovertaking rule is restored by the receiver-side reorder stage in
+/// [`super::matching::MatchingState`], which admits each `(comm, source)`
+/// stream to matching strictly in sender-sequence order. All processes of
+/// a job must agree on this setting (it changes the wire contract), just
+/// like `num_vcis`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VciStriping {
+    /// No striping: a communicator funnels through its one assigned VCI
+    /// (the paper's baseline behavior).
+    Off,
+    /// Spread messages round-robin over the pool's non-fallback VCIs
+    /// (VCI 0 is the shared lane pool-exhausted communicators funnel
+    /// through, so it is excluded — exactly like the §7 hinted spread).
+    /// A process-wide cursor, so concurrent senders naturally fan out.
+    RoundRobin,
+    /// Hash of the message identity (comm, destination, stream sequence):
+    /// stateless and deterministic per message. Same fallback exclusion.
+    HashedByRequest,
+}
+
 /// Full configuration of one vcmpi process.
 #[derive(Clone, Debug)]
 pub struct MpiConfig {
@@ -56,6 +81,9 @@ pub struct MpiConfig {
     /// serializes execution.
     pub unsafe_no_thread_safety: bool,
     pub vci_policy: VciPolicy,
+    /// Per-message VCI striping with receiver-side seq reordering: lets a
+    /// single hot communicator use the whole pool. See [`VciStriping`].
+    pub vci_striping: VciStriping,
     /// Eagerly claimed hints (MPI-4.0 info-style, §7): see [`Hints`].
     pub hints: Hints,
 }
@@ -88,6 +116,7 @@ impl MpiConfig {
             cache_aligned_vcis: false,
             unsafe_no_thread_safety: false,
             vci_policy: VciPolicy::FirstComePool,
+            vci_striping: VciStriping::Off,
             hints: Hints::default(),
         }
     }
@@ -109,8 +138,16 @@ impl MpiConfig {
             cache_aligned_vcis: true,
             unsafe_no_thread_safety: false,
             vci_policy: VciPolicy::FirstComePool,
+            vci_striping: VciStriping::Off,
             hints: Hints::default(),
         }
+    }
+
+    /// The optimized library with per-message VCI striping on: one hot
+    /// communicator's sends fan out across the whole pool and the receiver
+    /// restores nonovertaking order per stream (round-robin selection).
+    pub fn striped(num_vcis: usize) -> Self {
+        MpiConfig { vci_striping: VciStriping::RoundRobin, ..Self::optimized(num_vcis) }
     }
 
     /// MPI-everywhere personality: a single-threaded process needs no
@@ -126,6 +163,7 @@ impl MpiConfig {
             cache_aligned_vcis: true,
             unsafe_no_thread_safety: true, // no threads -> no locks, like a real rank-per-core build
             vci_policy: VciPolicy::FirstComePool,
+            vci_striping: VciStriping::Off,
             hints: Hints::default(),
         }
     }
@@ -151,5 +189,16 @@ mod tests {
         assert_eq!(opt.cs_mode, CsMode::Fg);
         assert!(opt.per_vci_req_cache && opt.per_vci_progress && opt.cache_aligned_vcis);
         assert!(MpiConfig::everywhere().unsafe_no_thread_safety);
+    }
+
+    #[test]
+    fn striping_is_off_everywhere_except_the_striped_preset() {
+        assert_eq!(MpiConfig::original().vci_striping, VciStriping::Off);
+        assert_eq!(MpiConfig::optimized(8).vci_striping, VciStriping::Off);
+        assert_eq!(MpiConfig::everywhere().vci_striping, VciStriping::Off);
+        let s = MpiConfig::striped(8);
+        assert_eq!(s.vci_striping, VciStriping::RoundRobin);
+        assert_eq!(s.num_vcis, 8);
+        assert_eq!(s.cs_mode, CsMode::Fg, "striping rides on the optimized config");
     }
 }

@@ -2,11 +2,33 @@
 //! queues with MPI's matching rules (<communicator, rank, tag> with
 //! MPI_ANY_SOURCE / MPI_ANY_TAG wildcards) and nonovertaking order.
 //!
-//! One `MatchingState` lives inside each VCI: all traffic of the
-//! communicators mapped to that VCI funnels through it, which is precisely
-//! how the standard's ordering constraints are preserved (paper §2.1).
+//! One `MatchingState` lives inside each VCI. Without striping, all
+//! traffic of the communicators mapped to that VCI funnels through it,
+//! which is precisely how the standard's ordering constraints are
+//! preserved (paper §2.1).
+//!
+//! # Receiver-side reorder stage (VCI striping)
+//!
+//! With [`crate::mpi::VciStriping`] enabled, one communicator's messages
+//! fan out across many VCIs and therefore across *independent* delivery
+//! queues — the network no longer hands them to the matching engine in
+//! send order. Correctness moves here: every striped envelope carries the
+//! sender's per-`(comm, destination)` stream sequence, and
+//! [`MatchingState::on_striped_arrival`] admits a `(comm_id, src_rank)`
+//! stream to matching strictly in that order. Arrivals ahead of the next
+//! expected seq park in a per-stream reorder buffer; an in-order arrival
+//! is admitted and then drains any contiguous run of parked successors.
+//! Duplicate sequences (already admitted or already parked — malformed or
+//! replayed traffic) are dropped with a counted diagnostic rather than
+//! corrupting the stream. Out-of-stripe control traffic (CTS / DATA /
+//! acks / RMA active messages) never enters this stage.
+//!
+//! The stage guarantees exactly the ordering MPI demands and no more:
+//! admission order per stream equals send order, so the unexpected queue
+//! and posted-queue scans below see striped traffic exactly as if it had
+//! arrived on a single VCI.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use super::request::ReqId;
 
@@ -62,11 +84,31 @@ pub struct UnexpectedMsg {
     pub arrival: Arrival,
 }
 
+/// Per-stream sequencing state for the striped-traffic reorder stage.
+struct StreamOrder {
+    /// Next sender sequence number to admit (sender counters start at 1).
+    next_seq: u64,
+    /// Ahead-of-order arrivals parked until the gap fills, keyed by seq.
+    parked: BTreeMap<u64, UnexpectedMsg>,
+}
+
+impl StreamOrder {
+    fn new() -> Self {
+        StreamOrder { next_seq: 1, parked: BTreeMap::new() }
+    }
+}
+
 /// Matching queues for one VCI.
 #[derive(Default)]
 pub struct MatchingState {
     posted: VecDeque<PostedRecv>,
     unexpected: VecDeque<UnexpectedMsg>,
+    /// Reorder stage: one sequencing record per striped (comm_id, src_rank)
+    /// stream homed on this VCI.
+    streams: HashMap<(u64, usize), StreamOrder>,
+    /// Striped arrivals dropped for carrying an already-admitted or
+    /// already-parked sequence number (duplicate / malformed traffic).
+    dup_seq_drops: u64,
 }
 
 fn envelope_matches(p: &PostedRecv, comm_id: u64, src_rank: usize, tag: i32) -> bool {
@@ -128,12 +170,64 @@ impl MatchingState {
         }
     }
 
+    /// A *striped* envelope arrived: run the reorder stage, then hand every
+    /// newly admissible message to [`MatchingState::on_arrival`]. Returns
+    /// the (posted, message) pairs that matched — possibly several, because
+    /// an in-order arrival can unpark a contiguous run of successors.
+    ///
+    /// Ordering contract: for a given `(comm_id, src_rank)` stream,
+    /// admission happens exactly once per sequence number and strictly in
+    /// increasing sequence order. Arrivals ahead of the next expected seq
+    /// are parked; duplicates are dropped and counted (see
+    /// [`MatchingState::dup_seq_drops`]).
+    pub fn on_striped_arrival(
+        &mut self,
+        msg: UnexpectedMsg,
+    ) -> Vec<(PostedRecv, UnexpectedMsg)> {
+        let stream = self
+            .streams
+            .entry((msg.comm_id, msg.src_rank))
+            .or_insert_with(StreamOrder::new);
+        if msg.seq < stream.next_seq || stream.parked.contains_key(&msg.seq) {
+            self.dup_seq_drops += 1;
+            return Vec::new();
+        }
+        if msg.seq > stream.next_seq {
+            stream.parked.insert(msg.seq, msg);
+            return Vec::new();
+        }
+        // In order: admit it, then drain the contiguous parked run.
+        let mut ready = vec![msg];
+        stream.next_seq += 1;
+        while let Some(next) = stream.parked.remove(&stream.next_seq) {
+            ready.push(next);
+            stream.next_seq += 1;
+        }
+        ready.into_iter().filter_map(|m| self.on_arrival(m)).collect()
+    }
+
     pub fn posted_len(&self) -> usize {
         self.posted.len()
     }
 
     pub fn unexpected_len(&self) -> usize {
         self.unexpected.len()
+    }
+
+    /// Striped arrivals currently parked waiting for a sequence gap.
+    pub fn reorder_parked(&self) -> usize {
+        self.streams.values().map(|s| s.parked.len()).sum()
+    }
+
+    /// Duplicate-sequence striped arrivals dropped so far.
+    pub fn dup_seq_drops(&self) -> u64 {
+        self.dup_seq_drops
+    }
+
+    /// Next sequence number the reorder stage will admit for a stream
+    /// (1 if the stream has never been seen). Test/debug aid.
+    pub fn next_expected_seq(&self, comm_id: u64, src_rank: usize) -> u64 {
+        self.streams.get(&(comm_id, src_rank)).map_or(1, |s| s.next_seq)
     }
 }
 
@@ -220,5 +314,82 @@ mod tests {
 
     fn umsg_tag(comm: u64, src: usize, tag: i32, seq: u64) -> UnexpectedMsg {
         umsg(comm, src, tag, seq)
+    }
+
+    // ---- reorder stage (striped traffic) ----
+
+    #[test]
+    fn striped_in_order_arrivals_admit_immediately() {
+        let mut m = MatchingState::new();
+        m.on_post(precv(1, Src::Rank(2), Tag::Value(7), 10));
+        let hits = m.on_striped_arrival(umsg(1, 2, 7, 1));
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0.req, 10);
+        assert_eq!(m.next_expected_seq(1, 2), 2);
+        assert_eq!(m.reorder_parked(), 0);
+    }
+
+    #[test]
+    fn striped_gap_parks_until_filled_then_drains_the_run() {
+        let mut m = MatchingState::new();
+        // Seqs 3 and 2 arrive ahead of 1 (delivered via other VCIs first).
+        assert!(m.on_striped_arrival(umsg(1, 2, 7, 3)).is_empty());
+        assert!(m.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty());
+        assert_eq!(m.reorder_parked(), 2);
+        assert_eq!(m.unexpected_len(), 0, "nothing admitted to matching yet");
+        // The gap fills: all three admit at once, in seq order.
+        assert!(m.on_striped_arrival(umsg(1, 2, 7, 1)).is_empty(), "no recvs posted");
+        assert_eq!(m.reorder_parked(), 0);
+        assert_eq!(m.unexpected_len(), 3);
+        assert_eq!(m.next_expected_seq(1, 2), 4);
+        // Unexpected-queue order equals seq order (nonovertaking restored).
+        for want in 1..=3u64 {
+            let got = m.on_post(precv(1, Src::Rank(2), Tag::Value(7), 10)).unwrap();
+            assert_eq!(got.seq, want);
+        }
+    }
+
+    #[test]
+    fn striped_gap_drain_matches_already_posted_recvs() {
+        let mut m = MatchingState::new();
+        m.on_post(precv(1, Src::Rank(2), Tag::Value(7), 10));
+        m.on_post(precv(1, Src::Rank(2), Tag::Value(7), 11));
+        assert!(m.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty());
+        let hits = m.on_striped_arrival(umsg(1, 2, 7, 1));
+        assert_eq!(hits.len(), 2, "gap fill admits and matches the whole run");
+        assert_eq!(hits[0].1.seq, 1);
+        assert_eq!(hits[0].0.req, 10, "first posted gets the first-sequenced message");
+        assert_eq!(hits[1].1.seq, 2);
+        assert_eq!(hits[1].0.req, 11);
+    }
+
+    #[test]
+    fn striped_duplicate_seqs_are_dropped_and_counted() {
+        let mut m = MatchingState::new();
+        assert!(m.on_striped_arrival(umsg(1, 2, 7, 1)).is_empty());
+        assert_eq!(m.dup_seq_drops(), 0);
+        // Replay of an admitted seq.
+        assert!(m.on_striped_arrival(umsg(1, 2, 7, 1)).is_empty());
+        assert_eq!(m.dup_seq_drops(), 1);
+        assert_eq!(m.unexpected_len(), 1, "replay must not be admitted twice");
+        // Duplicate of a parked (not yet admitted) seq.
+        assert!(m.on_striped_arrival(umsg(1, 2, 7, 5)).is_empty());
+        assert!(m.on_striped_arrival(umsg(1, 2, 7, 5)).is_empty());
+        assert_eq!(m.dup_seq_drops(), 2);
+        assert_eq!(m.reorder_parked(), 1);
+    }
+
+    #[test]
+    fn striped_streams_are_independent() {
+        let mut m = MatchingState::new();
+        // Stream (1, src 2) is gapped; stream (1, src 3) and comm 2 flow.
+        assert!(m.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty());
+        assert!(m.on_striped_arrival(umsg(1, 3, 7, 1)).is_empty());
+        assert!(m.on_striped_arrival(umsg(2, 2, 7, 1)).is_empty());
+        assert_eq!(m.unexpected_len(), 2, "other streams admit despite the gap");
+        assert_eq!(m.reorder_parked(), 1);
+        assert_eq!(m.next_expected_seq(1, 2), 1);
+        assert_eq!(m.next_expected_seq(1, 3), 2);
+        assert_eq!(m.next_expected_seq(2, 2), 2);
     }
 }

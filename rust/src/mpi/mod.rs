@@ -32,7 +32,7 @@ pub mod vci;
 pub mod world;
 
 pub use comm::{Comm, CommKind};
-pub use config::{CsMode, Hints, MpiConfig, VciPolicy};
+pub use config::{CsMode, Hints, MpiConfig, VciPolicy, VciStriping};
 pub use matching::{Src, Tag};
 pub use proc::MpiProc;
 pub use request::Request;

@@ -56,6 +56,16 @@ impl MpiProc {
     pub(super) fn release_request(&self, id: ReqId, vci_idx: usize) {
         let guard = self.guard();
         if self.cfg.per_vci_req_cache {
+            if self.cfg.vci_striping != super::config::VciStriping::Off {
+                // Striping: the home VCI's lock is the hot serialization
+                // point, so don't pay a dedicated acquisition for the
+                // free — park it on the owner (one shared-list push,
+                // modeled as an atomic) and let the next locked entry
+                // absorb it, like the deferred lightweight release.
+                padvance(self.backend, self.costs.atomic_rmw + self.costs.request_cache_op);
+                self.vcis().get(vci_idx).defer_request_free(id);
+                return;
+            }
             // Return to the owning VCI's cache under the mode's guard
             // discipline (VCI lock in FG; the big lock / nothing in
             // Global / no-thread-safety modes).
@@ -80,12 +90,16 @@ impl MpiProc {
         }
     }
 
-    fn lightweight_release(&self) {
-        if !self.cfg.per_vci_lightweight {
+    fn lightweight_release(&self, vci_idx: usize) {
+        if self.cfg.per_vci_lightweight {
+            // Deferred decrement: MPI_Wait on a lightweight request takes
+            // zero locks (paper Table 1). The release parks on the owning
+            // VCI and is reconciled by its next locked operation; balance
+            // is asserted at finalize.
+            self.vcis().get(vci_idx).defer_lightweight_release();
+        } else {
             self.slab.global_lightweight_refs.fetch_sub(1, self.charged_atomics());
         }
-        // Per-VCI lightweight: decrement is deferred to the next VCI-locked
-        // operation; MPI_Wait on it takes zero locks (paper Table 1).
     }
 
     /// MPI_Isend (standard mode).
@@ -112,22 +126,36 @@ impl MpiProc {
         padvance(self.backend, self.costs.mpi_sw_send + self.costs.instructions(8));
         let _cs = self.enter_cs();
         let guard = self.guard();
-        // MPI-4.0 hints allow envelope-level VCI spreading (paper §7); the
-        // stream is keyed by the SENDER's rank + tag so the receiver can
-        // derive the same one (wildcards are asserted away).
-        let vci_idx = if my_ep.is_none() {
-            self.vci_for_envelope(comm, comm.rank, tag)
+        // VCI selection, in precedence order:
+        //  1. Per-message striping: any pool VCI, chosen per message; the
+        //     receiver's reorder stage restores nonovertaking order from
+        //     the shared (comm, dst) stream sequence.
+        //  2. MPI-4.0 hint spreading (paper §7): the stream is keyed by
+        //     the SENDER's rank + tag so the receiver can derive the same
+        //     one (wildcards are asserted away).
+        //  3. The communicator's / endpoint's assigned VCI.
+        let striped = my_ep.is_none() && self.striping_active(comm);
+        let (vci_idx, stripe_seq) = if striped {
+            let seq = self.next_stripe_seq(comm.id, dst);
+            (self.stripe_vci(comm, dst, seq), Some(seq))
+        } else if my_ep.is_none() {
+            (self.vci_for_envelope(comm, comm.rank, tag), None)
         } else {
-            self.comm_vci(comm, my_ep)
+            (self.comm_vci(comm, my_ep), None)
         };
         let vci = self.vcis().get(vci_idx).clone();
         let (dst_proc, base_dst_ctx) = self.route(comm, dst);
-        let dst_ctx = if my_ep.is_none() && vci_idx != self.comm_vci(comm, None) {
-            // Hinted spread: target the mirror context on the receiver.
+        let dst_ctx = if striped || (my_ep.is_none() && vci_idx != self.comm_vci(comm, None)) {
+            // Striped / hinted spread: target the mirror context on the
+            // receiver.
             self.remote_ctx_for_vci(dst_proc, vci_idx)
         } else {
             base_dst_ctx
         };
+        // Striped envelopes carry the comm's home VCI so the receiver
+        // knows which matching engine owns the stream (reduced modulo its
+        // pool size there).
+        let stripe_home = if striped { Some(comm.vci) } else { None };
         let my_rank = match &comm.kind {
             super::comm::CommKind::Procs => comm.rank,
             super::comm::CommKind::Endpoints { per_proc, .. } => {
@@ -137,10 +165,15 @@ impl MpiProc {
         let eager = data.len() <= self.costs.rendezvous_threshold;
         let immediate = eager && !sync && data.len() <= self.costs.immediate_completion_max;
         vci.with_state(guard, |st| {
-            let seq = {
-                let e = st.send_seq.entry((comm.id, dst)).or_insert(0);
-                *e += 1;
-                *e
+            let seq = match stripe_seq {
+                // Striped: the shared per-(comm, dst) stream counter was
+                // drawn before VCI selection (hashed striping needs it).
+                Some(s) => s,
+                None => {
+                    let e = st.send_seq.entry((comm.id, dst)).or_insert(0);
+                    *e += 1;
+                    *e
+                }
             };
             if immediate {
                 self.lightweight_acquire(st);
@@ -150,6 +183,7 @@ impl MpiProc {
                     dst_rank: dst,
                     tag,
                     seq,
+                    stripe_home,
                     protocol: P2pProtocol::Eager { send_handle: 0 },
                     needs_ack: false,
                     data: data.to_vec(),
@@ -166,6 +200,7 @@ impl MpiProc {
                     dst_rank: dst,
                     tag,
                     seq,
+                    stripe_home,
                     protocol: P2pProtocol::Eager { send_handle: id as u64 },
                     needs_ack: sync,
                     data: data.to_vec(),
@@ -198,6 +233,7 @@ impl MpiProc {
                     dst_rank: dst,
                     tag,
                     seq,
+                    stripe_home,
                     protocol: P2pProtocol::Rts { send_handle: id as u64 },
                     needs_ack: false,
                     data: Vec::new(),
@@ -216,15 +252,20 @@ impl MpiProc {
         padvance(self.backend, self.costs.mpi_sw_recv + self.costs.instructions(8));
         let _cs = self.enter_cs();
         let guard = self.guard();
-        let hinted =
-            self.cfg.hints.no_any_source && self.cfg.hints.no_any_tag && !comm.is_endpoints();
+        // Under striping every arrival is admitted to the communicator's
+        // HOME VCI (after seq reordering), so receives post there — the
+        // hinted envelope mapping is superseded and wildcards stay legal.
+        let hinted = self.cfg.hints.no_any_source
+            && self.cfg.hints.no_any_tag
+            && !comm.is_endpoints()
+            && !self.striping_active(comm);
         let vci_idx = if hinted && my_ep.is_none() {
             // The asserted hints forbid wildcards: the envelope is fully
             // specified and selects the stream.
             let (s, t) = match (src, tag) {
                 (Src::Rank(s), Tag::Value(t)) => (s, t),
                 _ => panic!(
-                    "mpi_assert_no_any_source/no_any_tag asserted, but a                      wildcard receive was posted (erroneous program)"
+                    "mpi_assert_no_any_source/no_any_tag asserted, but a wildcard receive was posted (erroneous program)"
                 ),
             };
             self.vci_for_envelope(comm, s, t)
@@ -268,12 +309,16 @@ impl MpiProc {
                 }
             }
             Arrival::Rts => {
+                // Control step: bypasses the striped reorder stage
+                // (stripe_home None) and is handled by whichever VCI owns
+                // the context it lands on.
                 self.reply(my_ctx_index, &m.sender, Payload::TwoSided {
                     comm_id: m.comm_id,
                     src_rank: 0,
                     dst_rank: 0,
                     tag: 0,
                     seq: 0,
+                    stripe_home: None,
                     protocol: P2pProtocol::Cts {
                         send_handle: m.sender.send_handle,
                         recv_handle: id as u64,
@@ -286,7 +331,16 @@ impl MpiProc {
     }
 
     /// Inject a control reply toward the context a message came from.
+    /// A malformed origin (unknown process or never-opened context) is
+    /// dropped with a counted diagnostic instead of panicking in the
+    /// fabric lookup — wire-message handling must never abort the process.
     pub(super) fn reply(&self, my_ctx_index: usize, sender: &SenderInfo, payload: Payload) {
+        if sender.src_proc >= self.nprocs()
+            || sender.src_ctx >= self.fabric.open_count(sender.src_proc)
+        {
+            self.stale_ctrl_drops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return;
+        }
         self.fabric.inject(my_ctx_index, sender.src_proc, sender.src_ctx, payload);
     }
 
@@ -303,13 +357,13 @@ impl MpiProc {
     /// MPI_Wait: progress until complete; returns received payload if any.
     pub fn wait(&self, req: Request) -> Option<Vec<u8>> {
         match req {
-            Request::Lightweight { .. } => {
+            Request::Lightweight { vci } => {
                 if self.cfg.cs_mode == CsMode::Global && self.guard() != Guard::None {
                     count_lock(super::instrument::LockClass::Global);
                     let _g = self.global_cs.lock();
-                    self.lightweight_release();
+                    self.lightweight_release(vci);
                 } else {
-                    self.lightweight_release();
+                    self.lightweight_release(vci);
                 }
                 None
             }

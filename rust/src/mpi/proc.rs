@@ -3,7 +3,8 @@
 //! connection-establishment logic of MPI_Init/Finalize (paper §4.2).
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::fabric::{Interconnect, ProcFabric};
@@ -11,7 +12,7 @@ use crate::platform::{padvance, pyield, Backend, PMutex};
 use crate::sim::CostModel;
 
 use super::comm::{Comm, CommKind};
-use super::config::{CsMode, MpiConfig};
+use super::config::{CsMode, MpiConfig, VciStriping};
 use super::instrument::{count_lock, LockClass};
 use super::request::{RequestSlab, DEFAULT_SLAB_CAPACITY};
 use super::rma::Window;
@@ -76,6 +77,21 @@ pub struct MpiProc {
     /// Signals service threads (PSM2-style progress) to stop.
     pub finalized: AtomicBool,
     pub initialized: AtomicBool,
+    /// Striping: shared per-(comm, dst) send-stream sequence counters.
+    /// One logical FIFO stream per destination even though messages fan
+    /// out across VCIs — the receiver's reorder stage keys off it. Host
+    /// mutex; the modeled cost of the shared fetch-add is charged at the
+    /// call site ([`MpiProc::next_stripe_seq`]).
+    stripe_seq: Mutex<HashMap<(u64, usize), u64>>,
+    /// Striping: round-robin cursor for per-message send VCI selection.
+    stripe_rr: AtomicUsize,
+    /// Striping: rotation cursor for progress polling (a striped comm's
+    /// traffic lands on every VCI, so waiters sweep the whole pool).
+    stripe_poll_rr: AtomicUsize,
+    /// Counted diagnostic: stale, duplicate, or malformed wire control
+    /// messages dropped by the progress engine instead of panicking
+    /// (e.g. a CTS for an unknown rendezvous send).
+    pub(super) stale_ctrl_drops: AtomicU64,
 }
 
 impl MpiProc {
@@ -101,6 +117,10 @@ impl MpiProc {
             next_win_id: AtomicU64::new(1),
             finalized: AtomicBool::new(false),
             initialized: AtomicBool::new(false),
+            stripe_seq: Mutex::new(HashMap::new()),
+            stripe_rr: AtomicUsize::new(0),
+            stripe_poll_rr: AtomicUsize::new(0),
+            stale_ctrl_drops: AtomicU64::new(0),
             fabric,
         })
     }
@@ -201,6 +221,31 @@ impl MpiProc {
     pub fn finalize(self: &Arc<Self>) {
         let world = self.comm_world();
         self.barrier(&world);
+        // Lightweight-request refcounts must balance once every thread has
+        // quiesced: each immediate `isend` acquired one reference and each
+        // `wait` released one (for per-VCI replication the release was
+        // deferred; entering the state below drains it first). An
+        // imbalance here means a leaked reference — exactly the bug the
+        // deferred-drain path used to have.
+        {
+            let _cs = self.enter_cs();
+            if self.cfg.per_vci_lightweight {
+                let guard = self.guard();
+                for i in 0..self.vcis().len() {
+                    let v = self.vcis().get(i).clone();
+                    let refs = v.with_state(guard, |st| {
+                        st.lw_refs.load(std::sync::atomic::Ordering::Relaxed)
+                    });
+                    assert_eq!(
+                        refs, 0,
+                        "VCI {i}: {refs} lightweight request refs leaked at finalize"
+                    );
+                }
+            } else {
+                let refs = self.slab.global_lightweight_refs.load();
+                assert_eq!(refs, 0, "{refs} global lightweight request refs leaked at finalize");
+            }
+        }
         let n = self.vcis().len();
         for i in 0..n {
             self.fabric.close_context(self.vcis().get(i).ctx_index);
@@ -297,6 +342,93 @@ impl MpiProc {
         z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
         z ^= z >> 27;
         1 + (z % (self.vcis().len() as u64 - 1)) as usize
+    }
+
+    /// Does per-message VCI striping apply to two-sided traffic on `comm`?
+    /// Endpoints communicators are excluded (each endpoint IS a dedicated
+    /// VCI — striping would defeat their contract), as are single-VCI
+    /// pools (nothing to stripe over).
+    pub fn striping_active(&self, comm: &Comm) -> bool {
+        self.cfg.vci_striping != VciStriping::Off
+            && !comm.is_endpoints()
+            && self.vcis().len() > 1
+    }
+
+    /// Next sequence number of the (comm, dst) striped send stream. The
+    /// counter is shared by every thread and VCI of this process — that is
+    /// what makes the stream a single FIFO the receiver can restore.
+    /// Modeled as a shared atomic fetch-add: one RMW plus a cache-line
+    /// transfer (the line ping-pongs between sender threads).
+    pub(super) fn next_stripe_seq(&self, comm_id: u64, dst: usize) -> u64 {
+        padvance(self.backend, self.costs.atomic_rmw + self.costs.cacheline_transfer);
+        let mut t = self.stripe_seq.lock().unwrap_or_else(|e| e.into_inner());
+        let e = t.entry((comm_id, dst)).or_insert(0);
+        *e += 1;
+        *e
+    }
+
+    /// Stripe VCI for one message. Round-robin walks the pool with a
+    /// process-wide cursor; hashed scrambles (comm, dst, seq) so a message
+    /// keeps its VCI deterministically without shared state. Both exclude
+    /// the fallback VCI 0 (like the hinted envelope spread): it is the
+    /// shared lane every pool-exhausted communicator funnels through, so
+    /// striping onto it would contend with funneled traffic.
+    pub(super) fn stripe_vci(&self, comm: &Comm, dst: usize, seq: u64) -> usize {
+        let n = self.vcis().len();
+        match self.cfg.vci_striping {
+            VciStriping::RoundRobin => {
+                1 + self.stripe_rr.fetch_add(1, Ordering::Relaxed) % (n - 1)
+            }
+            VciStriping::HashedByRequest => {
+                let mut z = comm
+                    .id
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add((dst as u64) << 32)
+                    .wrapping_add(seq);
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+                z ^= z >> 27;
+                1 + (z % (n as u64 - 1)) as usize
+            }
+            VciStriping::Off => self.comm_vci(comm, None),
+        }
+    }
+
+    /// Which VCI a progress call on behalf of a request mapped to
+    /// `req_vci` should poll. With striping on, a striped communicator's
+    /// traffic lands on every VCI, so waiters sweep the pool round-robin
+    /// (pinning to the request's VCI could starve a stream whose
+    /// gap-filling message sits on another context); otherwise the
+    /// request's own VCI, per the configured progress model.
+    pub(super) fn stripe_poll_target(&self, req_vci: usize) -> usize {
+        let n = self.vcis().len();
+        if self.cfg.vci_striping == VciStriping::Off || n <= 1 {
+            return req_vci;
+        }
+        self.stripe_poll_rr.fetch_add(1, Ordering::Relaxed) % n
+    }
+
+    /// Stale/duplicate/malformed wire control messages dropped so far
+    /// (instead of panicking). Diagnostic counter.
+    pub fn stale_ctrl_drop_count(&self) -> u64 {
+        self.stale_ctrl_drops.load(Ordering::Relaxed)
+    }
+
+    /// Reorder-stage diagnostics summed over all VCIs:
+    /// (duplicate-seq drops, striped arrivals currently parked).
+    pub fn reorder_stats(&self) -> (u64, usize) {
+        let _cs = self.enter_cs();
+        let guard = self.guard();
+        let mut dups = 0u64;
+        let mut parked = 0usize;
+        for i in 0..self.vcis().len() {
+            let v = self.vcis().get(i).clone();
+            let (d, p) = v.with_state(guard, |st| {
+                (st.matching.dup_seq_drops(), st.matching.reorder_parked())
+            });
+            dups += d;
+            parked += p;
+        }
+        (dups, parked)
     }
 
     /// Cooperative yield used inside progress/wait loops.

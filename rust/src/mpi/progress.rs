@@ -6,6 +6,24 @@
 //! valid MPI — completion of an operation on one VCI may depend on software
 //! progress of another. The hybrid model runs one **global** round (all
 //! VCIs) after `global_progress_interval` unsuccessful per-VCI rounds.
+//!
+//! # Striping
+//!
+//! With per-message VCI striping, one communicator's arrivals land on
+//! every VCI's context, so per-VCI progress rotates over the whole pool
+//! instead of pinning to the request's VCI (see
+//! `MpiProc::stripe_poll_target`). A polled striped envelope whose stream
+//! is homed on a *different* VCI is re-routed: the polled VCI's lock is
+//! released first, then the home VCI's matching engine runs the reorder
+//! admission — stripe VCIs contribute rx parallelism, the home VCI alone
+//! serializes matching, which is what preserves nonovertaking.
+//!
+//! # Robustness
+//!
+//! No `expect`/`unwrap` panic is reachable from wire-message handling:
+//! stale or duplicate control messages (a CTS for an unknown rendezvous
+//! send, a replayed DATA/ack handle, an unregistered RMA window) are
+//! dropped with a counted diagnostic (`MpiProc::stale_ctrl_drop_count`).
 
 use std::sync::atomic::Ordering;
 
@@ -17,21 +35,48 @@ use super::matching::{Arrival, SenderInfo, UnexpectedMsg};
 use super::proc::MpiProc;
 use super::vci::VciState;
 
+/// Outcome of polling one context while holding its VCI's state.
+enum Polled {
+    /// Nothing arrived.
+    Empty,
+    /// Arrived and handled under the polled VCI.
+    Handled,
+    /// Striped envelopes homed on other VCIs: handled after releasing the
+    /// polled VCI's lock (avoids nested VCI locks and their lock-order
+    /// cycles). A contiguous run is drained in one sweep so the home lock
+    /// is paid once per batch, not once per message.
+    Reroute(std::collections::VecDeque<(usize, WireMsg)>),
+}
+
+/// Max striped messages drained from one context per progress call.
+const STRIPE_REROUTE_BATCH: usize = 16;
+
+/// Overflow-safe `[offset, offset + len)` vs window-size check for spans
+/// that arrive off the wire (a forged `offset` near `usize::MAX` must be
+/// rejected, not wrap or panic).
+fn span_out_of_bounds(offset: usize, len: usize, size: usize) -> bool {
+    match offset.checked_add(len) {
+        Some(end) => end > size,
+        None => true,
+    }
+}
+
 impl MpiProc {
     /// One progress-engine iteration on behalf of a request mapped to
     /// `vci_idx`. Applies the configured progress model. Called from wait
     /// loops; also usable directly for "manual" progress.
     pub fn progress_for_request(&self, vci_idx: usize) {
         let _cs = self.enter_cs();
+        let poll_idx = self.stripe_poll_target(vci_idx);
         if self.cfg.per_vci_progress {
-            let vci = self.vcis().get(vci_idx);
+            let vci = self.vcis().get(poll_idx);
             let fails = vci.progress_failures.load(Ordering::Relaxed);
             let interval = self.cfg.global_progress_interval;
             if interval > 0 && fails as u32 >= interval {
                 vci.progress_failures.store(0, Ordering::Relaxed);
                 self.progress_global_round();
             } else {
-                let did = self.progress_vci(vci_idx);
+                let did = self.progress_vci(poll_idx);
                 if did {
                     vci.progress_failures.store(0, Ordering::Relaxed);
                 } else {
@@ -52,16 +97,86 @@ impl MpiProc {
     pub fn progress_vci(&self, vci_idx: usize) -> bool {
         let vci = self.vcis().get(vci_idx).clone();
         let guard = self.guard();
-        vci.with_state(guard, |st| {
+        let polled = vci.with_state(guard, |st| {
             let ctx = self.fabric.context(self.rank(), vci.ctx_index);
             match ctx.poll(&self.costs) {
-                Some(msg) => {
-                    self.handle_msg(st, vci.ctx_index, msg);
-                    true
-                }
-                None => false,
+                None => Polled::Empty,
+                Some(msg) => match self.stripe_reroute_target(&msg, vci_idx) {
+                    Some(home) => {
+                        // Drain the contiguous run of re-routable striped
+                        // messages behind it (stopping at the first
+                        // unstriped message, whose ordering relies on
+                        // poll+handle staying atomic under this lock).
+                        let mut batch = std::collections::VecDeque::new();
+                        batch.push_back((home, msg));
+                        while batch.len() < STRIPE_REROUTE_BATCH {
+                            let next = ctx.poll_if(&self.costs, |m| {
+                                self.stripe_reroute_target(m, vci_idx).is_some()
+                            });
+                            match next {
+                                Some(m) => match self.stripe_reroute_target(&m, vci_idx) {
+                                    Some(h) => batch.push_back((h, m)),
+                                    // Unreachable (the predicate just
+                                    // checked), but handle inline rather
+                                    // than panic on a wire path.
+                                    None => self.handle_msg(st, vci.ctx_index, m),
+                                },
+                                None => break,
+                            }
+                        }
+                        Polled::Reroute(batch)
+                    }
+                    None => {
+                        self.handle_msg(st, vci.ctx_index, msg);
+                        Polled::Handled
+                    }
+                },
             }
-        })
+        });
+        match polled {
+            Polled::Empty => false,
+            Polled::Handled => true,
+            Polled::Reroute(mut batch) => {
+                // Striped traffic is seq-ordered by the reorder stage, so
+                // handling it after dropping the polled VCI's lock cannot
+                // reorder a stream. Consecutive same-home messages share
+                // one home-lock acquisition.
+                while let Some((home, msg)) = batch.pop_front() {
+                    let hv = self.vcis().get(home).clone();
+                    hv.with_state(guard, |st| {
+                        self.handle_msg(st, vci.ctx_index, msg);
+                        while let Some((h2, m2)) = batch.pop_front() {
+                            if h2 == home {
+                                self.handle_msg(st, vci.ctx_index, m2);
+                            } else {
+                                batch.push_front((h2, m2));
+                                break;
+                            }
+                        }
+                    });
+                }
+                true
+            }
+        }
+    }
+
+    /// Home VCI a polled message must be handled under, when it differs
+    /// from the polled VCI. Only striped envelopes (Eager/Rts with a
+    /// stripe_home mark) re-route; control and RMA traffic is handled by
+    /// whichever VCI owns the context it landed on.
+    fn stripe_reroute_target(&self, msg: &WireMsg, polled_idx: usize) -> Option<usize> {
+        if let Payload::TwoSided {
+            stripe_home: Some(home),
+            protocol: P2pProtocol::Eager { .. } | P2pProtocol::Rts { .. },
+            ..
+        } = &msg.payload
+        {
+            let home = home % self.vcis().len();
+            if home != polled_idx {
+                return Some(home);
+            }
+        }
+        None
     }
 
     /// One global round: poll every open VCI (locking each in FG mode —
@@ -91,11 +206,29 @@ impl MpiProc {
         }
     }
 
-    /// Dispatch one arrived message. Runs with the VCI state held.
+    /// Record one dropped stale/duplicate/malformed wire message.
+    fn drop_stale(&self) {
+        self.stale_ctrl_drops.fetch_add(1, Ordering::Relaxed);
+        padvance(self.backend, self.costs.completion_process);
+    }
+
+    /// Dispatch one arrived message. Runs with the owning VCI state held
+    /// (the polled VCI's, or the stream's home VCI for re-routed striped
+    /// envelopes).
     pub(super) fn handle_msg(&self, st: &mut VciState, my_ctx_index: usize, msg: WireMsg) {
         let sender = SenderInfo { src_proc: msg.src_proc, src_ctx: msg.src_ctx, send_handle: 0 };
         match msg.payload {
-            Payload::TwoSided { comm_id, src_rank, tag, seq, protocol, needs_ack, data, .. } => {
+            Payload::TwoSided {
+                comm_id,
+                src_rank,
+                tag,
+                seq,
+                stripe_home,
+                protocol,
+                needs_ack,
+                data,
+                ..
+            } => {
                 match protocol {
                     P2pProtocol::Eager { send_handle } => {
                         padvance(self.backend, self.costs.match_cost);
@@ -107,7 +240,11 @@ impl MpiProc {
                             sender: SenderInfo { send_handle, ..sender },
                             arrival: Arrival::Eager { data, needs_ack },
                         };
-                        if let Some((p, um)) = st.matching.on_arrival(um) {
+                        if stripe_home.is_some() {
+                            for (p, um) in st.matching.on_striped_arrival(um) {
+                                self.consume_matched(st, my_ctx_index, p.req, um);
+                            }
+                        } else if let Some((p, um)) = st.matching.on_arrival(um) {
                             self.consume_matched(st, my_ctx_index, p.req, um);
                         }
                     }
@@ -121,16 +258,23 @@ impl MpiProc {
                             sender: SenderInfo { send_handle, ..sender },
                             arrival: Arrival::Rts,
                         };
-                        if let Some((p, um)) = st.matching.on_arrival(um) {
+                        if stripe_home.is_some() {
+                            for (p, um) in st.matching.on_striped_arrival(um) {
+                                self.consume_matched(st, my_ctx_index, p.req, um);
+                            }
+                        } else if let Some((p, um)) = st.matching.on_arrival(um) {
                             self.consume_matched(st, my_ctx_index, p.req, um);
                         }
                     }
                     P2pProtocol::Cts { send_handle, recv_handle } => {
-                        // We are the sender: ship the parked payload.
-                        let ps = st
-                            .pending_sends
-                            .remove(&send_handle)
-                            .expect("CTS for unknown rendezvous send");
+                        // We are the sender: ship the parked payload. A
+                        // duplicate or stale CTS (no pending rendezvous for
+                        // the handle) is dropped with a counted diagnostic
+                        // — never a process abort.
+                        let Some(ps) = st.pending_sends.remove(&send_handle) else {
+                            self.drop_stale();
+                            return;
+                        };
                         padvance(self.backend, self.costs.completion_process);
                         self.reply(my_ctx_index, &sender, Payload::TwoSided {
                             comm_id: ps.comm_id,
@@ -138,6 +282,7 @@ impl MpiProc {
                             dst_rank: ps.dst_rank,
                             tag: ps.tag,
                             seq: 0,
+                            stripe_home: None,
                             protocol: P2pProtocol::Data { recv_handle },
                             needs_ack: false,
                             data: ps.data,
@@ -147,35 +292,54 @@ impl MpiProc {
                         self.slab.slot(ps.req).complete_at.store(done, Ordering::Release);
                     }
                     P2pProtocol::Data { recv_handle } => {
-                        let id = recv_handle as super::request::ReqId;
+                        let Some((_id, slot)) = self.slab.try_slot(recv_handle) else {
+                            self.drop_stale();
+                            return;
+                        };
                         padvance(
                             self.backend,
                             self.costs.memcpy_cost(data.len()) + self.costs.completion_process,
                         );
-                        *self.slab.slot(id).data.lock().unwrap_or_else(|e| e.into_inner()) =
-                            Some(data);
-                        self.slab.slot(id).completed.store(1, self.charged_atomics());
+                        *slot.data.lock().unwrap_or_else(|e| e.into_inner()) = Some(data);
+                        slot.completed.store(1, self.charged_atomics());
                     }
                 }
             }
             Payload::SendAck { send_handle } => {
-                let id = send_handle as super::request::ReqId;
+                let Some((_, slot)) = self.slab.try_slot(send_handle) else {
+                    self.drop_stale();
+                    return;
+                };
                 padvance(self.backend, self.costs.completion_process);
-                self.slab.slot(id).completed.store(1, self.charged_atomics());
+                slot.completed.store(1, self.charged_atomics());
             }
             // ---- software-emulated RMA (target side) ----
             Payload::RmaPut { win, offset, data, flush_handle } => {
+                let Some(mem) = self.fabric.find_window(self.rank(), win) else {
+                    self.drop_stale();
+                    return;
+                };
+                if span_out_of_bounds(offset, data.len(), mem.len()) {
+                    self.drop_stale();
+                    return;
+                }
                 padvance(
                     self.backend,
                     self.costs.rma_am_handle + self.costs.memcpy_cost(data.len()),
                 );
-                let mem = self.fabric.window(self.rank(), win);
                 mem.write(offset, &data);
                 self.reply(my_ctx_index, &sender, Payload::RmaAck { flush_handle });
             }
             Payload::RmaGetReq { win, offset, len, get_handle } => {
+                let Some(mem) = self.fabric.find_window(self.rank(), win) else {
+                    self.drop_stale();
+                    return;
+                };
+                if span_out_of_bounds(offset, len, mem.len()) {
+                    self.drop_stale();
+                    return;
+                }
                 padvance(self.backend, self.costs.rma_am_handle + self.costs.memcpy_cost(len));
-                let mem = self.fabric.window(self.rank(), win);
                 let data = mem.read(offset, len);
                 self.reply(my_ctx_index, &sender, Payload::RmaGetReply { get_handle, data });
             }
@@ -184,17 +348,43 @@ impl MpiProc {
                 st.get_done.insert(get_handle, data);
             }
             Payload::RmaAcc { win, offset, data, op, flush_handle } => {
+                let Some(mem) = self.fabric.find_window(self.rank(), win) else {
+                    self.drop_stale();
+                    return;
+                };
+                let bad_len = span_out_of_bounds(offset, data.len(), mem.len())
+                    || (op != crate::fabric::AccOp::Replace && data.len() % 8 != 0);
+                if bad_len {
+                    self.drop_stale();
+                    return;
+                }
                 padvance(
                     self.backend,
                     self.costs.rma_am_handle + 2 * self.costs.memcpy_cost(data.len()),
                 );
-                let mem = self.fabric.window(self.rank(), win);
                 super::rma::apply_accumulate(&mem, offset, &data, op);
                 self.reply(my_ctx_index, &sender, Payload::RmaAck { flush_handle });
             }
             Payload::RmaFetchOp { win, offset, operand, op, fetch_handle } => {
+                let Some(mem) = self.fabric.find_window(self.rank(), win) else {
+                    self.drop_stale();
+                    return;
+                };
+                // Fetch-ops read a fixed 8-byte cell for Sum*, and exactly
+                // the operand span for Replace — reject anything that
+                // would index out of bounds in the apply step.
+                let span = match op {
+                    crate::fabric::AccOp::Replace => operand.len(),
+                    _ => operand.len().max(8),
+                };
+                if operand.is_empty()
+                    || span_out_of_bounds(offset, span, mem.len())
+                    || (op != crate::fabric::AccOp::Replace && operand.len() < 8)
+                {
+                    self.drop_stale();
+                    return;
+                }
                 padvance(self.backend, self.costs.rma_am_handle);
-                let mem = self.fabric.window(self.rank(), win);
                 let prev = super::rma::apply_fetch_op(&mem, offset, &operand, op);
                 self.reply(my_ctx_index, &sender, Payload::RmaFetchOpReply {
                     fetch_handle,

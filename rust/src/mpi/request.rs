@@ -97,6 +97,13 @@ impl RequestSlab {
         &self.slots[id as usize]
     }
 
+    /// Bounds-checked slot lookup for handles that arrive off the wire —
+    /// a malformed handle must be droppable, not a panic.
+    pub fn try_slot(&self, id: u64) -> Option<(ReqId, &ReqSlot)> {
+        let id = ReqId::try_from(id).ok()?;
+        self.slots.get(id as usize).map(|s| (id, s))
+    }
+
     /// Allocate from the global pool, taking the request-class lock (the
     /// FG-mode cost the per-VCI cache exists to avoid). Under the Global
     /// CS the pool is accessed lock-free (the big lock already serializes),

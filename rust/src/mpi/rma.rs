@@ -123,6 +123,24 @@ impl Window {
     }
 }
 
+/// Origin-side bounds check for a user-issued RMA op: windows are created
+/// collectively with symmetric sizes, so the origin can (and must) reject
+/// an erroneous span loudly here. The target-side handlers instead *drop*
+/// out-of-bounds requests — but a dropped request never acks, so letting
+/// an erroneous program reach the wire would turn into a silent flush
+/// hang rather than this immediate failure.
+fn check_origin_span(win: &Window, offset: usize, len: usize) {
+    let ok = match offset.checked_add(len) {
+        Some(end) => end <= win.size,
+        None => false,
+    };
+    assert!(
+        ok,
+        "RMA op out of window bounds (erroneous program): offset {offset} + len {len} > window size {size}",
+        size = win.size
+    );
+}
+
 impl MpiProc {
     /// MPI_Win_create (collective over `comm`): exposes `size` bytes.
     /// `relaxed_accumulate` maps the `accumulate_ordering=none` info hint.
@@ -183,6 +201,7 @@ impl MpiProc {
         data: &[u8],
     ) {
         padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
+        check_origin_span(win, offset, data.len());
         let _cs = self.enter_cs();
         let vci_idx = ep_vci.unwrap_or_else(|| self.rma_vci(win, false));
         let vci = self.vcis().get(vci_idx).clone();
@@ -229,6 +248,7 @@ impl MpiProc {
         len: usize,
     ) -> GetHandle {
         padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
+        check_origin_span(win, offset, len);
         let _cs = self.enter_cs();
         let vci_idx = ep_vci.unwrap_or_else(|| self.rma_vci(win, false));
         let vci = self.vcis().get(vci_idx).clone();
@@ -285,6 +305,7 @@ impl MpiProc {
         op: AccOp,
     ) {
         padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
+        check_origin_span(win, offset, data.len());
         let _cs = self.enter_cs();
         let vci_idx = ep_vci.unwrap_or_else(|| self.rma_vci(win, win.relaxed_accumulate));
         let vci = self.vcis().get(vci_idx).clone();
@@ -313,6 +334,11 @@ impl MpiProc {
         op: AccOp,
     ) -> Vec<u8> {
         padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
+        // Sum* fetch-ops read a full 8-byte cell regardless of operand span.
+        check_origin_span(win, offset, match op {
+            AccOp::Replace => operand.len(),
+            _ => operand.len().max(8),
+        });
         let vci_idx = self.rma_vci(win, false);
         let vci = self.vcis().get(vci_idx).clone();
         let h = win.fresh_handle();

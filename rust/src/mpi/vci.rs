@@ -5,6 +5,18 @@
 //! cache, lightweight request, and RMA completion records — all protected
 //! by the VCI's own lock (paper §4.2). The pool hands VCIs to communicators
 //! and windows as they are created.
+//!
+//! # Per-message VCI striping
+//!
+//! With [`crate::mpi::VciStriping`] enabled, a communicator is no longer
+//! pinned to its one assigned VCI for two-sided traffic: every `isend`
+//! picks a stripe VCI (round-robin or hashed per message) from the whole
+//! pool and targets the mirror context on the receiver, so a single hot
+//! communicator can use all hardware contexts. The communicator's assigned
+//! VCI remains its **home**: posted receives, the unexpected queue, and
+//! the reorder stage that restores nonovertaking order all live in the
+//! home VCI's [`MatchingState`]; stripe VCIs contribute injection and
+//! polling parallelism only. See `mpi::matching` for the ordering story.
 
 use std::cell::UnsafeCell;
 use std::collections::{HashMap, HashSet};
@@ -83,6 +95,18 @@ pub struct Vci {
     /// Per-VCI progress bookkeeping: consecutive unsuccessful polls (drives
     /// the hybrid global-progress fallback).
     pub progress_failures: AtomicUsize,
+    /// Lightweight-request releases parked by lock-free `MPI_Wait`s
+    /// (paper Table 1: waiting on a lightweight request takes zero locks).
+    /// Reconciled into `VciState::lw_refs` by the next VCI-locked
+    /// operation; balance is asserted at finalize. Host atomic: the
+    /// deferred-release trick is exactly what makes this access free on
+    /// the modeled critical path.
+    lw_deferred: std::sync::atomic::AtomicU64,
+    /// Request frees parked without the VCI lock (striping only: the home
+    /// VCI's lock is the hot resource, so completed requests are pushed
+    /// here and absorbed into `VciState::req_cache` by the next locked
+    /// entry instead of paying a dedicated lock acquisition each).
+    deferred_frees: Mutex<Vec<ReqId>>,
 }
 
 impl Vci {
@@ -98,6 +122,37 @@ impl Vci {
             state: StateCell(UnsafeCell::new(VciState::default())),
             active: AtomicBool::new(false),
             progress_failures: AtomicUsize::new(0),
+            lw_deferred: std::sync::atomic::AtomicU64::new(0),
+            deferred_frees: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Park one lightweight-request release without entering the VCI
+    /// critical section (`MPI_Wait` on a lightweight request takes no
+    /// locks — paper Table 1). The next [`Vci::with_state`] drains it.
+    pub fn defer_lightweight_release(&self) {
+        self.lw_deferred.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Park a completed request's free without entering the VCI critical
+    /// section (striping's hot-home-lock relief; the cost of the shared
+    /// push is charged by the caller). Absorbed by the next
+    /// [`Vci::with_state`].
+    pub fn defer_request_free(&self, id: ReqId) {
+        self.deferred_frees.lock().unwrap_or_else(|e| e.into_inner()).push(id);
+    }
+
+    /// Reconcile parked lightweight releases and request frees into the
+    /// locked state. Runs at every state entry; free in modeled time
+    /// (plain counter/list work under a lock that is already held).
+    fn drain_deferred_lightweight(&self, st: &mut VciState) {
+        let d = self.lw_deferred.swap(0, Ordering::Relaxed);
+        if d != 0 {
+            st.lw_refs.fetch_sub(d, std::sync::atomic::Ordering::Relaxed);
+        }
+        let mut f = self.deferred_frees.lock().unwrap_or_else(|e| e.into_inner());
+        if !f.is_empty() {
+            st.req_cache.append(&mut f);
         }
     }
 
@@ -113,6 +168,7 @@ impl Vci {
         };
         // SAFETY: serialized per the `Guard` contract (see StateCell).
         let st = unsafe { &mut *self.state.0.get() };
+        self.drain_deferred_lightweight(st);
         f(st)
     }
 
@@ -123,12 +179,14 @@ impl Vci {
                 let g = self.lock.try_lock()?;
                 count_lock(LockClass::Vci);
                 let st = unsafe { &mut *self.state.0.get() };
+                self.drain_deferred_lightweight(st);
                 let r = f(st);
                 drop(g);
                 Some(r)
             }
             Guard::GlobalHeld | Guard::None => {
                 let st = unsafe { &mut *self.state.0.get() };
+                self.drain_deferred_lightweight(st);
                 Some(f(st))
             }
         }
@@ -317,6 +375,27 @@ mod tests {
         let refs =
             v.with_state(Guard::None, |st| st.lw_refs.load(std::sync::atomic::Ordering::Relaxed));
         assert_eq!(refs, 1);
+    }
+
+    #[test]
+    fn deferred_lightweight_release_drains_on_next_state_entry() {
+        let p = pool(2, VciPolicy::FirstComePool);
+        let v = p.get(1);
+        v.with_state(Guard::None, |st| {
+            st.lw_refs.fetch_add(3, std::sync::atomic::Ordering::Relaxed);
+        });
+        // Two lock-free waits park their releases...
+        v.defer_lightweight_release();
+        v.defer_lightweight_release();
+        // ...and the next locked operation reconciles them.
+        let refs = v.with_state(Guard::VciLock, |st| {
+            st.lw_refs.load(std::sync::atomic::Ordering::Relaxed)
+        });
+        assert_eq!(refs, 1);
+        v.defer_lightweight_release();
+        let refs =
+            v.with_state(Guard::None, |st| st.lw_refs.load(std::sync::atomic::Ordering::Relaxed));
+        assert_eq!(refs, 0);
     }
 
     #[test]

@@ -2,82 +2,22 @@
 //! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
 //! execute them from the (native-backend) hot path. Python never runs here.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: HLO *text* is the
-//! interchange format (xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id
-//! serialized protos); graphs are lowered with `return_tuple=True`, so
-//! results come back as one tuple literal.
+//! The PJRT backend (the `xla` crate) is not available in the offline
+//! build image, so it is gated behind the `pjrt` cargo feature. The
+//! default build ships the same public API backed by a stub whose
+//! `Runtime::open` / `SharedRuntime::open` fail gracefully — manifest
+//! parsing and the [`Tensor`] host type remain fully functional either
+//! way, and callers (the training coordinator, `repro train`) surface the
+//! error instead of failing to build.
+//!
+//! With `pjrt` enabled, the pattern follows /opt/xla-example/load_hlo:
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax>=0.5's 64-bit-id serialized protos); graphs are lowered with
+//! `return_tuple=True`, so results come back as one tuple literal.
 
 mod manifest;
 
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
-
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-use anyhow::{anyhow, Context, Result};
-
-/// A compiled executable plus its manifest signature.
-pub struct Executable {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// Loads artifacts lazily and caches compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, usize>>,
-    compiled: Mutex<Vec<std::sync::Arc<Executable>>>,
-}
-
-impl Runtime {
-    /// Open the artifacts directory (expects `manifest.tsv` inside).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.tsv"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            dir,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-            compiled: Mutex::new(Vec::new()),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch the cached) executable for a manifest entry.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(&i) = self.cache.lock().unwrap().get(name) {
-            return Ok(self.compiled.lock().unwrap()[i].clone());
-        }
-        let spec = self
-            .manifest
-            .entry(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
-            .clone();
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let arc = std::sync::Arc::new(Executable { spec, exe });
-        let mut compiled = self.compiled.lock().unwrap();
-        compiled.push(arc.clone());
-        self.cache.lock().unwrap().insert(name.to_string(), compiled.len() - 1);
-        Ok(arc)
-    }
-}
 
 /// Host tensor passed to / returned from executables.
 #[derive(Clone, Debug, PartialEq)]
@@ -113,10 +53,85 @@ impl Tensor {
             Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
         }
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
+#[cfg(feature = "pjrt")]
+mod backend {
+    //! The real PJRT backend (requires the vendored `xla` crate).
+
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    use anyhow::{anyhow, Context, Result};
+
+    use super::{ArtifactSpec, Manifest, Tensor, TensorSpec};
+
+    /// A compiled executable plus its manifest signature.
+    pub struct Executable {
+        pub spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// Loads artifacts lazily and caches compiled executables.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        pub manifest: Manifest,
+        cache: Mutex<HashMap<String, usize>>,
+        compiled: Mutex<Vec<std::sync::Arc<Executable>>>,
+    }
+
+    impl Runtime {
+        /// Open the artifacts directory (expects `manifest.tsv` inside).
+        pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(dir.join("manifest.tsv"))?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Runtime {
+                client,
+                dir,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+                compiled: Mutex::new(Vec::new()),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch the cached) executable for a manifest entry.
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            if let Some(&i) = self.cache.lock().unwrap().get(name) {
+                return Ok(self.compiled.lock().unwrap()[i].clone());
+            }
+            let spec = self
+                .manifest
+                .entry(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            let arc = std::sync::Arc::new(Executable { spec, exe });
+            let mut compiled = self.compiled.lock().unwrap();
+            compiled.push(arc.clone());
+            self.cache.lock().unwrap().insert(name.to_string(), compiled.len() - 1);
+            Ok(arc)
+        }
+    }
+
+    fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        let lit = match t {
             Tensor::F32 { data, .. } => xla::Literal::vec1(data)
                 .reshape(&dims)
                 .map_err(|e| anyhow!("reshape f32 literal: {e:?}"))?,
@@ -141,89 +156,170 @@ impl Tensor {
         };
         Ok(t)
     }
-}
 
-impl Executable {
-    /// Execute with host tensors; returns the tuple elements as tensors.
-    pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
-        anyhow::ensure!(
-            args.len() == self.spec.inputs.len(),
-            "{}: expected {} args, got {}",
-            self.spec.name,
-            self.spec.inputs.len(),
-            args.len()
-        );
-        for (a, s) in args.iter().zip(&self.spec.inputs) {
+    impl Executable {
+        /// Execute with host tensors; returns the tuple elements as tensors.
+        pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
             anyhow::ensure!(
-                a.shape() == s.shape.as_slice(),
-                "{}: arg shape {:?} != manifest {:?}",
+                args.len() == self.spec.inputs.len(),
+                "{}: expected {} args, got {}",
                 self.spec.name,
-                a.shape(),
-                s.shape
+                self.spec.inputs.len(),
+                args.len()
             );
+            for (a, s) in args.iter().zip(&self.spec.inputs) {
+                anyhow::ensure!(
+                    a.shape() == s.shape.as_slice(),
+                    "{}: arg shape {:?} != manifest {:?}",
+                    self.spec.name,
+                    a.shape(),
+                    s.shape
+                );
+            }
+            let lits: Vec<xla::Literal> =
+                args.iter().map(to_literal).collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            // return_tuple=True: decompose the tuple into per-output literals.
+            let parts = result.to_tuple().map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+            anyhow::ensure!(
+                parts.len() == self.spec.outputs.len(),
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+            parts
+                .iter()
+                .zip(&self.spec.outputs)
+                .map(|(l, s)| from_literal(l, s))
+                .collect()
         }
-        let lits: Vec<xla::Literal> =
-            args.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // return_tuple=True: decompose the tuple into per-output literals.
-        let parts = result.to_tuple().map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
-        anyhow::ensure!(
-            parts.len() == self.spec.outputs.len(),
-            "{}: got {} outputs, manifest says {}",
-            self.spec.name,
-            parts.len(),
-            self.spec.outputs.len()
-        );
-        parts
-            .iter()
-            .zip(&self.spec.outputs)
-            .map(|(l, s)| Tensor::from_literal(l, s))
-            .collect()
+    }
+
+    /// A `Send + Sync` wrapper serializing ALL PJRT access through one
+    /// mutex.
+    ///
+    /// The `xla` crate's handles are `Rc`-based (not thread-safe to clone
+    /// or drop concurrently), but the underlying PJRT CPU client is fine
+    /// with serialized access from multiple threads. Every operation —
+    /// loading, executing, and finally dropping — happens while holding
+    /// the mutex, so the `Rc` reference counts are never raced. On this
+    /// single-core testbed serialization costs nothing.
+    pub struct SharedRuntime {
+        inner: Mutex<Runtime>,
+    }
+
+    // SAFETY: all access to the non-Send internals is serialized by
+    // `inner`; nothing borrows out of the mutex (run() copies tensors in
+    // and out).
+    unsafe impl Send for SharedRuntime {}
+    unsafe impl Sync for SharedRuntime {}
+
+    impl SharedRuntime {
+        pub fn open(dir: impl AsRef<Path>) -> Result<SharedRuntime> {
+            Ok(SharedRuntime { inner: Mutex::new(Runtime::open(dir)?) })
+        }
+
+        /// Pre-compile an artifact (avoids paying compile time mid-benchmark).
+        pub fn warm(&self, name: &str) -> Result<()> {
+            let rt = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            rt.load(name).map(|_| ())
+        }
+
+        /// Execute artifact `name` with `args`.
+        pub fn run(&self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+            let rt = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            let exe = rt.load(name)?;
+            exe.run(args)
+        }
+
+        pub fn config(&self, key: &str) -> Option<i64> {
+            let rt = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            rt.manifest.config(key)
+        }
     }
 }
 
-/// A `Send + Sync` wrapper serializing ALL PJRT access through one mutex.
-///
-/// The `xla` crate's handles are `Rc`-based (not thread-safe to clone or
-/// drop concurrently), but the underlying PJRT CPU client is fine with
-/// serialized access from multiple threads. Every operation — loading,
-/// executing, and finally dropping — happens while holding the mutex, so
-/// the `Rc` reference counts are never raced. On this single-core testbed
-/// serialization costs nothing.
-pub struct SharedRuntime {
-    inner: Mutex<Runtime>,
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Stub backend: same public surface, fails at `open` time.
+
+    use std::path::Path;
+    use std::sync::Arc;
+
+    use anyhow::{anyhow, Result};
+
+    use super::{ArtifactSpec, Manifest, Tensor};
+
+    const UNAVAILABLE: &str =
+        "built without the `pjrt` feature: PJRT execution is unavailable in this environment";
+
+    pub struct Executable {
+        pub spec: ArtifactSpec,
+    }
+
+    impl Executable {
+        pub fn run(&self, _args: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+    }
+
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn open(_dir: impl AsRef<Path>) -> Result<Runtime> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+            Err(anyhow!("load {name}: {UNAVAILABLE}"))
+        }
+    }
+
+    pub struct SharedRuntime {
+        _private: (),
+    }
+
+    impl SharedRuntime {
+        pub fn open(_dir: impl AsRef<Path>) -> Result<SharedRuntime> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn warm(&self, name: &str) -> Result<()> {
+            Err(anyhow!("warm {name}: {UNAVAILABLE}"))
+        }
+
+        pub fn run(&self, name: &str, _args: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(anyhow!("run {name}: {UNAVAILABLE}"))
+        }
+
+        pub fn config(&self, _key: &str) -> Option<i64> {
+            None
+        }
+    }
 }
 
-// SAFETY: all access to the non-Send internals is serialized by `inner`;
-// nothing borrows out of the mutex (run() copies tensors in and out).
-unsafe impl Send for SharedRuntime {}
-unsafe impl Sync for SharedRuntime {}
+pub use backend::{Executable, Runtime, SharedRuntime};
 
-impl SharedRuntime {
-    pub fn open(dir: impl AsRef<Path>) -> Result<SharedRuntime> {
-        Ok(SharedRuntime { inner: Mutex::new(Runtime::open(dir)?) })
-    }
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
 
-    /// Pre-compile an artifact (avoids paying compile time mid-benchmark).
-    pub fn warm(&self, name: &str) -> Result<()> {
-        let rt = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-        rt.load(name).map(|_| ())
-    }
-
-    /// Execute artifact `name` with `args`.
-    pub fn run(&self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
-        let rt = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-        let exe = rt.load(name)?;
-        exe.run(args)
-    }
-
-    pub fn config(&self, key: &str) -> Option<i64> {
-        let rt = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-        rt.manifest.config(key)
+    #[test]
+    fn stub_runtime_fails_gracefully() {
+        let err = Runtime::open("nonexistent").err().expect("stub must not open");
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+        assert!(SharedRuntime::open("nonexistent").is_err());
     }
 }

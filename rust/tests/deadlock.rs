@@ -88,6 +88,14 @@ fn fig9_p2p_single_vci_original_completes() {
     assert_eq!(fig9_p2p(MpiConfig::original()), SimOutcome::Completed);
 }
 
+#[test]
+fn fig9_p2p_striped_completes() {
+    // Per-message striping changes both the send fan-out and the progress
+    // model (waiters sweep the pool), but Fig. 9's cross-VCI dependency
+    // pattern must still complete.
+    assert_eq!(fig9_p2p(MpiConfig::striped(8)), SimOutcome::Completed);
+}
+
 /// Fig. 9 (right), transcribed (software-RMA fabric, large Gets):
 /// Rank 0:              Get(win1); Get(win2); flush(win1); flush(win2);
 /// Rank 1 / Thread 0:   Get(win1); B; B; flush(win1);

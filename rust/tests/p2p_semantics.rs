@@ -23,6 +23,7 @@ fn all_configs() -> Vec<(&'static str, MpiConfig)> {
         ("fg_single", MpiConfig::fg_single_vci()),
         ("optimized4", MpiConfig::optimized(4)),
         ("optimized16", MpiConfig::optimized(16)),
+        ("striped8", MpiConfig::striped(8)),
     ]
 }
 

@@ -77,12 +77,85 @@ fn prop_matching_agrees_and_preserves_fifo() {
     }
 }
 
+/// Reorder-stage invariant vs a single-VCI oracle: feed each stream's
+/// seqs in a random interleave (as striped per-VCI delivery would), with
+/// random duplicate injections, then drain via posted receives. Every
+/// stream must come back exactly once per seq, in seq order — exactly
+/// what a single VCI would have delivered — and every duplicate must be
+/// counted and dropped.
+#[test]
+fn prop_striped_reorder_matches_single_vci_oracle() {
+    for seed in 0..40u64 {
+        let mut rng = SplitMix64::new(0x57A1 ^ seed);
+        let streams = 3usize; // (comm 1, srcs 0..3)
+        let per_stream = 1 + rng.gen_usize(30);
+        // The "wire": every (src, seq) pair once, plus some duplicates.
+        let mut wire: Vec<(usize, u64)> = Vec::new();
+        for src in 0..streams {
+            for seq in 1..=per_stream as u64 {
+                wire.push((src, seq));
+            }
+        }
+        let mut dups = 0u64;
+        for _ in 0..rng.gen_usize(10) {
+            let src = rng.gen_usize(streams);
+            let seq = 1 + rng.gen_usize(per_stream) as u64;
+            wire.push((src, seq));
+            dups += 1;
+        }
+        rng.shuffle(&mut wire);
+
+        let mut m = MatchingState::new();
+        let mut matched: Vec<Vec<u64>> = vec![Vec::new(); streams];
+        // Pre-post some receives so admission exercises both the
+        // match-on-arrival and the park-in-unexpected paths.
+        for src in 0..streams {
+            for _ in 0..rng.gen_usize(per_stream + 1) {
+                let posted =
+                    PostedRecv { comm_id: 1, src: Src::Rank(src), tag: Tag::Value(7), req: 0 };
+                assert!(m.on_post(posted).is_none(), "queue starts empty");
+            }
+        }
+        for &(src, seq) in &wire {
+            for (_p, um) in m.on_striped_arrival(umsg(1, src, 7, seq)) {
+                matched[um.src_rank].push(um.seq);
+            }
+        }
+        // Drain what parked admission left in the unexpected queue.
+        for src in 0..streams {
+            while let Some(um) = m.on_post(PostedRecv {
+                comm_id: 1,
+                src: Src::Rank(src),
+                tag: Tag::Value(7),
+                req: 0,
+            }) {
+                matched[um.src_rank].push(um.seq);
+            }
+        }
+        for (src, seqs) in matched.iter().enumerate() {
+            let want: Vec<u64> = (1..=per_stream as u64).collect();
+            assert_eq!(
+                seqs, &want,
+                "seed {seed}: stream {src} diverged from the single-VCI oracle"
+            );
+        }
+        assert_eq!(m.dup_seq_drops(), dups, "seed {seed}: duplicate accounting");
+        assert_eq!(m.reorder_parked(), 0, "seed {seed}: leftover parked arrivals");
+    }
+}
+
 // ---------------------------------------------------------------------
 // End-to-end randomized traffic: all payloads delivered exactly once,
 // in FIFO order per stream, under every library configuration.
 // ---------------------------------------------------------------------
 
 fn random_traffic_case(seed: u64, cfg: MpiConfig, ic: Interconnect) {
+    random_traffic_case_sized(seed, cfg, ic, 2000)
+}
+
+/// `max_size` selects the protocol mix: 2000 stays within immediate+eager;
+/// ~40k spans immediate, eager, and rendezvous.
+fn random_traffic_case_sized(seed: u64, cfg: MpiConfig, ic: Interconnect, max_size: usize) {
     let nprocs = 3;
     let spec = ClusterSpec::new(
         FabricConfig { interconnect: ic, nodes: nprocs, procs_per_node: 1, max_contexts_per_node: 64 },
@@ -110,7 +183,7 @@ fn random_traffic_case(seed: u64, cfg: MpiConfig, ic: Interconnect) {
                 continue;
             }
             for k in 0..plan[me][dst] {
-                let size = 1 + rng.gen_usize(2000); // mixes immediate + eager
+                let size = 1 + rng.gen_usize(max_size);
                 let mut data = vec![0u8; size];
                 data[0] = k as u8;
                 sreqs.push(proc.isend(&world, dst, 5, &data));
@@ -157,6 +230,23 @@ fn prop_random_traffic_all_policies() {
         let mut cfg = MpiConfig::optimized(4);
         cfg.vci_policy = policy;
         random_traffic_case(99, cfg, Interconnect::Opa);
+    }
+}
+
+/// Striped interleavings of eager + rendezvous sends against the
+/// single-VCI oracle: the in-order check inside `random_traffic_case` IS
+/// the oracle (a single VCI delivers per-stream FIFO by construction;
+/// striping must be observationally identical).
+#[test]
+fn prop_random_traffic_striped_eager_and_rendezvous() {
+    use vcmpi::mpi::VciStriping;
+    for seed in 0..8 {
+        random_traffic_case_sized(seed, MpiConfig::striped(6), Interconnect::Opa, 40_000);
+    }
+    let mut hashed = MpiConfig::striped(5);
+    hashed.vci_striping = VciStriping::HashedByRequest;
+    for seed in 0..4 {
+        random_traffic_case_sized(seed, hashed.clone(), Interconnect::Ib, 40_000);
     }
 }
 

@@ -1,0 +1,280 @@
+//! Per-message VCI striping with receiver-side seq reordering: end-to-end
+//! semantics across the full stack, plus the wire-robustness regressions
+//! (stale/duplicate/malformed control messages must never abort).
+
+use std::sync::{Arc, Mutex};
+
+use vcmpi::fabric::{FabricConfig, Interconnect, P2pProtocol, Payload};
+use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, Src, Tag, VciStriping};
+use vcmpi::platform::{Backend, PBarrier};
+use vcmpi::sim::SimOutcome;
+
+fn fabric(ic: Interconnect, nodes: usize) -> FabricConfig {
+    FabricConfig { interconnect: ic, nodes, procs_per_node: 1, max_contexts_per_node: 64 }
+}
+
+fn run_ok(
+    spec: ClusterSpec,
+    body: impl Fn(&Arc<vcmpi::mpi::MpiProc>, usize) + Send + Sync + 'static,
+) {
+    let r = run_cluster(spec, body);
+    assert_eq!(r.outcome, SimOutcome::Completed, "cluster run failed: {:?}", r.outcome);
+}
+
+fn striped_configs() -> Vec<(&'static str, MpiConfig)> {
+    let mut hashed = MpiConfig::striped(8);
+    hashed.vci_striping = VciStriping::HashedByRequest;
+    vec![("round_robin", MpiConfig::striped(8)), ("hashed", hashed)]
+}
+
+#[test]
+fn striped_ping_pong_both_fabrics() {
+    for ic in [Interconnect::Opa, Interconnect::Ib] {
+        for (name, cfg) in striped_configs() {
+            let spec = ClusterSpec::new(fabric(ic, 2), cfg, 1);
+            run_ok(spec, move |proc, _t| {
+                let world = proc.comm_world();
+                if proc.rank() == 0 {
+                    proc.send(&world, 1, 7, &[0xAB; 64]);
+                    let back = proc.recv(&world, Src::Rank(1), Tag::Value(8));
+                    assert_eq!(back, vec![0xCD; 32], "echo payload ({name})");
+                } else {
+                    let got = proc.recv(&world, Src::Rank(0), Tag::Value(7));
+                    assert_eq!(got, vec![0xAB; 64], "ping payload ({name})");
+                    proc.send(&world, 0, 8, &[0xCD; 32]);
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn striped_nonovertaking_same_envelope() {
+    // 80 back-to-back sends with the same envelope fan out across 8 VCIs;
+    // the receiver-side reorder stage must still deliver them in program
+    // order (MPI's nonovertaking rule).
+    for (name, cfg) in striped_configs() {
+        let spec = ClusterSpec::new(fabric(Interconnect::Opa, 2), cfg, 1);
+        run_ok(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            if proc.rank() == 0 {
+                for i in 0..80u32 {
+                    proc.send(&world, 1, 3, &i.to_le_bytes());
+                }
+            } else {
+                for i in 0..80u32 {
+                    let got = proc.recv(&world, Src::Rank(0), Tag::Value(3));
+                    assert_eq!(
+                        u32::from_le_bytes(got.as_slice().try_into().unwrap()),
+                        i,
+                        "stream overtook under striping ({name})"
+                    );
+                }
+            }
+        });
+    }
+}
+
+#[test]
+fn striped_eager_rendezvous_mix_stays_ordered() {
+    // Alternate small (immediate), medium (eager), and large (rendezvous)
+    // messages on one envelope: the reorder stage sequences Eager and RTS
+    // envelopes alike, so matching order must equal send order even though
+    // the three protocols complete through different paths.
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2), MpiConfig::striped(6), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let sizes = [8usize, 12 * 1024, 64 * 1024, 8, 64 * 1024, 300, 40 * 1024, 8];
+        if proc.rank() == 0 {
+            for (i, &n) in sizes.iter().enumerate() {
+                let mut data = vec![0u8; n];
+                data[0] = i as u8;
+                proc.send(&world, 1, 5, &data);
+            }
+        } else {
+            for (i, &n) in sizes.iter().enumerate() {
+                let got = proc.recv(&world, Src::Rank(0), Tag::Value(5));
+                assert_eq!(got.len(), n, "message {i} truncated");
+                assert_eq!(got[0], i as u8, "message {i} out of order");
+            }
+        }
+    });
+}
+
+#[test]
+fn striped_multithreaded_single_comm_streams() {
+    // The tentpole workload: 4 threads per process all hammering ONE
+    // communicator (distinct tags), striped across 8 VCIs. Each per-thread
+    // stream must stay in order.
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2), MpiConfig::striped(8), 4);
+    run_ok(spec, |proc, t| {
+        let world = proc.comm_world();
+        let peer = 1 - proc.rank();
+        for i in 0..40u32 {
+            let sreq = proc.isend(&world, peer, t as i32, &i.to_le_bytes());
+            let got = proc.recv(&world, Src::Rank(peer), Tag::Value(t as i32));
+            assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+            proc.wait(sreq);
+        }
+    });
+}
+
+#[test]
+fn striped_wildcard_receives_stay_legal() {
+    // Unlike the §7 envelope hints (which must assert wildcards away to
+    // spread one communicator), striping keeps MPI_ANY_SOURCE/ANY_TAG
+    // fully legal: ordering is restored before matching, not by mapping
+    // envelopes to VCIs.
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 3), MpiConfig::striped(6), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        if proc.rank() == 0 {
+            let mut seen = [0u8; 3];
+            for _ in 0..8 {
+                let got = proc.recv(&world, Src::Any, Tag::Any);
+                let who = got[0] as usize;
+                let k = got[1];
+                assert_eq!(k, seen[who], "stream from {who} overtook under wildcards");
+                seen[who] += 1;
+            }
+            assert_eq!(seen[1], 4);
+            assert_eq!(seen[2], 4);
+        } else {
+            for k in 0..4u8 {
+                proc.send(&world, 0, k as i32, &[proc.rank() as u8, k]);
+            }
+        }
+    });
+}
+
+#[test]
+fn striped_run_leaves_no_parked_arrivals() {
+    // After a quiesced striped run every reorder buffer must be empty and
+    // no duplicate sequences may have been seen (the wire never
+    // duplicates; the counter exists for malformed traffic).
+    let stats: Arc<Mutex<Vec<(u64, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+    let s2 = stats.clone();
+    let bars: Arc<Vec<PBarrier>> =
+        Arc::new((0..2).map(|_| PBarrier::new(Backend::Sim, 2)).collect());
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 2), MpiConfig::striped(8), 2);
+    run_ok(spec, move |proc, t| {
+        let world = proc.comm_world();
+        let peer = 1 - proc.rank();
+        for i in 0..30u32 {
+            let sreq = proc.isend(&world, peer, t as i32, &i.to_le_bytes());
+            let got = proc.recv(&world, Src::Rank(peer), Tag::Value(t as i32));
+            assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+            proc.wait(sreq);
+        }
+        // Both local threads must have drained their inbound streams
+        // before reading the stats — a sibling mid-exchange can park
+        // arrivals transiently (that is the reorder stage working).
+        bars[proc.rank()].wait();
+        if t == 0 {
+            s2.lock().unwrap().push(proc.reorder_stats());
+        }
+        bars[proc.rank()].wait();
+    });
+    let stats = stats.lock().unwrap();
+    assert_eq!(stats.len(), 2);
+    for &(dups, parked) in stats.iter() {
+        assert_eq!(dups, 0, "wire traffic must never be seen as duplicate");
+        assert_eq!(parked, 0, "reorder buffers must drain by quiescence");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire robustness: stale/duplicate/malformed control messages.
+// ---------------------------------------------------------------------
+
+#[test]
+fn duplicate_or_stale_cts_is_dropped_not_fatal() {
+    // Regression: a CTS for an unknown rendezvous send used to hit
+    // `pending_sends.remove(..).expect(..)` and abort the whole process.
+    // It must be dropped with a counted diagnostic, and real traffic must
+    // keep flowing afterwards.
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2), MpiConfig::optimized(4), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        if proc.rank() == 0 {
+            // Forge a CTS that answers a rendezvous rank 1 never started.
+            proc.fabric.inject(0, 1, 0, Payload::TwoSided {
+                comm_id: 0,
+                src_rank: 0,
+                dst_rank: 1,
+                tag: 0,
+                seq: 0,
+                stripe_home: None,
+                protocol: P2pProtocol::Cts { send_handle: 0xDEAD_BEEF, recv_handle: 7 },
+                needs_ack: false,
+                data: Vec::new(),
+            });
+            // Tell rank 1 the forgery is on the wire, then run a normal
+            // exchange over the same VCI to prove the engine survived.
+            proc.send(&world, 1, 9, &[]);
+            let got = proc.recv(&world, Src::Rank(1), Tag::Value(10));
+            assert_eq!(got, b"alive");
+        } else {
+            proc.recv(&world, Src::Rank(0), Tag::Value(9));
+            while proc.stale_ctrl_drop_count() == 0 {
+                proc.progress_for_request(0);
+            }
+            proc.send(&world, 0, 10, b"alive");
+        }
+    });
+}
+
+#[test]
+fn malformed_control_messages_are_dropped_not_fatal() {
+    // Acceptance: no expect/unwrap panic reachable from wire-message
+    // handling. Throw a battery of malformed control messages at rank 1:
+    // out-of-range request handles, an unregistered RMA window, an
+    // out-of-bounds RMA offset, and an undersized fetch-op operand.
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 2), MpiConfig::optimized(4), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let win = proc.win_create(&world, 64);
+        if proc.rank() == 0 {
+            let forged: Vec<Payload> = vec![
+                Payload::SendAck { send_handle: u64::MAX },
+                Payload::TwoSided {
+                    comm_id: 0,
+                    src_rank: 0,
+                    dst_rank: 1,
+                    tag: 0,
+                    seq: 0,
+                    stripe_home: None,
+                    protocol: P2pProtocol::Data { recv_handle: u64::MAX },
+                    needs_ack: false,
+                    data: vec![1, 2, 3],
+                },
+                Payload::RmaPut { win: 0xFFFF, offset: 0, data: vec![0; 8], flush_handle: 1 },
+                Payload::RmaPut { win: win.id, offset: 60, data: vec![0; 32], flush_handle: 2 },
+                Payload::RmaGetReq { win: win.id, offset: 60, len: 32, get_handle: 3 },
+                Payload::RmaFetchOp {
+                    win: win.id,
+                    offset: 0,
+                    operand: vec![1, 2],
+                    op: vcmpi::fabric::AccOp::SumU64,
+                    fetch_handle: 4,
+                },
+            ];
+            let n = forged.len() as u64;
+            for p in forged {
+                proc.fabric.inject(0, 1, 0, p);
+            }
+            proc.send(&world, 1, 9, &n.to_le_bytes());
+            let got = proc.recv(&world, Src::Rank(1), Tag::Value(10));
+            assert_eq!(got, b"survived");
+        } else {
+            let n = proc.recv(&world, Src::Rank(0), Tag::Value(9));
+            let n = u64::from_le_bytes(n.as_slice().try_into().unwrap());
+            while proc.stale_ctrl_drop_count() < n {
+                proc.progress_for_request(0);
+            }
+            proc.send(&world, 0, 10, b"survived");
+        }
+        proc.barrier(&world);
+        proc.win_free(&world, win);
+    });
+}

@@ -1,0 +1,140 @@
+//! A tiny, API-compatible subset of the `anyhow` crate for the offline
+//! build environment (no registry access). Implements exactly what this
+//! workspace uses: [`Error`], [`Result`], the [`anyhow!`] / [`ensure!`] /
+//! [`bail!`] macros, and the [`Context`] extension trait for `Result` and
+//! `Option`.
+//!
+//! Error values are eagerly rendered to strings; context frames are
+//! prepended `"{context}: {cause}"` like real anyhow's single-line
+//! (`{:#}`) formatting.
+
+use std::fmt;
+
+/// A string-backed error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context frame.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` and `{:#}` both render the full single-line chain.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors real anyhow: any std error converts into `Error` (which itself
+// intentionally does NOT implement `std::error::Error`, avoiding a
+// conflicting blanket impl).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("boom {}", 42))
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "boom 42");
+        assert_eq!(format!("{e:#}"), "boom 42");
+    }
+
+    #[test]
+    fn context_frames_prepend() {
+        let r: Result<()> = fails().context("outer");
+        assert_eq!(format!("{}", r.unwrap_err()), "outer: boom 42");
+        let o: Option<u8> = None;
+        assert_eq!(format!("{}", o.context("missing").unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn ensure_and_question_mark() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            let s: u32 = "7".parse()?; // std error -> Error via From
+            Ok(x + s)
+        }
+        assert_eq!(f(1).unwrap(), 8);
+        assert!(f(11).is_err());
+    }
+}
