@@ -1,53 +1,189 @@
 //! Bench: the §5 message-rate benchmark across all six execution modes —
-//! the end-to-end series behind Figs. 10/11/13. Deterministic DES runs;
+//! the end-to-end series behind Figs. 10/11/13 — plus the striping gate
+//! scenarios (striped / sharded / wildcard-storm). Deterministic DES runs;
 //! values are exact per configuration.
+//!
+//! Environment:
+//!  * `BENCH_MSGS`  — messages per core (default 1024).
+//!  * `BENCH_JSON`  — write a machine-readable report (rates + engine
+//!    counters + regression ratios) to this path.
+//!  * `BENCH_GATE=1`— exit nonzero if a regression-gate ratio fails
+//!    (striped <= single-VCI baseline, or sharded <= home engine).
+//!  * `BENCH_QUICK=1` — skip the printed figure tables and run only the
+//!    gate scenarios (what the CI `bench` job does).
 
-use vcmpi::bench::{message_rate, Mode, Op, RateParams};
+use vcmpi::bench::{message_rate, message_rate_run, Mode, Op, RateParams, RateReport};
 use vcmpi::fabric::Interconnect;
 
+struct Scenario {
+    name: &'static str,
+    threads: usize,
+    report: RateReport,
+}
+
+const COUNTER_KEYS: [&str; 7] = [
+    "stale_ctrl_drops",
+    "dup_seq_drops",
+    "epoch_flips",
+    "epoch_unflips",
+    "wildcard_posts",
+    "empty_polls",
+    "doorbell_skips",
+];
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn scenario_json(s: &Scenario) -> String {
+    let counters: Vec<String> = COUNTER_KEYS
+        .iter()
+        .map(|k| format!("\"{}\": {}", k, s.report.sum_stat(k) as u64))
+        .collect();
+    format!(
+        "    {{\"name\": \"{}\", \"threads\": {}, \"rate_msgs_per_sec\": {:.1}, \
+         \"counters\": {{{}}}}}",
+        json_escape(s.name),
+        s.threads,
+        s.report.rate,
+        counters.join(", ")
+    )
+}
+
 fn main() {
-    let msgs = std::env::var("BENCH_MSGS").ok().and_then(|v| v.parse().ok()).unwrap_or(1024);
-    println!("== message_rate: 8-byte Isend, 2 nodes, {msgs} msgs/core ==");
-    println!("{:<24} {:>8} {:>14}", "mode", "threads", "Mmsg/s");
-    for mode in Mode::all() {
-        for threads in [1usize, 4, 16] {
-            let r = message_rate(RateParams {
-                mode,
-                threads,
-                msgs_per_core: msgs,
-                ..Default::default()
-            });
-            println!("{:<24} {:>8} {:>14.3}", mode.label(), threads, r / 1e6);
+    let msgs: usize =
+        std::env::var("BENCH_MSGS").ok().and_then(|v| v.parse().ok()).unwrap_or(1024);
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+
+    if !quick {
+        println!("== message_rate: 8-byte Isend, 2 nodes, {msgs} msgs/core ==");
+        println!("{:<24} {:>8} {:>14}", "mode", "threads", "Mmsg/s");
+        for mode in Mode::all() {
+            for threads in [1usize, 4, 16] {
+                let r = message_rate(RateParams {
+                    mode,
+                    threads,
+                    msgs_per_core: msgs,
+                    ..Default::default()
+                });
+                println!("{:<24} {:>8} {:>14.3}", mode.label(), threads, r / 1e6);
+            }
         }
-    }
-    println!("\n== message_rate: 8-byte Isend, ONE hot communicator ==");
-    println!("(striped = per-message VCI striping + receiver-side seq reordering)");
-    println!("{:<24} {:>8} {:>14}", "mode", "threads", "Mmsg/s");
-    for mode in [Mode::SerCommVcis, Mode::SerCommStriped, Mode::ParCommVcis, Mode::Endpoints] {
-        for threads in [4usize, 16] {
-            let r = message_rate(RateParams {
-                mode,
-                threads,
-                msgs_per_core: msgs,
-                ..Default::default()
-            });
-            println!("{:<24} {:>8} {:>14.3}", mode.label(), threads, r / 1e6);
+        println!("\n== message_rate: 8-byte Put, 16 cores ==");
+        println!("{:<24} {:>10} {:>14}", "mode", "fabric", "Mmsg/s");
+        for ic in [Interconnect::Opa, Interconnect::Ib] {
+            for mode in [Mode::Everywhere, Mode::ParCommVcis, Mode::Endpoints] {
+                let r = message_rate(RateParams {
+                    mode,
+                    interconnect: ic,
+                    threads: 16,
+                    op: Op::Put,
+                    msgs_per_core: (msgs / 4).max(64),
+                    ..Default::default()
+                });
+                println!("{:<24} {:>10} {:>14.3}", mode.label(), format!("{ic:?}"), r / 1e6);
+            }
         }
     }
 
-    println!("\n== message_rate: 8-byte Put, 16 cores ==");
-    println!("{:<24} {:>10} {:>14}", "mode", "fabric", "Mmsg/s");
-    for ic in [Interconnect::Opa, Interconnect::Ib] {
-        for mode in [Mode::Everywhere, Mode::ParCommVcis, Mode::Endpoints] {
-            let r = message_rate(RateParams {
-                mode,
-                interconnect: ic,
-                threads: 16,
-                op: Op::Put,
-                msgs_per_core: (msgs / 4).max(64),
-                ..Default::default()
-            });
-            println!("{:<24} {:>10} {:>14.3}", mode.label(), format!("{ic:?}"), r / 1e6);
-        }
+    // ---- gate scenarios: ONE hot communicator, fixed iteration budget ----
+    vcmpi::mpi::instrument::reset_proc_counters();
+    let gate_msgs = msgs.clamp(128, 512) / 32 * 32; // multiple of the window
+    let threads = 8;
+    let base = RateParams {
+        threads,
+        msgs_per_core: gate_msgs,
+        window: 32,
+        ..Default::default()
+    };
+    println!("\n== message_rate: striping gate ({gate_msgs} msgs/core, {threads} threads) ==");
+    println!("{:<26} {:>14}", "scenario", "Mmsg/s");
+    let single = Scenario {
+        name: "ser_comm+vcis",
+        threads,
+        report: message_rate_run(RateParams { mode: Mode::SerCommVcis, ..base.clone() }),
+    };
+    let striped = Scenario {
+        name: "ser_comm+striped",
+        threads,
+        report: message_rate_run(RateParams { mode: Mode::SerCommStriped, ..base.clone() }),
+    };
+    let sharded = Scenario {
+        name: "ser_comm+striped_sharded",
+        threads,
+        report: message_rate_run(RateParams {
+            mode: Mode::SerCommStripedSharded,
+            ..base.clone()
+        }),
+    };
+    let home = Scenario {
+        name: "ser_comm+striped_sharded/home_engine",
+        threads,
+        report: message_rate_run(RateParams {
+            mode: Mode::SerCommStripedSharded,
+            cfg_override: Some(vcmpi::mpi::MpiConfig::striped(threads + 1)),
+            ..base.clone()
+        }),
+    };
+    let wildcard = Scenario {
+        name: "ser_comm+striped_wildcard",
+        threads: 4,
+        report: message_rate_run(RateParams {
+            mode: Mode::SerCommStripedWildcard,
+            threads: 4,
+            msgs_per_core: gate_msgs.min(256),
+            window: 32,
+            ..Default::default()
+        }),
+    };
+    let scenarios = [&single, &striped, &sharded, &home, &wildcard];
+    for s in scenarios {
+        println!("{:<26} {:>14.3}", s.name, s.report.rate / 1e6);
+    }
+
+    // ---- regression gate (same ratios the unit tests assert) ----
+    let striped_over_single = striped.report.rate / single.report.rate;
+    let sharded_over_home = sharded.report.rate / home.report.rate;
+    let epochs_resolved = wildcard.report.sum_stat("epoch_flips")
+        == wildcard.report.sum_stat("epoch_unflips")
+        && wildcard.report.sum_stat("epoch_flips") > 0.0;
+    let pass = striped_over_single > 1.0 && sharded_over_home > 1.0 && epochs_resolved;
+    println!("\ngate: striped/single_vci = {striped_over_single:.3} (> 1.0 required)");
+    println!("gate: sharded/home_engine = {sharded_over_home:.3} (> 1.0 required)");
+    println!("gate: wildcard epochs resolved = {epochs_resolved}");
+    println!("gate: {}", if pass { "PASS" } else { "FAIL" });
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        // Process-wide engine counters over the whole gate section
+        // (`mpi::instrument`), alongside the per-scenario sums.
+        let pc = vcmpi::mpi::instrument::proc_counters();
+        let body = format!(
+            "{{\n  \"bench\": \"message_rate\",\n  \"msgs_per_core\": {gate_msgs},\n  \
+             \"scenarios\": [\n{}\n  ],\n  \"process_counters\": {{\n    \
+             \"stale_ctrl_drops\": {},\n    \"dup_seq_drops\": {},\n    \
+             \"epoch_flips\": {},\n    \"epoch_unflips\": {},\n    \
+             \"wildcard_posts\": {},\n    \"empty_polls\": {},\n    \
+             \"doorbell_skips\": {}\n  }},\n  \"gate\": {{\n    \
+             \"striped_over_single_vci\": {striped_over_single:.4},\n    \
+             \"sharded_over_home_engine\": {sharded_over_home:.4},\n    \
+             \"wildcard_epochs_resolved\": {epochs_resolved},\n    \
+             \"pass\": {pass}\n  }}\n}}\n",
+            scenarios.into_iter().map(scenario_json).collect::<Vec<_>>().join(",\n"),
+            pc.stale_ctrl_drops,
+            pc.dup_seq_drops,
+            pc.epoch_flips,
+            pc.epoch_unflips,
+            pc.wildcard_posts,
+            pc.empty_polls,
+            pc.doorbell_skips,
+        );
+        std::fs::write(&path, body).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+
+    let gate_enforced = std::env::var("BENCH_GATE").map(|v| v == "1").unwrap_or(false);
+    if gate_enforced && !pass {
+        eprintln!("bench regression gate FAILED");
+        std::process::exit(1);
     }
 }

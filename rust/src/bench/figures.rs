@@ -212,6 +212,7 @@ pub fn table1() -> Csv {
         "vci_locks",
         "request_locks",
         "hook_locks",
+        "shard_locks",
         "atomics",
     ]);
     let rows: Arc<Mutex<Vec<Vec<String>>>> = Arc::new(Mutex::new(Vec::new()));
@@ -319,6 +320,7 @@ fn row(mode: &str, op: &str, d: &crate::mpi::instrument::OpCounters) -> Vec<Stri
         d.vci_locks.to_string(),
         d.request_locks.to_string(),
         d.hook_locks.to_string(),
+        d.shard_locks.to_string(),
         d.atomics.to_string(),
     ]
 }

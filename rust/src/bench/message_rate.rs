@@ -27,8 +27,18 @@ pub enum Mode {
     SerCommVcis,
     /// MPI+threads, ONE shared communicator with per-message VCI striping
     /// (receiver-side seq reordering restores nonovertaking): the
-    /// single-communicator answer to par_comm/endpoints.
+    /// single-communicator answer to par_comm/endpoints. Single matching
+    /// shard + round-robin sweep — the PR-1 "home engine" arm.
     SerCommStriped,
+    /// Striping with per-source **sharded** matching and doorbell-gated
+    /// progress, on a multi-source topology (2 sender procs x 2 receiver
+    /// procs): striped arrivals match on the VCI they land on, per-source
+    /// shards in parallel.
+    SerCommStripedSharded,
+    /// Sharded striping under a wildcard storm: receiver threads
+    /// periodically post MPI_ANY_SOURCE receives, driving the serialized
+    /// wildcard-epoch protocol through continuous flip/unflip cycles.
+    SerCommStripedWildcard,
     /// MPI+threads, per-thread communicators/windows, original library.
     ParCommOrig,
     /// MPI+threads, per-thread communicators/windows, multi-VCI library.
@@ -44,16 +54,19 @@ impl Mode {
             Mode::SerCommOrig => "ser_comm+orig_mpich",
             Mode::SerCommVcis => "ser_comm+vcis",
             Mode::SerCommStriped => "ser_comm+striped",
+            Mode::SerCommStripedSharded => "ser_comm+striped_sharded",
+            Mode::SerCommStripedWildcard => "ser_comm+striped_wildcard",
             Mode::ParCommOrig => "par_comm+orig_mpich",
             Mode::ParCommVcis => "par_comm+vcis",
             Mode::Endpoints => "endpoints",
         }
     }
 
-    /// The paper's six execution modes (§5). `SerCommStriped` is this
-    /// repo's post-paper extension and is deliberately NOT included, so
-    /// the fig10/11/13 reproductions keep the paper's exact series; the
-    /// striped scenario has its own bench section and tests.
+    /// The paper's six execution modes (§5). The striped / sharded /
+    /// wildcard-storm modes are this repo's post-paper extensions and are
+    /// deliberately NOT included, so the fig10/11/13 reproductions keep
+    /// the paper's exact series; the striping scenarios have their own
+    /// bench section (the CI gate) and tests.
     pub fn all() -> [Mode; 6] {
         [
             Mode::Everywhere,
@@ -119,6 +132,11 @@ fn derive(p: &RateParams) -> (FabricConfig, MpiConfig, usize) {
         Mode::SerCommOrig | Mode::ParCommOrig => (fabric(1), MpiConfig::original(), t),
         Mode::SerCommVcis | Mode::ParCommVcis => (fabric(1), MpiConfig::optimized(t + 1), t),
         Mode::SerCommStriped => (fabric(1), MpiConfig::striped(t + 1), t),
+        // Multi-source: 2 procs per node, so each receiver proc matches
+        // striped streams from 2 sender procs — the per-source shards
+        // (and the doorbell-gated sweep) are what this mode measures.
+        Mode::SerCommStripedSharded => (fabric(2), MpiConfig::striped_sharded(t + 1), t),
+        Mode::SerCommStripedWildcard => (fabric(1), MpiConfig::striped_sharded(t + 1), t),
         // +1 VCI: endpoints come from the pool (fallback excluded).
         Mode::Endpoints => (fabric(1), MpiConfig::optimized(t + 1), t),
     };
@@ -126,8 +144,38 @@ fn derive(p: &RateParams) -> (FabricConfig, MpiConfig, usize) {
     (fab, cfg, tpp)
 }
 
+/// Detailed result of one message-rate run: the headline rate plus every
+/// measurement the workload recorded (per-proc engine diagnostics —
+/// epoch flips, doorbell skips, empty polls, drop counters — under
+/// `<name>_p<rank>` keys).
+#[derive(Clone, Debug)]
+pub struct RateReport {
+    pub rate: f64,
+    pub measurements: HashMap<String, f64>,
+}
+
+impl RateReport {
+    /// Sum a per-proc diagnostic over all ranks (`prefix` without the
+    /// `_p<rank>` suffix).
+    pub fn sum_stat(&self, prefix: &str) -> f64 {
+        self.measurements
+            .iter()
+            .filter(|(k, _)| {
+                k.strip_prefix(prefix)
+                    .is_some_and(|rest| rest.starts_with("_p"))
+            })
+            .map(|(_, v)| *v)
+            .sum()
+    }
+}
+
 /// Run the benchmark; returns aggregate messages/second (virtual time).
 pub fn message_rate(p: RateParams) -> f64 {
+    message_rate_run(p).rate
+}
+
+/// Run the benchmark and return the full [`RateReport`].
+pub fn message_rate_run(p: RateParams) -> RateReport {
     let (fab, cfg, tpp) = derive(&p);
     let nodes_procs = fab.procs_per_node;
     let mut spec = ClusterSpec::new(fab, cfg, tpp);
@@ -194,6 +242,70 @@ pub fn message_rate(p: RateParams) -> f64 {
         // ---- the measured phase ----
         let t0 = crate::platform::pnow(proc.backend);
         match p.op {
+            Op::Isend if p.mode == Mode::SerCommStripedSharded => {
+                // Multi-source sharding workload: every sender-node proc's
+                // thread alternates between BOTH receiver procs, so each
+                // receiver matches striped streams from `half` distinct
+                // sources concurrently — one matching shard per source.
+                let payload = vec![0u8; p.msg_size];
+                let batches = p.msgs_per_core / p.window;
+                debug_assert_eq!(p.window % half, 0, "window must split over receivers");
+                if is_sender_proc {
+                    for _ in 0..batches {
+                        let reqs: Vec<_> = (0..p.window)
+                            .map(|k| {
+                                let dst = half + k % half;
+                                proc.isend_ep(&world, None, dst, t as i32, &payload, false)
+                            })
+                            .collect();
+                        proc.waitall(reqs);
+                    }
+                } else {
+                    for _ in 0..batches {
+                        let reqs: Vec<_> = (0..p.window)
+                            .map(|k| {
+                                let src = k % half;
+                                proc.irecv_ep(
+                                    &world,
+                                    None,
+                                    Src::Rank(src),
+                                    Tag::Value(t as i32),
+                                )
+                            })
+                            .collect();
+                        proc.waitall(reqs);
+                    }
+                }
+            }
+            Op::Isend if p.mode == Mode::SerCommStripedWildcard => {
+                // Wildcard storm: every 4th receive is MPI_ANY_SOURCE, so
+                // the communicator continuously flips into and out of the
+                // serialized wildcard epoch while striped traffic flows.
+                let payload = vec![0u8; p.msg_size];
+                let batches = p.msgs_per_core / p.window;
+                let peer = 1 - me;
+                if is_sender_proc {
+                    for _ in 0..batches {
+                        let reqs: Vec<_> = (0..p.window)
+                            .map(|_| {
+                                proc.isend_ep(&world, None, peer, t as i32, &payload, false)
+                            })
+                            .collect();
+                        proc.waitall(reqs);
+                    }
+                } else {
+                    for _ in 0..batches {
+                        let reqs: Vec<_> = (0..p.window)
+                            .map(|k| {
+                                let src =
+                                    if k % 4 == 3 { Src::Any } else { Src::Rank(peer) };
+                                proc.irecv_ep(&world, None, src, Tag::Value(t as i32))
+                            })
+                            .collect();
+                        proc.waitall(reqs);
+                    }
+                }
+            }
             Op::Isend => {
                 // Pairing: everywhere: proc i <-> proc half+i (tag 0);
                 // threads: thread t <-> thread t (tag t).
@@ -202,7 +314,13 @@ pub fn message_rate(p: RateParams) -> f64 {
                         let peer = if is_sender_proc { me + half } else { me - half };
                         (world.clone(), None, peer, 0i32)
                     }
-                    Mode::SerCommOrig | Mode::SerCommVcis | Mode::SerCommStriped => {
+                    // The two guard-matched modes above never reach here;
+                    // listed for exhaustiveness.
+                    Mode::SerCommOrig
+                    | Mode::SerCommVcis
+                    | Mode::SerCommStriped
+                    | Mode::SerCommStripedSharded
+                    | Mode::SerCommStripedWildcard => {
                         let peer = 1 - me;
                         (world.clone(), None, peer, t as i32)
                     }
@@ -245,7 +363,9 @@ pub fn message_rate(p: RateParams) -> f64 {
                 if is_sender_proc {
                     let (win, ep_vci) = put_channel(p, proc, t, &wins);
                     let peer = match p.mode {
-                        Mode::Everywhere => me + half,
+                        // Multi-proc topologies: pair with the mirror proc
+                        // on the other node.
+                        Mode::Everywhere | Mode::SerCommStripedSharded => me + half,
                         _ => 1 - me,
                     };
                     let payload = vec![0u8; p.msg_size];
@@ -267,16 +387,34 @@ pub fn message_rate(p: RateParams) -> f64 {
         bar.wait();
         let t1 = crate::platform::pnow(proc.backend);
         if me == 0 && t == 0 {
-            let total = (half * p.threads / if p.mode == Mode::Everywhere { p.threads } else { 1 })
-                as f64;
             // total sender cores:
             let cores = match p.mode {
                 Mode::Everywhere => half,
+                // Multi-source topology: `half` sender procs x threads.
+                Mode::SerCommStripedSharded => half * p.threads,
                 _ => p.threads,
             } as f64;
-            let _ = total;
             let msgs = cores * p.msgs_per_core as f64;
             crate::mpi::world::record("rate", msgs / ((t1 - t0) as f64 / 1e9));
+        }
+        if t == 0 {
+            // Per-proc engine diagnostics for the bench JSON (summable
+            // across ranks via `RateReport::sum_stat`).
+            let (dups, _parked) = proc.reorder_stats();
+            let es = proc.epoch_stats();
+            crate::mpi::world::record(format!("epoch_flips_p{me}"), es.flips as f64);
+            crate::mpi::world::record(format!("epoch_unflips_p{me}"), es.unflips as f64);
+            crate::mpi::world::record(format!("wildcard_posts_p{me}"), es.wildcard_posts as f64);
+            crate::mpi::world::record(
+                format!("doorbell_skips_p{me}"),
+                proc.doorbell_skip_count() as f64,
+            );
+            crate::mpi::world::record(format!("empty_polls_p{me}"), proc.empty_poll_count() as f64);
+            crate::mpi::world::record(
+                format!("stale_ctrl_drops_p{me}"),
+                proc.stale_ctrl_drop_count() as f64,
+            );
+            crate::mpi::world::record(format!("dup_seq_drops_p{me}"), dups as f64);
         }
 
         // ---- teardown ----
@@ -299,7 +437,7 @@ pub fn message_rate(p: RateParams) -> f64 {
         p.mode,
         r.outcome
     );
-    r.measurements["rate"]
+    RateReport { rate: r.measurements["rate"], measurements: r.measurements }
 }
 
 fn put_channel(
@@ -310,7 +448,12 @@ fn put_channel(
 ) -> (Arc<crate::mpi::Window>, Option<usize>) {
     let me = proc.rank();
     match p.mode {
-        Mode::Everywhere | Mode::SerCommOrig | Mode::SerCommVcis | Mode::SerCommStriped => {
+        Mode::Everywhere
+        | Mode::SerCommOrig
+        | Mode::SerCommVcis
+        | Mode::SerCommStriped
+        | Mode::SerCommStripedSharded
+        | Mode::SerCommStripedWildcard => {
             (wins.lock().unwrap().get(&me).unwrap()[0].clone(), None)
         }
         Mode::ParCommOrig | Mode::ParCommVcis => {
@@ -402,6 +545,70 @@ mod tests {
             ..Default::default()
         });
         assert!(hashed > 0.0);
+        // RMA stays out-of-stripe under the sharded config too.
+        let put_sharded = message_rate(RateParams {
+            mode: Mode::SerCommStripedSharded,
+            threads: 2,
+            msgs_per_core: 128,
+            window: 32,
+            op: Op::Put,
+            ..Default::default()
+        });
+        assert!(put_sharded > 0.0);
+    }
+
+    #[test]
+    fn sharded_matching_beats_home_engine_striped() {
+        // The PR-2 tentpole ratio: per-source sharded matching + doorbell
+        // polling vs PR 1's single home engine + round-robin sweep, on
+        // identical multi-source striped traffic (2 sender procs).
+        let base = RateParams {
+            mode: Mode::SerCommStripedSharded,
+            threads: 8,
+            msgs_per_core: 512,
+            window: 32,
+            ..Default::default()
+        };
+        let sharded = message_rate_run(base.clone());
+        let home = message_rate_run(RateParams {
+            cfg_override: Some(crate::mpi::MpiConfig::striped(8 + 1)),
+            ..base
+        });
+        assert!(
+            sharded.rate > home.rate,
+            "per-source sharding + rx doorbells must beat the home engine: \
+             sharded={:.0} home={:.0}",
+            sharded.rate,
+            home.rate
+        );
+        assert!(
+            sharded.sum_stat("doorbell_skips") > 0.0,
+            "doorbell polling must skip empty sweeps"
+        );
+        assert_eq!(home.sum_stat("doorbell_skips"), 0.0, "home arm has no doorbell");
+        assert_eq!(sharded.sum_stat("epoch_flips"), 0.0, "no wildcards -> no epochs");
+        assert_eq!(sharded.sum_stat("dup_seq_drops"), 0.0);
+        assert_eq!(sharded.sum_stat("stale_ctrl_drops"), 0.0);
+    }
+
+    #[test]
+    fn wildcard_storm_exercises_epochs_and_completes() {
+        let r = message_rate_run(RateParams {
+            mode: Mode::SerCommStripedWildcard,
+            threads: 4,
+            msgs_per_core: 256,
+            window: 32,
+            ..Default::default()
+        });
+        assert!(r.rate > 0.0);
+        assert!(r.sum_stat("wildcard_posts") > 0.0, "storm posts wildcards");
+        assert!(r.sum_stat("epoch_flips") > 0.0, "wildcards must flip epochs");
+        assert_eq!(
+            r.sum_stat("epoch_flips"),
+            r.sum_stat("epoch_unflips"),
+            "every epoch must resolve by quiescence"
+        );
+        assert_eq!(r.sum_stat("dup_seq_drops"), 0.0);
     }
 
     #[test]

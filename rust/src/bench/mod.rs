@@ -5,7 +5,7 @@
 pub mod figures;
 pub mod message_rate;
 
-pub use message_rate::{message_rate, Mode, Op, RateParams};
+pub use message_rate::{message_rate, message_rate_run, Mode, Op, RateParams, RateReport};
 
 /// A simple CSV emitter for figure output.
 pub struct Csv {

@@ -8,12 +8,78 @@
 //! is exactly what multi-VCI exploits.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::platform::{padvance, pnow, Backend};
 use crate::sim::CostModel;
 
 use super::wire::{Payload, ProcId, WireMsg};
+
+/// Rx-nonempty doorbell shared by a group of contexts (one per VCI pool):
+/// bit `i` is set while context `i`'s rx queue holds messages, so a
+/// progress sweep can skip contexts with nothing queued instead of paying
+/// an empty CQ read per context. Models the NIC's event/interrupt
+/// coalescing word: maintained by hardware (deliver) for free, read by
+/// software with one load.
+pub struct RxDoorbell {
+    words: Vec<AtomicU64>,
+}
+
+impl RxDoorbell {
+    pub fn new(slots: usize) -> Arc<Self> {
+        let words = (0..slots.div_ceil(64)).map(|_| AtomicU64::new(0)).collect();
+        Arc::new(RxDoorbell { words })
+    }
+
+    fn set(&self, slot: usize) {
+        self.words[slot / 64].fetch_or(1 << (slot % 64), Ordering::Release);
+    }
+
+    fn clear(&self, slot: usize) {
+        self.words[slot / 64].fetch_and(!(1 << (slot % 64)), Ordering::Release);
+    }
+
+    /// Is slot `i`'s bit currently set?
+    pub fn is_set(&self, slot: usize) -> bool {
+        self.words[slot / 64].load(Ordering::Acquire) & (1 << (slot % 64)) != 0
+    }
+
+    /// Any bit set at all? (One load per 64 slots.)
+    pub fn any_set(&self) -> bool {
+        self.words.iter().any(|w| w.load(Ordering::Acquire) != 0)
+    }
+
+    /// First set slot in `< n`, scanning circularly from `start`. `None`
+    /// when no doorbell is rung. One atomic load per 64 slots: whole
+    /// words are scanned with `trailing_zeros`, with the first word's
+    /// below-`start` bits masked off and re-visited after the wrap.
+    pub fn next_set(&self, start: usize, n: usize) -> Option<usize> {
+        if n == 0 {
+            return None;
+        }
+        let start = start % n;
+        let nwords = self.words.len();
+        let first = start / 64;
+        let low_mask = !(!0u64 << (start % 64)); // bits strictly below start
+        for step in 0..=nwords {
+            let wi = (first + step) % nwords;
+            let mut w = self.words[wi].load(Ordering::Acquire);
+            if step == 0 {
+                w &= !low_mask; // at or above start
+            } else if step == nwords {
+                w &= low_mask; // the wrapped-around remainder
+            }
+            if w != 0 {
+                let slot = wi * 64 + w.trailing_zeros() as usize;
+                // Slots >= n are never set (no context is bound there).
+                debug_assert!(slot < n, "doorbell bit {slot} beyond pool size {n}");
+                return Some(slot);
+            }
+        }
+        None
+    }
+}
 
 /// Receive side of a hardware context.
 pub struct HwContext {
@@ -23,17 +89,32 @@ pub struct HwContext {
     /// keeps the host-side data structure sane; it charges no virtual
     /// time (the explicit rx/poll costs model the CQ reads).
     rx: Mutex<VecDeque<WireMsg>>,
+    /// Installed by the owning VCI pool: (shared doorbell, this context's
+    /// slot). Set/cleared under the rx lock, so the bit can never lag a
+    /// delivery: any message pushed while the bit reads clear is pushed
+    /// before the next poll observes the queue.
+    doorbell: OnceLock<(Arc<RxDoorbell>, usize)>,
     backend: Backend,
 }
 
 impl HwContext {
     pub fn new(backend: Backend) -> Self {
-        HwContext { rx: Mutex::new(VecDeque::new()), backend }
+        HwContext { rx: Mutex::new(VecDeque::new()), doorbell: OnceLock::new(), backend }
+    }
+
+    /// Bind this context's rx queue to `slot` of a pool-wide doorbell.
+    /// Installing twice is a no-op (contexts bind to exactly one VCI).
+    pub fn install_doorbell(&self, bell: Arc<RxDoorbell>, slot: usize) {
+        let _ = self.doorbell.set((bell, slot));
     }
 
     /// Deliver a message (called by remote injectors / the wire).
     pub fn deliver(&self, msg: WireMsg) {
-        self.rx.lock().unwrap_or_else(|e| e.into_inner()).push_back(msg);
+        let mut q = self.rx.lock().unwrap_or_else(|e| e.into_inner());
+        q.push_back(msg);
+        if let Some((bell, slot)) = self.doorbell.get() {
+            bell.set(*slot);
+        }
     }
 
     /// Poll for one arrived message. Messages still "in flight" (arrival in
@@ -45,40 +126,35 @@ impl HwContext {
         match q.front() {
             Some(m) if m.arrival <= now => {
                 padvance(self.backend, costs.nic_rx_deliver);
-                q.pop_front()
+                let msg = q.pop_front();
+                if q.is_empty() {
+                    self.clear_doorbell();
+                }
+                msg
             }
             Some(m) => {
                 // Head-of-line message is still on the wire: model the CQ
-                // read that found nothing ready.
+                // read that found nothing ready. The doorbell stays rung —
+                // the message is queued, just not yet visible.
                 let _ = m;
                 padvance(self.backend, costs.poll_empty);
                 None
             }
             None => {
                 padvance(self.backend, costs.poll_empty);
+                self.clear_doorbell();
                 None
             }
         }
     }
 
-    /// Like [`HwContext::poll`], but pops the head message only when it
-    /// has arrived AND satisfies `pred`. Used by the striped progress
-    /// path to drain a contiguous run of re-routable messages in one
-    /// sweep; a failed predicate charges nothing (the CQ entry was
-    /// already read by the preceding poll of this sweep).
-    pub fn poll_if(
-        &self,
-        costs: &CostModel,
-        pred: impl FnOnce(&WireMsg) -> bool,
-    ) -> Option<WireMsg> {
-        let mut q = self.rx.lock().unwrap_or_else(|e| e.into_inner());
-        let now = pnow(self.backend);
-        match q.front() {
-            Some(m) if m.arrival <= now && pred(m) => {
-                padvance(self.backend, costs.nic_rx_deliver);
-                q.pop_front()
-            }
-            _ => None,
+    /// Clear this context's doorbell bit. Callers hold the rx lock with
+    /// the queue observed empty, so a concurrent deliver re-sets the bit
+    /// only after its push — the bit never reads clear with a message
+    /// sitting in the queue.
+    fn clear_doorbell(&self) {
+        if let Some((bell, slot)) = self.doorbell.get() {
+            bell.clear(*slot);
         }
     }
 
@@ -167,6 +243,43 @@ mod tests {
             assert!(crate::sim::now() >= m.arrival);
         });
         assert_eq!(sim.run().outcome, SimOutcome::Completed);
+    }
+
+    #[test]
+    fn doorbell_tracks_rx_nonempty() {
+        let costs = Arc::new(CostModel::default());
+        let ctx = HwContext::new(Backend::Native);
+        let bell = RxDoorbell::new(3);
+        ctx.install_doorbell(bell.clone(), 2);
+        assert!(!bell.any_set());
+        assert_eq!(bell.next_set(0, 3), None);
+        let inj = Injector::new(0, 0, Backend::Native, costs.clone());
+        inj.inject(&ctx, Payload::SendAck { send_handle: 1 });
+        inj.inject(&ctx, Payload::SendAck { send_handle: 2 });
+        assert!(bell.is_set(2));
+        assert_eq!(bell.next_set(0, 3), Some(2));
+        assert_eq!(bell.next_set(2, 3), Some(2), "scan is circular from start");
+        std::thread::sleep(std::time::Duration::from_micros(5));
+        assert!(ctx.poll(&costs).is_some());
+        assert!(bell.is_set(2), "bit stays rung while messages remain");
+        assert!(ctx.poll(&costs).is_some());
+        assert!(!bell.is_set(2), "draining the queue clears the bit");
+        assert!(ctx.poll(&costs).is_none());
+        assert!(!bell.any_set());
+    }
+
+    #[test]
+    fn doorbell_multiword_slots() {
+        let bell = RxDoorbell::new(130);
+        bell.set(0);
+        bell.set(127);
+        bell.set(129);
+        assert!(bell.is_set(127) && bell.is_set(129) && bell.is_set(0));
+        assert_eq!(bell.next_set(1, 130), Some(127));
+        bell.clear(127);
+        assert_eq!(bell.next_set(1, 130), Some(129));
+        bell.clear(129);
+        assert_eq!(bell.next_set(1, 130), Some(0), "wraps to the low word");
     }
 
     #[test]

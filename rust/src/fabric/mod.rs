@@ -22,7 +22,7 @@ mod context;
 mod registry;
 mod wire;
 
-pub use context::{HwContext, Injector};
+pub use context::{HwContext, Injector, RxDoorbell};
 pub use registry::{FabricConfig, Network, ProcFabric, WindowMem};
 pub use wire::{AccOp, P2pProtocol, Payload, ProcId, RmaCompletion, WireMsg, WinId};
 

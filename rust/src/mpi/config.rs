@@ -84,6 +84,28 @@ pub struct MpiConfig {
     /// Per-message VCI striping with receiver-side seq reordering: lets a
     /// single hot communicator use the whole pool. See [`VciStriping`].
     pub vci_striping: VciStriping,
+    /// Per-communicator matching shards for striped traffic (rounded up to
+    /// a power of two; `1` = one serialized engine per communicator, the
+    /// PR-1 "home engine" behavior). Each `(comm, source rank)` stream is
+    /// owned by exactly one shard, so striped arrivals match on the VCI
+    /// they land on instead of funneling through the communicator's home
+    /// VCI. `MPI_ANY_SOURCE` flips the communicator into a serialized
+    /// wildcard epoch (see `mpi::shard`). All processes of a job must
+    /// agree on this setting, like `num_vcis`.
+    pub match_shards: usize,
+    /// Wildcard-epoch hysteresis: stay in the serialized epoch for this
+    /// many additional operations (striped arrivals or concrete posts)
+    /// after the last pending wildcard receive completes (amortizes epoch
+    /// flip-flapping under wildcard storms). `0` = flip back to sharded
+    /// matching immediately. With a nonzero linger, a communicator that
+    /// goes idle right after its last wildcard stays serialized — at zero
+    /// cost — until `linger` further operations arrive.
+    pub wildcard_epoch_linger: u32,
+    /// Doorbell-gated striped progress: the sweep over the pool consults a
+    /// per-pool "rx nonempty" bitmask maintained by the fabric and skips
+    /// entirely when no VCI has pending arrivals, instead of paying an
+    /// empty poll per VCI (round-robin, the PR-1 behavior).
+    pub rx_doorbell: bool,
     /// Eagerly claimed hints (MPI-4.0 info-style, §7): see [`Hints`].
     pub hints: Hints,
 }
@@ -117,6 +139,9 @@ impl MpiConfig {
             unsafe_no_thread_safety: false,
             vci_policy: VciPolicy::FirstComePool,
             vci_striping: VciStriping::Off,
+            match_shards: 1,
+            wildcard_epoch_linger: 0,
+            rx_doorbell: false,
             hints: Hints::default(),
         }
     }
@@ -139,6 +164,9 @@ impl MpiConfig {
             unsafe_no_thread_safety: false,
             vci_policy: VciPolicy::FirstComePool,
             vci_striping: VciStriping::Off,
+            match_shards: 1,
+            wildcard_epoch_linger: 0,
+            rx_doorbell: false,
             hints: Hints::default(),
         }
     }
@@ -146,8 +174,19 @@ impl MpiConfig {
     /// The optimized library with per-message VCI striping on: one hot
     /// communicator's sends fan out across the whole pool and the receiver
     /// restores nonovertaking order per stream (round-robin selection).
+    /// A single matching shard and no doorbell polling: the PR-1 "home
+    /// engine" arm, kept as the sharding ablation baseline.
     pub fn striped(num_vcis: usize) -> Self {
         MpiConfig { vci_striping: VciStriping::RoundRobin, ..Self::optimized(num_vcis) }
+    }
+
+    /// Striping with per-source sharded matching and doorbell-gated
+    /// progress: striped arrivals match on the VCI they land on (each
+    /// `(comm, src)` stream owned by one of 8 shards; `MPI_ANY_SOURCE`
+    /// serializes via the wildcard-epoch protocol), and waiters skip the
+    /// pool sweep when no rx queue has pending arrivals.
+    pub fn striped_sharded(num_vcis: usize) -> Self {
+        MpiConfig { match_shards: 8, rx_doorbell: true, ..Self::striped(num_vcis) }
     }
 
     /// MPI-everywhere personality: a single-threaded process needs no
@@ -164,6 +203,9 @@ impl MpiConfig {
             unsafe_no_thread_safety: true, // no threads -> no locks, like a real rank-per-core build
             vci_policy: VciPolicy::FirstComePool,
             vci_striping: VciStriping::Off,
+            match_shards: 1,
+            wildcard_epoch_linger: 0,
+            rx_doorbell: false,
             hints: Hints::default(),
         }
     }
@@ -200,5 +242,17 @@ mod tests {
         assert_eq!(s.vci_striping, VciStriping::RoundRobin);
         assert_eq!(s.num_vcis, 8);
         assert_eq!(s.cs_mode, CsMode::Fg, "striping rides on the optimized config");
+    }
+
+    #[test]
+    fn sharded_preset_extends_striped() {
+        let s = MpiConfig::striped(8);
+        assert_eq!(s.match_shards, 1, "plain striped keeps the PR-1 home engine");
+        assert!(!s.rx_doorbell);
+        let sh = MpiConfig::striped_sharded(8);
+        assert_eq!(sh.vci_striping, VciStriping::RoundRobin);
+        assert_eq!(sh.match_shards, 8);
+        assert!(sh.rx_doorbell);
+        assert_eq!(sh.wildcard_epoch_linger, 0);
     }
 }

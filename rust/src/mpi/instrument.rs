@@ -12,16 +12,20 @@ thread_local! {
     static LOCKS_REQUEST: Cell<u64> = const { Cell::new(0) };
     static LOCKS_GLOBAL: Cell<u64> = const { Cell::new(0) };
     static LOCKS_HOOK: Cell<u64> = const { Cell::new(0) };
+    static LOCKS_SHARD: Cell<u64> = const { Cell::new(0) };
     static ATOMIC_OPS: Cell<u64> = const { Cell::new(0) };
 }
 
-/// Which class of lock was taken (paper Table 1's columns).
+/// Which class of lock was taken (paper Table 1's columns, plus the
+/// matching-shard locks introduced by per-source sharded matching).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LockClass {
     Global,
     Vci,
     Request,
     Hook,
+    /// A per-communicator matching shard (see `mpi::shard`).
+    Shard,
 }
 
 pub fn count_lock(class: LockClass) {
@@ -30,6 +34,7 @@ pub fn count_lock(class: LockClass) {
         LockClass::Vci => &LOCKS_VCI,
         LockClass::Request => &LOCKS_REQUEST,
         LockClass::Hook => &LOCKS_HOOK,
+        LockClass::Shard => &LOCKS_SHARD,
     };
     cell.with(|c| c.set(c.get() + 1));
 }
@@ -45,12 +50,14 @@ pub struct OpCounters {
     pub vci_locks: u64,
     pub request_locks: u64,
     pub hook_locks: u64,
+    pub shard_locks: u64,
     pub atomics: u64,
 }
 
 impl OpCounters {
     pub fn total_locks(&self) -> u64 {
         self.global_locks + self.vci_locks + self.request_locks + self.hook_locks
+            + self.shard_locks
     }
 }
 
@@ -62,6 +69,7 @@ impl std::ops::Sub for OpCounters {
             vci_locks: self.vci_locks - rhs.vci_locks,
             request_locks: self.request_locks - rhs.request_locks,
             hook_locks: self.hook_locks - rhs.hook_locks,
+            shard_locks: self.shard_locks - rhs.shard_locks,
             atomics: self.atomics - rhs.atomics,
         }
     }
@@ -75,8 +83,103 @@ pub fn snapshot() -> OpCounters {
         vci_locks: LOCKS_VCI.with(|c| c.get()),
         request_locks: LOCKS_REQUEST.with(|c| c.get()),
         hook_locks: LOCKS_HOOK.with(|c| c.get()),
+        shard_locks: LOCKS_SHARD.with(|c| c.get()),
         atomics: ATOMIC_OPS.with(|c| c.get()),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide diagnostic counters
+// ---------------------------------------------------------------------------
+//
+// Unlike the per-thread critical-path counters above, these aggregate over
+// every thread (and, in a simulated cluster, every rank) of the host
+// process: they exist so a bench run can snapshot "what did the engine do"
+// — dropped control messages, wildcard-epoch flips, empty polls — into its
+// JSON report without plumbing every `MpiProc` out of the workload closure.
+
+static STALE_CTRL_DROPS: AtomicU64 = AtomicU64::new(0);
+static DUP_SEQ_DROPS: AtomicU64 = AtomicU64::new(0);
+static EPOCH_FLIPS: AtomicU64 = AtomicU64::new(0);
+static EPOCH_UNFLIPS: AtomicU64 = AtomicU64::new(0);
+static WILDCARD_POSTS: AtomicU64 = AtomicU64::new(0);
+static EMPTY_POLLS: AtomicU64 = AtomicU64::new(0);
+static DOORBELL_SKIPS: AtomicU64 = AtomicU64::new(0);
+
+pub fn record_stale_ctrl_drop() {
+    STALE_CTRL_DROPS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn record_dup_seq_drop() {
+    DUP_SEQ_DROPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One flip INTO the serialized wildcard epoch.
+pub fn record_epoch_flip() {
+    EPOCH_FLIPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One flip back OUT of the serialized wildcard epoch.
+pub fn record_epoch_unflip() {
+    EPOCH_UNFLIPS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn record_wildcard_post() {
+    WILDCARD_POSTS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A hardware-context poll that found nothing ready.
+pub fn record_empty_poll() {
+    EMPTY_POLLS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A striped-progress sweep skipped outright because no rx doorbell was
+/// rung (the poll that never happened).
+pub fn record_doorbell_skip() {
+    DOORBELL_SKIPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Aggregate engine diagnostics since the last [`reset_proc_counters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProcCounters {
+    /// Stale/duplicate/malformed wire control messages dropped.
+    pub stale_ctrl_drops: u64,
+    /// Striped arrivals dropped for a duplicate sequence number.
+    pub dup_seq_drops: u64,
+    /// Wildcard-epoch entries (flips into serialized matching).
+    pub epoch_flips: u64,
+    /// Wildcard-epoch exits (flips back to sharded matching).
+    pub epoch_unflips: u64,
+    /// `MPI_ANY_SOURCE` receives posted on sharded communicators.
+    pub wildcard_posts: u64,
+    /// Context polls that found nothing ready.
+    pub empty_polls: u64,
+    /// Striped sweeps skipped because no doorbell bit was set.
+    pub doorbell_skips: u64,
+}
+
+pub fn proc_counters() -> ProcCounters {
+    ProcCounters {
+        stale_ctrl_drops: STALE_CTRL_DROPS.load(Ordering::Relaxed),
+        dup_seq_drops: DUP_SEQ_DROPS.load(Ordering::Relaxed),
+        epoch_flips: EPOCH_FLIPS.load(Ordering::Relaxed),
+        epoch_unflips: EPOCH_UNFLIPS.load(Ordering::Relaxed),
+        wildcard_posts: WILDCARD_POSTS.load(Ordering::Relaxed),
+        empty_polls: EMPTY_POLLS.load(Ordering::Relaxed),
+        doorbell_skips: DOORBELL_SKIPS.load(Ordering::Relaxed),
+    }
+}
+
+/// Zero the process-wide counters (bench harnesses call this between runs;
+/// racing workloads only smear counts between adjacent runs, never panic).
+pub fn reset_proc_counters() {
+    STALE_CTRL_DROPS.store(0, Ordering::Relaxed);
+    DUP_SEQ_DROPS.store(0, Ordering::Relaxed);
+    EPOCH_FLIPS.store(0, Ordering::Relaxed);
+    EPOCH_UNFLIPS.store(0, Ordering::Relaxed);
+    WILDCARD_POSTS.store(0, Ordering::Relaxed);
+    EMPTY_POLLS.store(0, Ordering::Relaxed);
+    DOORBELL_SKIPS.store(0, Ordering::Relaxed);
 }
 
 /// A completion/reference counter whose *data* is always a host atomic
@@ -150,12 +253,36 @@ mod tests {
         count_lock(LockClass::Vci);
         count_lock(LockClass::Vci);
         count_lock(LockClass::Request);
+        count_lock(LockClass::Shard);
         count_atomic();
         let d = snapshot() - base;
         assert_eq!(d.vci_locks, 2);
         assert_eq!(d.request_locks, 1);
+        assert_eq!(d.shard_locks, 1);
         assert_eq!(d.atomics, 1);
-        assert_eq!(d.total_locks(), 3);
+        assert_eq!(d.total_locks(), 4);
+    }
+
+    #[test]
+    fn proc_counters_are_monotonic_across_records() {
+        // Global counters shared with concurrently running tests: assert
+        // deltas, not absolutes.
+        let before = proc_counters();
+        record_stale_ctrl_drop();
+        record_dup_seq_drop();
+        record_epoch_flip();
+        record_epoch_unflip();
+        record_wildcard_post();
+        record_empty_poll();
+        record_doorbell_skip();
+        let after = proc_counters();
+        assert!(after.stale_ctrl_drops >= before.stale_ctrl_drops + 1);
+        assert!(after.dup_seq_drops >= before.dup_seq_drops + 1);
+        assert!(after.epoch_flips >= before.epoch_flips + 1);
+        assert!(after.epoch_unflips >= before.epoch_unflips + 1);
+        assert!(after.wildcard_posts >= before.wildcard_posts + 1);
+        assert!(after.empty_polls >= before.empty_polls + 1);
+        assert!(after.doorbell_skips >= before.doorbell_skips + 1);
     }
 
     #[test]

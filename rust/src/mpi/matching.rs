@@ -5,7 +5,10 @@
 //! One `MatchingState` lives inside each VCI. Without striping, all
 //! traffic of the communicators mapped to that VCI funnels through it,
 //! which is precisely how the standard's ordering constraints are
-//! preserved (paper §2.1).
+//! preserved (paper §2.1). With striping, additional `MatchingState`
+//! instances serve as the **shards** of a per-communicator sharded engine
+//! (see `mpi::shard`): one `(comm, source)` stream per shard, each shard
+//! owning the full reorder + match pipeline for its streams.
 //!
 //! # Receiver-side reorder stage (VCI striping)
 //!
@@ -27,6 +30,30 @@
 //! admission order per stream equals send order, so the unexpected queue
 //! and posted-queue scans below see striped traffic exactly as if it had
 //! arrived on a single VCI.
+//!
+//! # Sharded matching and the wildcard-epoch state machine
+//!
+//! PR 1 ran this stage on the communicator's *home* VCI, re-serializing
+//! the receive side. Now the stage runs inside one of the communicator's
+//! matching shards — `shard(hash(comm, src))` — locked by whichever VCI
+//! polled the envelope, so different sources match concurrently. The
+//! wildcard state machine (implemented in `mpi::shard`) has two states:
+//!
+//! * **Sharded** (no `MPI_ANY_SOURCE` pending): concrete-source receives
+//!   and striped arrivals route to their stream's shard; the only shared
+//!   cost is an atomic mode load.
+//! * **Serialized epoch**: posting a wildcard receive drains every shard
+//!   into the home shard (stream order preserved — a stream never spans
+//!   shards) and routes all traffic there, restoring single-engine
+//!   semantics so the wildcard can match any source. The epoch ends when
+//!   the last pending wildcard completes (plus an optional
+//!   `wildcard_epoch_linger` hysteresis), splitting the home shard's
+//!   state back out by source.
+//!
+//! Transitions migrate queue and reorder-stage state with
+//! [`MatchingState::take_parts`] / [`MatchingState::absorb_parts`]; both
+//! directions preserve per-stream queue order and `next_seq` continuity,
+//! which is all MPI's nonovertaking rule observes.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
@@ -85,7 +112,7 @@ pub struct UnexpectedMsg {
 }
 
 /// Per-stream sequencing state for the striped-traffic reorder stage.
-struct StreamOrder {
+pub(crate) struct StreamOrder {
     /// Next sender sequence number to admit (sender counters start at 1).
     next_seq: u64,
     /// Ahead-of-order arrivals parked until the gap fills, keyed by seq.
@@ -190,6 +217,7 @@ impl MatchingState {
             .or_insert_with(StreamOrder::new);
         if msg.seq < stream.next_seq || stream.parked.contains_key(&msg.seq) {
             self.dup_seq_drops += 1;
+            super::instrument::record_dup_seq_drop();
             return Vec::new();
         }
         if msg.seq > stream.next_seq {
@@ -228,6 +256,77 @@ impl MatchingState {
     /// (1 if the stream has never been seen). Test/debug aid.
     pub fn next_expected_seq(&self, comm_id: u64, src_rank: usize) -> u64 {
         self.streams.get(&(comm_id, src_rank)).map_or(1, |s| s.next_seq)
+    }
+
+    // ---- state migration (wildcard-epoch transitions, `mpi::shard`) ----
+
+    /// Move every posted receive, unexpected message, and reorder-stream
+    /// record out of this engine (the duplicate-drop counter stays — it is
+    /// a diagnostic of this engine, not of the traffic).
+    pub(crate) fn take_parts(&mut self) -> MatchingParts {
+        MatchingParts {
+            posted: std::mem::take(&mut self.posted),
+            unexpected: std::mem::take(&mut self.unexpected),
+            streams: std::mem::take(&mut self.streams),
+        }
+    }
+
+    /// Append another engine's state behind this engine's own. Within each
+    /// `(comm, src)` stream both queue order and reorder-stage continuity
+    /// are preserved because a stream lives wholly in one engine at a time;
+    /// cross-stream interleaving is not an MPI-visible order.
+    pub(crate) fn absorb_parts(&mut self, parts: MatchingParts) {
+        self.posted.extend(parts.posted);
+        self.unexpected.extend(parts.unexpected);
+        for (key, stream) in parts.streams {
+            let prev = self.streams.insert(key, stream);
+            debug_assert!(prev.is_none(), "stream {key:?} split across matching engines");
+        }
+    }
+
+    /// Is there any posted/unexpected/reorder state in this engine?
+    pub(crate) fn is_idle(&self) -> bool {
+        self.posted.is_empty() && self.unexpected.is_empty() && self.streams.is_empty()
+    }
+}
+
+/// Matching-engine state in transit between engines (epoch flips).
+pub(crate) struct MatchingParts {
+    pub(crate) posted: VecDeque<PostedRecv>,
+    pub(crate) unexpected: VecDeque<UnexpectedMsg>,
+    pub(crate) streams: HashMap<(u64, usize), StreamOrder>,
+}
+
+impl MatchingParts {
+    /// Split by source rank into `n` buckets via `route` (posted receives
+    /// route by their concrete source; wildcard receives must not be in
+    /// transit when splitting — epoch flip-back requires all wildcards
+    /// completed). Relative order within a bucket is preserved.
+    pub(crate) fn split_by_source(self, n: usize, route: impl Fn(usize) -> usize) -> Vec<Self> {
+        let mut out: Vec<MatchingParts> = (0..n)
+            .map(|_| MatchingParts {
+                posted: VecDeque::new(),
+                unexpected: VecDeque::new(),
+                streams: HashMap::new(),
+            })
+            .collect();
+        for p in self.posted {
+            let idx = match p.src {
+                Src::Rank(r) => route(r),
+                // Unreachable by the epoch protocol; keep it in bucket 0
+                // (the home shard) rather than dropping a receive.
+                Src::Any => 0,
+            };
+            out[idx].posted.push_back(p);
+        }
+        for m in self.unexpected {
+            let idx = route(m.src_rank);
+            out[idx].unexpected.push_back(m);
+        }
+        for ((comm, src), s) in self.streams {
+            out[route(src)].streams.insert((comm, src), s);
+        }
+        out
     }
 }
 

@@ -6,6 +6,7 @@
 //!  * [`config`] — every knob the paper ablates
 //!  * [`vci`] — VCI objects, pool, mapping policies, lock discipline
 //!  * [`matching`] — <comm, rank, tag> matching with wildcards + ordering
+//!  * [`shard`] — per-source sharded matching + wildcard epochs (striping)
 //!  * [`request`] — global pool / per-VCI caches / lightweight requests
 //!  * [`p2p`] — isend/irecv/ssend/wait and the eager/rendezvous protocols
 //!  * [`progress`] — per-VCI / global / hybrid progress + wire handlers
@@ -28,12 +29,14 @@ pub mod proc;
 pub mod progress;
 pub mod request;
 pub mod rma;
+pub mod shard;
 pub mod vci;
 pub mod world;
 
 pub use comm::{Comm, CommKind};
 pub use config::{CsMode, Hints, MpiConfig, VciPolicy, VciStriping};
 pub use matching::{Src, Tag};
+pub use shard::{CommMatch, EpochStats};
 pub use proc::MpiProc;
 pub use request::Request;
 pub use rma::{GetHandle, Window};

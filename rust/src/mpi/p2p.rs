@@ -252,13 +252,32 @@ impl MpiProc {
         padvance(self.backend, self.costs.mpi_sw_recv + self.costs.instructions(8));
         let _cs = self.enter_cs();
         let guard = self.guard();
-        // Under striping every arrival is admitted to the communicator's
-        // HOME VCI (after seq reordering), so receives post there — the
-        // hinted envelope mapping is superseded and wildcards stay legal.
-        let hinted = self.cfg.hints.no_any_source
-            && self.cfg.hints.no_any_tag
-            && !comm.is_endpoints()
-            && !self.striping_active(comm);
+        // Under striping, receives post into the communicator's sharded
+        // matching engine: a concrete source goes to the shard that owns
+        // its stream (matched by whichever VCI polls the arrival), and
+        // MPI_ANY_SOURCE enters the serialized wildcard epoch — wildcards
+        // stay fully legal, unlike the §7 envelope hints. The request
+        // object still comes from the comm's home-VCI cache; its lock is
+        // no longer on the arrival path, so this alloc is cheap.
+        if my_ep.is_none() && self.striping_active(comm) {
+            let vci_idx = self.comm_vci(comm, None);
+            let vci = self.vcis().get(vci_idx).clone();
+            let (id, cm) = vci.with_state(guard, |st| {
+                let id = self.alloc_request(st);
+                self.slab.slot(id).vci.store(vci_idx, std::sync::atomic::Ordering::Relaxed);
+                (id, self.cached_comm_match(st, comm.id))
+            });
+            padvance(self.backend, self.costs.instructions(3) + self.costs.match_cost);
+            let posted = PostedRecv { comm_id: comm.id, src, tag, req: id };
+            if let Some(m) = cm.post(posted) {
+                // Matched straight off the unexpected queue (wildcard
+                // epoch accounting, if any, happened inside `post`).
+                self.consume_matched(vci.ctx_index, id, m);
+            }
+            return Request::Real { id, vci: vci_idx };
+        }
+        let hinted =
+            self.cfg.hints.no_any_source && self.cfg.hints.no_any_tag && !comm.is_endpoints();
         let vci_idx = if hinted && my_ep.is_none() {
             // The asserted hints forbid wildcards: the envelope is fully
             // specified and selects the stream.
@@ -279,7 +298,7 @@ impl MpiProc {
             padvance(self.backend, self.costs.instructions(3) + self.costs.match_cost);
             let posted = PostedRecv { comm_id: comm.id, src, tag, req: id };
             if let Some(m) = st.matching.on_post(posted) {
-                self.consume_matched(st, vci.ctx_index, id, m);
+                self.consume_matched(vci.ctx_index, id, m);
             }
             Request::Real { id, vci: vci_idx }
         })
@@ -287,13 +306,7 @@ impl MpiProc {
 
     /// Deliver a matched unexpected message into recv request `id`
     /// (either eagerly, or by answering an RTS with a CTS).
-    pub(super) fn consume_matched(
-        &self,
-        _st: &mut VciState,
-        my_ctx_index: usize,
-        id: ReqId,
-        m: UnexpectedMsg,
-    ) {
+    pub(super) fn consume_matched(&self, my_ctx_index: usize, id: ReqId, m: UnexpectedMsg) {
         match m.arrival {
             Arrival::Eager { data, needs_ack } => {
                 padvance(
@@ -339,6 +352,7 @@ impl MpiProc {
             || sender.src_ctx >= self.fabric.open_count(sender.src_proc)
         {
             self.stale_ctrl_drops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            super::instrument::record_stale_ctrl_drop();
             return;
         }
         self.fabric.inject(my_ctx_index, sender.src_proc, sender.src_ctx, payload);

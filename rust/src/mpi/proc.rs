@@ -16,7 +16,8 @@ use super::config::{CsMode, MpiConfig, VciStriping};
 use super::instrument::{count_lock, LockClass};
 use super::request::{RequestSlab, DEFAULT_SLAB_CAPACITY};
 use super::rma::Window;
-use super::vci::{guard_for, Guard, VciPool, FALLBACK_VCI};
+use super::shard::{CommMatch, EpochStats};
+use super::vci::{guard_for, Guard, VciPool, VciState, FALLBACK_VCI};
 
 thread_local! {
     static ACTIVE_COSTS: RefCell<Option<Arc<CostModel>>> = const { RefCell::new(None) };
@@ -88,6 +89,17 @@ pub struct MpiProc {
     /// Striping: rotation cursor for progress polling (a striped comm's
     /// traffic lands on every VCI, so waiters sweep the whole pool).
     stripe_poll_rr: AtomicUsize,
+    /// Sharded matching engines, one per communicator seen carrying
+    /// striped traffic (created lazily; see `mpi::shard`). Host mutex: the
+    /// lookup models a comm-id indexed table walk, free in virtual time.
+    match_engines: Mutex<HashMap<u64, Arc<CommMatch>>>,
+    /// Doorbell-gated sweeps skipped outright (no rx bit rung).
+    pub(super) doorbell_skips: AtomicU64,
+    /// Context polls that found nothing ready.
+    pub(super) empty_polls: AtomicU64,
+    /// Consecutive doorbell skips (drives the paranoid global-round
+    /// fallback, mirroring the per-VCI hybrid progress counter).
+    pub(super) skip_streak: AtomicUsize,
     /// Counted diagnostic: stale, duplicate, or malformed wire control
     /// messages dropped by the progress engine instead of panicking
     /// (e.g. a CTS for an unknown rendezvous send).
@@ -120,6 +132,10 @@ impl MpiProc {
             stripe_seq: Mutex::new(HashMap::new()),
             stripe_rr: AtomicUsize::new(0),
             stripe_poll_rr: AtomicUsize::new(0),
+            match_engines: Mutex::new(HashMap::new()),
+            doorbell_skips: AtomicU64::new(0),
+            empty_polls: AtomicU64::new(0),
+            skip_streak: AtomicUsize::new(0),
             stale_ctrl_drops: AtomicU64::new(0),
             fabric,
         })
@@ -184,6 +200,11 @@ impl MpiProc {
             self.cfg.cache_aligned_vcis,
             self.cfg.vci_policy,
         );
+        // Wire the pool's rx doorbell into each VCI's hardware context so
+        // delivery rings bit `i` and the striped sweep can skip idle VCIs.
+        for (i, &ctx_idx) in ctx_indices.iter().enumerate() {
+            self.fabric.context(self.rank(), ctx_idx).install_doorbell(pool.doorbell().clone(), i);
+        }
         self.vcis.set(pool).ok().expect("init raced");
 
         // PMI exchange of fallback addresses: every rank inserts every other
@@ -334,24 +355,51 @@ impl MpiProc {
             return self.comm_vci(comm, None);
         }
         // SplitMix-style scramble of the full envelope.
-        let mut z = comm
-            .id
-            .wrapping_mul(0x9E3779B97F4A7C15)
-            .wrapping_add((src_rank as u64) << 32)
-            .wrapping_add(tag as u32 as u64);
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z ^= z >> 27;
+        let z = crate::util::mix64(
+            comm.id
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add((src_rank as u64) << 32)
+                .wrapping_add(tag as u32 as u64),
+        );
         1 + (z % (self.vcis().len() as u64 - 1)) as usize
     }
 
     /// Does per-message VCI striping apply to two-sided traffic on `comm`?
     /// Endpoints communicators are excluded (each endpoint IS a dedicated
-    /// VCI — striping would defeat their contract), as are single-VCI
-    /// pools (nothing to stripe over).
+    /// VCI — striping would defeat their contract). Deliberately NOT a
+    /// function of the local pool size: the predicate decides whether
+    /// receives post into the sharded engine, and it must match the
+    /// sender's decision to mark envelopes striped even when one side's
+    /// hardware granted fewer contexts (a single-VCI pool then stripes
+    /// degenerately onto its one lane).
     pub fn striping_active(&self, comm: &Comm) -> bool {
-        self.cfg.vci_striping != VciStriping::Off
-            && !comm.is_endpoints()
-            && self.vcis().len() > 1
+        self.cfg.vci_striping != VciStriping::Off && !comm.is_endpoints()
+    }
+
+    /// The sharded matching engine for a striped communicator (created on
+    /// first use; all two-sided traffic of a striped comm funnels here
+    /// instead of the per-VCI engines).
+    pub fn comm_match(&self, comm_id: u64) -> Arc<CommMatch> {
+        let mut table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+        table
+            .entry(comm_id)
+            .or_insert_with(|| {
+                CommMatch::new(
+                    self.backend,
+                    comm_id,
+                    self.cfg.match_shards,
+                    self.cfg.wildcard_epoch_linger,
+                )
+            })
+            .clone()
+    }
+
+    /// [`MpiProc::comm_match`] through the calling VCI's cache: the hot
+    /// striped paths run with a VCI's state held anyway, so the engine
+    /// handle is resolved there and the process-wide table is touched
+    /// only on the first message a VCI sees for a communicator.
+    pub(super) fn cached_comm_match(&self, st: &mut VciState, comm_id: u64) -> Arc<CommMatch> {
+        st.match_cache.entry(comm_id).or_insert_with(|| self.comm_match(comm_id)).clone()
     }
 
     /// Next sequence number of the (comm, dst) striped send stream. The
@@ -375,18 +423,23 @@ impl MpiProc {
     /// striping onto it would contend with funneled traffic.
     pub(super) fn stripe_vci(&self, comm: &Comm, dst: usize, seq: u64) -> usize {
         let n = self.vcis().len();
+        if n <= 1 {
+            // Degenerate pool (hardware granted one context): stripe onto
+            // the only lane. The envelope is still marked striped so both
+            // sides agree on the matching path.
+            return FALLBACK_VCI;
+        }
         match self.cfg.vci_striping {
             VciStriping::RoundRobin => {
                 1 + self.stripe_rr.fetch_add(1, Ordering::Relaxed) % (n - 1)
             }
             VciStriping::HashedByRequest => {
-                let mut z = comm
-                    .id
-                    .wrapping_mul(0x9E3779B97F4A7C15)
-                    .wrapping_add((dst as u64) << 32)
-                    .wrapping_add(seq);
-                z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-                z ^= z >> 27;
+                let z = crate::util::mix64(
+                    comm.id
+                        .wrapping_mul(0x9E3779B97F4A7C15)
+                        .wrapping_add((dst as u64) << 32)
+                        .wrapping_add(seq),
+                );
                 1 + (z % (n as u64 - 1)) as usize
             }
             VciStriping::Off => self.comm_vci(comm, None),
@@ -399,12 +452,21 @@ impl MpiProc {
     /// (pinning to the request's VCI could starve a stream whose
     /// gap-filling message sits on another context); otherwise the
     /// request's own VCI, per the configured progress model.
-    pub(super) fn stripe_poll_target(&self, req_vci: usize) -> usize {
+    ///
+    /// With `rx_doorbell` the sweep consults the pool's rx-nonempty
+    /// bitmask: the rotation lands on the next VCI whose doorbell is rung,
+    /// and `None` means *no* VCI has anything queued — the caller skips
+    /// the poll entirely instead of paying an empty CQ read per VCI.
+    pub(super) fn stripe_poll_target(&self, req_vci: usize) -> Option<usize> {
         let n = self.vcis().len();
         if self.cfg.vci_striping == VciStriping::Off || n <= 1 {
-            return req_vci;
+            return Some(req_vci);
         }
-        self.stripe_poll_rr.fetch_add(1, Ordering::Relaxed) % n
+        let cursor = self.stripe_poll_rr.fetch_add(1, Ordering::Relaxed) % n;
+        if !self.cfg.rx_doorbell {
+            return Some(cursor);
+        }
+        self.vcis().doorbell().next_set(cursor, n)
     }
 
     /// Stale/duplicate/malformed wire control messages dropped so far
@@ -413,8 +475,9 @@ impl MpiProc {
         self.stale_ctrl_drops.load(Ordering::Relaxed)
     }
 
-    /// Reorder-stage diagnostics summed over all VCIs:
-    /// (duplicate-seq drops, striped arrivals currently parked).
+    /// Reorder-stage diagnostics summed over all VCIs *and* all sharded
+    /// communicator engines: (duplicate-seq drops, striped arrivals
+    /// currently parked).
     pub fn reorder_stats(&self) -> (u64, usize) {
         let _cs = self.enter_cs();
         let guard = self.guard();
@@ -428,7 +491,40 @@ impl MpiProc {
             dups += d;
             parked += p;
         }
+        let engines: Vec<Arc<CommMatch>> = {
+            let table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+            table.values().cloned().collect()
+        };
+        for cm in engines {
+            let (d, p) = cm.reorder_stats();
+            dups += d;
+            parked += p;
+        }
         (dups, parked)
+    }
+
+    /// Wildcard-epoch statistics summed over this process's sharded
+    /// communicator engines.
+    pub fn epoch_stats(&self) -> EpochStats {
+        let table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+        let mut total = EpochStats::default();
+        for cm in table.values() {
+            let s = cm.epoch_stats();
+            total.flips += s.flips;
+            total.unflips += s.unflips;
+            total.wildcard_posts += s.wildcard_posts;
+        }
+        total
+    }
+
+    /// Striped sweeps skipped because no rx doorbell was rung.
+    pub fn doorbell_skip_count(&self) -> u64 {
+        self.doorbell_skips.load(Ordering::Relaxed)
+    }
+
+    /// Context polls that found nothing ready.
+    pub fn empty_poll_count(&self) -> u64 {
+        self.empty_polls.load(Ordering::Relaxed)
     }
 
     /// Cooperative yield used inside progress/wait loops.

@@ -12,44 +12,32 @@
 //! With per-message VCI striping, one communicator's arrivals land on
 //! every VCI's context, so per-VCI progress rotates over the whole pool
 //! instead of pinning to the request's VCI (see
-//! `MpiProc::stripe_poll_target`). A polled striped envelope whose stream
-//! is homed on a *different* VCI is re-routed: the polled VCI's lock is
-//! released first, then the home VCI's matching engine runs the reorder
-//! admission — stripe VCIs contribute rx parallelism, the home VCI alone
-//! serializes matching, which is what preserves nonovertaking.
+//! `MpiProc::stripe_poll_target`). A polled striped envelope is matched
+//! **on the VCI that polled it**: the handler takes only the lock of the
+//! per-communicator matching shard that owns the `(comm, src)` stream
+//! (see `mpi::shard`), so stripe VCIs contribute both rx parallelism and
+//! matching parallelism — no batch re-route to a home engine, and no
+//! per-sweep buffer to allocate. With `rx_doorbell` the sweep skips
+//! entirely (one bitmask load) when no VCI has anything queued, instead
+//! of paying an empty CQ read per VCI at high pool sizes.
 //!
 //! # Robustness
 //!
 //! No `expect`/`unwrap` panic is reachable from wire-message handling:
 //! stale or duplicate control messages (a CTS for an unknown rendezvous
 //! send, a replayed DATA/ack handle, an unregistered RMA window) are
-//! dropped with a counted diagnostic (`MpiProc::stale_ctrl_drop_count`).
+//! dropped with a counted diagnostic (`MpiProc::stale_ctrl_drop_count`,
+//! also surfaced process-wide via `mpi::instrument::proc_counters`).
 
 use std::sync::atomic::Ordering;
 
 use crate::fabric::{P2pProtocol, Payload, WireMsg};
 use crate::platform::padvance;
 
-use super::instrument::{count_lock, LockClass};
-use super::matching::{Arrival, SenderInfo, UnexpectedMsg};
+use super::instrument::{self, count_lock, LockClass};
+use super::matching::{Arrival, SenderInfo, Src, UnexpectedMsg};
 use super::proc::MpiProc;
 use super::vci::VciState;
-
-/// Outcome of polling one context while holding its VCI's state.
-enum Polled {
-    /// Nothing arrived.
-    Empty,
-    /// Arrived and handled under the polled VCI.
-    Handled,
-    /// Striped envelopes homed on other VCIs: handled after releasing the
-    /// polled VCI's lock (avoids nested VCI locks and their lock-order
-    /// cycles). A contiguous run is drained in one sweep so the home lock
-    /// is paid once per batch, not once per message.
-    Reroute(std::collections::VecDeque<(usize, WireMsg)>),
-}
-
-/// Max striped messages drained from one context per progress call.
-const STRIPE_REROUTE_BATCH: usize = 16;
 
 /// Overflow-safe `[offset, offset + len)` vs window-size check for spans
 /// that arrive off the wire (a forged `offset` near `usize::MAX` must be
@@ -67,25 +55,46 @@ impl MpiProc {
     /// loops; also usable directly for "manual" progress.
     pub fn progress_for_request(&self, vci_idx: usize) {
         let _cs = self.enter_cs();
-        let poll_idx = self.stripe_poll_target(vci_idx);
-        if self.cfg.per_vci_progress {
-            let vci = self.vcis().get(poll_idx);
-            let fails = vci.progress_failures.load(Ordering::Relaxed);
-            let interval = self.cfg.global_progress_interval;
-            if interval > 0 && fails as u32 >= interval {
-                vci.progress_failures.store(0, Ordering::Relaxed);
-                self.progress_global_round();
-            } else {
-                let did = self.progress_vci(poll_idx);
-                if did {
-                    vci.progress_failures.store(0, Ordering::Relaxed);
-                } else {
-                    vci.progress_failures.fetch_add(1, Ordering::Relaxed);
+        match self.stripe_poll_target(vci_idx) {
+            None => {
+                // Doorbell-gated skip: no VCI has anything queued, so the
+                // whole sweep collapses to one bitmask read. A paranoid
+                // global round still runs after `global_progress_interval`
+                // consecutive skips, mirroring the hybrid-progress
+                // fallback (a lost doorbell must degrade, not deadlock).
+                padvance(self.backend, self.costs.doorbell_check);
+                self.doorbell_skips.fetch_add(1, Ordering::Relaxed);
+                instrument::record_doorbell_skip();
+                let streak = self.skip_streak.fetch_add(1, Ordering::Relaxed) + 1;
+                let interval = self.cfg.global_progress_interval;
+                if interval > 0 && streak as u32 >= interval {
+                    self.skip_streak.store(0, Ordering::Relaxed);
+                    self.progress_global_round();
                 }
             }
-        } else {
-            // Original-MPICH style: every progress call polls everything.
-            self.progress_global_round();
+            Some(poll_idx) => {
+                self.skip_streak.store(0, Ordering::Relaxed);
+                if self.cfg.per_vci_progress {
+                    let vci = self.vcis().get(poll_idx);
+                    let fails = vci.progress_failures.load(Ordering::Relaxed);
+                    let interval = self.cfg.global_progress_interval;
+                    if interval > 0 && fails as u32 >= interval {
+                        vci.progress_failures.store(0, Ordering::Relaxed);
+                        self.progress_global_round();
+                    } else {
+                        let did = self.progress_vci(poll_idx);
+                        if did {
+                            vci.progress_failures.store(0, Ordering::Relaxed);
+                        } else {
+                            vci.progress_failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                } else {
+                    // Original-MPICH style: every progress call polls
+                    // everything.
+                    self.progress_global_round();
+                }
+            }
         }
         self.check_hooks();
         drop(_cs);
@@ -93,90 +102,27 @@ impl MpiProc {
     }
 
     /// Poll one VCI's hardware context and handle at most one message.
-    /// Returns true if a message was processed.
+    /// Returns true if a message was processed. Every message — striped or
+    /// not — is handled under the polled VCI's state: striped envelopes
+    /// additionally take their matching shard's lock (a leaf lock), so no
+    /// second VCI lock and no re-route buffer are ever needed.
     pub fn progress_vci(&self, vci_idx: usize) -> bool {
         let vci = self.vcis().get(vci_idx).clone();
         let guard = self.guard();
-        let polled = vci.with_state(guard, |st| {
+        vci.with_state(guard, |st| {
             let ctx = self.fabric.context(self.rank(), vci.ctx_index);
             match ctx.poll(&self.costs) {
-                None => Polled::Empty,
-                Some(msg) => match self.stripe_reroute_target(&msg, vci_idx) {
-                    Some(home) => {
-                        // Drain the contiguous run of re-routable striped
-                        // messages behind it (stopping at the first
-                        // unstriped message, whose ordering relies on
-                        // poll+handle staying atomic under this lock).
-                        let mut batch = std::collections::VecDeque::new();
-                        batch.push_back((home, msg));
-                        while batch.len() < STRIPE_REROUTE_BATCH {
-                            let next = ctx.poll_if(&self.costs, |m| {
-                                self.stripe_reroute_target(m, vci_idx).is_some()
-                            });
-                            match next {
-                                Some(m) => match self.stripe_reroute_target(&m, vci_idx) {
-                                    Some(h) => batch.push_back((h, m)),
-                                    // Unreachable (the predicate just
-                                    // checked), but handle inline rather
-                                    // than panic on a wire path.
-                                    None => self.handle_msg(st, vci.ctx_index, m),
-                                },
-                                None => break,
-                            }
-                        }
-                        Polled::Reroute(batch)
-                    }
-                    None => {
-                        self.handle_msg(st, vci.ctx_index, msg);
-                        Polled::Handled
-                    }
-                },
-            }
-        });
-        match polled {
-            Polled::Empty => false,
-            Polled::Handled => true,
-            Polled::Reroute(mut batch) => {
-                // Striped traffic is seq-ordered by the reorder stage, so
-                // handling it after dropping the polled VCI's lock cannot
-                // reorder a stream. Consecutive same-home messages share
-                // one home-lock acquisition.
-                while let Some((home, msg)) = batch.pop_front() {
-                    let hv = self.vcis().get(home).clone();
-                    hv.with_state(guard, |st| {
-                        self.handle_msg(st, vci.ctx_index, msg);
-                        while let Some((h2, m2)) = batch.pop_front() {
-                            if h2 == home {
-                                self.handle_msg(st, vci.ctx_index, m2);
-                            } else {
-                                batch.push_front((h2, m2));
-                                break;
-                            }
-                        }
-                    });
+                None => {
+                    self.empty_polls.fetch_add(1, Ordering::Relaxed);
+                    instrument::record_empty_poll();
+                    false
                 }
-                true
+                Some(msg) => {
+                    self.handle_msg(st, vci.ctx_index, msg);
+                    true
+                }
             }
-        }
-    }
-
-    /// Home VCI a polled message must be handled under, when it differs
-    /// from the polled VCI. Only striped envelopes (Eager/Rts with a
-    /// stripe_home mark) re-route; control and RMA traffic is handled by
-    /// whichever VCI owns the context it landed on.
-    fn stripe_reroute_target(&self, msg: &WireMsg, polled_idx: usize) -> Option<usize> {
-        if let Payload::TwoSided {
-            stripe_home: Some(home),
-            protocol: P2pProtocol::Eager { .. } | P2pProtocol::Rts { .. },
-            ..
-        } = &msg.payload
-        {
-            let home = home % self.vcis().len();
-            if home != polled_idx {
-                return Some(home);
-            }
-        }
-        None
+        })
     }
 
     /// One global round: poll every open VCI (locking each in FG mode —
@@ -209,12 +155,32 @@ impl MpiProc {
     /// Record one dropped stale/duplicate/malformed wire message.
     fn drop_stale(&self) {
         self.stale_ctrl_drops.fetch_add(1, Ordering::Relaxed);
+        instrument::record_stale_ctrl_drop();
         padvance(self.backend, self.costs.completion_process);
     }
 
-    /// Dispatch one arrived message. Runs with the owning VCI state held
-    /// (the polled VCI's, or the stream's home VCI for re-routed striped
-    /// envelopes).
+    /// A striped envelope arrived on whichever VCI polled it: admit it
+    /// through the owning matching shard (reorder stage + match) and
+    /// consume whatever matched. The shard lock is a leaf: it is released
+    /// before consumption, and the epoch state machine is ticked after —
+    /// matched pairs are already bound, so consumption order across
+    /// requests is not MPI-visible.
+    fn sharded_arrival(&self, st: &mut VciState, my_ctx_index: usize, um: UnexpectedMsg) {
+        let cm = self.cached_comm_match(st, um.comm_id);
+        let matched = cm.striped_arrival(um);
+        let mut wildcards = 0u64;
+        for (p, um) in matched {
+            if p.src == Src::Any {
+                wildcards += 1;
+            }
+            self.consume_matched(my_ctx_index, p.req, um);
+        }
+        cm.note_arrival(wildcards);
+    }
+
+    /// Dispatch one arrived message. Runs with the polled VCI's state
+    /// held; striped two-sided envelopes additionally take their matching
+    /// shard's (leaf) lock inside [`MpiProc::sharded_arrival`].
     pub(super) fn handle_msg(&self, st: &mut VciState, my_ctx_index: usize, msg: WireMsg) {
         let sender = SenderInfo { src_proc: msg.src_proc, src_ctx: msg.src_ctx, send_handle: 0 };
         match msg.payload {
@@ -241,11 +207,9 @@ impl MpiProc {
                             arrival: Arrival::Eager { data, needs_ack },
                         };
                         if stripe_home.is_some() {
-                            for (p, um) in st.matching.on_striped_arrival(um) {
-                                self.consume_matched(st, my_ctx_index, p.req, um);
-                            }
+                            self.sharded_arrival(st, my_ctx_index, um);
                         } else if let Some((p, um)) = st.matching.on_arrival(um) {
-                            self.consume_matched(st, my_ctx_index, p.req, um);
+                            self.consume_matched(my_ctx_index, p.req, um);
                         }
                     }
                     P2pProtocol::Rts { send_handle } => {
@@ -259,11 +223,9 @@ impl MpiProc {
                             arrival: Arrival::Rts,
                         };
                         if stripe_home.is_some() {
-                            for (p, um) in st.matching.on_striped_arrival(um) {
-                                self.consume_matched(st, my_ctx_index, p.req, um);
-                            }
+                            self.sharded_arrival(st, my_ctx_index, um);
                         } else if let Some((p, um)) = st.matching.on_arrival(um) {
-                            self.consume_matched(st, my_ctx_index, p.req, um);
+                            self.consume_matched(my_ctx_index, p.req, um);
                         }
                     }
                     P2pProtocol::Cts { send_handle, recv_handle } => {

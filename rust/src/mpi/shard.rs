@@ -1,0 +1,543 @@
+//! Per-communicator sharded matching for striped traffic, with the
+//! wildcard-**epoch** protocol for `MPI_ANY_SOURCE`.
+//!
+//! PR 1's striping spread *injection* across the VCI pool but re-routed
+//! every striped arrival back to the communicator's home VCI, whose single
+//! matching engine re-serialized the receive side (exactly the hidden
+//! serialization the "Lessons Learned on MPI+Threads Communication" paper
+//! blames for residual slowdowns). This module shards the matching engine
+//! itself: each communicator owns a small power-of-two array of
+//! [`MatchingState`] shards, and each `(comm, source rank)` stream is
+//! owned by exactly one shard — `shard(hash(comm, src))`. A striped
+//! envelope is matched *on the VCI that polled it* by taking only the
+//! owning shard's lock; posted receives with a concrete source go to the
+//! same shard. Per-stream nonovertaking holds because a stream never
+//! spans shards; cross-stream order is not MPI-visible.
+//!
+//! # Wildcard epochs
+//!
+//! `MPI_ANY_SOURCE` must consider every source, so it cannot live in one
+//! shard. Posting a wildcard receive flips the communicator into a
+//! **serialized epoch**:
+//!
+//!  1. the poster takes every shard lock (in index order), sets the
+//!     `serialized` flag, and drains shards 1..n into shard 0 (the *home
+//!     shard*) — per-stream queue order and reorder-stage continuity are
+//!     preserved because each stream lives wholly in one shard;
+//!  2. while serialized, every arrival and every post routes to the home
+//!     shard (lock-free flag read, double-checked under the shard lock),
+//!     so wildcard matching sees one engine, like a single VCI would;
+//!  3. when the last pending wildcard completes (plus an optional
+//!     [`MpiConfig::wildcard_epoch_linger`] hysteresis of further
+//!     operations — arrivals or concrete posts), the state is split back
+//!     out by source and the flag clears.
+//!
+//! The hysteresis is operation-counted, so a communicator that goes
+//! *idle* right after its last wildcard stays (harmlessly) serialized
+//! until `linger` further operations arrive: an idle epoch costs nothing,
+//! and traffic that resumes pays at most `linger` serialized operations
+//! before sharding resumes. Benchmarks asserting full epoch resolution at
+//! quiescence should use `linger = 0`.
+//!
+//! When no wildcard is pending the only cost over plain sharding is one
+//! atomic flag load per operation. A communicator configured with a
+//! single shard (`match_shards = 1`) degenerates to PR 1's one-engine
+//! behavior and never needs epochs: the home shard *is* the only shard.
+//!
+//! Lock order: a VCI lock may be held when taking a shard lock (the
+//! progress path polls under the VCI lock), shard locks are taken in
+//! index order during transitions, and the epoch control lock is taken
+//! only while no shard lock is held. No path takes a VCI lock while
+//! holding a shard lock, so the discipline is acyclic.
+//!
+//! Robustness note: a striped envelope with an unknown `comm_id` cannot
+//! be told apart from one whose communicator the receiver is about to
+//! create (comm creation is symmetric but unsynchronized), so it lazily
+//! allocates an engine and queues as unexpected rather than being
+//! dropped — the same bounded-by-the-sender growth the per-VCI
+//! unexpected queues always had for forged envelopes. Control-message
+//! forgeries (stale CTS/DATA/acks, bad RMA handles) are still dropped
+//! and counted by the progress engine.
+//!
+//! [`MpiConfig::wildcard_epoch_linger`]: super::config::MpiConfig::wildcard_epoch_linger
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::platform::{Backend, PMutex, PMutexGuard};
+
+use super::instrument::{self, count_lock, LockClass};
+use super::matching::{MatchingState, PostedRecv, Src, UnexpectedMsg};
+
+/// Index of the home shard (wildcard-epoch serialization target).
+const HOME_SHARD: usize = 0;
+
+/// Wildcard-epoch bookkeeping (taken only with no shard lock held).
+struct EpochCtl {
+    /// Posted-but-unmatched `MPI_ANY_SOURCE` receives.
+    pending_wildcards: u64,
+    /// Arrivals left to absorb before flipping back (hysteresis).
+    linger_left: u32,
+}
+
+/// Counters a sharded communicator accumulates (see
+/// [`CommMatch::epoch_stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EpochStats {
+    /// Flips into the serialized wildcard epoch.
+    pub flips: u64,
+    /// Flips back to sharded matching.
+    pub unflips: u64,
+    /// Wildcard receives posted.
+    pub wildcard_posts: u64,
+}
+
+/// The sharded matching engine of one communicator.
+pub struct CommMatch {
+    comm_id: u64,
+    shards: Vec<PMutex<MatchingState>>,
+    /// `shards.len() - 1`; shard count is a power of two.
+    mask: usize,
+    /// Are we inside a serialized wildcard epoch? Read lock-free on every
+    /// routing decision; written only with all shard locks held.
+    serialized: AtomicBool,
+    /// Epoch bookkeeping. A `PMutex`, NOT a host mutex: it is held across
+    /// shard-lock acquisition during transitions, and in the DES parking
+    /// on a virtual-time lock while holding a host mutex would deadlock
+    /// the scheduler at the host level.
+    ctl: PMutex<EpochCtl>,
+    linger: u32,
+    flips: AtomicU64,
+    unflips: AtomicU64,
+    wildcard_posts: AtomicU64,
+}
+
+impl CommMatch {
+    /// Build the engine with `shards` shards (rounded up to a power of
+    /// two, min 1).
+    pub fn new(backend: Backend, comm_id: u64, shards: usize, linger: u32) -> Arc<Self> {
+        let n = shards.max(1).next_power_of_two();
+        Arc::new(CommMatch {
+            comm_id,
+            shards: (0..n).map(|_| PMutex::new(backend, MatchingState::new())).collect(),
+            mask: n - 1,
+            serialized: AtomicBool::new(false),
+            ctl: PMutex::new(backend, EpochCtl { pending_wildcards: 0, linger_left: 0 }),
+            linger,
+            flips: AtomicU64::new(0),
+            unflips: AtomicU64::new(0),
+            wildcard_posts: AtomicU64::new(0),
+        })
+    }
+
+    pub fn comm_id(&self) -> u64 {
+        self.comm_id
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns the `(comm, src)` stream outside an epoch.
+    fn shard_of(&self, src_rank: usize) -> usize {
+        let z = (src_rank as u64).wrapping_add(self.comm_id.wrapping_mul(0x9E3779B97F4A7C15));
+        (crate::util::mix64(z) as usize) & self.mask
+    }
+
+    fn lock_shard(&self, idx: usize) -> PMutexGuard<'_, MatchingState> {
+        count_lock(LockClass::Shard);
+        self.shards[idx].lock()
+    }
+
+    /// Lock the shard that owns operations for `src_rank` *right now*,
+    /// honoring the epoch: the mode flag is read lock-free, the shard
+    /// locked, and the flag re-checked — a transition that raced us holds
+    /// (or waits for) every shard lock, so a stale pick is always
+    /// detected and retried.
+    fn route_lock(&self, src_rank: usize) -> PMutexGuard<'_, MatchingState> {
+        loop {
+            let serialized = self.serialized.load(Ordering::Acquire);
+            let idx = if serialized { HOME_SHARD } else { self.shard_of(src_rank) };
+            let guard = self.lock_shard(idx);
+            if self.serialized.load(Ordering::Acquire) == serialized {
+                return guard;
+            }
+            drop(guard);
+        }
+    }
+
+    /// A striped envelope arrived (on whatever VCI polled it): run the
+    /// owning shard's reorder stage + matching. The returned pairs are
+    /// consumed by the caller *after* this returns (no shard lock held);
+    /// the caller must then report them via [`CommMatch::note_arrival`].
+    pub fn striped_arrival(&self, msg: UnexpectedMsg) -> Vec<(PostedRecv, UnexpectedMsg)> {
+        debug_assert_eq!(msg.comm_id, self.comm_id);
+        let mut guard = self.route_lock(msg.src_rank);
+        guard.on_striped_arrival(msg)
+    }
+
+    /// Post a receive. Concrete sources go to their owning shard;
+    /// `MPI_ANY_SOURCE` enters (or extends) the serialized wildcard epoch
+    /// before posting to the home shard. An immediately matched wildcard
+    /// is accounted here; a match returned for a *wildcard* receive from a
+    /// later arrival must be reported via [`CommMatch::note_arrival`].
+    pub fn post(&self, recv: PostedRecv) -> Option<UnexpectedMsg> {
+        debug_assert_eq!(recv.comm_id, self.comm_id);
+        match recv.src {
+            Src::Rank(src) => {
+                let matched = {
+                    let mut guard = self.route_lock(src);
+                    guard.on_post(recv)
+                };
+                // Concrete posts also tick the linger hysteresis (cheap
+                // flag load outside an epoch; see `linger_tick`).
+                if self.shards.len() > 1 && self.serialized.load(Ordering::Acquire) {
+                    self.linger_tick();
+                }
+                matched
+            }
+            Src::Any => {
+                self.wildcard_posts.fetch_add(1, Ordering::Relaxed);
+                instrument::record_wildcard_post();
+                if self.shards.len() > 1 {
+                    let mut ctl = self.ctl.lock();
+                    ctl.pending_wildcards += 1;
+                    if !self.serialized.load(Ordering::Acquire) {
+                        self.flip_to_serialized();
+                    }
+                    // From here until this wildcard matches, pending >= 1,
+                    // so no flip-back can race the post below.
+                }
+                let matched = {
+                    let mut guard = self.lock_shard(HOME_SHARD);
+                    guard.on_post(recv)
+                };
+                if matched.is_some() {
+                    // Matched straight out of the unexpected queue: the
+                    // wildcard is already complete.
+                    self.wildcard_done(1);
+                }
+                matched
+            }
+        }
+    }
+
+    /// Report the outcome of consuming one striped arrival:
+    /// `matched_wildcards` of the returned pairs bound to `MPI_ANY_SOURCE`
+    /// receives. Ticks the epoch state machine (pending count, linger,
+    /// flip-back). Must be called with no shard lock held.
+    pub fn note_arrival(&self, matched_wildcards: u64) {
+        if self.shards.len() == 1 {
+            return; // single-shard engines never enter an epoch
+        }
+        if !self.serialized.load(Ordering::Acquire) {
+            debug_assert_eq!(
+                matched_wildcards, 0,
+                "wildcard matched outside a serialized epoch"
+            );
+            return;
+        }
+        if matched_wildcards > 0 {
+            self.wildcard_done(matched_wildcards);
+        } else {
+            self.linger_tick();
+        }
+    }
+
+    fn wildcard_done(&self, n: u64) {
+        if self.shards.len() == 1 {
+            return; // single-shard engines never entered an epoch
+        }
+        let mut ctl = self.ctl.lock();
+        debug_assert!(ctl.pending_wildcards >= n, "wildcard accounting underflow");
+        ctl.pending_wildcards = ctl.pending_wildcards.saturating_sub(n);
+        if ctl.pending_wildcards == 0 {
+            ctl.linger_left = self.linger;
+            if ctl.linger_left == 0 {
+                self.flip_back();
+            }
+        }
+    }
+
+    fn linger_tick(&self) {
+        if self.shards.len() == 1 {
+            return;
+        }
+        let mut ctl = self.ctl.lock();
+        if ctl.pending_wildcards > 0 || !self.serialized.load(Ordering::Acquire) {
+            return;
+        }
+        ctl.linger_left = ctl.linger_left.saturating_sub(1);
+        if ctl.linger_left == 0 {
+            self.flip_back();
+        }
+    }
+
+    /// Enter the serialized epoch: with every shard lock held (index
+    /// order), set the flag and drain shards 1..n into the home shard.
+    /// Caller holds the epoch control lock.
+    fn flip_to_serialized(&self) {
+        self.flips.fetch_add(1, Ordering::Relaxed);
+        instrument::record_epoch_flip();
+        let mut guards: Vec<PMutexGuard<'_, MatchingState>> =
+            (0..self.shards.len()).map(|i| self.lock_shard(i)).collect();
+        self.serialized.store(true, Ordering::Release);
+        let (home, rest) = guards.split_at_mut(1);
+        for shard in rest.iter_mut() {
+            let parts = shard.take_parts();
+            home[0].absorb_parts(parts);
+        }
+    }
+
+    /// Leave the serialized epoch: with every shard lock held, split the
+    /// home shard's state back out by source and clear the flag. Caller
+    /// holds the epoch control lock and has observed `pending == 0` (so
+    /// no wildcard receive is still posted).
+    fn flip_back(&self) {
+        self.unflips.fetch_add(1, Ordering::Relaxed);
+        instrument::record_epoch_unflip();
+        let mut guards: Vec<PMutexGuard<'_, MatchingState>> =
+            (0..self.shards.len()).map(|i| self.lock_shard(i)).collect();
+        debug_assert!(
+            guards[1..].iter().all(|g| g.is_idle()),
+            "non-home shards accumulated state during a serialized epoch"
+        );
+        let parts = guards[HOME_SHARD].take_parts();
+        let buckets = parts.split_by_source(self.shards.len(), |src| self.shard_of(src));
+        for (idx, bucket) in buckets.into_iter().enumerate() {
+            guards[idx].absorb_parts(bucket);
+        }
+        self.serialized.store(false, Ordering::Release);
+    }
+
+    /// Currently inside a serialized wildcard epoch? (Test/debug aid.)
+    pub fn is_serialized(&self) -> bool {
+        self.serialized.load(Ordering::Acquire)
+    }
+
+    pub fn epoch_stats(&self) -> EpochStats {
+        EpochStats {
+            flips: self.flips.load(Ordering::Relaxed),
+            unflips: self.unflips.load(Ordering::Relaxed),
+            wildcard_posts: self.wildcard_posts.load(Ordering::Relaxed),
+        }
+    }
+
+    /// (duplicate-seq drops, parked striped arrivals) summed over shards.
+    pub fn reorder_stats(&self) -> (u64, usize) {
+        let mut dups = 0;
+        let mut parked = 0;
+        for i in 0..self.shards.len() {
+            let guard = self.lock_shard(i);
+            dups += guard.dup_seq_drops();
+            parked += guard.reorder_parked();
+        }
+        (dups, parked)
+    }
+
+    /// Posted + unexpected totals over all shards (test/debug aid).
+    pub fn queue_lens(&self) -> (usize, usize) {
+        let mut posted = 0;
+        let mut unexpected = 0;
+        for i in 0..self.shards.len() {
+            let guard = self.lock_shard(i);
+            posted += guard.posted_len();
+            unexpected += guard.unexpected_len();
+        }
+        (posted, unexpected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::matching::{Arrival, SenderInfo, Tag};
+
+    fn umsg(comm: u64, src: usize, tag: i32, seq: u64) -> UnexpectedMsg {
+        UnexpectedMsg {
+            comm_id: comm,
+            src_rank: src,
+            tag,
+            seq,
+            sender: SenderInfo { src_proc: src, src_ctx: 0, send_handle: 0 },
+            arrival: Arrival::Eager { data: vec![], needs_ack: false },
+        }
+    }
+
+    fn precv(comm: u64, src: Src, tag: Tag, req: crate::mpi::request::ReqId) -> PostedRecv {
+        PostedRecv { comm_id: comm, src, tag, req }
+    }
+
+    fn engine(shards: usize, linger: u32) -> Arc<CommMatch> {
+        CommMatch::new(Backend::Native, 7, shards, linger)
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        assert_eq!(engine(1, 0).shard_count(), 1);
+        assert_eq!(engine(3, 0).shard_count(), 4);
+        assert_eq!(engine(8, 0).shard_count(), 8);
+        assert_eq!(engine(0, 0).shard_count(), 1);
+    }
+
+    #[test]
+    fn concrete_traffic_matches_without_epochs() {
+        let m = engine(8, 0);
+        assert!(m.post(precv(7, Src::Rank(2), Tag::Value(5), 10)).is_none());
+        let hits = m.striped_arrival(umsg(7, 2, 5, 1));
+        m.note_arrival(0);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0.req, 10);
+        assert!(!m.is_serialized());
+        assert_eq!(m.epoch_stats(), EpochStats::default());
+    }
+
+    #[test]
+    fn streams_shard_independently() {
+        let m = engine(8, 0);
+        // Gap one source's stream; other sources keep flowing.
+        assert!(m.striped_arrival(umsg(7, 0, 5, 2)).is_empty());
+        m.note_arrival(0);
+        assert!(m.striped_arrival(umsg(7, 1, 5, 1)).is_empty());
+        m.note_arrival(0);
+        let (_, unexpected) = m.queue_lens();
+        assert_eq!(unexpected, 1, "src 1 admitted; src 0 parked on its gap");
+        let (dups, parked) = m.reorder_stats();
+        assert_eq!((dups, parked), (0, 1));
+        // Fill the gap: both of src 0's messages admit in order.
+        assert!(m.striped_arrival(umsg(7, 0, 5, 1)).is_empty());
+        m.note_arrival(0);
+        assert_eq!(m.queue_lens().1, 3);
+        assert_eq!(m.reorder_stats(), (0, 0));
+    }
+
+    #[test]
+    fn wildcard_flips_epoch_and_matches_across_shards() {
+        let m = engine(8, 0);
+        // Unexpected messages from two sources land in two shards.
+        assert!(m.striped_arrival(umsg(7, 0, 5, 1)).is_empty());
+        m.note_arrival(0);
+        assert!(m.striped_arrival(umsg(7, 3, 5, 1)).is_empty());
+        m.note_arrival(0);
+        // A wildcard post serializes and must see BOTH queued messages.
+        let first = m.post(precv(7, Src::Any, Tag::Value(5), 20));
+        assert!(first.is_some(), "wildcard must match a queued message");
+        let second = m.post(precv(7, Src::Any, Tag::Value(5), 21));
+        assert!(second.is_some());
+        let srcs = [first.unwrap().src_rank, second.unwrap().src_rank];
+        assert!(srcs.contains(&0) && srcs.contains(&3));
+        let stats = m.epoch_stats();
+        assert!(stats.flips >= 1);
+        assert_eq!(stats.wildcard_posts, 2);
+        // Both wildcards completed at post time: sharded mode restored.
+        assert!(!m.is_serialized());
+        assert_eq!(m.epoch_stats().unflips, m.epoch_stats().flips);
+    }
+
+    #[test]
+    fn pending_wildcard_holds_epoch_until_arrival_matches() {
+        let m = engine(4, 0);
+        assert!(m.post(precv(7, Src::Any, Tag::Any, 20)).is_none());
+        assert!(m.is_serialized(), "unmatched wildcard keeps the epoch open");
+        // Concrete posts during the epoch go to the home shard, behind
+        // the wildcard in post order.
+        assert!(m.post(precv(7, Src::Rank(1), Tag::Any, 21)).is_none());
+        let hits = m.striped_arrival(umsg(7, 1, 9, 1));
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0.req, 20, "earlier-posted wildcard matches first");
+        let wilds = hits.iter().filter(|(p, _)| p.src == Src::Any).count() as u64;
+        m.note_arrival(wilds);
+        assert!(!m.is_serialized(), "last wildcard completion flips back");
+        // The concrete recv survived the flip-back and still matches.
+        let hits = m.striped_arrival(umsg(7, 1, 9, 2));
+        m.note_arrival(0);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0.req, 21);
+    }
+
+    #[test]
+    fn reorder_state_survives_epoch_round_trip() {
+        let m = engine(8, 0);
+        // Seq 2 parks (gap); then an epoch flips state into home and back.
+        assert!(m.striped_arrival(umsg(7, 4, 5, 2)).is_empty());
+        m.note_arrival(0);
+        let got = m.post(precv(7, Src::Any, Tag::Value(5), 20));
+        assert!(got.is_none(), "parked arrival is not matchable");
+        assert!(m.is_serialized());
+        // Seq 1 arrives during the epoch: admits both, wildcard gets seq 1.
+        let hits = m.striped_arrival(umsg(7, 4, 5, 1));
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].1.seq, 1);
+        let wilds = hits.iter().filter(|(p, _)| p.src == Src::Any).count() as u64;
+        assert_eq!(wilds, 1);
+        m.note_arrival(wilds);
+        assert!(!m.is_serialized());
+        // Seq 2 sits in the unexpected queue of src 4's shard again.
+        let got = m.post(precv(7, Src::Rank(4), Tag::Value(5), 21)).unwrap();
+        assert_eq!(got.seq, 2);
+        // Stream continuity: next expected seq is 3, not reset.
+        assert!(m.striped_arrival(umsg(7, 4, 5, 3)).is_empty());
+        m.note_arrival(0);
+        assert_eq!(m.queue_lens().1, 1);
+        assert_eq!(m.reorder_stats(), (0, 0));
+    }
+
+    #[test]
+    fn linger_keeps_epoch_open_for_n_arrivals() {
+        let m = engine(4, 2);
+        assert!(m.striped_arrival(umsg(7, 2, 5, 1)).is_empty());
+        m.note_arrival(0);
+        assert!(m.post(precv(7, Src::Any, Tag::Value(5), 20)).is_some());
+        assert!(m.is_serialized(), "linger holds the epoch after completion");
+        assert!(m.striped_arrival(umsg(7, 2, 5, 2)).is_empty());
+        m.note_arrival(0);
+        assert!(m.is_serialized(), "one linger tick left");
+        assert!(m.striped_arrival(umsg(7, 2, 5, 3)).is_empty());
+        m.note_arrival(0);
+        assert!(!m.is_serialized(), "linger exhausted: flipped back");
+        assert_eq!(m.queue_lens().1, 2);
+        assert_eq!(m.reorder_stats(), (0, 0));
+    }
+
+    #[test]
+    fn linger_ticks_on_concrete_posts_too() {
+        let m = engine(4, 2);
+        assert!(m.striped_arrival(umsg(7, 2, 5, 1)).is_empty());
+        m.note_arrival(0);
+        assert!(m.post(precv(7, Src::Any, Tag::Value(5), 20)).is_some());
+        assert!(m.is_serialized(), "linger holds after the wildcard completes");
+        assert!(m.post(precv(7, Src::Rank(2), Tag::Value(5), 21)).is_none());
+        assert!(m.is_serialized(), "one linger tick left");
+        assert!(m.post(precv(7, Src::Rank(2), Tag::Value(5), 22)).is_none());
+        assert!(!m.is_serialized(), "concrete posts exhaust the linger");
+        // The concrete recvs migrated back to their shard in post order.
+        let hits = m.striped_arrival(umsg(7, 2, 5, 2));
+        m.note_arrival(0);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0.req, 21);
+    }
+
+    #[test]
+    fn single_shard_engine_never_epochs() {
+        let m = engine(1, 0);
+        assert!(m.post(precv(7, Src::Any, Tag::Any, 20)).is_none());
+        assert!(!m.is_serialized(), "one shard needs no serialization");
+        assert_eq!(m.epoch_stats().flips, 0);
+        let hits = m.striped_arrival(umsg(7, 5, 1, 1));
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0.req, 20);
+        let wilds = hits.iter().filter(|(p, _)| p.src == Src::Any).count() as u64;
+        m.note_arrival(wilds);
+        assert_eq!(m.epoch_stats().unflips, 0);
+    }
+
+    #[test]
+    fn duplicate_drops_counted_across_shards() {
+        let m = engine(8, 0);
+        assert!(m.striped_arrival(umsg(7, 1, 5, 1)).is_empty());
+        m.note_arrival(0);
+        assert!(m.striped_arrival(umsg(7, 1, 5, 1)).is_empty());
+        m.note_arrival(0);
+        assert_eq!(m.reorder_stats().0, 1);
+    }
+}

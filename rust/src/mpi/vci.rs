@@ -12,17 +12,21 @@
 //! pinned to its one assigned VCI for two-sided traffic: every `isend`
 //! picks a stripe VCI (round-robin or hashed per message) from the whole
 //! pool and targets the mirror context on the receiver, so a single hot
-//! communicator can use all hardware contexts. The communicator's assigned
-//! VCI remains its **home**: posted receives, the unexpected queue, and
-//! the reorder stage that restores nonovertaking order all live in the
-//! home VCI's [`MatchingState`]; stripe VCIs contribute injection and
-//! polling parallelism only. See `mpi::matching` for the ordering story.
+//! communicator can use all hardware contexts. On the receive side a
+//! striped envelope is matched by whichever VCI polled it, through the
+//! communicator's per-source **matching shards** (`mpi::shard`) rather
+//! than this VCI's own [`MatchingState`] — stripe VCIs contribute
+//! injection, polling, *and* matching parallelism. The pool also carries
+//! an rx [`RxDoorbell`]: delivery rings the polled VCI's bit, and the
+//! doorbell-gated striped sweep skips VCIs (or the whole sweep) with
+//! nothing queued. See `mpi::matching` for the ordering story.
 
 use std::cell::UnsafeCell;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::fabric::RxDoorbell;
 use crate::platform::{Backend, PMutex, PMutexGuard};
 use crate::sim::CacheLine;
 
@@ -30,6 +34,7 @@ use super::config::{CsMode, MpiConfig, VciPolicy};
 use super::instrument::{count_lock, LockClass};
 use super::matching::MatchingState;
 use super::request::ReqId;
+use super::shard::CommMatch;
 
 /// Sender-side record of a rendezvous in flight.
 #[derive(Clone, Debug)]
@@ -62,6 +67,11 @@ pub struct VciState {
     pub fetch_done: HashMap<u64, Vec<u8>>,
     /// Send-side FIFO sequence per (comm, dst_rank).
     pub send_seq: HashMap<(u64, usize), u64>,
+    /// Cached handles to per-communicator sharded matching engines, so
+    /// the striped arrival path resolves its engine under this VCI's lock
+    /// instead of the process-wide table mutex on every message (the
+    /// table is consulted once per (VCI, comm)).
+    pub match_cache: HashMap<u64, Arc<CommMatch>>,
 }
 
 /// How VCI state access is guarded for this call.
@@ -206,6 +216,10 @@ pub struct VciPool {
     free: Mutex<Vec<usize>>,
     rr_next: AtomicUsize,
     policy: VciPolicy,
+    /// Pool-wide rx doorbell: bit `i` is rung while VCI `i`'s hardware
+    /// context has messages queued. Installed onto the contexts by
+    /// `MpiProc::init`; consulted by the doorbell-gated striped sweep.
+    doorbell: Arc<RxDoorbell>,
 }
 
 /// Index of the fallback VCI (assigned to MPI_COMM_WORLD).
@@ -243,7 +257,18 @@ impl VciPool {
         // VCI 0 is the fallback: never in the free pool, always active.
         vcis[FALLBACK_VCI].active.store(true, Ordering::Release);
         let free = (1..n).rev().collect();
-        VciPool { vcis, free: Mutex::new(free), rr_next: AtomicUsize::new(1), policy }
+        VciPool {
+            vcis,
+            free: Mutex::new(free),
+            rr_next: AtomicUsize::new(1),
+            policy,
+            doorbell: RxDoorbell::new(n),
+        }
+    }
+
+    /// The pool-wide rx-nonempty doorbell (one bit per VCI).
+    pub fn doorbell(&self) -> &Arc<RxDoorbell> {
+        &self.doorbell
     }
 
     pub fn len(&self) -> usize {

@@ -57,6 +57,9 @@ pub struct CostModel {
     /// One iteration of the progress engine polling an *empty* completion
     /// queue.
     pub poll_empty: Nanos,
+    /// Consulting the pool-wide rx-doorbell bitmask and finding no bit
+    /// rung (one cache-hot load; the poll that never happened).
+    pub doorbell_check: Nanos,
     /// Checking one progress hook for activeness (MPICH/CH4 has two).
     pub progress_hook_check: Nanos,
     /// Completion processing for one CQ entry (request state update).
@@ -121,6 +124,7 @@ impl Default for CostModel {
             request_pool_op: 26,
             request_cache_op: 8,
             poll_empty: 30,
+            doorbell_check: 4,
             progress_hook_check: 8,
             completion_process: 40,
 

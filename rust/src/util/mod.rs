@@ -3,5 +3,5 @@
 mod rng;
 mod stats;
 
-pub use rng::SplitMix64;
+pub use rng::{mix64, SplitMix64};
 pub use stats::{mean, percentile, stddev, Summary};

@@ -2,6 +2,15 @@
 //! hand-rolled property tests. No external `rand` crate is available in the
 //! offline build environment.
 
+/// SplitMix-style bit finalizer used wherever the library needs a cheap
+/// stateless scramble (VCI selection by envelope, per-message stripe
+/// hashing, matching-shard routing). One canonical copy so the mix
+/// constants can never drift between call sites.
+pub fn mix64(z: u64) -> u64 {
+    let z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^ (z >> 27)
+}
+
 /// SplitMix64: tiny, fast, and passes BigCrush for our purposes.
 #[derive(Clone, Debug)]
 pub struct SplitMix64 {

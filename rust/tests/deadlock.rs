@@ -96,6 +96,14 @@ fn fig9_p2p_striped_completes() {
     assert_eq!(fig9_p2p(MpiConfig::striped(8)), SimOutcome::Completed);
 }
 
+#[test]
+fn fig9_p2p_striped_sharded_doorbell_completes() {
+    // Sharded matching + doorbell-gated sweeps must not reintroduce the
+    // Fig. 9 deadlock: a skipped sweep (no doorbell rung) still advances
+    // virtual time, and the paranoid global round bounds a lost doorbell.
+    assert_eq!(fig9_p2p(MpiConfig::striped_sharded(8)), SimOutcome::Completed);
+}
+
 /// Fig. 9 (right), transcribed (software-RMA fabric, large Gets):
 /// Rank 0:              Get(win1); Get(win2); flush(win1); flush(win2);
 /// Rank 1 / Thread 0:   Get(win1); B; B; flush(win1);

@@ -24,6 +24,7 @@ fn all_configs() -> Vec<(&'static str, MpiConfig)> {
         ("optimized4", MpiConfig::optimized(4)),
         ("optimized16", MpiConfig::optimized(16)),
         ("striped8", MpiConfig::striped(8)),
+        ("striped_sharded8", MpiConfig::striped_sharded(8)),
     ]
 }
 

@@ -1,12 +1,21 @@
 //! Hand-rolled property tests (no proptest crate offline): randomized
 //! scenario generation with a deterministic PRNG + fixed seeds, asserting
 //! the library's core invariants across hundreds of generated cases.
+//!
+//! Case counts scale with the `PROPTEST_CASES` env var (CI: small on PRs,
+//! large on the scheduled soak run); unset, each test keeps its default.
 
 use vcmpi::fabric::{FabricConfig, Interconnect};
 use vcmpi::mpi::matching::{MatchingState, PostedRecv, SenderInfo, Src, Tag, UnexpectedMsg};
-use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig};
+use vcmpi::mpi::{run_cluster, ClusterSpec, CommMatch, MpiConfig};
+use vcmpi::platform::Backend;
 use vcmpi::sim::SimOutcome;
 use vcmpi::util::SplitMix64;
+
+/// Seed count for one property: `PROPTEST_CASES` if set, else `default`.
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
 
 // ---------------------------------------------------------------------
 // Matching-engine invariants (pure data structure: thousands of cases)
@@ -27,7 +36,7 @@ fn umsg(comm: u64, src: usize, tag: i32, seq: u64) -> UnexpectedMsg {
 /// on (comm, src-pattern, tag-pattern), and per-stream consumption is FIFO.
 #[test]
 fn prop_matching_agrees_and_preserves_fifo() {
-    for seed in 0..60u64 {
+    for seed in 0..cases(60) {
         let mut rng = SplitMix64::new(seed);
         let mut m = MatchingState::new();
         let mut next_seq = std::collections::HashMap::<(u64, usize), u64>::new();
@@ -85,7 +94,7 @@ fn prop_matching_agrees_and_preserves_fifo() {
 /// counted and dropped.
 #[test]
 fn prop_striped_reorder_matches_single_vci_oracle() {
-    for seed in 0..40u64 {
+    for seed in 0..cases(40) {
         let mut rng = SplitMix64::new(0x57A1 ^ seed);
         let streams = 3usize; // (comm 1, srcs 0..3)
         let per_stream = 1 + rng.gen_usize(30);
@@ -141,6 +150,161 @@ fn prop_striped_reorder_matches_single_vci_oracle() {
         }
         assert_eq!(m.dup_seq_drops(), dups, "seed {seed}: duplicate accounting");
         assert_eq!(m.reorder_parked(), 0, "seed {seed}: leftover parked arrivals");
+    }
+}
+
+/// The sharded engine (`CommMatch`) vs the single-engine oracle, with
+/// wildcard epochs in play: a random interleave of striped arrivals
+/// (shuffled per-stream seqs + duplicate injections), concrete posts, and
+/// `MPI_ANY_SOURCE` posts is mirrored into a plain `MatchingState`. The
+/// recv-to-message binding may legally differ (a wildcard may pick a
+/// different source), but per-stream delivery must be exactly seq order,
+/// every message delivered exactly once, every duplicate dropped and
+/// counted, and every opened epoch resolved once its wildcards complete.
+#[test]
+fn prop_sharded_matching_matches_single_engine_oracle() {
+    for seed in 0..cases(30) {
+        let mut rng = SplitMix64::new(0x5AAD ^ seed.wrapping_mul(0x9E37));
+        let shard_choices = [1usize, 2, 4, 8];
+        let shards = shard_choices[rng.gen_usize(shard_choices.len())];
+        let linger = rng.gen_range(3) as u32;
+        let m = CommMatch::new(Backend::Native, 1, shards, linger);
+        let mut oracle = MatchingState::new();
+        let srcs = 4usize;
+        let per_stream = 1 + rng.gen_usize(16);
+
+        let mut wire: Vec<(usize, u64)> = Vec::new();
+        for src in 0..srcs {
+            for seq in 1..=per_stream as u64 {
+                wire.push((src, seq));
+            }
+        }
+        let mut dups = 0u64;
+        for _ in 0..rng.gen_usize(8) {
+            let src = rng.gen_usize(srcs);
+            let seq = 1 + rng.gen_usize(per_stream) as u64;
+            wire.push((src, seq));
+            dups += 1;
+        }
+        rng.shuffle(&mut wire);
+
+        let mut sharded_order: Vec<Vec<u64>> = vec![Vec::new(); srcs];
+        let mut oracle_order: Vec<Vec<u64>> = vec![Vec::new(); srcs];
+        let mut wildcards_posted = 0u64;
+        let mut wildcards_matched_sharded = 0u64;
+
+        fn feed_arrival(
+            m: &CommMatch,
+            oracle: &mut MatchingState,
+            src: usize,
+            seq: u64,
+            sharded_order: &mut [Vec<u64>],
+            oracle_order: &mut [Vec<u64>],
+            wildcards_matched_sharded: &mut u64,
+        ) {
+            let pairs = m.striped_arrival(umsg(1, src, 7, seq));
+            let wilds = pairs.iter().filter(|(p, _)| p.src == Src::Any).count() as u64;
+            for (_p, um) in &pairs {
+                sharded_order[um.src_rank].push(um.seq);
+            }
+            m.note_arrival(wilds);
+            *wildcards_matched_sharded += wilds;
+            for (_p, um) in oracle.on_striped_arrival(umsg(1, src, 7, seq)) {
+                oracle_order[um.src_rank].push(um.seq);
+            }
+        }
+
+        let mut wi = 0usize;
+        for _step in 0..(wire.len() + 30) {
+            if wi < wire.len() && rng.gen_bool(0.6) {
+                let (src, seq) = wire[wi];
+                wi += 1;
+                feed_arrival(
+                    &m,
+                    &mut oracle,
+                    src,
+                    seq,
+                    &mut sharded_order,
+                    &mut oracle_order,
+                    &mut wildcards_matched_sharded,
+                );
+            } else {
+                let src = if rng.gen_bool(0.25) {
+                    wildcards_posted += 1;
+                    Src::Any
+                } else {
+                    Src::Rank(rng.gen_usize(srcs))
+                };
+                let recv = PostedRecv { comm_id: 1, src, tag: Tag::Value(7), req: 0 };
+                if let Some(um) = m.post(recv.clone()) {
+                    sharded_order[um.src_rank].push(um.seq);
+                    if src == Src::Any {
+                        wildcards_matched_sharded += 1;
+                    }
+                }
+                if let Some(um) = oracle.on_post(recv) {
+                    oracle_order[um.src_rank].push(um.seq);
+                }
+            }
+        }
+        // Feed whatever the random phase left on the wire, then drain the
+        // unexpected queues with concrete receives.
+        while wi < wire.len() {
+            let (src, seq) = wire[wi];
+            wi += 1;
+            feed_arrival(
+                &m,
+                &mut oracle,
+                src,
+                seq,
+                &mut sharded_order,
+                &mut oracle_order,
+                &mut wildcards_matched_sharded,
+            );
+        }
+        for src in 0..srcs {
+            let recv =
+                || PostedRecv { comm_id: 1, src: Src::Rank(src), tag: Tag::Value(7), req: 0 };
+            while let Some(um) = m.post(recv()) {
+                sharded_order[um.src_rank].push(um.seq);
+            }
+            while let Some(um) = oracle.on_post(recv()) {
+                oracle_order[um.src_rank].push(um.seq);
+            }
+        }
+
+        let want: Vec<u64> = (1..=per_stream as u64).collect();
+        for src in 0..srcs {
+            assert_eq!(
+                sharded_order[src], want,
+                "seed {seed} ({shards} shards, linger {linger}): \
+                 stream {src} diverged in the sharded engine"
+            );
+            assert_eq!(
+                oracle_order[src], want,
+                "seed {seed}: stream {src} diverged in the oracle"
+            );
+        }
+        let (sharded_dups, sharded_parked) = m.reorder_stats();
+        assert_eq!(sharded_dups, dups, "seed {seed}: sharded duplicate accounting");
+        assert_eq!(oracle.dup_seq_drops(), dups, "seed {seed}: oracle duplicate accounting");
+        assert_eq!(sharded_parked, 0, "seed {seed}: leftover parked arrivals");
+        assert_eq!(oracle.reorder_parked(), 0);
+        let es = m.epoch_stats();
+        assert_eq!(es.wildcard_posts, wildcards_posted, "seed {seed}");
+        if shards == 1 {
+            assert_eq!(es.flips, 0, "seed {seed}: single shard never epochs");
+        } else if wildcards_matched_sharded == wildcards_posted {
+            // All wildcards completed: every opened epoch must have closed
+            // (hysteresis counts arrivals, and the final drain feeds none,
+            // so only a linger-free run is guaranteed to close here).
+            if linger == 0 {
+                assert_eq!(es.flips, es.unflips, "seed {seed}: unresolved epoch");
+            }
+            assert!(es.unflips <= es.flips, "seed {seed}");
+        } else {
+            assert!(m.is_serialized(), "seed {seed}: pending wildcard must hold the epoch");
+        }
     }
 }
 
@@ -211,14 +375,14 @@ fn random_traffic_case_sized(seed: u64, cfg: MpiConfig, ic: Interconnect, max_si
 
 #[test]
 fn prop_random_traffic_delivered_in_order_optimized() {
-    for seed in 0..12 {
+    for seed in 0..cases(12) {
         random_traffic_case(seed, MpiConfig::optimized(6), Interconnect::Opa);
     }
 }
 
 #[test]
 fn prop_random_traffic_delivered_in_order_original() {
-    for seed in 0..6 {
+    for seed in 0..cases(6) {
         random_traffic_case(seed, MpiConfig::original(), Interconnect::Ib);
     }
 }
@@ -240,13 +404,18 @@ fn prop_random_traffic_all_policies() {
 #[test]
 fn prop_random_traffic_striped_eager_and_rendezvous() {
     use vcmpi::mpi::VciStriping;
-    for seed in 0..8 {
+    for seed in 0..cases(8) {
         random_traffic_case_sized(seed, MpiConfig::striped(6), Interconnect::Opa, 40_000);
     }
     let mut hashed = MpiConfig::striped(5);
     hashed.vci_striping = VciStriping::HashedByRequest;
-    for seed in 0..4 {
+    for seed in 0..cases(4) {
         random_traffic_case_sized(seed, hashed.clone(), Interconnect::Ib, 40_000);
+    }
+    // Per-source sharded matching: 3 procs -> every receiver matches two
+    // striped source streams through distinct shards.
+    for seed in 0..cases(6) {
+        random_traffic_case_sized(seed, MpiConfig::striped_sharded(6), Interconnect::Opa, 40_000);
     }
 }
 
@@ -256,7 +425,7 @@ fn prop_random_traffic_striped_eager_and_rendezvous() {
 
 #[test]
 fn prop_rma_random_puts_land_exactly() {
-    for seed in 0..8u64 {
+    for seed in 0..cases(8) {
         for ic in [Interconnect::Ib, Interconnect::Opa] {
             let spec = ClusterSpec::new(
                 FabricConfig {

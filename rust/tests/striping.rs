@@ -24,7 +24,14 @@ fn run_ok(
 fn striped_configs() -> Vec<(&'static str, MpiConfig)> {
     let mut hashed = MpiConfig::striped(8);
     hashed.vci_striping = VciStriping::HashedByRequest;
-    vec![("round_robin", MpiConfig::striped(8)), ("hashed", hashed)]
+    let mut hashed_sharded = MpiConfig::striped_sharded(8);
+    hashed_sharded.vci_striping = VciStriping::HashedByRequest;
+    vec![
+        ("round_robin", MpiConfig::striped(8)),
+        ("hashed", hashed),
+        ("round_robin+sharded", MpiConfig::striped_sharded(8)),
+        ("hashed+sharded", hashed_sharded),
+    ]
 }
 
 #[test]
@@ -123,27 +130,153 @@ fn striped_multithreaded_single_comm_streams() {
 fn striped_wildcard_receives_stay_legal() {
     // Unlike the §7 envelope hints (which must assert wildcards away to
     // spread one communicator), striping keeps MPI_ANY_SOURCE/ANY_TAG
-    // fully legal: ordering is restored before matching, not by mapping
-    // envelopes to VCIs.
-    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 3), MpiConfig::striped(6), 1);
-    run_ok(spec, |proc, _t| {
-        let world = proc.comm_world();
-        if proc.rank() == 0 {
-            let mut seen = [0u8; 3];
-            for _ in 0..8 {
-                let got = proc.recv(&world, Src::Any, Tag::Any);
-                let who = got[0] as usize;
-                let k = got[1];
-                assert_eq!(k, seen[who], "stream from {who} overtook under wildcards");
-                seen[who] += 1;
+    // fully legal: with one matching shard ordering is restored before a
+    // single engine; with per-source shards the wildcard-epoch protocol
+    // serializes matching for the duration of the wildcard.
+    for cfg in [MpiConfig::striped(6), MpiConfig::striped_sharded(6)] {
+        let spec = ClusterSpec::new(fabric(Interconnect::Ib, 3), cfg, 1);
+        run_ok(spec, |proc, _t| {
+            let world = proc.comm_world();
+            if proc.rank() == 0 {
+                let mut seen = [0u8; 3];
+                for _ in 0..8 {
+                    let got = proc.recv(&world, Src::Any, Tag::Any);
+                    let who = got[0] as usize;
+                    let k = got[1];
+                    assert_eq!(k, seen[who], "stream from {who} overtook under wildcards");
+                    seen[who] += 1;
+                }
+                assert_eq!(seen[1], 4);
+                assert_eq!(seen[2], 4);
+            } else {
+                for k in 0..4u8 {
+                    proc.send(&world, 0, k as i32, &[proc.rank() as u8, k]);
+                }
             }
-            assert_eq!(seen[1], 4);
-            assert_eq!(seen[2], 4);
+        });
+    }
+}
+
+#[test]
+fn wildcard_epoch_torture_across_flips() {
+    // The epoch state machine under fire: two sender procs stripe numbered
+    // per-thread streams at a receiver whose threads mix concrete and
+    // MPI_ANY_SOURCE receives, so the communicator flips into and out of
+    // the serialized epoch while traffic (and parked reorder state) is in
+    // flight. Assert no message is lost or duplicated and that matching
+    // order per (source, tag) stream equals send order — in post order,
+    // every stream's payload counter must increment by exactly one
+    // wherever that stream's messages land.
+    for linger in [0u32, 4] {
+        let mut cfg = MpiConfig::striped_sharded(8);
+        cfg.wildcard_epoch_linger = linger;
+        let stats: Arc<Mutex<Vec<vcmpi::mpi::EpochStats>>> = Arc::new(Mutex::new(Vec::new()));
+        let s2 = stats.clone();
+        let spec = ClusterSpec::new(fabric(Interconnect::Ib, 3), cfg, 3);
+        let bars: Arc<Vec<PBarrier>> =
+            Arc::new((0..3).map(|_| PBarrier::new(Backend::Sim, 3)).collect());
+        run_ok(spec, move |proc, t| {
+            let world = proc.comm_world();
+            let per_src: u32 = 24;
+            if proc.rank() == 0 {
+                let total = (2 * per_src) as usize;
+                let mut order: Vec<(usize, u32)> = Vec::new();
+                let mut j = 0usize;
+                while j < total {
+                    let batch = 8.min(total - j);
+                    let reqs: Vec<_> = (0..batch)
+                        .map(|b| {
+                            // Every other post pair is a wildcard: half the
+                            // receives cross sources, so epochs stay hot.
+                            let src = match (j + b) % 4 {
+                                0 => Src::Rank(1),
+                                1 => Src::Rank(2),
+                                _ => Src::Any,
+                            };
+                            proc.irecv(&world, src, Tag::Value(t as i32))
+                        })
+                        .collect();
+                    for r in reqs {
+                        let data = proc.wait(r).expect("recv payload");
+                        let s = data[0] as usize;
+                        let k = u32::from_le_bytes(data[1..5].try_into().unwrap());
+                        order.push((s, k));
+                    }
+                    j += batch;
+                }
+                // Per-stream nonovertaking + exactly-once: in post order,
+                // each stream counts 0,1,2,... with no gap or repeat.
+                let mut next = [0u32; 3];
+                for (s, k) in order {
+                    assert_eq!(
+                        k, next[s],
+                        "stream {s} tag {t} (linger {linger}) lost/duplicated/reordered"
+                    );
+                    next[s] += 1;
+                }
+                assert_eq!(next[1], per_src, "stream 1 tag {t} incomplete");
+                assert_eq!(next[2], per_src, "stream 2 tag {t} incomplete");
+            } else {
+                let mut reqs = Vec::new();
+                for k in 0..per_src {
+                    let mut data = vec![proc.rank() as u8];
+                    data.extend_from_slice(&k.to_le_bytes());
+                    reqs.push(proc.isend(&world, 0, t as i32, &data));
+                }
+                proc.waitall(reqs);
+            }
+            bars[proc.rank()].wait();
+            if t == 0 {
+                proc.barrier(&world);
+                if proc.rank() == 0 {
+                    let es = proc.epoch_stats();
+                    let (dups, parked) = proc.reorder_stats();
+                    assert_eq!(dups, 0, "wire traffic must never look duplicated");
+                    assert_eq!(parked, 0, "reorder buffers must drain by quiescence");
+                    s2.lock().unwrap().push(es);
+                }
+            }
+            bars[proc.rank()].wait();
+        });
+        let stats = stats.lock().unwrap();
+        assert_eq!(stats.len(), 1);
+        let es = stats[0];
+        assert!(es.wildcard_posts > 0, "torture must post wildcards");
+        assert!(es.flips > 0, "wildcards on a sharded comm must flip epochs");
+        if linger == 0 {
+            assert_eq!(es.flips, es.unflips, "every epoch must resolve at quiescence");
         } else {
-            for k in 0..4u8 {
-                proc.send(&world, 0, k as i32, &[proc.rank() as u8, k]);
-            }
+            // Operation-counted hysteresis: the FINAL epoch may stay open
+            // if the last wildcard completed with fewer than `linger`
+            // operations left in the run (documented `mpi::shard`
+            // semantics — an idle serialized epoch is free).
+            assert!(
+                es.flips - es.unflips <= 1,
+                "only the final epoch may linger open (flips {} unflips {})",
+                es.flips,
+                es.unflips
+            );
         }
+    }
+}
+
+#[test]
+fn sharded_concrete_streams_stay_ordered_multithreaded() {
+    // Sharded matching without wildcards: 4 threads x 2 procs hammer ONE
+    // communicator bidirectionally across 8 VCIs with per-source shards —
+    // each per-thread stream must stay in order and no epoch may open.
+    let spec =
+        ClusterSpec::new(fabric(Interconnect::Ib, 2), MpiConfig::striped_sharded(8), 4);
+    run_ok(spec, |proc, t| {
+        let world = proc.comm_world();
+        let peer = 1 - proc.rank();
+        for i in 0..40u32 {
+            let sreq = proc.isend(&world, peer, t as i32, &i.to_le_bytes());
+            let got = proc.recv(&world, Src::Rank(peer), Tag::Value(t as i32));
+            assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+            proc.wait(sreq);
+        }
+        assert_eq!(proc.epoch_stats().flips, 0, "no wildcard -> no epoch");
     });
 }
 
