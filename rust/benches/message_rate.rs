@@ -136,7 +136,12 @@ fn main() {
             ..Default::default()
         }),
     };
-    let scenarios = [&single, &striped, &sharded, &home, &wildcard];
+    let mixed = Scenario {
+        name: "ser_comm+mixed_policy",
+        threads,
+        report: message_rate_run(RateParams { mode: Mode::SerCommMixedPolicy, ..base.clone() }),
+    };
+    let scenarios = [&single, &striped, &sharded, &home, &wildcard, &mixed];
     for s in scenarios {
         println!("{:<26} {:>14.3}", s.name, s.report.rate / 1e6);
     }
@@ -147,10 +152,24 @@ fn main() {
     let epochs_resolved = wildcard.report.sum_stat("epoch_flips")
         == wildcard.report.sum_stat("epoch_unflips")
         && wildcard.report.sum_stat("epoch_flips") > 0.0;
-    let pass = striped_over_single > 1.0 && sharded_over_home > 1.0 && epochs_resolved;
+    // Per-comm policy gate: the info-keyed striped comm, coexisting with
+    // an ordered comm in the same process, must hold >= 90% of the pure
+    // striped_sharded arm's rate — and the ordered comm must never grow a
+    // sharded engine (its path stays serialized on its own VCI).
+    let mixed_over_sharded = mixed.report.rate / sharded.report.rate;
+    let mixed_ordered_serialized = mixed.report.sum_stat("ordered_striped_engine") == 0.0
+        && mixed.report.sum_stat("policy_mismatch") == 0.0
+        && mixed.report.sum_stat("striped_engine") > 0.0;
+    let pass = striped_over_single > 1.0
+        && sharded_over_home > 1.0
+        && epochs_resolved
+        && mixed_over_sharded >= 0.9
+        && mixed_ordered_serialized;
     println!("\ngate: striped/single_vci = {striped_over_single:.3} (> 1.0 required)");
     println!("gate: sharded/home_engine = {sharded_over_home:.3} (> 1.0 required)");
     println!("gate: wildcard epochs resolved = {epochs_resolved}");
+    println!("gate: mixed_policy/striped_sharded = {mixed_over_sharded:.3} (>= 0.9 required)");
+    println!("gate: mixed ordered comm serialized = {mixed_ordered_serialized}");
     println!("gate: {}", if pass { "PASS" } else { "FAIL" });
 
     if let Ok(path) = std::env::var("BENCH_JSON") {
@@ -167,6 +186,8 @@ fn main() {
              \"striped_over_single_vci\": {striped_over_single:.4},\n    \
              \"sharded_over_home_engine\": {sharded_over_home:.4},\n    \
              \"wildcard_epochs_resolved\": {epochs_resolved},\n    \
+             \"mixed_over_striped_sharded\": {mixed_over_sharded:.4},\n    \
+             \"mixed_ordered_serialized\": {mixed_ordered_serialized},\n    \
              \"pass\": {pass}\n  }}\n}}\n",
             scenarios.into_iter().map(scenario_json).collect::<Vec<_>>().join(",\n"),
             pc.stale_ctrl_drops,

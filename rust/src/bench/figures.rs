@@ -214,6 +214,7 @@ pub fn table1() -> Csv {
         "hook_locks",
         "shard_locks",
         "atomics",
+        "anchored_allocs",
     ]);
     let rows: Arc<Mutex<Vec<Vec<String>>>> = Arc::new(Mutex::new(Vec::new()));
     for (mode_name, cfg) in [
@@ -322,6 +323,7 @@ fn row(mode: &str, op: &str, d: &crate::mpi::instrument::OpCounters) -> Vec<Stri
         d.hook_locks.to_string(),
         d.shard_locks.to_string(),
         d.atomics.to_string(),
+        d.anchored_allocs.to_string(),
     ]
 }
 

@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::fabric::{FabricConfig, Interconnect};
-use crate::mpi::{run_cluster, ClusterSpec, Comm, MpiConfig, MpiProc, Src, Tag};
+use crate::mpi::{run_cluster, ClusterSpec, Comm, Info, MpiConfig, MpiProc, Src, Tag};
 use crate::platform::{Backend, PBarrier};
 use crate::sim::SimOutcome;
 
@@ -39,6 +39,14 @@ pub enum Mode {
     /// periodically post MPI_ANY_SOURCE receives, driving the serialized
     /// wildcard-epoch protocol through continuous flip/unflip cycles.
     SerCommStripedWildcard,
+    /// Mixed per-communicator policies (the per-comm policy tentpole):
+    /// the same multi-source topology as `SerCommStripedSharded`, but the
+    /// process config leaves striping OFF and the hot communicator opts
+    /// in via MPI-4 info keys (`vcmpi_striping=rr`, `vcmpi_match_shards=8`,
+    /// `vcmpi_rx_doorbell=true`), while one extra thread per process runs
+    /// latency ping-pongs on a second, default-policy (ordered)
+    /// communicator whose VCI is pinned out of the stripe lanes.
+    SerCommMixedPolicy,
     /// MPI+threads, per-thread communicators/windows, original library.
     ParCommOrig,
     /// MPI+threads, per-thread communicators/windows, multi-VCI library.
@@ -56,6 +64,7 @@ impl Mode {
             Mode::SerCommStriped => "ser_comm+striped",
             Mode::SerCommStripedSharded => "ser_comm+striped_sharded",
             Mode::SerCommStripedWildcard => "ser_comm+striped_wildcard",
+            Mode::SerCommMixedPolicy => "ser_comm+mixed_policy",
             Mode::ParCommOrig => "par_comm+orig_mpich",
             Mode::ParCommVcis => "par_comm+vcis",
             Mode::Endpoints => "endpoints",
@@ -137,6 +146,11 @@ fn derive(p: &RateParams) -> (FabricConfig, MpiConfig, usize) {
         // (and the doorbell-gated sweep) are what this mode measures.
         Mode::SerCommStripedSharded => (fabric(2), MpiConfig::striped_sharded(t + 1), t),
         Mode::SerCommStripedWildcard => (fabric(1), MpiConfig::striped_sharded(t + 1), t),
+        // Process default is NOT striped: the hot comm's policy comes
+        // entirely from info keys. t striped threads + 1 ordered thread;
+        // t+2 VCIs = fallback + the ordered comm's pinned lane + t stripe
+        // lanes (the same lane count as the pure sharded arm).
+        Mode::SerCommMixedPolicy => (fabric(2), MpiConfig::optimized(t + 2), t + 1),
         // +1 VCI: endpoints come from the pool (fallback excluded).
         Mode::Endpoints => (fabric(1), MpiConfig::optimized(t + 1), t),
     };
@@ -217,6 +231,20 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
                     let ep = proc.create_endpoints(&world, p.threads);
                     eps.lock().unwrap().insert(me, ep);
                 }
+                Mode::SerCommMixedPolicy => {
+                    // Creation order matters for symmetric VCI assignment:
+                    // the hot comm takes lane 1 (its home), the ordered
+                    // comm takes lane 2 (pinned out of the stripe set).
+                    let hot = proc.comm_dup_with_info(
+                        &world,
+                        &Info::new()
+                            .with("vcmpi_striping", "rr")
+                            .with("vcmpi_match_shards", "8")
+                            .with("vcmpi_rx_doorbell", "true"),
+                    );
+                    let ordered = proc.comm_dup(&world);
+                    comms.lock().unwrap().insert(me, vec![hot, ordered]);
+                }
                 _ => {}
             }
             if p.op == Op::Put {
@@ -277,6 +305,58 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
                     }
                 }
             }
+            Op::Isend if p.mode == Mode::SerCommMixedPolicy => {
+                let (hot, ordered) = {
+                    let m = comms.lock().unwrap();
+                    let v = m.get(&me).unwrap();
+                    (v[0].clone(), v[1].clone())
+                };
+                let payload = vec![0u8; p.msg_size];
+                if t == p.threads {
+                    // The ordered lane: latency ping-pongs on the
+                    // default-policy communicator, concurrent with the
+                    // striped storm, between mirror procs across nodes.
+                    let rounds = (p.msgs_per_core / 32).max(2);
+                    if is_sender_proc {
+                        for _ in 0..rounds {
+                            proc.send(&ordered, me + half, 1000, &payload);
+                            let _ = proc.recv(&ordered, Src::Rank(me + half), Tag::Value(1001));
+                        }
+                    } else {
+                        for _ in 0..rounds {
+                            let _ = proc.recv(&ordered, Src::Rank(me - half), Tag::Value(1000));
+                            proc.send(&ordered, me - half, 1001, &payload);
+                        }
+                    }
+                } else {
+                    // The hot lane: identical multi-source sharded
+                    // workload to `SerCommStripedSharded`, driven by the
+                    // info-keyed communicator.
+                    let batches = p.msgs_per_core / p.window;
+                    debug_assert_eq!(p.window % half, 0, "window must split over receivers");
+                    if is_sender_proc {
+                        for _ in 0..batches {
+                            let reqs: Vec<_> = (0..p.window)
+                                .map(|k| {
+                                    let dst = half + k % half;
+                                    proc.isend_ep(&hot, None, dst, t as i32, &payload, false)
+                                })
+                                .collect();
+                            proc.waitall(reqs);
+                        }
+                    } else {
+                        for _ in 0..batches {
+                            let reqs: Vec<_> = (0..p.window)
+                                .map(|k| {
+                                    let src = k % half;
+                                    proc.irecv_ep(&hot, None, Src::Rank(src), Tag::Value(t as i32))
+                                })
+                                .collect();
+                            proc.waitall(reqs);
+                        }
+                    }
+                }
+            }
             Op::Isend if p.mode == Mode::SerCommStripedWildcard => {
                 // Wildcard storm: every 4th receive is MPI_ANY_SOURCE, so
                 // the communicator continuously flips into and out of the
@@ -314,13 +394,14 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
                         let peer = if is_sender_proc { me + half } else { me - half };
                         (world.clone(), None, peer, 0i32)
                     }
-                    // The two guard-matched modes above never reach here;
+                    // The guard-matched modes above never reach here;
                     // listed for exhaustiveness.
                     Mode::SerCommOrig
                     | Mode::SerCommVcis
                     | Mode::SerCommStriped
                     | Mode::SerCommStripedSharded
-                    | Mode::SerCommStripedWildcard => {
+                    | Mode::SerCommStripedWildcard
+                    | Mode::SerCommMixedPolicy => {
                         let peer = 1 - me;
                         (world.clone(), None, peer, t as i32)
                     }
@@ -365,7 +446,9 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
                     let peer = match p.mode {
                         // Multi-proc topologies: pair with the mirror proc
                         // on the other node.
-                        Mode::Everywhere | Mode::SerCommStripedSharded => me + half,
+                        Mode::Everywhere
+                        | Mode::SerCommStripedSharded
+                        | Mode::SerCommMixedPolicy => me + half,
                         _ => 1 - me,
                     };
                     let payload = vec![0u8; p.msg_size];
@@ -390,8 +473,10 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
             // total sender cores:
             let cores = match p.mode {
                 Mode::Everywhere => half,
-                // Multi-source topology: `half` sender procs x threads.
-                Mode::SerCommStripedSharded => half * p.threads,
+                // Multi-source topology: `half` sender procs x threads
+                // (the mixed mode's ordered thread is not counted — the
+                // rate is the STRIPED comm's).
+                Mode::SerCommStripedSharded | Mode::SerCommMixedPolicy => half * p.threads,
                 _ => p.threads,
             } as f64;
             let msgs = cores * p.msgs_per_core as f64;
@@ -415,6 +500,26 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
                 proc.stale_ctrl_drop_count() as f64,
             );
             crate::mpi::world::record(format!("dup_seq_drops_p{me}"), dups as f64);
+            if p.mode == Mode::SerCommMixedPolicy {
+                // Per-comm policy proof points: the info-keyed comm grew a
+                // sharded engine on the receive side, the ordered comm
+                // never did, and no wire-contract mismatch was seen.
+                let m = comms.lock().unwrap();
+                if let Some(v) = m.get(&me) {
+                    crate::mpi::world::record(
+                        format!("striped_engine_p{me}"),
+                        if proc.has_match_engine(v[0].id) { 1.0 } else { 0.0 },
+                    );
+                    crate::mpi::world::record(
+                        format!("ordered_striped_engine_p{me}"),
+                        if proc.has_match_engine(v[1].id) { 1.0 } else { 0.0 },
+                    );
+                    crate::mpi::world::record(
+                        format!("policy_mismatch_p{me}"),
+                        proc.policy_mismatch_count() as f64,
+                    );
+                }
+            }
         }
 
         // ---- teardown ----
@@ -426,6 +531,16 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
             if let Some(v) = mine {
                 for w in v {
                     proc.win_free(&world, w);
+                }
+            }
+            if p.mode == Mode::SerCommMixedPolicy {
+                // Free the policy comms: exercises the freed-comm engine /
+                // cache teardown that finalize asserts.
+                let mine = { comms.lock().unwrap().remove(&me) };
+                if let Some(v) = mine {
+                    for c in v {
+                        proc.comm_free(c);
+                    }
                 }
             }
         }
@@ -453,7 +568,8 @@ fn put_channel(
         | Mode::SerCommVcis
         | Mode::SerCommStriped
         | Mode::SerCommStripedSharded
-        | Mode::SerCommStripedWildcard => {
+        | Mode::SerCommStripedWildcard
+        | Mode::SerCommMixedPolicy => {
             (wins.lock().unwrap().get(&me).unwrap()[0].clone(), None)
         }
         Mode::ParCommOrig | Mode::ParCommVcis => {
@@ -589,6 +705,45 @@ mod tests {
         assert_eq!(sharded.sum_stat("epoch_flips"), 0.0, "no wildcards -> no epochs");
         assert_eq!(sharded.sum_stat("dup_seq_drops"), 0.0);
         assert_eq!(sharded.sum_stat("stale_ctrl_drops"), 0.0);
+    }
+
+    #[test]
+    fn mixed_policy_comms_coexist_in_one_process() {
+        // The per-comm policy acceptance scenario: process-global striping
+        // OFF, one hot comm striped+sharded via info keys, one ordered
+        // comm on a pinned lane — concurrently. The hot comm must still
+        // deliver striping-class rates (the CI bench gate enforces the
+        // strict 10% budget; this test uses a lenient floor), and the
+        // ordered comm must never touch the sharded path.
+        let base = RateParams {
+            mode: Mode::SerCommMixedPolicy,
+            threads: 4,
+            msgs_per_core: 256,
+            window: 32,
+            ..Default::default()
+        };
+        let mixed = message_rate_run(base.clone());
+        assert!(mixed.rate > 0.0);
+        assert!(mixed.sum_stat("striped_engine") > 0.0, "hot comm must shard on receivers");
+        assert_eq!(
+            mixed.sum_stat("ordered_striped_engine"),
+            0.0,
+            "the default-policy comm must stay off the sharded path"
+        );
+        assert_eq!(mixed.sum_stat("policy_mismatch"), 0.0, "wire contract must hold");
+        assert!(mixed.sum_stat("doorbell_skips") > 0.0, "info-keyed doorbell participation");
+        assert_eq!(mixed.sum_stat("epoch_flips"), 0.0, "no wildcards -> no epochs");
+        assert_eq!(mixed.sum_stat("dup_seq_drops"), 0.0);
+        let pure = message_rate_run(RateParams {
+            mode: Mode::SerCommStripedSharded,
+            ..base
+        });
+        assert!(
+            mixed.rate > 0.5 * pure.rate,
+            "mixed-policy striped comm fell off a cliff: mixed={:.0} pure={:.0}",
+            mixed.rate,
+            pure.rate
+        );
     }
 
     #[test]

@@ -2,11 +2,16 @@
 
 use std::sync::Arc;
 
+use super::policy::CommPolicy;
+
 /// What a communicator's rank space denotes.
 #[derive(Clone, Debug)]
 pub enum CommKind {
     /// Ranks are processes (MPI_COMM_WORLD and its duplicates).
     Procs,
+    /// Subgroup communicator (`comm_split_with_info`): rank `r` is process
+    /// `procs[r]` — the members of one split color, ordered by key.
+    Group { procs: Arc<Vec<usize>> },
     /// User-visible endpoints communicator: `per_proc` endpoint ranks per
     /// process; endpoint `e` of a process maps to local VCI `vcis[e]`
     /// (symmetric across processes). Rank r = proc * per_proc + e.
@@ -25,13 +30,18 @@ pub struct Comm {
     /// Calling process's rank (process id for `Procs` communicators).
     pub rank: usize,
     pub kind: CommKind,
+    /// Per-communicator policy (striping mode, match shards, wildcard
+    /// linger, doorbell participation, wildcard assertions), resolved from
+    /// info keys at creation — see [`crate::mpi::policy`]. Every member of
+    /// the communicator derives the identical policy (wire contract).
+    pub policy: Arc<CommPolicy>,
 }
 
 impl Comm {
     /// Number of endpoint ranks per process (1 for process communicators).
     pub fn ranks_per_proc(&self) -> usize {
         match &self.kind {
-            CommKind::Procs => 1,
+            CommKind::Procs | CommKind::Group { .. } => 1,
             CommKind::Endpoints { per_proc, .. } => *per_proc,
         }
     }
@@ -53,8 +63,23 @@ mod tests {
             size: 8,
             rank: 2,
             kind: CommKind::Endpoints { per_proc: 4, vcis: Arc::new(vec![1, 2, 3, 4]) },
+            policy: Arc::new(CommPolicy::default()),
         };
         assert_eq!(c.ranks_per_proc(), 4);
         assert!(c.is_endpoints());
+    }
+
+    #[test]
+    fn group_comms_have_one_rank_per_proc() {
+        let c = Comm {
+            id: 9,
+            vci: 1,
+            size: 2,
+            rank: 0,
+            kind: CommKind::Group { procs: Arc::new(vec![0, 2]) },
+            policy: Arc::new(CommPolicy::default()),
+        };
+        assert_eq!(c.ranks_per_proc(), 1);
+        assert!(!c.is_endpoints());
     }
 }

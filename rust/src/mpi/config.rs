@@ -1,4 +1,28 @@
 //! Library configuration: every knob the paper ablates is here.
+//!
+//! # Process-wide knobs vs per-communicator defaults
+//!
+//! Two kinds of knob live on [`MpiConfig`]:
+//!
+//! * **Process-wide** (`num_vcis`, `cs_mode`, the per-VCI request/
+//!   lightweight/progress options, `vci_policy`, `cache_aligned_vcis`,
+//!   `global_progress_interval`, `unsafe_no_thread_safety`, and the RMA
+//!   hint `accumulate_ordering_none`): these shape the library itself and
+//!   cannot differ per communicator.
+//! * **Per-communicator defaults** (`vci_striping`, `match_shards`,
+//!   `wildcard_epoch_linger`, `rx_doorbell`, and the wildcard assertions
+//!   in [`Hints`]): since the per-communicator policy layer
+//!   ([`crate::mpi::policy`]), these only seed the default
+//!   [`crate::mpi::CommPolicy`] every communicator (including
+//!   MPI_COMM_WORLD) starts from. Individual communicators override them
+//!   with MPI-4-style info keys at creation
+//!   (`MpiProc::comm_dup_with_info` / `comm_split_with_info`):
+//!   `vcmpi_striping=off|rr|hash`, `vcmpi_match_shards=N`,
+//!   `vcmpi_wildcard_linger=N`, `vcmpi_rx_doorbell=true|false`,
+//!   `mpi_assert_no_any_source`, `mpi_assert_no_any_tag`. A hot striped
+//!   halo-exchange communicator and a latency-sensitive ordered
+//!   communicator therefore coexist in one process — the presets below
+//!   keep their exact pre-policy behavior through the default path.
 
 /// Critical-section granularity (paper §4.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,6 +107,9 @@ pub struct MpiConfig {
     pub vci_policy: VciPolicy,
     /// Per-message VCI striping with receiver-side seq reordering: lets a
     /// single hot communicator use the whole pool. See [`VciStriping`].
+    /// **Default policy only** — per-comm `vcmpi_striping` info keys
+    /// override it (see [`crate::mpi::policy`]); likewise for
+    /// `match_shards`, `wildcard_epoch_linger`, `rx_doorbell`, `hints`.
     pub vci_striping: VciStriping,
     /// Per-communicator matching shards for striped traffic (rounded up to
     /// a power of two; `1` = one serialized engine per communicator, the

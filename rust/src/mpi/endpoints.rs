@@ -39,22 +39,31 @@ impl MpiProc {
         // Communicator ids must agree across processes: derive from the
         // per-process creation counter (creation is collective and ordered).
         let id = self.alloc_comm_id();
-        Comm {
+        let c = Comm {
             id,
             vci: vcis[0],
             size: parent.size * n,
             rank: parent.rank,
             kind: CommKind::Endpoints { per_proc: n, vcis: Arc::new(vcis) },
-        }
+            // Endpoints never stripe (each endpoint IS a dedicated VCI);
+            // registering the ordered policy also pins every endpoint VCI
+            // out of the stripe-lane set, so a coexisting striped comm's
+            // bulk traffic never queues on an endpoint's context.
+            policy: Arc::new(parent.policy.ordered()),
+        };
+        self.register_comm(&c);
+        c
     }
 
-    /// Free the endpoints communicator, returning its VCIs to the pool.
+    /// Free the endpoints communicator, returning its VCIs to the pool
+    /// and dropping its policy registration (and lane pins).
     pub fn free_endpoints(&self, comm: Comm) {
         if let CommKind::Endpoints { vcis, .. } = &comm.kind {
             for &v in vcis.iter() {
                 self.vcis().release(v);
             }
         }
+        self.unregister_comm(&comm);
     }
 
     /// Endpoint rank of endpoint `e` on process `p` within `comm`.

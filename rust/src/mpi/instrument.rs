@@ -14,6 +14,7 @@ thread_local! {
     static LOCKS_HOOK: Cell<u64> = const { Cell::new(0) };
     static LOCKS_SHARD: Cell<u64> = const { Cell::new(0) };
     static ATOMIC_OPS: Cell<u64> = const { Cell::new(0) };
+    static ANCHORED_ALLOCS: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Which class of lock was taken (paper Table 1's columns, plus the
@@ -43,6 +44,13 @@ pub fn count_atomic() {
     ATOMIC_OPS.with(|c| c.set(c.get() + 1));
 }
 
+/// A striped receive post allocated its request from a shard-anchored VCI
+/// cache instead of the communicator's home VCI (the Table-1 proof that
+/// the receive-post path no longer funnels through one shared lock).
+pub fn count_anchored_alloc() {
+    ANCHORED_ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
 /// Snapshot of the calling thread's critical-path counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounters {
@@ -52,6 +60,9 @@ pub struct OpCounters {
     pub hook_locks: u64,
     pub shard_locks: u64,
     pub atomics: u64,
+    /// Striped receive posts whose request came from a shard-anchored
+    /// VCI's cache rather than the communicator's home VCI.
+    pub anchored_allocs: u64,
 }
 
 impl OpCounters {
@@ -71,6 +82,7 @@ impl std::ops::Sub for OpCounters {
             hook_locks: self.hook_locks - rhs.hook_locks,
             shard_locks: self.shard_locks - rhs.shard_locks,
             atomics: self.atomics - rhs.atomics,
+            anchored_allocs: self.anchored_allocs - rhs.anchored_allocs,
         }
     }
 }
@@ -85,6 +97,7 @@ pub fn snapshot() -> OpCounters {
         hook_locks: LOCKS_HOOK.with(|c| c.get()),
         shard_locks: LOCKS_SHARD.with(|c| c.get()),
         atomics: ATOMIC_OPS.with(|c| c.get()),
+        anchored_allocs: ANCHORED_ALLOCS.with(|c| c.get()),
     }
 }
 
@@ -255,12 +268,14 @@ mod tests {
         count_lock(LockClass::Request);
         count_lock(LockClass::Shard);
         count_atomic();
+        count_anchored_alloc();
         let d = snapshot() - base;
         assert_eq!(d.vci_locks, 2);
         assert_eq!(d.request_locks, 1);
         assert_eq!(d.shard_locks, 1);
         assert_eq!(d.atomics, 1);
-        assert_eq!(d.total_locks(), 4);
+        assert_eq!(d.anchored_allocs, 1);
+        assert_eq!(d.total_locks(), 4, "anchored allocs are not locks");
     }
 
     #[test]

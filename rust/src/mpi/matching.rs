@@ -55,6 +55,7 @@
 //! directions preserve per-stream queue order and `next_seq` continuity,
 //! which is all MPI's nonovertaking rule observes.
 
+use std::collections::hash_map::Entry;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use super::request::ReqId;
@@ -275,12 +276,57 @@ impl MatchingState {
     /// `(comm, src)` stream both queue order and reorder-stage continuity
     /// are preserved because a stream lives wholly in one engine at a time;
     /// cross-stream interleaving is not an MPI-visible order.
+    ///
+    /// A stream present in BOTH engines is only reachable from engine
+    /// adoption (`CommMatch::absorb_engine` merging a drained engine into
+    /// one that a concurrent striped arrival re-created) — epoch flips
+    /// move each stream whole. The re-created record cannot have matched
+    /// or admitted anything ahead of the migrated one beyond parking
+    /// in-window arrivals, and no receive can be posted before the
+    /// creation call returns, so the merge below reconciles exactly:
+    /// farthest admission point wins, parked arrivals the other engine
+    /// already admitted drop as counted duplicates, and any contiguous
+    /// run the union completes is admitted to the unexpected queue
+    /// (behind the migrated engine's earlier-seq admissions, preserving
+    /// per-stream order; the posted queue is empty in this scenario).
     pub(crate) fn absorb_parts(&mut self, parts: MatchingParts) {
         self.posted.extend(parts.posted);
         self.unexpected.extend(parts.unexpected);
         for (key, stream) in parts.streams {
-            let prev = self.streams.insert(key, stream);
-            debug_assert!(prev.is_none(), "stream {key:?} split across matching engines");
+            match self.streams.entry(key) {
+                Entry::Vacant(e) => {
+                    e.insert(stream);
+                }
+                Entry::Occupied(mut e) => {
+                    let cur = e.get_mut();
+                    if stream.next_seq > cur.next_seq {
+                        cur.next_seq = stream.next_seq;
+                        // Drop parked arrivals the migrated engine had
+                        // already admitted (replays straddling the
+                        // adoption window).
+                        while let Some((&seq, _)) = cur.parked.first_key_value() {
+                            if seq >= cur.next_seq {
+                                break;
+                            }
+                            cur.parked.remove(&seq);
+                            self.dup_seq_drops += 1;
+                            super::instrument::record_dup_seq_drop();
+                        }
+                    }
+                    for (seq, msg) in stream.parked {
+                        if seq < cur.next_seq || cur.parked.contains_key(&seq) {
+                            self.dup_seq_drops += 1;
+                            super::instrument::record_dup_seq_drop();
+                        } else {
+                            cur.parked.insert(seq, msg);
+                        }
+                    }
+                    while let Some(msg) = cur.parked.remove(&cur.next_seq) {
+                        cur.next_seq += 1;
+                        self.unexpected.push_back(msg);
+                    }
+                }
+            }
         }
     }
 
@@ -476,6 +522,48 @@ mod tests {
         assert!(m.on_striped_arrival(umsg(1, 2, 7, 5)).is_empty());
         assert_eq!(m.dup_seq_drops(), 2);
         assert_eq!(m.reorder_parked(), 1);
+    }
+
+    #[test]
+    fn absorb_parts_merges_colliding_streams_at_the_farthest_admission_point() {
+        // Engine-adoption double-race shape: the migrated engine admitted
+        // seqs 1-2 and parked 5; the raced-in engine parked 3 and 4
+        // (admitted nothing — its record started fresh). The merge must
+        // admit 3..5 behind 1-2 and leave the stream continuous at 6.
+        let mut migrated = MatchingState::new();
+        assert!(migrated.on_striped_arrival(umsg(1, 2, 7, 1)).is_empty());
+        assert!(migrated.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty());
+        assert!(migrated.on_striped_arrival(umsg(1, 2, 7, 5)).is_empty());
+        let mut winner = MatchingState::new();
+        assert!(winner.on_striped_arrival(umsg(1, 2, 7, 3)).is_empty());
+        assert!(winner.on_striped_arrival(umsg(1, 2, 7, 4)).is_empty());
+        assert_eq!(winner.unexpected_len(), 0, "fresh record parks everything");
+        winner.absorb_parts(migrated.take_parts());
+        assert_eq!(winner.unexpected_len(), 5, "union completes the run");
+        assert_eq!(winner.reorder_parked(), 0);
+        assert_eq!(winner.next_expected_seq(1, 2), 6);
+        for want in 1..=5u64 {
+            let got = winner.on_post(precv(1, Src::Rank(2), Tag::Value(7), 9)).unwrap();
+            assert_eq!(got.seq, want, "merged stream out of order");
+        }
+        assert_eq!(winner.dup_seq_drops(), 0, "no duplicates were in play");
+    }
+
+    #[test]
+    fn absorb_parts_drops_already_admitted_parked_arrivals() {
+        // The raced-in engine parked a seq the migrated engine had already
+        // admitted (a replay straddling the adoption window): it must be
+        // dropped and counted, not re-admitted.
+        let mut migrated = MatchingState::new();
+        assert!(migrated.on_striped_arrival(umsg(1, 2, 7, 1)).is_empty());
+        assert!(migrated.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty());
+        let mut winner = MatchingState::new();
+        assert!(winner.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty(), "parks on fresh record");
+        winner.absorb_parts(migrated.take_parts());
+        assert_eq!(winner.unexpected_len(), 2, "only the admitted 1-2 survive");
+        assert_eq!(winner.next_expected_seq(1, 2), 3);
+        assert_eq!(winner.dup_seq_drops(), 1, "replayed seq 2 dropped and counted");
+        assert_eq!(winner.reorder_parked(), 0);
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! (the proposal it argues against).
 //!
 //! Module map (see DESIGN.md §5):
-//!  * [`config`] — every knob the paper ablates
+//!  * [`config`] — every knob the paper ablates (per-comm knobs demoted
+//!    to process-wide defaults)
+//!  * [`policy`] — per-communicator `CommPolicy` resolved from MPI-4
+//!    info keys (striping / shards / linger / doorbell / assertions)
 //!  * [`vci`] — VCI objects, pool, mapping policies, lock discipline
 //!  * [`matching`] — <comm, rank, tag> matching with wildcards + ordering
 //!  * [`shard`] — per-source sharded matching + wildcard epochs (striping)
@@ -25,6 +28,7 @@ pub mod endpoints;
 pub mod instrument;
 pub mod matching;
 pub mod p2p;
+pub mod policy;
 pub mod proc;
 pub mod progress;
 pub mod request;
@@ -36,6 +40,7 @@ pub mod world;
 pub use comm::{Comm, CommKind};
 pub use config::{CsMode, Hints, MpiConfig, VciPolicy, VciStriping};
 pub use matching::{Src, Tag};
+pub use policy::{CommPolicy, Info};
 pub use shard::{CommMatch, EpochStats};
 pub use proc::MpiProc;
 pub use request::Request;

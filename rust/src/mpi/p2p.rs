@@ -16,9 +16,18 @@ use super::config::CsMode;
 use super::instrument::count_lock;
 use super::matching::{Arrival, PostedRecv, SenderInfo, Src, Tag, UnexpectedMsg};
 use super::proc::MpiProc;
-use super::request::{ReqId, Request};
+use super::request::{ReqId, Request, REQ_FLAG_DOORBELL, REQ_FLAG_STRIPED};
 use super::vci::{Guard, VciState};
 use super::Comm;
+
+/// Request-slot routing flags for an operation on `comm` (striped comms'
+/// waiters sweep the stripe lanes; doorbell participation per policy).
+fn req_flags(comm: &Comm, striped: bool) -> u8 {
+    if !striped {
+        return 0;
+    }
+    REQ_FLAG_STRIPED | if comm.policy.rx_doorbell { REQ_FLAG_DOORBELL } else { 0 }
+}
 
 impl MpiProc {
     /// True when completion counters must be updated atomically (FG mode
@@ -56,12 +65,14 @@ impl MpiProc {
     pub(super) fn release_request(&self, id: ReqId, vci_idx: usize) {
         let guard = self.guard();
         if self.cfg.per_vci_req_cache {
-            if self.cfg.vci_striping != super::config::VciStriping::Off {
-                // Striping: the home VCI's lock is the hot serialization
-                // point, so don't pay a dedicated acquisition for the
-                // free — park it on the owner (one shared-list push,
-                // modeled as an atomic) and let the next locked entry
-                // absorb it, like the deferred lightweight release.
+            let flags = self.slab.slot(id).flags.load(std::sync::atomic::Ordering::Relaxed);
+            if flags & REQ_FLAG_STRIPED != 0 {
+                // Striping (per the owning comm's policy): the allocating
+                // VCI's lock is a hot resource, so don't pay a dedicated
+                // acquisition for the free — park it on the owner (one
+                // shared-list push, modeled as an atomic) and let the next
+                // locked entry absorb it, like the deferred lightweight
+                // release.
                 padvance(self.backend, self.costs.atomic_rmw + self.costs.request_cache_op);
                 self.vcis().get(vci_idx).defer_request_free(id);
                 return;
@@ -157,7 +168,7 @@ impl MpiProc {
         // pool size there).
         let stripe_home = if striped { Some(comm.vci) } else { None };
         let my_rank = match &comm.kind {
-            super::comm::CommKind::Procs => comm.rank,
+            super::comm::CommKind::Procs | super::comm::CommKind::Group { .. } => comm.rank,
             super::comm::CommKind::Endpoints { per_proc, .. } => {
                 comm.rank * per_proc + my_ep.expect("endpoint identity required")
             }
@@ -191,7 +202,9 @@ impl MpiProc {
                 return Request::Lightweight { vci: vci_idx };
             }
             let id = self.alloc_request(st);
+            let rf = req_flags(comm, striped);
             self.slab.slot(id).vci.store(vci_idx, std::sync::atomic::Ordering::Relaxed);
+            self.slab.slot(id).flags.store(rf, std::sync::atomic::Ordering::Relaxed);
             padvance(self.backend, self.costs.instructions(3)); // record VCI in request
             if eager {
                 self.fabric.inject(vci.ctx_index, dst_proc, dst_ctx, Payload::TwoSided {
@@ -252,19 +265,44 @@ impl MpiProc {
         padvance(self.backend, self.costs.mpi_sw_recv + self.costs.instructions(8));
         let _cs = self.enter_cs();
         let guard = self.guard();
-        // Under striping, receives post into the communicator's sharded
-        // matching engine: a concrete source goes to the shard that owns
-        // its stream (matched by whichever VCI polls the arrival), and
-        // MPI_ANY_SOURCE enters the serialized wildcard epoch — wildcards
-        // stay fully legal, unlike the §7 envelope hints. The request
-        // object still comes from the comm's home-VCI cache; its lock is
-        // no longer on the arrival path, so this alloc is cheap.
+        // Under striping (per this communicator's policy), receives post
+        // into the communicator's sharded matching engine: a concrete
+        // source goes to the shard that owns its stream (matched by
+        // whichever VCI polls the arrival), and MPI_ANY_SOURCE enters the
+        // serialized wildcard epoch — wildcards stay fully legal, unlike
+        // the §7 envelope hints (unless this comm's policy asserts them
+        // away). The request allocates from the **shard-anchored** VCI's
+        // cache — the VCI derived from the stream's shard — so concurrent
+        // posts for different sources spread their allocation locks over
+        // the pool instead of all funneling through the home VCI: the last
+        // shared lock on the striped receive-post path (counted in the
+        // Table-1 `anchored_allocs` column).
         if my_ep.is_none() && self.striping_active(comm) {
-            let vci_idx = self.comm_vci(comm, None);
+            if comm.policy.no_any_source && src == Src::Any {
+                panic!(
+                    "mpi_assert_no_any_source asserted on this communicator, but a wildcard receive was posted (erroneous program)"
+                );
+            }
+            if comm.policy.no_any_tag && matches!(tag, Tag::Any) {
+                panic!(
+                    "mpi_assert_no_any_tag asserted on this communicator, but a wildcard receive was posted (erroneous program)"
+                );
+            }
+            let home = self.comm_vci(comm, None);
+            let vci_idx = match src {
+                Src::Rank(s) => self.shard_anchor_vci(comm, s),
+                // Wildcards serialize through the home shard; anchor home.
+                Src::Any => home,
+            };
+            if vci_idx != home {
+                super::instrument::count_anchored_alloc();
+            }
             let vci = self.vcis().get(vci_idx).clone();
+            let rf = req_flags(comm, true);
             let (id, cm) = vci.with_state(guard, |st| {
                 let id = self.alloc_request(st);
                 self.slab.slot(id).vci.store(vci_idx, std::sync::atomic::Ordering::Relaxed);
+                self.slab.slot(id).flags.store(rf, std::sync::atomic::Ordering::Relaxed);
                 (id, self.cached_comm_match(st, comm.id))
             });
             padvance(self.backend, self.costs.instructions(3) + self.costs.match_cost);
@@ -277,7 +315,7 @@ impl MpiProc {
             return Request::Real { id, vci: vci_idx };
         }
         let hinted =
-            self.cfg.hints.no_any_source && self.cfg.hints.no_any_tag && !comm.is_endpoints();
+            comm.policy.no_any_source && comm.policy.no_any_tag && !comm.is_endpoints();
         let vci_idx = if hinted && my_ep.is_none() {
             // The asserted hints forbid wildcards: the envelope is fully
             // specified and selects the stream.
@@ -382,11 +420,18 @@ impl MpiProc {
                 None
             }
             Request::Real { id, vci } => {
+                // Progress routing per the owning communicator's policy,
+                // recorded in the slot at initiation: striped comms sweep
+                // the stripe lanes (optionally doorbell-gated), ordered
+                // comms poll their own VCI.
+                let flags = self.slab.slot(id).flags.load(std::sync::atomic::Ordering::Relaxed);
+                let striped = flags & REQ_FLAG_STRIPED != 0;
+                let doorbell = flags & REQ_FLAG_DOORBELL != 0;
                 loop {
                     if self.is_complete(id) {
                         break;
                     }
-                    self.progress_for_request(vci);
+                    self.progress_with(vci, striped, doorbell);
                 }
                 let data =
                     self.slab.slot(id).data.lock().unwrap_or_else(|e| e.into_inner()).take();
@@ -409,7 +454,9 @@ impl MpiProc {
                 if self.is_complete(*id) {
                     return true;
                 }
-                self.progress_for_request(*vci);
+                let flags = self.slab.slot(*id).flags.load(std::sync::atomic::Ordering::Relaxed);
+                let striped = flags & REQ_FLAG_STRIPED != 0;
+                self.progress_with(*vci, striped, flags & REQ_FLAG_DOORBELL != 0);
                 self.is_complete(*id)
             }
         }

@@ -1,0 +1,274 @@
+//! Per-communicator policy: the info-key-driven resolution of the
+//! striping / sharding / wildcard knobs that used to be process-global.
+//!
+//! The paper's position (§7) is that users should expose parallelism
+//! through *existing* MPI mechanisms — communicators and per-object info
+//! hints — and let the library map that parallelism onto VCIs. After the
+//! striping and sharded-matching work, our knobs (`vci_striping`,
+//! `match_shards`, `wildcard_epoch_linger`, `rx_doorbell`, the wildcard
+//! assertions) lived on [`MpiConfig`], so one process could not host a
+//! hot halo-exchange communicator *and* a latency-sensitive ordered
+//! communicator with different policies. This module lifts them into a
+//! per-communicator [`CommPolicy`], resolved at communicator creation
+//! from MPI-4-style [`Info`] keys; the `MpiConfig` values are demoted to
+//! process-wide **defaults** (the policy every communicator starts from,
+//! including `MPI_COMM_WORLD`).
+//!
+//! # Info-key vocabulary
+//!
+//! | key                        | values            | effect |
+//! |----------------------------|-------------------|--------|
+//! | `vcmpi_striping`           | `off`\|`rr`\|`hash` | per-message VCI striping mode for this communicator |
+//! | `vcmpi_match_shards`       | integer ≥ 1       | matching shards for striped traffic (rounded up to a power of two) |
+//! | `vcmpi_wildcard_linger`    | integer ≥ 0       | wildcard-epoch hysteresis, in operations |
+//! | `vcmpi_rx_doorbell`        | `true`\|`false`   | participate in doorbell-gated striped sweeps |
+//! | `mpi_assert_no_any_source` | `true`\|`false`   | receives on this comm never use `MPI_ANY_SOURCE` |
+//! | `mpi_assert_no_any_tag`    | `true`\|`false`   | receives on this comm never use `MPI_ANY_TAG` |
+//!
+//! Unknown keys are ignored (MPI info semantics); a malformed value for a
+//! known key panics — it is a programming error, like posting a wildcard
+//! under an asserted hint.
+//!
+//! # Wire-contract symmetry
+//!
+//! Like `num_vcis` and the striping wire format, a communicator's policy
+//! is part of the job-wide contract: every member must pass the same info
+//! keys to the same creation call, so the policy is derived
+//! deterministically from `(comm id, info)` and all members agree on
+//! whether envelopes are striped and how streams shard. This is asserted
+//! the same way `num_vcis` symmetry is — by construction plus a counted
+//! diagnostic (`MpiProc::policy_mismatch_count`) when a striped envelope
+//! arrives for a communicator whose registered policy says `off`.
+
+use super::config::{MpiConfig, VciStriping};
+
+/// An MPI-4.0-style info object: an ordered list of `(key, value)`
+/// string pairs. Later `set`s of the same key win.
+#[derive(Clone, Debug, Default)]
+pub struct Info {
+    entries: Vec<(String, String)>,
+}
+
+impl Info {
+    pub fn new() -> Self {
+        Info { entries: Vec::new() }
+    }
+
+    /// MPI_Info_set.
+    pub fn set(&mut self, key: impl Into<String>, value: impl Into<String>) {
+        self.entries.push((key.into(), value.into()));
+    }
+
+    /// Builder-style `set` for test/bench ergonomics.
+    pub fn with(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.set(key, value);
+        self
+    }
+
+    /// MPI_Info_get: the latest value set for `key`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The per-communicator resolution of the striping/sharding knobs.
+///
+/// Built once at communicator creation ([`from_config`] for the process
+/// defaults, then [`with_info`] per creation call) and carried by every
+/// [`super::comm::Comm`] handle as an `Arc`; the process also keeps a
+/// `comm id -> policy` table so the receive side (which only sees comm
+/// ids on the wire) can build matching engines with the right shape.
+///
+/// [`from_config`]: CommPolicy::from_config
+/// [`with_info`]: CommPolicy::with_info
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CommPolicy {
+    /// Per-message VCI striping mode for this communicator's two-sided
+    /// traffic (`vcmpi_striping`). `Off` pins the communicator to its
+    /// assigned VCI — and *pins that VCI out of the stripe-lane set*, so
+    /// striped communicators' bulk traffic never queues behind it.
+    pub striping: VciStriping,
+    /// Matching shards for striped traffic (`vcmpi_match_shards`,
+    /// rounded up to a power of two by the engine; `1` = the single
+    /// home-engine arm).
+    pub match_shards: usize,
+    /// Wildcard-epoch hysteresis in operations (`vcmpi_wildcard_linger`).
+    pub wildcard_linger: u32,
+    /// Does this communicator's striped traffic participate in
+    /// doorbell-gated progress sweeps (`vcmpi_rx_doorbell`)?
+    pub rx_doorbell: bool,
+    /// `mpi_assert_no_any_source`: receives never use `MPI_ANY_SOURCE`,
+    /// so (with `no_any_tag`) unstriped traffic may spread by envelope.
+    pub no_any_source: bool,
+    /// `mpi_assert_no_any_tag`: receives never use `MPI_ANY_TAG`.
+    pub no_any_tag: bool,
+}
+
+impl Default for CommPolicy {
+    fn default() -> Self {
+        CommPolicy {
+            striping: VciStriping::Off,
+            match_shards: 1,
+            wildcard_linger: 0,
+            rx_doorbell: false,
+            no_any_source: false,
+            no_any_tag: false,
+        }
+    }
+}
+
+impl CommPolicy {
+    /// The process-default policy: the demoted `MpiConfig` knobs. Every
+    /// preset builds exactly its pre-policy behavior through this path.
+    pub fn from_config(cfg: &MpiConfig) -> Self {
+        CommPolicy {
+            striping: cfg.vci_striping,
+            match_shards: cfg.match_shards,
+            wildcard_linger: cfg.wildcard_epoch_linger,
+            rx_doorbell: cfg.rx_doorbell,
+            no_any_source: cfg.hints.no_any_source,
+            no_any_tag: cfg.hints.no_any_tag,
+        }
+    }
+
+    /// Resolve a derived policy: this policy (the parent communicator's)
+    /// overridden by `info`'s keys. An empty info inherits the parent
+    /// policy unchanged — `comm_dup` is `comm_dup_with_info(.., &Info::new())`.
+    pub fn with_info(&self, info: &Info) -> Self {
+        let mut p = self.clone();
+        if let Some(v) = info.get("vcmpi_striping") {
+            p.striping = match v {
+                "off" => VciStriping::Off,
+                "rr" => VciStriping::RoundRobin,
+                "hash" => VciStriping::HashedByRequest,
+                other => panic!(
+                    "info key vcmpi_striping: expected off|rr|hash, got {other:?} (erroneous program)"
+                ),
+            };
+        }
+        if let Some(v) = info.get("vcmpi_match_shards") {
+            p.match_shards = v
+                .parse::<usize>()
+                .unwrap_or_else(|_| {
+                    panic!(
+                        "info key vcmpi_match_shards: expected an integer, got {v:?} (erroneous program)"
+                    )
+                })
+                .max(1);
+        }
+        if let Some(v) = info.get("vcmpi_wildcard_linger") {
+            p.wildcard_linger = v.parse::<u32>().unwrap_or_else(|_| {
+                panic!(
+                    "info key vcmpi_wildcard_linger: expected an integer, got {v:?} (erroneous program)"
+                )
+            });
+        }
+        if let Some(v) = info.get("vcmpi_rx_doorbell") {
+            p.rx_doorbell = parse_bool("vcmpi_rx_doorbell", v);
+        }
+        if let Some(v) = info.get("mpi_assert_no_any_source") {
+            p.no_any_source = parse_bool("mpi_assert_no_any_source", v);
+        }
+        if let Some(v) = info.get("mpi_assert_no_any_tag") {
+            p.no_any_tag = parse_bool("mpi_assert_no_any_tag", v);
+        }
+        p
+    }
+
+    /// Does this policy stripe two-sided traffic across the pool?
+    pub fn striped(&self) -> bool {
+        self.striping != VciStriping::Off
+    }
+
+    /// Shard-index mask of this policy's matching engine: shard count
+    /// rounded up to a power of two, minus one (mirrors `CommMatch`).
+    pub fn shard_mask(&self) -> usize {
+        self.match_shards.max(1).next_power_of_two() - 1
+    }
+
+    /// This policy with striping forced off (endpoints communicators:
+    /// each endpoint IS a dedicated VCI, so striping would defeat them).
+    pub fn ordered(&self) -> Self {
+        CommPolicy { striping: VciStriping::Off, ..self.clone() }
+    }
+}
+
+fn parse_bool(key: &str, v: &str) -> bool {
+    match v {
+        "true" | "1" => true,
+        "false" | "0" => false,
+        other => panic!("info key {key}: expected true|false, got {other:?} (erroneous program)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn info_last_set_wins_and_unknown_keys_are_ignored() {
+        let info = Info::new()
+            .with("vcmpi_striping", "off")
+            .with("vcmpi_striping", "rr")
+            .with("some_vendor_key", "whatever");
+        assert_eq!(info.get("vcmpi_striping"), Some("rr"));
+        assert_eq!(info.get("missing"), None);
+        let p = CommPolicy::default().with_info(&info);
+        assert_eq!(p.striping, VciStriping::RoundRobin);
+    }
+
+    #[test]
+    fn defaults_mirror_the_config_presets() {
+        let p = CommPolicy::from_config(&MpiConfig::striped_sharded(8));
+        assert_eq!(p.striping, VciStriping::RoundRobin);
+        assert_eq!(p.match_shards, 8);
+        assert!(p.rx_doorbell);
+        let q = CommPolicy::from_config(&MpiConfig::optimized(8));
+        assert!(!q.striped());
+        assert_eq!(q.match_shards, 1);
+    }
+
+    #[test]
+    fn with_info_overrides_only_named_keys() {
+        let base = CommPolicy::from_config(&MpiConfig::striped_sharded(8));
+        let p = base.with_info(
+            &Info::new().with("vcmpi_match_shards", "3").with("vcmpi_wildcard_linger", "5"),
+        );
+        assert_eq!(p.match_shards, 3);
+        assert_eq!(p.shard_mask(), 3, "rounded up to 4 shards");
+        assert_eq!(p.wildcard_linger, 5);
+        assert_eq!(p.striping, base.striping, "unnamed keys inherit");
+        assert!(p.rx_doorbell);
+    }
+
+    #[test]
+    fn wildcard_assertions_parse() {
+        let p = CommPolicy::default().with_info(
+            &Info::new()
+                .with("mpi_assert_no_any_source", "true")
+                .with("mpi_assert_no_any_tag", "1"),
+        );
+        assert!(p.no_any_source && p.no_any_tag);
+        assert!(!p.ordered().striped());
+    }
+
+    #[test]
+    #[should_panic(expected = "vcmpi_striping")]
+    fn malformed_striping_value_is_erroneous() {
+        let _ = CommPolicy::default().with_info(&Info::new().with("vcmpi_striping", "sideways"));
+    }
+
+    #[test]
+    #[should_panic(expected = "vcmpi_match_shards")]
+    fn malformed_shard_count_is_erroneous() {
+        let _ = CommPolicy::default().with_info(&Info::new().with("vcmpi_match_shards", "many"));
+    }
+}

@@ -3,7 +3,7 @@
 //! connection-establishment logic of MPI_Init/Finalize (paper §4.2).
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -14,10 +14,39 @@ use crate::sim::CostModel;
 use super::comm::{Comm, CommKind};
 use super::config::{CsMode, MpiConfig, VciStriping};
 use super::instrument::{count_lock, LockClass};
+use super::policy::{CommPolicy, Info};
 use super::request::{RequestSlab, DEFAULT_SLAB_CAPACITY};
 use super::rma::Window;
 use super::shard::{CommMatch, EpochStats};
 use super::vci::{guard_for, Guard, VciPool, VciState, FALLBACK_VCI};
+
+/// Is pool lane `idx` pinned out of the stripe-lane set? Lanes beyond 64
+/// are never pinned (the pin mask is one word; pools are bounded by the
+/// node's hardware-context budget, well below that).
+fn lane_excluded(mask: u64, idx: usize) -> bool {
+    idx < 64 && mask & (1u64 << idx) != 0
+}
+
+/// Cap on the freed-comm finalize tripwire (`MpiProc::freed_comms`):
+/// teardown correctness is enforced at free time (engine removed, caches
+/// purged); the finalize assertion only guards against later
+/// resurrection, so tracking the first ids is enough of a canary.
+const FREED_TRACK_CAP: usize = 1024;
+
+/// Deterministic probe for the first un-pinned stripe lane starting from
+/// scramble `z` (lanes `1..n`; the fallback lane 0 is never a stripe
+/// lane). `None` when every stripe lane is pinned. Shared by hashed
+/// stripe selection and shard-anchored request allocation so the two
+/// cannot diverge.
+fn probe_stripe_lane(z: u64, n: usize, mask: u64) -> Option<usize> {
+    for k in 0..n as u64 - 1 {
+        let lane = 1 + ((z.wrapping_add(k)) % (n as u64 - 1)) as usize;
+        if !lane_excluded(mask, lane) {
+            return Some(lane);
+        }
+    }
+    None
+}
 
 thread_local! {
     static ACTIVE_COSTS: RefCell<Option<Arc<CostModel>>> = const { RefCell::new(None) };
@@ -93,6 +122,39 @@ pub struct MpiProc {
     /// striped traffic (created lazily; see `mpi::shard`). Host mutex: the
     /// lookup models a comm-id indexed table walk, free in virtual time.
     match_engines: Mutex<HashMap<u64, Arc<CommMatch>>>,
+    /// The process-default [`CommPolicy`] — the demoted `MpiConfig` knobs.
+    /// Every communicator (including MPI_COMM_WORLD) starts from it; info
+    /// keys at creation override per communicator.
+    pub(super) default_policy: Arc<CommPolicy>,
+    /// Per-communicator policy table, keyed by comm id: the receive side
+    /// only sees comm ids on the wire, so engine creation resolves the
+    /// registered policy here. Host mutex (creation path + first-message
+    /// engine builds only).
+    policies: Mutex<HashMap<u64, Arc<CommPolicy>>>,
+    /// Comm ids freed by `comm_free`/`free_endpoints` — finalize asserts
+    /// none of them remains cached in any VCI's `match_cache` or in the
+    /// engine table (a freed comm must not pin shard engines forever).
+    /// Diagnostic tripwire, bounded at [`FREED_TRACK_CAP`] ids so a
+    /// per-iteration create/free loop cannot grow it without bound.
+    freed_comms: Mutex<HashSet<u64>>,
+    /// Stripe-lane pins: per-VCI count of live ordered (`striping=off`)
+    /// and endpoints communicators funneling through it. A pinned lane is
+    /// excluded from stripe-VCI selection and the striped progress sweep,
+    /// so a latency-ordered communicator's VCI never queues striped bulk.
+    ordered_pins: Mutex<HashMap<usize, u32>>,
+    /// Bitmask mirror of `ordered_pins` (lanes < 64), read lock-free on
+    /// the per-message stripe paths.
+    stripe_excluded: AtomicU64,
+    /// Collective-order counters for `comm_split_with_info` id
+    /// derivation, keyed by PARENT comm id: a split is collective over
+    /// the parent's members only, so a per-parent counter stays symmetric
+    /// even when subgroups split independently (a process-wide counter
+    /// would diverge between members with different split histories).
+    split_seqs: Mutex<HashMap<u64, u64>>,
+    /// Striped envelopes that forced an engine for a communicator whose
+    /// registered policy says `striping=off` — a wire-contract violation
+    /// (members passed different info keys). Counted, never fatal.
+    policy_mismatches: AtomicU64,
     /// Doorbell-gated sweeps skipped outright (no rx bit rung).
     pub(super) doorbell_skips: AtomicU64,
     /// Context polls that found nothing ready.
@@ -112,6 +174,10 @@ impl MpiProc {
     pub fn new(fabric: ProcFabric, cfg: MpiConfig) -> Arc<MpiProc> {
         let backend = fabric.backend();
         let costs = fabric.costs().clone();
+        let default_policy = Arc::new(CommPolicy::from_config(&cfg));
+        // MPI_COMM_WORLD (id 0) carries the default policy from birth.
+        let mut policies = HashMap::new();
+        policies.insert(0u64, default_policy.clone());
         Arc::new(MpiProc {
             cfg,
             backend,
@@ -133,6 +199,13 @@ impl MpiProc {
             stripe_rr: AtomicUsize::new(0),
             stripe_poll_rr: AtomicUsize::new(0),
             match_engines: Mutex::new(HashMap::new()),
+            default_policy,
+            policies: Mutex::new(policies),
+            freed_comms: Mutex::new(HashSet::new()),
+            ordered_pins: Mutex::new(HashMap::new()),
+            stripe_excluded: AtomicU64::new(0),
+            split_seqs: Mutex::new(HashMap::new()),
+            policy_mismatches: AtomicU64::new(0),
             doorbell_skips: AtomicU64::new(0),
             empty_polls: AtomicU64::new(0),
             skip_streak: AtomicUsize::new(0),
@@ -266,6 +339,38 @@ impl MpiProc {
                 let refs = self.slab.global_lightweight_refs.load();
                 assert_eq!(refs, 0, "{refs} global lightweight request refs leaked at finalize");
             }
+            // Per-comm policy teardown: a freed communicator must leave no
+            // sharded-engine state behind — not in the process-wide table
+            // and not as a cached handle in any VCI (either would pin the
+            // freed comm's shard engines for the life of the process).
+            let freed: Vec<u64> = {
+                let f = self.freed_comms.lock().unwrap_or_else(|e| e.into_inner());
+                f.iter().copied().collect()
+            };
+            if !freed.is_empty() {
+                {
+                    let engines =
+                        self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+                    for id in &freed {
+                        assert!(
+                            !engines.contains_key(id),
+                            "freed comm {id} still owns a matching engine at finalize"
+                        );
+                    }
+                }
+                let guard = self.guard();
+                for i in 0..self.vcis().len() {
+                    let v = self.vcis().get(i).clone();
+                    v.with_state(guard, |st| {
+                        for id in &freed {
+                            assert!(
+                                !st.match_cache.contains_key(id),
+                                "VCI {i}: freed comm {id} still cached in match_cache at finalize"
+                            );
+                        }
+                    });
+                }
+            }
         }
         let n = self.vcis().len();
         for i in 0..n {
@@ -274,7 +379,8 @@ impl MpiProc {
         self.finalized.store(true, Ordering::Release);
     }
 
-    /// MPI_COMM_WORLD: rank = process id, mapped to the fallback VCI.
+    /// MPI_COMM_WORLD: rank = process id, mapped to the fallback VCI,
+    /// carrying the process-default policy.
     pub fn comm_world(&self) -> Comm {
         Comm {
             id: 0,
@@ -282,6 +388,7 @@ impl MpiProc {
             size: self.nprocs(),
             rank: self.rank(),
             kind: CommKind::Procs,
+            policy: self.default_policy.clone(),
         }
     }
 
@@ -293,23 +400,235 @@ impl MpiProc {
     }
 
     /// MPI_Comm_dup: a new communicator with its own VCI from the pool
-    /// (or the fallback when the pool is empty). Collective: call on every
-    /// process in creation order; assignment is symmetric because pools
-    /// start identical and assignment order matches.
+    /// (or the fallback when the pool is empty), inheriting the parent's
+    /// policy. Collective: call on every process in creation order;
+    /// assignment is symmetric because pools start identical and
+    /// assignment order matches.
     pub fn comm_dup(&self, parent: &Comm) -> Comm {
+        self.comm_dup_with_info(parent, &Info::new())
+    }
+
+    /// MPI_Comm_dup_with_info: like [`MpiProc::comm_dup`], with the new
+    /// communicator's [`CommPolicy`] resolved from `info` keys over the
+    /// parent's policy (see `mpi::policy` for the vocabulary). All members
+    /// must pass identical info — the policy is part of the wire contract,
+    /// like `num_vcis`.
+    pub fn comm_dup_with_info(&self, parent: &Comm, info: &Info) -> Comm {
         let id = self.alloc_comm_id();
         padvance(self.backend, self.costs.instructions(200)); // comm bookkeeping
         let vci = self.vcis().assign(id);
-        let c = Comm { id, vci, size: parent.size, rank: parent.rank, kind: parent.kind.clone() };
+        let policy = Arc::new(parent.policy.with_info(info));
+        let c = Comm {
+            id,
+            vci,
+            size: parent.size,
+            rank: parent.rank,
+            kind: parent.kind.clone(),
+            policy,
+        };
         self.comms.lock().unwrap_or_else(|e| e.into_inner()).push(c.clone());
+        self.register_comm(&c);
         c
     }
 
-    /// MPI_Comm_free: return the VCI to the pool.
+    /// MPI_Comm_split-with-info: collective over `parent`'s members. Every
+    /// member calls with its `(color, key, info)`; members sharing a color
+    /// form a new communicator, ranked by `(key, parent rank)`, with a
+    /// policy resolved from `info` over the parent's. Membership is
+    /// exchanged with an allgather over the parent (real split semantics);
+    /// the new comm id is derived deterministically from
+    /// `(parent id, per-parent split order, color)`, so all members of a
+    /// color agree on it and different colors get distinct ids — the same
+    /// symmetry contract as `comm_dup`'s creation-order ids, scoped per
+    /// parent so subgroups splitting independently cannot diverge.
+    pub fn comm_split_with_info(&self, parent: &Comm, color: u64, key: u64, info: &Info) -> Comm {
+        assert!(
+            !parent.is_endpoints(),
+            "comm_split_with_info is defined on process communicators"
+        );
+        let colors = self.allgather_u64(parent, color);
+        let keys = self.allgather_u64(parent, key);
+        let mut members: Vec<usize> = (0..parent.size).filter(|&r| colors[r] == color).collect();
+        members.sort_by_key(|&r| (keys[r], r));
+        let my_rank = members
+            .iter()
+            .position(|&r| r == parent.rank)
+            .expect("calling rank belongs to its own color");
+        // Parent ranks -> process ids (works for nested Group parents).
+        let procs: Vec<usize> = members.iter().map(|&r| self.route(parent, r).0).collect();
+        padvance(self.backend, self.costs.instructions(400)); // split bookkeeping
+        let seq = {
+            let mut t = self.split_seqs.lock().unwrap_or_else(|e| e.into_inner());
+            let e = t.entry(parent.id).or_insert(0);
+            *e += 1;
+            *e
+        };
+        let z = parent.id ^ seq.rotate_left(32) ^ color.wrapping_mul(0x9E3779B97F4A7C15);
+        let id = 0x5C00_0000_0000_0000 | (crate::util::mix64(z) & 0x00FF_FFFF_FFFF_FFFF);
+        let vci = self.vcis().assign(id);
+        let policy = Arc::new(parent.policy.with_info(info));
+        let c = Comm {
+            id,
+            vci,
+            size: members.len(),
+            rank: my_rank,
+            kind: CommKind::Group { procs: Arc::new(procs) },
+            policy,
+        };
+        self.comms.lock().unwrap_or_else(|e| e.into_inner()).push(c.clone());
+        self.register_comm(&c);
+        c
+    }
+
+    /// MPI_Comm_free: return the VCI to the pool and tear the per-comm
+    /// policy state down — the policy table entry, the sharded matching
+    /// engine, and every VCI's cached engine handle (a freed comm must not
+    /// pin shard engines for the rest of the process lifetime; finalize
+    /// asserts it did not).
     pub fn comm_free(&self, comm: Comm) {
         self.vcis().release(comm.vci);
-        let mut t = self.comms.lock().unwrap_or_else(|e| e.into_inner());
-        t.retain(|c| c.id != comm.id);
+        {
+            let mut t = self.comms.lock().unwrap_or_else(|e| e.into_inner());
+            t.retain(|c| c.id != comm.id);
+        }
+        self.unregister_comm(&comm);
+    }
+
+    /// Record a newly created communicator's policy: the policy table (for
+    /// receive-side engine creation), the stripe-lane pins (ordered and
+    /// endpoints comms exclude their VCIs from striping), and adoption of
+    /// any engine a racing striped arrival created with the default shape.
+    pub(super) fn register_comm(&self, comm: &Comm) {
+        self.policies
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(comm.id, comm.policy.clone());
+        match &comm.kind {
+            CommKind::Endpoints { vcis, .. } => {
+                for &v in vcis.iter() {
+                    self.pin_ordered_lane(v);
+                }
+            }
+            _ if !comm.policy.striped() => self.pin_ordered_lane(comm.vci),
+            _ => {}
+        }
+        self.adopt_policy_engine(comm.id, &comm.policy);
+    }
+
+    /// Reverse of [`MpiProc::register_comm`], at communicator free.
+    pub(super) fn unregister_comm(&self, comm: &Comm) {
+        self.policies.lock().unwrap_or_else(|e| e.into_inner()).remove(&comm.id);
+        match &comm.kind {
+            CommKind::Endpoints { vcis, .. } => {
+                for &v in vcis.iter() {
+                    self.unpin_ordered_lane(v);
+                }
+            }
+            _ if !comm.policy.striped() => self.unpin_ordered_lane(comm.vci),
+            _ => {}
+        }
+        self.match_engines.lock().unwrap_or_else(|e| e.into_inner()).remove(&comm.id);
+        {
+            let mut f = self.freed_comms.lock().unwrap_or_else(|e| e.into_inner());
+            if f.len() < FREED_TRACK_CAP {
+                f.insert(comm.id);
+            }
+        }
+        self.purge_match_caches(comm.id);
+    }
+
+    /// Pin `vci_idx` out of the stripe-lane set (refcounted: several
+    /// ordered comms may share a lane after pool exhaustion). The fallback
+    /// VCI is never a stripe lane, so it needs no pin.
+    fn pin_ordered_lane(&self, vci_idx: usize) {
+        if vci_idx == FALLBACK_VCI || vci_idx >= 64 {
+            return;
+        }
+        let mut pins = self.ordered_pins.lock().unwrap_or_else(|e| e.into_inner());
+        *pins.entry(vci_idx).or_insert(0) += 1;
+        self.stripe_excluded.fetch_or(1u64 << vci_idx, Ordering::Release);
+    }
+
+    fn unpin_ordered_lane(&self, vci_idx: usize) {
+        if vci_idx == FALLBACK_VCI || vci_idx >= 64 {
+            return;
+        }
+        let mut pins = self.ordered_pins.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(c) = pins.get_mut(&vci_idx) {
+            *c -= 1;
+            if *c == 0 {
+                pins.remove(&vci_idx);
+                self.stripe_excluded.fetch_and(!(1u64 << vci_idx), Ordering::Release);
+            }
+        }
+    }
+
+    /// If a striped arrival raced this communicator's creation, an engine
+    /// was lazily built with the process-default shape; replace it with
+    /// one built from the registered policy, migrating queued state whole
+    /// (per-stream order and seq continuity preserved — see
+    /// `CommMatch::absorb_engine`), then drop every VCI's stale handle.
+    fn adopt_policy_engine(&self, comm_id: u64, policy: &CommPolicy) {
+        // Never hold the host table mutex across shard (PMutex) locks: a
+        // sim-side park under a host lock would host-deadlock the DES
+        // (same discipline as `reorder_stats`).
+        let old = {
+            let mut table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+            let mismatch = match table.get(&comm_id) {
+                Some(old) => {
+                    old.shard_count() != policy.shard_mask() + 1
+                        || old.linger() != policy.wildcard_linger
+                }
+                None => false,
+            };
+            if !mismatch {
+                return;
+            }
+            table.remove(&comm_id)
+        };
+        let Some(old) = old else { return };
+        // Order matters: purge every VCI's cached handle BEFORE draining
+        // the old engine. The purge takes each VCI's state lock, so it
+        // serializes behind any in-flight handler still holding a cached
+        // reference — by the time the purge completes, every such handler
+        // has finished depositing into `old` and nobody can resolve it
+        // again (the table entry is gone, the caches are empty). Only
+        // then is it safe to migrate `old`'s queues without stranding a
+        // concurrent arrival or post in an abandoned engine.
+        self.purge_match_caches(comm_id);
+        let fresh =
+            CommMatch::new(self.backend, comm_id, policy.match_shards, policy.wildcard_linger);
+        fresh.absorb_engine(&old);
+        let winner = {
+            let mut table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+            table.entry(comm_id).or_insert_with(|| fresh.clone()).clone()
+        };
+        if !Arc::ptr_eq(&winner, &fresh) {
+            // A striped arrival raced the swap window and re-created the
+            // engine — with the registered policy's shape, since the
+            // policy table was updated first. Merge our migrated state
+            // into it (streams never straddle engines, so per-stream
+            // order is preserved; the collision debug-assert in
+            // `absorb_parts` is the tripwire).
+            winner.absorb_engine(&fresh);
+        }
+    }
+
+    /// Drop `comm_id`'s cached engine handle from every VCI (comm free or
+    /// engine adoption). Off the critical path: takes each VCI's state in
+    /// turn under the configured guard discipline.
+    fn purge_match_caches(&self, comm_id: u64) {
+        if self.vcis.get().is_none() {
+            return; // pre-init registration (world): nothing cached yet
+        }
+        let _cs = self.enter_cs();
+        let guard = self.guard();
+        for i in 0..self.vcis().len() {
+            let vci = self.vcis().get(i).clone();
+            vci.with_state(guard, |st| {
+                st.match_cache.remove(&comm_id);
+            });
+        }
     }
 
     /// Resolve a communicator rank to (target process, target ctx index).
@@ -317,6 +636,11 @@ impl MpiProc {
         match &comm.kind {
             CommKind::Procs => {
                 let proc = rank;
+                let remote_ctxs = self.fabric.open_count(proc).max(1);
+                (proc, comm.vci % remote_ctxs)
+            }
+            CommKind::Group { procs } => {
+                let proc = procs[rank];
                 let remote_ctxs = self.fabric.open_count(proc).max(1);
                 (proc, comm.vci % remote_ctxs)
             }
@@ -333,7 +657,7 @@ impl MpiProc {
     /// thread, in the given role) maps to.
     pub fn comm_vci(&self, comm: &Comm, my_endpoint: Option<usize>) -> usize {
         match &comm.kind {
-            CommKind::Procs => comm.vci % self.vcis().len(),
+            CommKind::Procs | CommKind::Group { .. } => comm.vci % self.vcis().len(),
             CommKind::Endpoints { vcis, .. } => {
                 let ep = my_endpoint.expect("endpoint comms require an endpoint identity");
                 vcis[ep] % self.vcis().len()
@@ -342,14 +666,15 @@ impl MpiProc {
     }
 
     /// MPI-4.0 hint path (paper §7): with `mpi_assert_no_any_source` +
-    /// `mpi_assert_no_any_tag` asserted, traffic within ONE communicator
-    /// may spread over VCIs by its fully-specified envelope — matching
-    /// stays correct because both sides can compute the same stream from
-    /// (comm, source rank, tag). Falls back to the communicator's VCI when
-    /// the hints are not asserted (or with a single-VCI pool).
+    /// `mpi_assert_no_any_tag` asserted **on this communicator's policy**,
+    /// traffic within ONE communicator may spread over VCIs by its
+    /// fully-specified envelope — matching stays correct because both
+    /// sides can compute the same stream from (comm, source rank, tag).
+    /// Falls back to the communicator's VCI when the hints are not
+    /// asserted (or with a single-VCI pool).
     pub fn vci_for_envelope(&self, comm: &Comm, src_rank: usize, tag: i32) -> usize {
         if comm.is_endpoints()
-            || !(self.cfg.hints.no_any_source && self.cfg.hints.no_any_tag)
+            || !(comm.policy.no_any_source && comm.policy.no_any_tag)
             || self.vcis().len() <= 1
         {
             return self.comm_vci(comm, None);
@@ -365,33 +690,65 @@ impl MpiProc {
     }
 
     /// Does per-message VCI striping apply to two-sided traffic on `comm`?
-    /// Endpoints communicators are excluded (each endpoint IS a dedicated
-    /// VCI — striping would defeat their contract). Deliberately NOT a
-    /// function of the local pool size: the predicate decides whether
-    /// receives post into the sharded engine, and it must match the
-    /// sender's decision to mark envelopes striped even when one side's
-    /// hardware granted fewer contexts (a single-VCI pool then stripes
-    /// degenerately onto its one lane).
+    /// Decided by the communicator's own policy (info keys at creation;
+    /// the process config is only the default) — a hot striped comm and a
+    /// latency-ordered comm coexist in one process. Endpoints
+    /// communicators are excluded (each endpoint IS a dedicated VCI —
+    /// striping would defeat their contract). Deliberately NOT a function
+    /// of the local pool size: the predicate decides whether receives post
+    /// into the sharded engine, and it must match the sender's decision to
+    /// mark envelopes striped even when one side's hardware granted fewer
+    /// contexts (a single-VCI pool then stripes degenerately onto its one
+    /// lane).
     pub fn striping_active(&self, comm: &Comm) -> bool {
-        self.cfg.vci_striping != VciStriping::Off && !comm.is_endpoints()
+        comm.policy.striped() && !comm.is_endpoints()
     }
 
     /// The sharded matching engine for a striped communicator (created on
     /// first use; all two-sided traffic of a striped comm funnels here
-    /// instead of the per-VCI engines).
+    /// instead of the per-VCI engines). The engine's shape — shard count
+    /// and wildcard linger — comes from the communicator's **registered
+    /// policy**; an unknown comm id (a striped arrival racing the local
+    /// creation call) builds with the process-default shape and is adopted
+    /// (state migrated) when the registration lands. A registered
+    /// `striping=off` policy reaching this path means the sender striped
+    /// where we would not — a wire-contract violation, counted in
+    /// [`MpiProc::policy_mismatch_count`].
     pub fn comm_match(&self, comm_id: u64) -> Arc<CommMatch> {
         let mut table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
         table
             .entry(comm_id)
             .or_insert_with(|| {
-                CommMatch::new(
-                    self.backend,
-                    comm_id,
-                    self.cfg.match_shards,
-                    self.cfg.wildcard_epoch_linger,
-                )
+                let (shards, linger, off) = {
+                    let p = self.policies.lock().unwrap_or_else(|e| e.into_inner());
+                    match p.get(&comm_id) {
+                        Some(pol) => (pol.match_shards, pol.wildcard_linger, !pol.striped()),
+                        None => (
+                            self.default_policy.match_shards,
+                            self.default_policy.wildcard_linger,
+                            false,
+                        ),
+                    }
+                };
+                if off {
+                    self.policy_mismatches.fetch_add(1, Ordering::Relaxed);
+                }
+                CommMatch::new(self.backend, comm_id, shards, linger)
             })
             .clone()
+    }
+
+    /// Does a sharded matching engine currently exist for `comm_id`?
+    /// Test/bench aid: proves which communicators carried striped traffic
+    /// (an ordered comm must never grow one).
+    pub fn has_match_engine(&self, comm_id: u64) -> bool {
+        self.match_engines.lock().unwrap_or_else(|e| e.into_inner()).contains_key(&comm_id)
+    }
+
+    /// Striped envelopes seen for communicators whose registered policy
+    /// says `striping=off` (wire-contract violations). Diagnostic counter.
+    pub fn policy_mismatch_count(&self) -> u64 {
+        self.policy_mismatches.load(Ordering::Relaxed)
     }
 
     /// [`MpiProc::comm_match`] through the calling VCI's cache: the hot
@@ -415,12 +772,17 @@ impl MpiProc {
         *e
     }
 
-    /// Stripe VCI for one message. Round-robin walks the pool with a
-    /// process-wide cursor; hashed scrambles (comm, dst, seq) so a message
-    /// keeps its VCI deterministically without shared state. Both exclude
-    /// the fallback VCI 0 (like the hinted envelope spread): it is the
-    /// shared lane every pool-exhausted communicator funnels through, so
-    /// striping onto it would contend with funneled traffic.
+    /// Stripe VCI for one message, per the communicator's policy.
+    /// Round-robin walks the pool with a process-wide cursor; hashed
+    /// scrambles (comm, dst, seq) so a message keeps its VCI
+    /// deterministically without shared state. Both exclude the fallback
+    /// VCI 0 (like the hinted envelope spread): it is the shared lane
+    /// every pool-exhausted communicator funnels through, so striping onto
+    /// it would contend with funneled traffic. Lanes pinned by ordered /
+    /// endpoints communicators are skipped the same way — their
+    /// latency-sensitive traffic never queues behind striped bulk; if
+    /// every lane is pinned, the message funnels through the comm's home
+    /// VCI (still marked striped, so both sides agree on the path).
     pub(super) fn stripe_vci(&self, comm: &Comm, dst: usize, seq: u64) -> usize {
         let n = self.vcis().len();
         if n <= 1 {
@@ -429,9 +791,16 @@ impl MpiProc {
             // sides agree on the matching path.
             return FALLBACK_VCI;
         }
-        match self.cfg.vci_striping {
+        let mask = self.stripe_excluded.load(Ordering::Acquire);
+        match comm.policy.striping {
             VciStriping::RoundRobin => {
-                1 + self.stripe_rr.fetch_add(1, Ordering::Relaxed) % (n - 1)
+                for _ in 0..n - 1 {
+                    let lane = 1 + self.stripe_rr.fetch_add(1, Ordering::Relaxed) % (n - 1);
+                    if !lane_excluded(mask, lane) {
+                        return lane;
+                    }
+                }
+                self.comm_vci(comm, None)
             }
             VciStriping::HashedByRequest => {
                 let z = crate::util::mix64(
@@ -440,33 +809,99 @@ impl MpiProc {
                         .wrapping_add((dst as u64) << 32)
                         .wrapping_add(seq),
                 );
-                1 + (z % (n as u64 - 1)) as usize
+                probe_stripe_lane(z, n, mask).unwrap_or_else(|| self.comm_vci(comm, None))
             }
             VciStriping::Off => self.comm_vci(comm, None),
         }
     }
 
-    /// Which VCI a progress call on behalf of a request mapped to
-    /// `req_vci` should poll. With striping on, a striped communicator's
-    /// traffic lands on every VCI, so waiters sweep the pool round-robin
-    /// (pinning to the request's VCI could starve a stream whose
-    /// gap-filling message sits on another context); otherwise the
-    /// request's own VCI, per the configured progress model.
-    ///
-    /// With `rx_doorbell` the sweep consults the pool's rx-nonempty
-    /// bitmask: the rotation lands on the next VCI whose doorbell is rung,
-    /// and `None` means *no* VCI has anything queued — the caller skips
-    /// the poll entirely instead of paying an empty CQ read per VCI.
-    pub(super) fn stripe_poll_target(&self, req_vci: usize) -> Option<usize> {
+    /// Shard-anchored request allocation: the VCI whose request cache a
+    /// striped receive with concrete source `src` allocates from. Derived
+    /// from the stream's matching shard, so concurrent receivers posting
+    /// for different sources spread their allocation locks over the pool
+    /// instead of all funneling through the communicator's home VCI — the
+    /// last shared lock on the striped receive-post path. Single-shard
+    /// policies (the PR-1 home-engine arm) and degenerate pools keep the
+    /// home VCI.
+    pub(super) fn shard_anchor_vci(&self, comm: &Comm, src: usize) -> usize {
         let n = self.vcis().len();
-        if self.cfg.vci_striping == VciStriping::Off || n <= 1 {
+        let shard_mask = comm.policy.shard_mask();
+        if n <= 1 || shard_mask == 0 {
+            return self.comm_vci(comm, None);
+        }
+        let shard = super::shard::shard_index(comm.id, src, shard_mask);
+        let z = crate::util::mix64(
+            comm.id
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(0xA5A5_0000u64)
+                .wrapping_add(shard as u64),
+        );
+        // Probe past pinned lanes (like hashed stripe selection): the
+        // anchor is purely local, but allocating on an ordered comm's
+        // lane would contend with exactly the latency traffic the pin
+        // protects. All lanes pinned degenerates to the home VCI.
+        let mask = self.stripe_excluded.load(Ordering::Acquire);
+        probe_stripe_lane(z, n, mask).unwrap_or_else(|| self.comm_vci(comm, None))
+    }
+
+    /// Which VCI a progress call on behalf of a request mapped to
+    /// `req_vci` should poll. `striped`/`doorbell` come from the request's
+    /// own communicator policy (recorded in the request slot at
+    /// initiation): a striped comm's traffic lands on every stripe lane,
+    /// so its waiters sweep the pool round-robin (pinning to the request's
+    /// VCI could starve a stream whose gap-filling message sits on another
+    /// context); an ordered comm's waiter polls only the request's VCI,
+    /// per the configured progress model.
+    ///
+    /// With `doorbell` the sweep consults the pool's rx-nonempty bitmask:
+    /// the rotation lands on the next VCI whose doorbell is rung, and
+    /// `None` means *no* VCI has anything queued — the caller skips the
+    /// poll entirely instead of paying an empty CQ read per VCI. Either
+    /// way the sweep covers only lanes serving striped comms: lanes pinned
+    /// by ordered/endpoints communicators are skipped (their owners poll
+    /// them; the paranoid global round remains the backstop).
+    pub(super) fn stripe_poll_target(
+        &self,
+        req_vci: usize,
+        striped: bool,
+        doorbell: bool,
+    ) -> Option<usize> {
+        let n = self.vcis().len();
+        if !striped || n <= 1 {
             return Some(req_vci);
         }
         let cursor = self.stripe_poll_rr.fetch_add(1, Ordering::Relaxed) % n;
-        if !self.cfg.rx_doorbell {
-            return Some(cursor);
+        let mask = self.stripe_excluded.load(Ordering::Acquire);
+        if !doorbell {
+            if mask == 0 {
+                return Some(cursor);
+            }
+            // The fallback lane (0) is never pinned, so this circular
+            // scan always lands on an un-pinned index.
+            let mut idx = cursor;
+            while lane_excluded(mask, idx) {
+                idx = (idx + 1) % n;
+            }
+            return Some(idx);
         }
-        self.vcis().doorbell().next_set(cursor, n)
+        let bell = self.vcis().doorbell().clone();
+        if mask == 0 {
+            return bell.next_set(cursor, n);
+        }
+        let mut start = cursor;
+        for _ in 0..n {
+            match bell.next_set(start, n) {
+                None => return None,
+                Some(idx) if !lane_excluded(mask, idx) => return Some(idx),
+                Some(idx) => start = (idx + 1) % n,
+            }
+        }
+        // Every rung doorbell sits on a pinned lane (possible when all
+        // stripe lanes are pinned and striped traffic funnels through a
+        // pinned home). Degrade to a plain poll like the non-doorbell
+        // sweep rather than skipping — returning None here would leave
+        // liveness to the paranoid global round alone.
+        Some(cursor)
     }
 
     /// Stale/duplicate/malformed wire control messages dropped so far

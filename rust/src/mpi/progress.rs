@@ -9,17 +9,23 @@
 //!
 //! # Striping
 //!
-//! With per-message VCI striping, one communicator's arrivals land on
-//! every VCI's context, so per-VCI progress rotates over the whole pool
+//! With per-message VCI striping (a per-communicator policy — see
+//! `mpi::policy`), a striped communicator's arrivals land on every stripe
+//! lane, so progress on behalf of its requests rotates over the pool
 //! instead of pinning to the request's VCI (see
-//! `MpiProc::stripe_poll_target`). A polled striped envelope is matched
-//! **on the VCI that polled it**: the handler takes only the lock of the
-//! per-communicator matching shard that owns the `(comm, src)` stream
-//! (see `mpi::shard`), so stripe VCIs contribute both rx parallelism and
-//! matching parallelism — no batch re-route to a home engine, and no
-//! per-sweep buffer to allocate. With `rx_doorbell` the sweep skips
-//! entirely (one bitmask load) when no VCI has anything queued, instead
-//! of paying an empty CQ read per VCI at high pool sizes.
+//! `MpiProc::stripe_poll_target`; the routing is recorded in the request
+//! slot at initiation, so an ordered communicator's waiter in the same
+//! process still polls only its own VCI). A polled striped envelope is
+//! matched **on the VCI that polled it**: the handler takes only the lock
+//! of the per-communicator matching shard that owns the `(comm, src)`
+//! stream (see `mpi::shard`), so stripe VCIs contribute both rx
+//! parallelism and matching parallelism — no batch re-route to a home
+//! engine, and no per-sweep buffer to allocate. With the policy's
+//! `rx_doorbell` the sweep skips entirely (one bitmask load) when no VCI
+//! has anything queued, instead of paying an empty CQ read per VCI at
+//! high pool sizes — and the sweep covers only lanes serving striped
+//! comms: lanes pinned by ordered/endpoints communicators are skipped,
+//! with the paranoid global round as the starvation backstop.
 //!
 //! # Robustness
 //!
@@ -51,11 +57,23 @@ fn span_out_of_bounds(offset: usize, len: usize, size: usize) -> bool {
 
 impl MpiProc {
     /// One progress-engine iteration on behalf of a request mapped to
-    /// `vci_idx`. Applies the configured progress model. Called from wait
-    /// loops; also usable directly for "manual" progress.
+    /// `vci_idx`, using the **process-default** policy's progress routing
+    /// (striped sweep / doorbell per the default `CommPolicy`). Used for
+    /// "manual" progress and by paths without a per-request policy record
+    /// (RMA flushes); p2p waits use [`MpiProc::progress_with`] with the
+    /// request's own flags.
     pub fn progress_for_request(&self, vci_idx: usize) {
+        let striped = self.default_policy.striped();
+        let doorbell = striped && self.default_policy.rx_doorbell;
+        self.progress_with(vci_idx, striped, doorbell);
+    }
+
+    /// One progress-engine iteration with explicit routing: `striped`
+    /// sweeps the stripe lanes instead of pinning to `vci_idx`;
+    /// `doorbell` gates the sweep on the pool's rx-nonempty bitmask.
+    pub(super) fn progress_with(&self, vci_idx: usize, striped: bool, doorbell: bool) {
         let _cs = self.enter_cs();
-        match self.stripe_poll_target(vci_idx) {
+        match self.stripe_poll_target(vci_idx, striped, doorbell) {
             None => {
                 // Doorbell-gated skip: no VCI has anything queued, so the
                 // whole sweep collapses to one bitmask read. A paranoid

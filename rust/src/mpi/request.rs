@@ -1,7 +1,7 @@
 //! Request objects: the global pool ("request class"), per-VCI request
 //! caches, and lightweight pre-completed requests (paper §4.1 and §4.3).
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::platform::{padvance, Backend, PMutex};
@@ -11,6 +11,14 @@ use super::instrument::{count_lock, LockClass, ModeledCounter};
 
 /// Slab index of a real request.
 pub type ReqId = u32;
+
+/// [`ReqSlot::flags`] bit: the owning communicator's policy stripes its
+/// traffic across the pool, so waits sweep the stripe lanes and frees are
+/// deferred to the recorded VCI instead of taking its lock.
+pub const REQ_FLAG_STRIPED: u8 = 1;
+/// [`ReqSlot::flags`] bit: the owning communicator participates in
+/// doorbell-gated progress sweeps.
+pub const REQ_FLAG_DOORBELL: u8 = 2;
 
 /// How an initiation op completed / will complete.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,6 +60,13 @@ pub struct ReqSlot {
     pub complete_at: AtomicU64,
     /// VCI recorded for per-VCI progress (paper: +3 instructions).
     pub vci: AtomicUsize,
+    /// Per-request progress/release routing derived from the owning
+    /// communicator's [`crate::mpi::CommPolicy`] at initiation
+    /// ([`REQ_FLAG_STRIPED`] | [`REQ_FLAG_DOORBELL`]). With per-comm
+    /// policies the waiter can no longer read the progress model off the
+    /// process config — a striped comm's request sweeps the pool while an
+    /// ordered comm's request polls only its own VCI, in the same process.
+    pub flags: AtomicU8,
     /// Received payload (recv requests) or fetched data (RMA).
     pub data: Mutex<Option<Vec<u8>>>,
     /// Generation counter guarding against stale handles (debug aid).
@@ -64,6 +79,7 @@ impl ReqSlot {
             completed: ModeledCounter::new(backend, 0),
             complete_at: AtomicU64::new(0),
             vci: AtomicUsize::new(0),
+            flags: AtomicU8::new(0),
             data: Mutex::new(None),
             generation: AtomicU64::new(0),
         }
@@ -126,6 +142,7 @@ impl RequestSlab {
         let s = self.slot(id);
         s.completed.store(0, false);
         s.complete_at.store(0, Ordering::Release);
+        s.flags.store(0, Ordering::Relaxed);
         s.generation.fetch_add(1, Ordering::AcqRel);
         *s.data.lock().unwrap_or_else(|e| e.into_inner()) = None;
         id
@@ -166,6 +183,7 @@ impl RequestSlab {
         let s = self.slot(id);
         s.completed.store(0, false);
         s.complete_at.store(0, Ordering::Release);
+        s.flags.store(0, Ordering::Relaxed);
         s.generation.fetch_add(1, Ordering::AcqRel);
         *s.data.lock().unwrap_or_else(|e| e.into_inner()) = None;
     }

@@ -72,6 +72,15 @@ use super::matching::{MatchingState, PostedRecv, Src, UnexpectedMsg};
 /// Index of the home shard (wildcard-epoch serialization target).
 const HOME_SHARD: usize = 0;
 
+/// Which shard (of `mask + 1`, a power of two) owns the `(comm, src)`
+/// stream outside a wildcard epoch. A free function so the shard-anchored
+/// request-allocation path (`mpi::p2p`) can compute the owning shard from
+/// a communicator's policy alone, without resolving the engine first.
+pub(crate) fn shard_index(comm_id: u64, src_rank: usize, mask: usize) -> usize {
+    let z = (src_rank as u64).wrapping_add(comm_id.wrapping_mul(0x9E3779B97F4A7C15));
+    (crate::util::mix64(z) as usize) & mask
+}
+
 /// Wildcard-epoch bookkeeping (taken only with no shard lock held).
 struct EpochCtl {
     /// Posted-but-unmatched `MPI_ANY_SOURCE` receives.
@@ -138,10 +147,36 @@ impl CommMatch {
         self.shards.len()
     }
 
+    /// The wildcard-epoch linger this engine was built with (per-comm
+    /// policy adoption compares it against the registered policy).
+    pub(crate) fn linger(&self) -> u32 {
+        self.linger
+    }
+
     /// Which shard owns the `(comm, src)` stream outside an epoch.
     fn shard_of(&self, src_rank: usize) -> usize {
-        let z = (src_rank as u64).wrapping_add(self.comm_id.wrapping_mul(0x9E3779B97F4A7C15));
-        (crate::util::mix64(z) as usize) & self.mask
+        shard_index(self.comm_id, src_rank, self.mask)
+    }
+
+    /// Move every shard's queued state out of `old` into this engine,
+    /// re-bucketed by this engine's shard map. Used when a communicator's
+    /// registered policy replaces an engine that was lazily created with
+    /// the process-default shape (a striped arrival raced communicator
+    /// creation). Streams move whole, so per-stream queue order and
+    /// reorder-stage seq continuity are preserved; `old` is left empty.
+    pub(crate) fn absorb_engine(&self, old: &CommMatch) {
+        debug_assert_eq!(old.comm_id, self.comm_id, "engine migration across comms");
+        for i in 0..old.shards.len() {
+            let parts = {
+                let mut guard = old.lock_shard(i);
+                guard.take_parts()
+            };
+            let buckets = parts.split_by_source(self.shards.len(), |src| self.shard_of(src));
+            for (idx, bucket) in buckets.into_iter().enumerate() {
+                let mut guard = self.lock_shard(idx);
+                guard.absorb_parts(bucket);
+            }
+        }
     }
 
     fn lock_shard(&self, idx: usize) -> PMutexGuard<'_, MatchingState> {
@@ -529,6 +564,34 @@ mod tests {
         let wilds = hits.iter().filter(|(p, _)| p.src == Src::Any).count() as u64;
         m.note_arrival(wilds);
         assert_eq!(m.epoch_stats().unflips, 0);
+    }
+
+    #[test]
+    fn absorb_engine_migrates_queues_and_stream_continuity() {
+        // A lazily created 1-shard engine accumulates unexpected arrivals
+        // (including a parked gap); policy adoption rebuilds it with 4
+        // shards and must preserve per-stream order and next_seq.
+        let old = engine(1, 0);
+        assert!(old.striped_arrival(umsg(7, 2, 5, 1)).is_empty());
+        old.note_arrival(0);
+        assert!(old.striped_arrival(umsg(7, 3, 5, 1)).is_empty());
+        old.note_arrival(0);
+        assert!(old.striped_arrival(umsg(7, 2, 5, 3)).is_empty(), "seq 3 parks on its gap");
+        old.note_arrival(0);
+        let fresh = engine(4, 0);
+        fresh.absorb_engine(&old);
+        assert_eq!(old.queue_lens(), (0, 0), "old engine drained");
+        assert_eq!(fresh.queue_lens().1, 2, "both admitted arrivals migrated");
+        // Stream continuity: seq 2 fills the gap and drains parked seq 3.
+        assert!(fresh.striped_arrival(umsg(7, 2, 5, 2)).is_empty());
+        fresh.note_arrival(0);
+        assert_eq!(fresh.queue_lens().1, 4);
+        assert_eq!(fresh.reorder_stats(), (0, 0));
+        for want in 1..=3u64 {
+            let got = fresh.post(precv(7, Src::Rank(2), Tag::Value(5), 10)).unwrap();
+            assert_eq!(got.seq, want, "migrated stream must stay in seq order");
+        }
+        assert_eq!(fresh.post(precv(7, Src::Rank(3), Tag::Value(5), 11)).unwrap().seq, 1);
     }
 
     #[test]

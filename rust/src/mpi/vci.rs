@@ -6,20 +6,28 @@
 //! by the VCI's own lock (paper §4.2). The pool hands VCIs to communicators
 //! and windows as they are created.
 //!
-//! # Per-message VCI striping
+//! # Per-message VCI striping (a per-communicator policy)
 //!
-//! With [`crate::mpi::VciStriping`] enabled, a communicator is no longer
+//! With striping enabled **on a communicator's policy** (info keys at
+//! creation — see `mpi::policy`; [`crate::mpi::VciStriping`] on the
+//! process config is only the default), that communicator is no longer
 //! pinned to its one assigned VCI for two-sided traffic: every `isend`
-//! picks a stripe VCI (round-robin or hashed per message) from the whole
-//! pool and targets the mirror context on the receiver, so a single hot
-//! communicator can use all hardware contexts. On the receive side a
-//! striped envelope is matched by whichever VCI polled it, through the
-//! communicator's per-source **matching shards** (`mpi::shard`) rather
-//! than this VCI's own [`MatchingState`] — stripe VCIs contribute
-//! injection, polling, *and* matching parallelism. The pool also carries
-//! an rx [`RxDoorbell`]: delivery rings the polled VCI's bit, and the
-//! doorbell-gated striped sweep skips VCIs (or the whole sweep) with
-//! nothing queued. See `mpi::matching` for the ordering story.
+//! picks a stripe VCI (round-robin or hashed per message) from the pool's
+//! stripe lanes and targets the mirror context on the receiver, so a
+//! single hot communicator can use all hardware contexts. Lanes assigned
+//! to `striping=off` (ordered) or endpoints communicators are *pinned out
+//! of the stripe-lane set*, so hot and latency-ordered communicators
+//! coexist in one process without the striped bulk queuing on the ordered
+//! lanes. On the receive side a striped envelope is matched by whichever
+//! VCI polled it, through the communicator's per-source **matching
+//! shards** (`mpi::shard`, shaped by the comm's policy) rather than this
+//! VCI's own [`MatchingState`] — stripe VCIs contribute injection,
+//! polling, *and* matching parallelism; striped receive posts allocate
+//! their request from the stream's shard-anchored VCI cache, not the home
+//! VCI. The pool also carries an rx [`RxDoorbell`]: delivery rings the
+//! polled VCI's bit, and the doorbell-gated striped sweep (for comms
+//! whose policy opts in) skips VCIs (or the whole sweep) with nothing
+//! queued. See `mpi::matching` for the ordering story.
 
 use std::cell::UnsafeCell;
 use std::collections::{HashMap, HashSet};
@@ -70,7 +78,10 @@ pub struct VciState {
     /// Cached handles to per-communicator sharded matching engines, so
     /// the striped arrival path resolves its engine under this VCI's lock
     /// instead of the process-wide table mutex on every message (the
-    /// table is consulted once per (VCI, comm)).
+    /// table is consulted once per (VCI, comm)). Entries are populated
+    /// from the policy table and invalidated by `MpiProc` when a
+    /// communicator is freed or its registered policy replaces a lazily
+    /// created engine; finalize asserts no freed comm id remains here.
     pub match_cache: HashMap<u64, Arc<CommMatch>>,
 }
 

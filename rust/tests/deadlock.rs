@@ -25,6 +25,12 @@ fn fabric(ic: Interconnect) -> FabricConfig {
 /// pure per-VCI progress, MPI_Wait(req2) polls only comm2's VCI, so the
 /// ack never goes out, Ssend(comm2) is never issued, and nobody advances.
 fn fig9_p2p(cfg: MpiConfig) -> SimOutcome {
+    fig9_p2p_mixed(cfg, false)
+}
+
+/// `mixed = true` gives comm1 a striped+sharded policy via info keys while
+/// comm2 stays ordered — the per-communicator mixed-policy configuration.
+fn fig9_p2p_mixed(cfg: MpiConfig, mixed: bool) -> SimOutcome {
     let mut spec = ClusterSpec::new(fabric(Interconnect::Ib), cfg, 2);
     spec.time_limit = Some(10_000_000); // 10 virtual ms: plenty for valid runs
     spec.service_threads = false; // isolate: no PSM2-style savior
@@ -37,8 +43,25 @@ fn fig9_p2p(cfg: MpiConfig) -> SimOutcome {
     let r = run_cluster(spec, move |proc, t| {
         if t == 0 {
             let world = proc.comm_world();
-            let c1 = proc.comm_dup(&world);
-            let c2_ = proc.comm_dup(&world);
+            let c1 = if mixed {
+                proc.comm_dup_with_info(
+                    &world,
+                    &vcmpi::mpi::Info::new()
+                        .with("vcmpi_striping", "rr")
+                        .with("vcmpi_match_shards", "4")
+                        .with("vcmpi_rx_doorbell", "true"),
+                )
+            } else {
+                proc.comm_dup(&world)
+            };
+            let c2_ = if mixed {
+                proc.comm_dup_with_info(
+                    &world,
+                    &vcmpi::mpi::Info::new().with("vcmpi_striping", "off"),
+                )
+            } else {
+                proc.comm_dup(&world)
+            };
             c2.lock().unwrap().insert(proc.rank(), (c1, c2_));
         }
         setup[proc.rank()].wait();
@@ -102,6 +125,19 @@ fn fig9_p2p_striped_sharded_doorbell_completes() {
     // Fig. 9 deadlock: a skipped sweep (no doorbell rung) still advances
     // virtual time, and the paranoid global round bounds a lost doorbell.
     assert_eq!(fig9_p2p(MpiConfig::striped_sharded(8)), SimOutcome::Completed);
+}
+
+#[test]
+fn fig9_p2p_mixed_policy_completes() {
+    // Per-communicator policies: comm1 striped+sharded via info keys on a
+    // process whose default is NOT striped, comm2 explicitly ordered
+    // (pinned out of the stripe lanes). The cross-VCI dependency pattern
+    // must still complete under hybrid progress — the striped comm's
+    // waiter sweeps only stripe lanes, so the ordered comm's completion
+    // depends on the global-round backstop exactly like per-VCI progress.
+    assert_eq!(fig9_p2p_mixed(MpiConfig::optimized(8), true), SimOutcome::Completed);
+    // And with a striped process default + ordered override, too.
+    assert_eq!(fig9_p2p_mixed(MpiConfig::striped_sharded(8), true), SimOutcome::Completed);
 }
 
 /// Fig. 9 (right), transcribed (software-RMA fabric, large Gets):

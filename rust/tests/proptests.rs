@@ -7,7 +7,7 @@
 
 use vcmpi::fabric::{FabricConfig, Interconnect};
 use vcmpi::mpi::matching::{MatchingState, PostedRecv, SenderInfo, Src, Tag, UnexpectedMsg};
-use vcmpi::mpi::{run_cluster, ClusterSpec, CommMatch, MpiConfig};
+use vcmpi::mpi::{run_cluster, ClusterSpec, CommMatch, Info, MpiConfig};
 use vcmpi::platform::Backend;
 use vcmpi::sim::SimOutcome;
 use vcmpi::util::SplitMix64;
@@ -416,6 +416,177 @@ fn prop_random_traffic_striped_eager_and_rendezvous() {
     // striped source streams through distinct shards.
     for seed in 0..cases(6) {
         random_traffic_case_sized(seed, MpiConfig::striped_sharded(6), Interconnect::Opa, 40_000);
+    }
+}
+
+/// Mixed per-communicator policies against the single-engine oracle: one
+/// process set hosts a striped+sharded comm, an ordered (`off`) comm, and
+/// a wildcard-heavy hashed-striped comm — created from info keys on a
+/// process whose global default is NOT striped — with two concurrent
+/// threads per process driving them. The oracle is the same one
+/// `prop_random_traffic_striped_*` uses: a single VCI delivers per-stream
+/// FIFO by construction, so numbered payload streams must arrive exactly
+/// once each, in order, on every comm, whatever mix of policies carried
+/// them (wildcard receives may bind across sources but must preserve
+/// per-source order and exactly-once delivery).
+#[test]
+fn prop_mixed_policy_comms_match_single_engine_oracle() {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+    use vcmpi::platform::PBarrier;
+
+    for seed in 0..cases(5) {
+        let nprocs = 3usize;
+        let spec = ClusterSpec::new(
+            FabricConfig {
+                interconnect: Interconnect::Opa,
+                nodes: nprocs,
+                procs_per_node: 1,
+                max_contexts_per_node: 64,
+            },
+            MpiConfig::optimized(6), // process-global striping OFF
+            2,
+        );
+        let comms: Arc<Mutex<HashMap<usize, Vec<vcmpi::mpi::Comm>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let bars: Arc<Vec<PBarrier>> =
+            Arc::new((0..nprocs).map(|_| PBarrier::new(Backend::Sim, 2)).collect());
+        let c2 = comms.clone();
+        let r = run_cluster(spec, move |proc, t| {
+            let world = proc.comm_world();
+            let me = proc.rank();
+            let n = proc.nprocs();
+            if t == 0 {
+                let hot = proc.comm_dup_with_info(
+                    &world,
+                    &Info::new()
+                        .with("vcmpi_striping", "rr")
+                        .with("vcmpi_match_shards", "4")
+                        .with("vcmpi_rx_doorbell", "true"),
+                );
+                let cold = proc.comm_dup(&world);
+                let wild = proc.comm_dup_with_info(
+                    &world,
+                    &Info::new()
+                        .with("vcmpi_striping", "hash")
+                        .with("vcmpi_match_shards", "2")
+                        .with("vcmpi_wildcard_linger", "2"),
+                );
+                c2.lock().unwrap().insert(me, vec![hot, cold, wild]);
+            }
+            bars[me].wait();
+            let v = c2.lock().unwrap().get(&me).unwrap().clone();
+            let (hot, cold, wild) = (v[0].clone(), v[1].clone(), v[2].clone());
+            let mut prng = SplitMix64::new(seed.wrapping_mul(0x9E37) ^ 0x31D);
+            let per = 4 + prng.gen_usize(10); // msgs per (comm, src, dst)
+            // Thread 0 drives the hot comm; thread 1 drives cold + wild,
+            // concurrently — three policies live in one process at once.
+            if t == 0 {
+                let mut sreqs = Vec::new();
+                for dst in 0..n {
+                    if dst == me {
+                        continue;
+                    }
+                    for k in 0..per as u32 {
+                        sreqs.push(proc.isend(&hot, dst, 11, &k.to_le_bytes()));
+                    }
+                }
+                for src in 0..n {
+                    if src == me {
+                        continue;
+                    }
+                    for k in 0..per as u32 {
+                        let got = proc.recv(&hot, Src::Rank(src), Tag::Value(11));
+                        let got = u32::from_le_bytes(got.as_slice().try_into().unwrap());
+                        assert_eq!(got, k, "seed {seed}: hot stream {src}->{me} diverged");
+                    }
+                }
+                proc.waitall(sreqs);
+            } else {
+                // Cold (ordered) comm: plain FIFO streams.
+                let mut sreqs = Vec::new();
+                for dst in 0..n {
+                    if dst == me {
+                        continue;
+                    }
+                    for k in 0..per as u32 {
+                        sreqs.push(proc.isend(&cold, dst, 22, &k.to_le_bytes()));
+                    }
+                }
+                for src in 0..n {
+                    if src == me {
+                        continue;
+                    }
+                    for k in 0..per as u32 {
+                        let got = proc.recv(&cold, Src::Rank(src), Tag::Value(22));
+                        let got = u32::from_le_bytes(got.as_slice().try_into().unwrap());
+                        assert_eq!(got, k, "seed {seed}: cold stream {src}->{me} diverged");
+                    }
+                }
+                proc.waitall(sreqs);
+                // Wildcard-heavy comm: payload carries (src, k); a random
+                // third of receives are MPI_ANY_SOURCE, so the epoch
+                // protocol flips under fire. Track per-source counters —
+                // exactly-once, in-order delivery per stream is the
+                // single-engine oracle's guarantee.
+                let mut sreqs = Vec::new();
+                for dst in 0..n {
+                    if dst == me {
+                        continue;
+                    }
+                    for k in 0..per as u32 {
+                        let mut data = vec![me as u8];
+                        data.extend_from_slice(&k.to_le_bytes());
+                        sreqs.push(proc.isend(&wild, dst, 33, &data));
+                    }
+                }
+                let mut next = vec![0u32; n];
+                let mut remaining: Vec<usize> =
+                    (0..n).map(|s| if s == me { 0 } else { per }).collect();
+                let mut rng = SplitMix64::new(seed ^ ((me as u64) << 16) ^ 0x77);
+                let mut left: usize = remaining.iter().sum();
+                while left > 0 {
+                    let src_pat = if rng.gen_bool(0.34) {
+                        Src::Any
+                    } else {
+                        // A concrete source that still has messages due.
+                        let mut s = rng.gen_usize(n);
+                        while remaining[s] == 0 {
+                            s = (s + 1) % n;
+                        }
+                        Src::Rank(s)
+                    };
+                    let got = proc.recv(&wild, src_pat, Tag::Value(33));
+                    let src = got[0] as usize;
+                    let k = u32::from_le_bytes(got[1..5].try_into().unwrap());
+                    assert_eq!(
+                        k, next[src],
+                        "seed {seed}: wild stream {src}->{me} lost/duplicated/reordered"
+                    );
+                    next[src] += 1;
+                    assert!(remaining[src] > 0, "seed {seed}: overdelivery from {src}");
+                    remaining[src] -= 1;
+                    left -= 1;
+                }
+                proc.waitall(sreqs);
+            }
+            bars[me].wait();
+            if t == 0 {
+                proc.barrier(&world);
+                let (dups, parked) = proc.reorder_stats();
+                assert_eq!(dups, 0, "seed {seed}: wire traffic must never look duplicated");
+                assert_eq!(parked, 0, "seed {seed}: reorder buffers drain by quiescence");
+                assert_eq!(proc.policy_mismatch_count(), 0, "seed {seed}: wire contract");
+                assert!(!proc.has_match_engine(v[1].id), "seed {seed}: cold comm sharded");
+                // Free all three comms: exercises engine/cache teardown and
+                // the finalize-time freed-comm assertion.
+                for c in v.clone() {
+                    proc.comm_free(c);
+                }
+            }
+            bars[me].wait();
+        });
+        assert_eq!(r.outcome, SimOutcome::Completed, "seed {seed}");
     }
 }
 

@@ -5,7 +5,7 @@
 use std::sync::{Arc, Mutex};
 
 use vcmpi::fabric::{FabricConfig, Interconnect, P2pProtocol, Payload};
-use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, Src, Tag, VciStriping};
+use vcmpi::mpi::{run_cluster, ClusterSpec, Info, MpiConfig, Src, Tag, VciStriping};
 use vcmpi::platform::{Backend, PBarrier};
 use vcmpi::sim::SimOutcome;
 
@@ -314,6 +314,195 @@ fn striped_run_leaves_no_parked_arrivals() {
         assert_eq!(dups, 0, "wire traffic must never be seen as duplicate");
         assert_eq!(parked, 0, "reorder buffers must drain by quiescence");
     }
+}
+
+// ---------------------------------------------------------------------
+// Per-communicator policy (info keys): mixed striped/ordered comms in
+// one process, split groups, shard-anchored allocation, freed-comm
+// teardown.
+// ---------------------------------------------------------------------
+
+#[test]
+fn info_keyed_striping_on_an_unstriped_process() {
+    // Process-global striping OFF; ONE communicator opts in via info
+    // keys. Nonovertaking must hold on the striped comm, world must stay
+    // off the sharded path entirely, and both must interleave cleanly.
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2), MpiConfig::optimized(8), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let hot = proc.comm_dup_with_info(
+            &world,
+            &Info::new()
+                .with("vcmpi_striping", "rr")
+                .with("vcmpi_match_shards", "4")
+                .with("vcmpi_rx_doorbell", "true"),
+        );
+        assert_eq!(hot.policy.striping, VciStriping::RoundRobin);
+        assert_eq!(hot.policy.match_shards, 4);
+        assert!(hot.policy.rx_doorbell);
+        assert_eq!(world.policy.striping, VciStriping::Off, "defaults stay off");
+        let peer = 1 - proc.rank();
+        for i in 0..60u32 {
+            let s = proc.isend(&hot, peer, 3, &i.to_le_bytes());
+            let got = proc.recv(&hot, Src::Rank(peer), Tag::Value(3));
+            assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+            proc.wait(s);
+            if i % 16 == 0 {
+                // Interleave ordered world traffic to prove coexistence.
+                let s = proc.isend(&world, peer, 9, &i.to_le_bytes());
+                let got = proc.recv(&world, Src::Rank(peer), Tag::Value(9));
+                assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+                proc.wait(s);
+            }
+        }
+        assert!(proc.has_match_engine(hot.id), "striped comm must own a sharded engine");
+        assert!(!proc.has_match_engine(world.id), "world must stay on the per-VCI engines");
+        assert_eq!(proc.policy_mismatch_count(), 0, "wire contract held");
+        proc.barrier(&world);
+        proc.comm_free(hot);
+    });
+}
+
+#[test]
+fn per_comm_policies_inherit_and_override_on_dup() {
+    // Dup inherits the parent policy; info keys override per creation.
+    let spec =
+        ClusterSpec::new(fabric(Interconnect::Opa, 2), MpiConfig::striped_sharded(6), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        assert_eq!(world.policy.striping, VciStriping::RoundRobin);
+        assert_eq!(world.policy.match_shards, 8);
+        let inherited = proc.comm_dup(&world);
+        assert_eq!(*inherited.policy, *world.policy, "plain dup inherits");
+        let ordered = proc.comm_dup_with_info(&world, &Info::new().with("vcmpi_striping", "off"));
+        assert_eq!(ordered.policy.striping, VciStriping::Off);
+        assert_eq!(ordered.policy.match_shards, 8, "unnamed keys inherit");
+        // Ordered traffic on a striped-default process stays correct.
+        let peer = 1 - proc.rank();
+        for i in 0..20u32 {
+            let s = proc.isend(&ordered, peer, 5, &i.to_le_bytes());
+            let got = proc.recv(&ordered, Src::Rank(peer), Tag::Value(5));
+            assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+            proc.wait(s);
+        }
+        assert!(!proc.has_match_engine(ordered.id), "ordered comm never shards");
+        proc.barrier(&world);
+        proc.comm_free(ordered);
+        proc.comm_free(inherited);
+    });
+}
+
+#[test]
+fn comm_split_with_info_builds_disjoint_policy_groups() {
+    // 4 procs split into even/odd color groups: the even group stripes
+    // via info keys, the odd group stays ordered. Rank math is symmetric
+    // and each group's streams stay FIFO.
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 4), MpiConfig::optimized(6), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let color = (proc.rank() % 2) as u64;
+        let info = if color == 0 {
+            Info::new().with("vcmpi_striping", "hash").with("vcmpi_match_shards", "2")
+        } else {
+            Info::new()
+        };
+        let sub = proc.comm_split_with_info(&world, color, proc.rank() as u64, &info);
+        assert_eq!(sub.size, 2, "two procs per color");
+        assert_eq!(sub.rank, proc.rank() / 2, "ranked by key within the color");
+        if color == 0 {
+            assert_eq!(sub.policy.striping, VciStriping::HashedByRequest);
+        } else {
+            assert_eq!(sub.policy.striping, VciStriping::Off);
+        }
+        let peer = 1 - sub.rank;
+        for i in 0..30u32 {
+            let s = proc.isend(&sub, peer, 4, &i.to_le_bytes());
+            let got = proc.recv(&sub, Src::Rank(peer), Tag::Value(4));
+            assert_eq!(
+                u32::from_le_bytes(got.as_slice().try_into().unwrap()),
+                i,
+                "split-group stream overtook (color {color})"
+            );
+            proc.wait(s);
+        }
+        proc.barrier(&world);
+        proc.comm_free(sub);
+    });
+}
+
+#[test]
+fn shard_anchored_alloc_takes_one_vci_lock_per_post() {
+    // Satellite proof via the Table-1 counters: a striped receive post
+    // allocates its request from the shard-anchored VCI's cache — exactly
+    // one VCI lock and one shard lock per post, no request-pool lock once
+    // caches are warm, and no shared home-VCI funnel (every post on this
+    // fallback-homed comm anchors away from home, so `anchored_allocs`
+    // counts them all).
+    let spec =
+        ClusterSpec::new(fabric(Interconnect::Ib, 3), MpiConfig::striped_sharded(8), 1);
+    run_ok(spec, |proc, _t| {
+        use vcmpi::mpi::instrument::snapshot;
+        let world = proc.comm_world();
+        if proc.rank() == 0 {
+            // Warm both sources' anchored request caches.
+            for src in [1usize, 2] {
+                let r = proc.irecv(&world, Src::Rank(src), Tag::Value(7));
+                let got = proc.wait(r).expect("warm payload");
+                assert_eq!(got[0] as usize, src);
+            }
+            let base = snapshot();
+            let reqs: Vec<_> = (0..10)
+                .map(|k| proc.irecv(&world, Src::Rank(1 + k % 2), Tag::Value(7)))
+                .collect();
+            let d = snapshot() - base;
+            assert_eq!(d.vci_locks, 10, "one (anchored) VCI lock per striped post");
+            assert_eq!(d.shard_locks, 10, "one shard lock per striped post");
+            assert_eq!(d.global_locks, 0);
+            assert_eq!(d.request_locks, 0, "warm caches: no pool lock on the post path");
+            assert_eq!(d.anchored_allocs, 10, "every post anchored off the home VCI");
+            for (k, r) in reqs.into_iter().enumerate() {
+                let got = proc.wait(r).expect("payload");
+                assert_eq!(got[0] as usize, 1 + k % 2, "stream bound to the wrong source");
+            }
+        } else {
+            for _ in 0..6 {
+                proc.send(&world, 0, 7, &[proc.rank() as u8]);
+            }
+        }
+        proc.barrier(&world);
+    });
+}
+
+#[test]
+fn freed_striped_comm_drops_its_engines_and_caches() {
+    // Satellite: comm_free must unpin the freed comm's shard engines from
+    // the process table and every VCI's match_cache (finalize asserts it;
+    // this test also checks the observable table state directly).
+    let spec = ClusterSpec::new(fabric(Interconnect::Ib, 2), MpiConfig::optimized(8), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let peer = 1 - proc.rank();
+        for round in 0..3 {
+            let hot = proc.comm_dup_with_info(
+                &world,
+                &Info::new().with("vcmpi_striping", "rr").with("vcmpi_match_shards", "4"),
+            );
+            for i in 0..20u32 {
+                let s = proc.isend(&hot, peer, round, &i.to_le_bytes());
+                let got = proc.recv(&hot, Src::Rank(peer), Tag::Value(round));
+                assert_eq!(u32::from_le_bytes(got.as_slice().try_into().unwrap()), i);
+                proc.wait(s);
+            }
+            assert!(proc.has_match_engine(hot.id));
+            proc.barrier(&world);
+            let freed_id = hot.id;
+            proc.comm_free(hot);
+            assert!(
+                !proc.has_match_engine(freed_id),
+                "freed comm round {round} left its engine pinned"
+            );
+        }
+    });
 }
 
 // ---------------------------------------------------------------------
