@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Run-over-run bench delta table for the CI job summary.
+
+Usage: bench_delta.py BASELINE_DIR CURRENT_JSON [CURRENT_JSON ...]
+
+Each CURRENT_JSON is a BENCH_*.json report produced by a bench binary
+({"bench": ..., "scenarios": [{"name", "rate_msgs_per_sec", ...}],
+"gate": {...}}). The baseline directory holds the previous successful
+run's reports under the same file names (downloaded as artifacts); when a
+baseline file is missing the table still prints, with the delta column
+empty — the step must never fail the job.
+
+Output is GitHub-flavored markdown on stdout.
+"""
+
+import json
+import os
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def rates(report):
+    if not report:
+        return {}
+    return {
+        s.get("name", "?"): float(s.get("rate_msgs_per_sec", 0.0))
+        for s in report.get("scenarios", [])
+    }
+
+
+def fmt_rate(r):
+    return f"{r / 1e6:.3f}"
+
+
+def main():
+    if len(sys.argv) < 3:
+        print("usage: bench_delta.py BASELINE_DIR CURRENT_JSON...", file=sys.stderr)
+        return 1
+    baseline_dir = sys.argv[1]
+    print("## Bench rates, run over run")
+    print()
+    any_baseline = False
+    for cur_path in sys.argv[2:]:
+        cur = load(cur_path)
+        if cur is None:
+            print(f"_{cur_path}: missing or unreadable; skipped_")
+            print()
+            continue
+        name = cur.get("bench", os.path.basename(cur_path))
+        base = load(os.path.join(baseline_dir, os.path.basename(cur_path)))
+        base_rates = rates(base)
+        any_baseline = any_baseline or bool(base_rates)
+        print(f"### {name}")
+        print()
+        print("| scenario | baseline Mmsg/s | current Mmsg/s | delta |")
+        print("|---|---|---|---|")
+        for scen, rate in rates(cur).items():
+            prev = base_rates.get(scen)
+            if prev and prev > 0.0:
+                delta = f"{(rate - prev) / prev * 100.0:+.1f}%"
+                prev_s = fmt_rate(prev)
+            else:
+                delta, prev_s = "–", "–"
+            print(f"| {scen} | {prev_s} | {fmt_rate(rate)} | {delta} |")
+        gate = cur.get("gate", {})
+        if gate:
+            print()
+            ratios = ", ".join(
+                f"{k} = {v}" for k, v in gate.items() if k != "pass"
+            )
+            verdict = "PASS" if gate.get("pass") else "FAIL"
+            print(f"gate: {verdict} ({ratios})")
+        print()
+    if not any_baseline:
+        print("_No baseline reports found (first run on this branch?); "
+              "deltas will appear from the next run._")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

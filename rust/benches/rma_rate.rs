@@ -1,0 +1,97 @@
+//! Bench: the §7 one-sided rate lane — one origin thread's accumulate
+//! rate on a striped window vs the ordered-window baseline, plus the
+//! program-order correctness probe. Deterministic DES runs; values are
+//! exact per configuration.
+//!
+//! Environment (mirrors the message_rate bench):
+//!  * `BENCH_MSGS`   — accumulates issued by the origin thread (default 256).
+//!  * `BENCH_JSON`   — write a machine-readable report (rates + counters +
+//!    gate ratios) to this path.
+//!  * `BENCH_GATE=1` — exit nonzero if a gate fails (striped <= ordered,
+//!    or the ordered window reordered same-location accumulates).
+
+use vcmpi::bench::{
+    ordered_window_program_order_preserved, rma_rate_run, RateReport, RmaRateParams, WinMode,
+};
+
+struct Scenario {
+    name: &'static str,
+    threads: usize,
+    report: RateReport,
+}
+
+const COUNTER_KEYS: [&str; 4] =
+    ["stale_ctrl_drops", "empty_polls", "doorbell_skips", "win_lane_pinned"];
+
+fn scenario_json(s: &Scenario) -> String {
+    let counters: Vec<String> = COUNTER_KEYS
+        .iter()
+        .map(|k| format!("\"{}\": {}", k, s.report.sum_stat(k) as u64))
+        .collect();
+    format!(
+        "    {{\"name\": \"{}\", \"threads\": {}, \"rate_msgs_per_sec\": {:.1}, \
+         \"counters\": {{{}}}}}",
+        s.name,
+        s.threads,
+        s.report.rate,
+        counters.join(", ")
+    )
+}
+
+fn main() {
+    let msgs: usize =
+        std::env::var("BENCH_MSGS").ok().and_then(|v| v.parse().ok()).unwrap_or(256);
+    let msgs = msgs.clamp(64, 1024) / 32 * 32; // multiple of the flush window
+    let threads = 8;
+    let base = RmaRateParams {
+        threads,
+        msgs_per_core: msgs,
+        msg_size: 4096,
+        window: 32,
+        ..Default::default()
+    };
+
+    println!("== rma_rate: 4 KiB SumU64 accumulates, 1 origin thread, {msgs} ops ==");
+    println!("{:<16} {:>14}", "scenario", "Mmsg/s");
+    let ordered = Scenario {
+        name: "win_ordered",
+        threads,
+        report: rma_rate_run(RmaRateParams { mode: WinMode::WinOrdered, ..base.clone() }),
+    };
+    let striped = Scenario {
+        name: "win_striped",
+        threads,
+        report: rma_rate_run(RmaRateParams { mode: WinMode::WinStriped, ..base }),
+    };
+    let scenarios = [&ordered, &striped];
+    for s in scenarios {
+        println!("{:<16} {:>14.3}", s.name, s.report.rate / 1e6);
+    }
+
+    // ---- regression gate ----
+    let win_striped_over_ordered = striped.report.rate / ordered.report.rate;
+    let program_order = ordered_window_program_order_preserved();
+    let pass = win_striped_over_ordered > 1.0 && program_order;
+    println!("\ngate: win_striped/win_ordered = {win_striped_over_ordered:.3} (> 1.0 required)");
+    println!("gate: ordered window program order preserved = {program_order}");
+    println!("gate: {}", if pass { "PASS" } else { "FAIL" });
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let body = format!(
+            "{{\n  \"bench\": \"rma_rate\",\n  \"msgs_per_core\": {msgs},\n  \
+             \"scenarios\": [\n{}\n  ],\n  \"gate\": {{\n    \
+             \"win_striped_over_ordered\": {win_striped_over_ordered:.4},\n    \
+             \"ordered_window_program_order_preserved\": {program_order},\n    \
+             \"pass\": {pass}\n  }}\n}}\n",
+            scenarios.into_iter().map(scenario_json).collect::<Vec<_>>().join(",\n"),
+        );
+        std::fs::write(&path, body).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+
+    let gate_enforced = std::env::var("BENCH_GATE").map(|v| v == "1").unwrap_or(false);
+    if gate_enforced && !pass {
+        eprintln!("rma_rate regression gate FAILED");
+        std::process::exit(1);
+    }
+}

@@ -4,8 +4,10 @@
 
 pub mod figures;
 pub mod message_rate;
+pub mod rma_rate;
 
 pub use message_rate::{message_rate, message_rate_run, Mode, Op, RateParams, RateReport};
+pub use rma_rate::{ordered_window_program_order_preserved, rma_rate_run, RmaRateParams, WinMode};
 
 /// A simple CSV emitter for figure output.
 pub struct Csv {

@@ -1,0 +1,291 @@
+//! The one-sided rate benchmark behind the paper's §7 RMA claim: VCIs pay
+//! off on the one-sided path only when a **single origin thread's**
+//! operations can spread across network contexts. One origin thread
+//! hammers a remote window with accumulates in flush-bounded batches; the
+//! target's threads poll their own lanes (the paper's shared-progress
+//! model: any thread inside MPI progresses the library).
+//!
+//! Two scenarios, identical topology and process config — the only
+//! difference is the window's info keys:
+//!
+//!  * [`WinMode::WinOrdered`]: the default window policy. Every accumulate
+//!    funnels through the window's home VCI, so exactly one target thread
+//!    does all the active-message handling — the serialized baseline.
+//!  * [`WinMode::WinStriped`]: `accumulate_ordering=none` +
+//!    `vcmpi_striping=rr` (+ doorbell-gated flush sweeps). The SAME single
+//!    origin thread fans its accumulates across the stripe lanes; the
+//!    target's per-lane pollers handle them in parallel and completion is
+//!    counted per (window, target, lane).
+//!
+//! The CI gate requires `win_striped_over_ordered > 1.0` plus the
+//! [`ordered_window_program_order_preserved`] probe (striping must never
+//! leak reordering into the default accumulate path).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::fabric::{AccOp, FabricConfig, Interconnect};
+use crate::mpi::{run_cluster, ClusterSpec, Info, MpiConfig, Src, Tag};
+use crate::platform::{Backend, PBarrier};
+use crate::sim::SimOutcome;
+
+use super::message_rate::RateReport;
+
+/// Tag of the origin's "all batches flushed" stop message.
+const STOP_TAG: i32 = 901;
+
+/// Window-policy arm under test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WinMode {
+    /// Default (ordered) window: accumulates funnel through the home VCI.
+    WinOrdered,
+    /// Info-keyed striped window: `accumulate_ordering=none`,
+    /// `vcmpi_striping=rr`, `vcmpi_rx_doorbell=true`.
+    WinStriped,
+}
+
+impl WinMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WinMode::WinOrdered => "win_ordered",
+            WinMode::WinStriped => "win_striped",
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct RmaRateParams {
+    pub mode: WinMode,
+    /// Threads per process; also the VCI pool size (lane 0 = fallback,
+    /// lanes 1.. = stripe lanes, each with a dedicated target poller).
+    pub threads: usize,
+    /// Accumulate payload bytes (multiple of 8: SumU64 elements). Large
+    /// payloads shift the bottleneck to target-side handling — exactly
+    /// the term striping parallelizes.
+    pub msg_size: usize,
+    /// Accumulates issued by the one origin thread.
+    pub msgs_per_core: usize,
+    /// Outstanding-operation window between flushes.
+    pub window: usize,
+    pub cfg_override: Option<MpiConfig>,
+}
+
+impl Default for RmaRateParams {
+    fn default() -> Self {
+        RmaRateParams {
+            mode: WinMode::WinOrdered,
+            threads: 8,
+            msg_size: 4096,
+            msgs_per_core: 256,
+            window: 32,
+            cfg_override: None,
+        }
+    }
+}
+
+/// Info keys for the arm under test (empty = the default window policy).
+fn win_info(mode: WinMode) -> Info {
+    match mode {
+        WinMode::WinOrdered => Info::new(),
+        WinMode::WinStriped => Info::new()
+            .with("accumulate_ordering", "none")
+            .with("vcmpi_striping", "rr")
+            .with("vcmpi_rx_doorbell", "true")
+            .with("mpi_assert_no_locks", "true"),
+    }
+}
+
+/// Run the one-origin-thread RMA rate scenario; the report's `rate` is
+/// accumulates/second of the single origin thread (virtual time).
+pub fn rma_rate_run(p: RmaRateParams) -> RateReport {
+    let fab = FabricConfig {
+        interconnect: Interconnect::Opa,
+        nodes: 2,
+        procs_per_node: 1,
+        max_contexts_per_node: 64,
+    };
+    let cfg = p.cfg_override.clone().unwrap_or_else(|| MpiConfig::optimized(p.threads));
+    let tpp = p.threads;
+    let mut spec = ClusterSpec::new(fab, cfg, tpp);
+    spec.time_limit = Some(600_000_000_000);
+    let p = Arc::new(p);
+    let pp = p.clone();
+
+    let wins: Arc<Mutex<HashMap<usize, Arc<crate::mpi::Window>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let bars: Arc<Mutex<HashMap<usize, Arc<PBarrier>>>> = Arc::new(Mutex::new(HashMap::new()));
+    let stops: Arc<Mutex<HashMap<usize, Arc<AtomicBool>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    {
+        let mut b = bars.lock().unwrap();
+        let mut s = stops.lock().unwrap();
+        for proc in 0..2 {
+            b.insert(proc, Arc::new(PBarrier::new(Backend::Sim, tpp)));
+            s.insert(proc, Arc::new(AtomicBool::new(false)));
+        }
+    }
+
+    let r = run_cluster(spec, move |proc, t| {
+        let p = &*pp;
+        let world = proc.comm_world();
+        let me = proc.rank();
+        let bar = bars.lock().unwrap().get(&me).unwrap().clone();
+        let stop = stops.lock().unwrap().get(&me).unwrap().clone();
+        let win_size = p.msg_size.max(8) * p.window;
+
+        // ---- setup: collective window creation under the arm's policy ----
+        if t == 0 {
+            let win = proc.win_create_with_info(&world, win_size, &win_info(p.mode));
+            wins.lock().unwrap().insert(me, win);
+        }
+        bar.wait();
+        let win = wins.lock().unwrap().get(&me).unwrap().clone();
+        if t == 0 {
+            proc.barrier(&world);
+        }
+        bar.wait();
+
+        // ---- measured phase ----
+        if me == 0 {
+            if t == 0 {
+                // THE origin thread: flush-bounded accumulate batches.
+                let t0 = crate::platform::pnow(proc.backend);
+                let payload = vec![1u8; p.msg_size.max(8)];
+                let batches = p.msgs_per_core / p.window;
+                for _ in 0..batches {
+                    for k in 0..p.window {
+                        let offset = (k * p.msg_size.max(8)) % win_size;
+                        proc.accumulate(&win, 1, offset, &payload, AccOp::SumU64);
+                    }
+                    proc.win_flush(&win);
+                }
+                let t1 = crate::platform::pnow(proc.backend);
+                let msgs = p.msgs_per_core as f64;
+                crate::mpi::world::record("rate", msgs / ((t1 - t0) as f64 / 1e9));
+                // Release the target's pollers.
+                proc.send(&world, 1, STOP_TAG, &[]);
+            }
+            // Other origin-side threads stay OUT of MPI: the claim under
+            // test is a single origin thread's rate.
+        } else if t == 0 {
+            // Target rank, thread 0: wait out the origin (polls the
+            // fallback lane; the hybrid fallback keeps liveness), then
+            // release this process's pollers.
+            let _ = proc.recv(&world, Src::Rank(0), Tag::Value(STOP_TAG));
+            stop.store(true, Ordering::Release);
+        } else {
+            // Target pollers: thread t drives progress on lane t — the
+            // shared-progress model that gives striped windows their
+            // parallel handling (and the ordered arm its serialization:
+            // only the home lane's poller ever finds work).
+            let lane = t % proc.vcis().len();
+            while !stop.load(Ordering::Acquire) {
+                proc.progress_for_request(lane);
+            }
+        }
+        bar.wait();
+        if t == 0 {
+            proc.barrier(&world);
+        }
+        bar.wait();
+
+        if t == 0 {
+            crate::mpi::world::record(
+                format!("doorbell_skips_p{me}"),
+                proc.doorbell_skip_count() as f64,
+            );
+            crate::mpi::world::record(format!("empty_polls_p{me}"), proc.empty_poll_count() as f64);
+            crate::mpi::world::record(
+                format!("stale_ctrl_drops_p{me}"),
+                proc.stale_ctrl_drop_count() as f64,
+            );
+            crate::mpi::world::record(
+                format!("win_lane_pinned_p{me}"),
+                if proc.stripe_lane_pinned(win.vci) { 1.0 } else { 0.0 },
+            );
+        }
+
+        // ---- teardown ----
+        bar.wait();
+        if t == 0 {
+            let mine = { wins.lock().unwrap().remove(&me) };
+            if let Some(w) = mine {
+                proc.win_free(&world, w);
+            }
+        }
+    });
+    assert_eq!(
+        r.outcome,
+        SimOutcome::Completed,
+        "rma_rate run failed ({:?}): {:?}",
+        p.mode,
+        r.outcome
+    );
+    RateReport { rate: r.measurements["rate"], measurements: r.measurements }
+}
+
+/// Correctness probe for the CI gate: on a default (ordered) window, two
+/// Replace accumulates from one origin to one location must apply in
+/// program order — the later one wins. Striped windows relax this ONLY
+/// via `accumulate_ordering=none`; the default path must never reorder.
+pub fn ordered_window_program_order_preserved() -> bool {
+    let fab = FabricConfig {
+        interconnect: Interconnect::Opa,
+        nodes: 2,
+        procs_per_node: 1,
+        max_contexts_per_node: 64,
+    };
+    let spec = ClusterSpec::new(fab, MpiConfig::optimized(4), 1);
+    let r = run_cluster(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let win = proc.win_create(&world, 64);
+        if proc.rank() == 0 {
+            proc.accumulate(&win, 1, 0, &[1u8; 8], AccOp::Replace);
+            proc.accumulate(&win, 1, 0, &[2u8; 8], AccOp::Replace);
+            proc.win_flush(&win);
+            proc.send(&world, 1, 1, &[]);
+        } else {
+            let _ = proc.recv(&world, Src::Rank(0), Tag::Value(1));
+            let got = win.read_local(0, 8);
+            crate::mpi::world::record("last", got[0] as f64);
+        }
+        proc.win_free(&world, win);
+    });
+    r.outcome == SimOutcome::Completed && r.measurements.get("last").copied() == Some(2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn striped_window_beats_ordered_single_origin_thread() {
+        // The §7 RMA tentpole ratio (the CI gate enforces it on the full
+        // bench sizes): one origin thread's accumulate rate on a striped
+        // window must beat the ordered-window baseline, because the
+        // target-side handling parallelizes across the stripe lanes.
+        let base = RmaRateParams { threads: 8, msgs_per_core: 256, ..Default::default() };
+        let ordered = rma_rate_run(RmaRateParams { mode: WinMode::WinOrdered, ..base.clone() });
+        let striped = rma_rate_run(RmaRateParams { mode: WinMode::WinStriped, ..base });
+        assert!(
+            striped.rate > ordered.rate,
+            "striped window must lift a single origin thread: striped={:.0} ordered={:.0}",
+            striped.rate,
+            ordered.rate
+        );
+        assert_eq!(striped.sum_stat("stale_ctrl_drops"), 0.0);
+        assert_eq!(ordered.sum_stat("stale_ctrl_drops"), 0.0);
+        // Pin interaction: the ordered window protects its lane, the
+        // striped window leaves its home lane in the stripe set.
+        assert!(ordered.sum_stat("win_lane_pinned") > 0.0, "ordered window pins its lane");
+        assert_eq!(striped.sum_stat("win_lane_pinned"), 0.0, "striped window does not pin");
+        // The striped flush participates in doorbell-gated sweeps.
+        assert!(striped.sum_stat("doorbell_skips") > 0.0, "doorbell-gated flush sweeps");
+    }
+
+    #[test]
+    fn ordered_program_order_probe_holds() {
+        assert!(ordered_window_program_order_preserved());
+    }
+}

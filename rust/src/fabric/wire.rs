@@ -77,20 +77,41 @@ pub enum Payload {
     /// Ack for a matched synchronous send (or rendezvous completion).
     SendAck { send_handle: u64 },
     /// Software-emulated RMA put (OPA personality): target CPU applies it.
-    RmaPut { win: WinId, offset: usize, data: Vec<u8>, flush_handle: u64 },
+    /// `lane: Some(l)` marks a *striped* op (per-window VCI striping):
+    /// the origin issued it on stripe lane `l` and completion is counted
+    /// per (window, target, lane) instead of tracked per flush handle —
+    /// the target answers with [`Payload::RmaAckCount`] echoing the lane.
+    /// `None` keeps the ordered flush-handle protocol.
+    RmaPut { win: WinId, offset: usize, data: Vec<u8>, flush_handle: u64, lane: Option<u32> },
     /// Software-emulated RMA get request.
     RmaGetReq { win: WinId, offset: usize, len: usize, get_handle: u64 },
     /// Reply carrying the got bytes.
     RmaGetReply { get_handle: u64, data: Vec<u8> },
     /// Accumulate: applied by the target CPU on both personalities
     /// (MPI datatype reductions are not NIC-offloadable in general).
-    RmaAcc { win: WinId, offset: usize, data: Vec<u8>, op: AccOp, flush_handle: u64 },
+    /// `lane` as in [`Payload::RmaPut`].
+    RmaAcc {
+        win: WinId,
+        offset: usize,
+        data: Vec<u8>,
+        op: AccOp,
+        flush_handle: u64,
+        lane: Option<u32>,
+    },
     /// Fetch-and-op (e.g. MPI_Fetch_and_op on a u64 counter).
     RmaFetchOp { win: WinId, offset: usize, operand: Vec<u8>, op: AccOp, fetch_handle: u64 },
     /// Reply to a fetch-and-op with the previous value.
     RmaFetchOpReply { fetch_handle: u64, data: Vec<u8> },
-    /// Remote completion ack for puts/accumulates (counts toward flush).
+    /// Remote completion ack for ordered puts/accumulates (counts toward
+    /// flush via the per-VCI `acked` set).
     RmaAck { flush_handle: u64 },
+    /// Counted completion ack for a *striped* put/accumulate: one more op
+    /// on window `win` from the origin's stripe lane `lane` has applied at
+    /// the target (identified by the message's `src_proc`). The ack
+    /// returns to the issuing lane's context, where the origin bumps that
+    /// lane's per-(window, target) ack counter; `win_flush` waits until
+    /// every lane's acked count reaches its issued watermark.
+    RmaAckCount { win: WinId, lane: u32 },
 }
 
 /// Initiator-side record of an RMA operation's completion semantics.
@@ -114,7 +135,10 @@ impl Payload {
             Payload::RmaGetReply { data, .. } => data.len(),
             Payload::RmaFetchOp { operand, .. } => operand.len(),
             Payload::RmaFetchOpReply { data, .. } => data.len(),
-            Payload::RmaGetReq { .. } | Payload::SendAck { .. } | Payload::RmaAck { .. } => 0,
+            Payload::RmaGetReq { .. }
+            | Payload::SendAck { .. }
+            | Payload::RmaAck { .. }
+            | Payload::RmaAckCount { .. } => 0,
         }
     }
 }
@@ -125,9 +149,17 @@ mod tests {
 
     #[test]
     fn wire_bytes_counts_payload_only() {
-        let p = Payload::RmaPut { win: 1, offset: 0, data: vec![0; 4096], flush_handle: 9 };
+        let p = Payload::RmaPut {
+            win: 1,
+            offset: 0,
+            data: vec![0; 4096],
+            flush_handle: 9,
+            lane: None,
+        };
         assert_eq!(p.wire_bytes(), 4096);
         let ack = Payload::RmaAck { flush_handle: 9 };
         assert_eq!(ack.wire_bytes(), 0);
+        let counted = Payload::RmaAckCount { win: 1, lane: 3 };
+        assert_eq!(counted.wire_bytes(), 0);
     }
 }

@@ -6,9 +6,8 @@
 //!
 //! * **Process-wide** (`num_vcis`, `cs_mode`, the per-VCI request/
 //!   lightweight/progress options, `vci_policy`, `cache_aligned_vcis`,
-//!   `global_progress_interval`, `unsafe_no_thread_safety`, and the RMA
-//!   hint `accumulate_ordering_none`): these shape the library itself and
-//!   cannot differ per communicator.
+//!   `global_progress_interval`, `unsafe_no_thread_safety`): these shape
+//!   the library itself and cannot differ per communicator.
 //! * **Per-communicator defaults** (`vci_striping`, `match_shards`,
 //!   `wildcard_epoch_linger`, `rx_doorbell`, and the wildcard assertions
 //!   in [`Hints`]): since the per-communicator policy layer
@@ -23,6 +22,15 @@
 //!   halo-exchange communicator and a latency-sensitive ordered
 //!   communicator therefore coexist in one process — the presets below
 //!   keep their exact pre-policy behavior through the default path.
+//! * **Per-window defaults** (`accumulate_ordering_none` in [`Hints`],
+//!   plus `rx_doorbell` doing double duty): these seed the default
+//!   [`crate::mpi::WinPolicy`] every RMA window starts from. Individual
+//!   windows override them with info keys at
+//!   `MpiProc::win_create_with_info`: `accumulate_ordering=none`,
+//!   `vcmpi_striping=off|rr|hash`, `vcmpi_rx_doorbell`,
+//!   `mpi_assert_no_locks` — so one window can stripe a single origin
+//!   thread's accumulates across the pool while another stays ordered on
+//!   a pinned lane.
 
 /// Critical-section granularity (paper §4.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -142,6 +150,8 @@ pub struct MpiConfig {
 pub struct Hints {
     /// `accumulate_ordering=none`: Accumulates need not apply in program
     /// order, so they may fan out across VCIs (paper §6.3's closing point).
+    /// **Default [`crate::mpi::WinPolicy`] only** — per-window
+    /// `accumulate_ordering` info keys at `win_create_with_info` override.
     pub accumulate_ordering_none: bool,
     /// `mpi_assert_no_any_source`: receives never use MPI_ANY_SOURCE, so
     /// traffic within one communicator may be spread over VCIs by rank.

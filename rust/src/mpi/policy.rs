@@ -1,5 +1,6 @@
-//! Per-communicator policy: the info-key-driven resolution of the
-//! striping / sharding / wildcard knobs that used to be process-global.
+//! Per-communicator and per-window policy: the info-key-driven resolution
+//! of the striping / sharding / wildcard knobs that used to be
+//! process-global.
 //!
 //! The paper's position (§7) is that users should expose parallelism
 //! through *existing* MPI mechanisms — communicators and per-object info
@@ -24,6 +25,16 @@
 //! | `vcmpi_rx_doorbell`        | `true`\|`false`   | participate in doorbell-gated striped sweeps |
 //! | `mpi_assert_no_any_source` | `true`\|`false`   | receives on this comm never use `MPI_ANY_SOURCE` |
 //! | `mpi_assert_no_any_tag`    | `true`\|`false`   | receives on this comm never use `MPI_ANY_TAG` |
+//!
+//! Windows resolve a [`WinPolicy`] from the same [`Info`] machinery at
+//! `MpiProc::win_create_with_info` (MPI_Win_create's info argument):
+//!
+//! | key                     | values             | effect |
+//! |-------------------------|--------------------|--------|
+//! | `accumulate_ordering`   | `none` \| `rar,raw,war,waw` list | `none` relaxes accumulate program order (MPI-3.1 §11.7.2), enabling accumulate striping |
+//! | `vcmpi_striping`        | `off`\|`rr`\|`hash`  | per-message VCI striping of this window's puts/accumulates |
+//! | `vcmpi_rx_doorbell`     | `true`\|`false`    | flush sweeps are doorbell-gated for this window |
+//! | `mpi_assert_no_locks`   | `true`\|`false`    | promises flush-only passive-target sync (no lock epochs) |
 //!
 //! Unknown keys are ignored (MPI info semantics); a malformed value for a
 //! known key panics — it is a programming error, like posting a wildcard
@@ -145,14 +156,7 @@ impl CommPolicy {
     pub fn with_info(&self, info: &Info) -> Self {
         let mut p = self.clone();
         if let Some(v) = info.get("vcmpi_striping") {
-            p.striping = match v {
-                "off" => VciStriping::Off,
-                "rr" => VciStriping::RoundRobin,
-                "hash" => VciStriping::HashedByRequest,
-                other => panic!(
-                    "info key vcmpi_striping: expected off|rr|hash, got {other:?} (erroneous program)"
-                ),
-            };
+            p.striping = parse_striping(v);
         }
         if let Some(v) = info.get("vcmpi_match_shards") {
             p.match_shards = v
@@ -198,6 +202,132 @@ impl CommPolicy {
     /// each endpoint IS a dedicated VCI, so striping would defeat them).
     pub fn ordered(&self) -> Self {
         CommPolicy { striping: VciStriping::Off, ..self.clone() }
+    }
+}
+
+/// The per-window resolution of the RMA knobs: which completion/ordering
+/// model a window's one-sided traffic uses.
+///
+/// Built at window creation (`MpiProc::win_create_with_info`) from the
+/// process-default policy — the demoted `accumulate_ordering_none` hint on
+/// [`MpiConfig`] — overridden by the creation call's [`Info`] keys, and
+/// carried by every `Window` as an `Arc`. Like a communicator's policy it
+/// is part of the wire contract: windows are created collectively and all
+/// members must pass the same info keys (the striped-ack wire format
+/// differs from the flush-handle format).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WinPolicy {
+    /// `accumulate_ordering=none` (MPI-3.1 §11.7.2): accumulates from one
+    /// origin need not apply in program order, so they may fan out across
+    /// VCIs — thread-spread without striping, per-message with it.
+    pub relaxed_accumulate: bool,
+    /// Per-message VCI striping of this window's one-sided traffic
+    /// (`vcmpi_striping`). `Off` funnels through the window's home VCI
+    /// — and *pins that VCI out of the stripe-lane set*, like an ordered
+    /// communicator. Puts stripe whenever this is on (MPI imposes no
+    /// inter-put ordering); accumulates additionally require
+    /// [`relaxed_accumulate`](WinPolicy::relaxed_accumulate).
+    pub striping: VciStriping,
+    /// Are this window's flush sweeps doorbell-gated (`vcmpi_rx_doorbell`)?
+    pub rx_doorbell: bool,
+    /// `mpi_assert_no_locks`: the program promises flush-only passive-
+    /// target synchronization (no lock/unlock epochs). Accepted and
+    /// recorded; this model's only passive-target sync *is* flush, so the
+    /// assert gates nothing today (a conformant library may ignore
+    /// asserts) — it exists so programs can declare the promise now and
+    /// keep working when lock epochs land.
+    pub no_locks: bool,
+}
+
+impl Default for WinPolicy {
+    fn default() -> Self {
+        WinPolicy {
+            relaxed_accumulate: false,
+            striping: VciStriping::Off,
+            rx_doorbell: false,
+            no_locks: false,
+        }
+    }
+}
+
+impl WinPolicy {
+    /// The process-default window policy: the demoted `MpiConfig` RMA
+    /// hint. Every window starts from it; info keys at creation override.
+    pub fn from_config(cfg: &MpiConfig) -> Self {
+        WinPolicy {
+            relaxed_accumulate: cfg.hints.accumulate_ordering_none,
+            striping: VciStriping::Off,
+            rx_doorbell: cfg.rx_doorbell,
+            no_locks: false,
+        }
+    }
+
+    /// Resolve a derived policy: this policy overridden by `info`'s keys.
+    /// An empty info inherits unchanged — `win_create` is
+    /// `win_create_with_info(.., &Info::new())`.
+    pub fn with_info(&self, info: &Info) -> Self {
+        let mut p = self.clone();
+        if let Some(v) = info.get("accumulate_ordering") {
+            p.relaxed_accumulate = parse_accumulate_ordering(v);
+        }
+        if let Some(v) = info.get("vcmpi_striping") {
+            p.striping = parse_striping(v);
+        }
+        if let Some(v) = info.get("vcmpi_rx_doorbell") {
+            p.rx_doorbell = parse_bool("vcmpi_rx_doorbell", v);
+        }
+        if let Some(v) = info.get("mpi_assert_no_locks") {
+            p.no_locks = parse_bool("mpi_assert_no_locks", v);
+        }
+        p
+    }
+
+    /// Does this policy stripe any one-sided traffic across the pool?
+    pub fn striped(&self) -> bool {
+        self.striping != VciStriping::Off
+    }
+
+    /// Puts stripe whenever striping is on: MPI guarantees no ordering
+    /// between puts (overlapping unsynchronized puts are already
+    /// undefined), so fanning them out is always legal.
+    pub fn stripes_puts(&self) -> bool {
+        self.striped()
+    }
+
+    /// Accumulates stripe only when program order was relaxed
+    /// (`accumulate_ordering=none`): the default ordering guarantees
+    /// same-origin same-target accumulates apply in program order, which
+    /// per-message fan-out would break.
+    pub fn stripes_accumulates(&self) -> bool {
+        self.striped() && self.relaxed_accumulate
+    }
+}
+
+/// `accumulate_ordering` value: `none` relaxes ordering; a comma list
+/// drawn from `rar,raw,war,waw` (MPI-3.1's ordering vocabulary) keeps the
+/// ordered path. Anything else is erroneous.
+fn parse_accumulate_ordering(v: &str) -> bool {
+    if v == "none" {
+        return true;
+    }
+    let all_known = !v.is_empty()
+        && v.split(',').all(|t| matches!(t.trim(), "rar" | "raw" | "war" | "waw"));
+    if !all_known {
+        panic!(
+            "info key accumulate_ordering: expected none or a rar/raw/war/waw list, got {v:?} (erroneous program)"
+        );
+    }
+    false
+}
+
+fn parse_striping(v: &str) -> VciStriping {
+    match v {
+        "off" => VciStriping::Off,
+        "rr" => VciStriping::RoundRobin,
+        "hash" => VciStriping::HashedByRequest,
+        other => panic!(
+            "info key vcmpi_striping: expected off|rr|hash, got {other:?} (erroneous program)"
+        ),
     }
 }
 
@@ -270,5 +400,50 @@ mod tests {
     #[should_panic(expected = "vcmpi_match_shards")]
     fn malformed_shard_count_is_erroneous() {
         let _ = CommPolicy::default().with_info(&Info::new().with("vcmpi_match_shards", "many"));
+    }
+
+    #[test]
+    fn win_policy_resolves_from_config_and_info() {
+        let mut cfg = MpiConfig::optimized(8);
+        cfg.hints.accumulate_ordering_none = true;
+        let base = WinPolicy::from_config(&cfg);
+        assert!(base.relaxed_accumulate, "process hint seeds the default");
+        assert!(!base.striped());
+        let p = base.with_info(
+            &Info::new()
+                .with("vcmpi_striping", "rr")
+                .with("vcmpi_rx_doorbell", "true")
+                .with("mpi_assert_no_locks", "1"),
+        );
+        assert_eq!(p.striping, VciStriping::RoundRobin);
+        assert!(p.rx_doorbell && p.no_locks);
+        assert!(p.stripes_puts() && p.stripes_accumulates());
+    }
+
+    #[test]
+    fn win_policy_decision_table() {
+        // Ordered window: nothing stripes.
+        let ordered = WinPolicy::default();
+        assert!(!ordered.stripes_puts() && !ordered.stripes_accumulates());
+        // Striped but accumulate ordering kept: puts stripe, accs do not.
+        let puts_only =
+            WinPolicy::default().with_info(&Info::new().with("vcmpi_striping", "hash"));
+        assert!(puts_only.stripes_puts());
+        assert!(!puts_only.stripes_accumulates(), "ordered accs keep program order");
+        // Relaxed + striped: both stripe.
+        let both = WinPolicy::default().with_info(
+            &Info::new().with("accumulate_ordering", "none").with("vcmpi_striping", "rr"),
+        );
+        assert!(both.stripes_puts() && both.stripes_accumulates());
+        // An explicit MPI-3.1 ordering list keeps the ordered path.
+        let listed = both.with_info(&Info::new().with("accumulate_ordering", "rar,raw,war,waw"));
+        assert!(!listed.relaxed_accumulate && !listed.stripes_accumulates());
+    }
+
+    #[test]
+    #[should_panic(expected = "accumulate_ordering")]
+    fn malformed_accumulate_ordering_is_erroneous() {
+        let _ =
+            WinPolicy::default().with_info(&Info::new().with("accumulate_ordering", "sometimes"));
     }
 }

@@ -14,17 +14,65 @@ use crate::sim::CostModel;
 use super::comm::{Comm, CommKind};
 use super::config::{CsMode, MpiConfig, VciStriping};
 use super::instrument::{count_lock, LockClass};
-use super::policy::{CommPolicy, Info};
+use super::policy::{CommPolicy, Info, WinPolicy};
 use super::request::{RequestSlab, DEFAULT_SLAB_CAPACITY};
 use super::rma::Window;
 use super::shard::{CommMatch, EpochStats};
 use super::vci::{guard_for, Guard, VciPool, VciState, FALLBACK_VCI};
 
-/// Is pool lane `idx` pinned out of the stripe-lane set? Lanes beyond 64
-/// are never pinned (the pin mask is one word; pools are bounded by the
-/// node's hardware-context budget, well below that).
-fn lane_excluded(mask: u64, idx: usize) -> bool {
-    idx < 64 && mask & (1u64 << idx) != 0
+/// Lock-free stripe-lane pin mask: one bit per pool lane, in as many
+/// words as the configured pool needs (the old single-`u64` mask silently
+/// capped pinning at 64 lanes — with striped windows pinning lanes on top
+/// of ordered/endpoints communicators, that cap is reachable). Writers
+/// (pin/unpin) are serialized by `MpiProc::ordered_pins`; readers on the
+/// per-message stripe paths pay one relaxed-class atomic load per probe,
+/// exactly like the single-word mask did.
+pub(super) struct PinMask {
+    words: Vec<AtomicU64>,
+    /// Count of currently pinned lanes (fast "anything pinned?" check so
+    /// the common no-pins case stays a single load).
+    pinned: AtomicUsize,
+}
+
+impl PinMask {
+    pub(super) fn new(lanes: usize) -> Self {
+        PinMask {
+            words: (0..lanes.max(1).div_ceil(64)).map(|_| AtomicU64::new(0)).collect(),
+            pinned: AtomicUsize::new(0),
+        }
+    }
+
+    /// Mark lane `idx` pinned. Caller holds the pin-table mutex (the
+    /// refcounting layer), so set/count cannot race another writer.
+    fn pin(&self, idx: usize) {
+        debug_assert!(idx / 64 < self.words.len(), "lane {idx} beyond pin-mask capacity");
+        let bit = 1u64 << (idx % 64);
+        if self.words[idx / 64].fetch_or(bit, Ordering::Release) & bit == 0 {
+            self.pinned.fetch_add(1, Ordering::Release);
+        }
+    }
+
+    fn unpin(&self, idx: usize) {
+        let bit = 1u64 << (idx % 64);
+        if self.words[idx / 64].fetch_and(!bit, Ordering::Release) & bit != 0 {
+            self.pinned.fetch_sub(1, Ordering::Release);
+        }
+    }
+
+    /// Is any lane pinned at all?
+    pub(super) fn any(&self) -> bool {
+        self.pinned.load(Ordering::Acquire) != 0
+    }
+
+    /// Is pool lane `idx` pinned out of the stripe-lane set? Lanes beyond
+    /// the mask's capacity are never pinned (defensive: the mask is sized
+    /// from the configured pool).
+    pub(super) fn excluded(&self, idx: usize) -> bool {
+        match self.words.get(idx / 64) {
+            Some(w) => w.load(Ordering::Acquire) & (1u64 << (idx % 64)) != 0,
+            None => false,
+        }
+    }
 }
 
 /// Cap on the freed-comm finalize tripwire (`MpiProc::freed_comms`):
@@ -36,12 +84,12 @@ const FREED_TRACK_CAP: usize = 1024;
 /// Deterministic probe for the first un-pinned stripe lane starting from
 /// scramble `z` (lanes `1..n`; the fallback lane 0 is never a stripe
 /// lane). `None` when every stripe lane is pinned. Shared by hashed
-/// stripe selection and shard-anchored request allocation so the two
-/// cannot diverge.
-fn probe_stripe_lane(z: u64, n: usize, mask: u64) -> Option<usize> {
+/// stripe selection (two-sided and RMA) and shard-anchored request
+/// allocation so the three cannot diverge.
+fn probe_stripe_lane(z: u64, n: usize, mask: &PinMask) -> Option<usize> {
     for k in 0..n as u64 - 1 {
         let lane = 1 + ((z.wrapping_add(k)) % (n as u64 - 1)) as usize;
-        if !lane_excluded(mask, lane) {
+        if !mask.excluded(lane) {
             return Some(lane);
         }
     }
@@ -138,13 +186,18 @@ pub struct MpiProc {
     /// per-iteration create/free loop cannot grow it without bound.
     freed_comms: Mutex<HashSet<u64>>,
     /// Stripe-lane pins: per-VCI count of live ordered (`striping=off`)
-    /// and endpoints communicators funneling through it. A pinned lane is
-    /// excluded from stripe-VCI selection and the striped progress sweep,
-    /// so a latency-ordered communicator's VCI never queues striped bulk.
+    /// and endpoints communicators — and ordered RMA windows — funneling
+    /// through it. A pinned lane is excluded from stripe-VCI selection and
+    /// the striped progress sweep, so a latency-ordered communicator's (or
+    /// ordered window's) VCI never queues striped bulk.
     ordered_pins: Mutex<HashMap<usize, u32>>,
-    /// Bitmask mirror of `ordered_pins` (lanes < 64), read lock-free on
-    /// the per-message stripe paths.
-    stripe_excluded: AtomicU64,
+    /// Bitmask mirror of `ordered_pins` (a word array covering the whole
+    /// configured pool), read lock-free on the per-message stripe paths.
+    stripe_excluded: PinMask,
+    /// The process-default [`WinPolicy`] — the demoted
+    /// `accumulate_ordering_none` hint. Every window starts from it; info
+    /// keys at `win_create_with_info` override per window.
+    pub(super) default_win_policy: Arc<WinPolicy>,
     /// Collective-order counters for `comm_split_with_info` id
     /// derivation, keyed by PARENT comm id: a split is collective over
     /// the parent's members only, so a per-parent counter stays symmetric
@@ -175,6 +228,8 @@ impl MpiProc {
         let backend = fabric.backend();
         let costs = fabric.costs().clone();
         let default_policy = Arc::new(CommPolicy::from_config(&cfg));
+        let default_win_policy = Arc::new(WinPolicy::from_config(&cfg));
+        let pin_lanes = cfg.num_vcis.max(1);
         // MPI_COMM_WORLD (id 0) carries the default policy from birth.
         let mut policies = HashMap::new();
         policies.insert(0u64, default_policy.clone());
@@ -203,7 +258,8 @@ impl MpiProc {
             policies: Mutex::new(policies),
             freed_comms: Mutex::new(HashSet::new()),
             ordered_pins: Mutex::new(HashMap::new()),
-            stripe_excluded: AtomicU64::new(0),
+            stripe_excluded: PinMask::new(pin_lanes),
+            default_win_policy,
             split_seqs: Mutex::new(HashMap::new()),
             policy_mismatches: AtomicU64::new(0),
             doorbell_skips: AtomicU64::new(0),
@@ -538,19 +594,20 @@ impl MpiProc {
     }
 
     /// Pin `vci_idx` out of the stripe-lane set (refcounted: several
-    /// ordered comms may share a lane after pool exhaustion). The fallback
-    /// VCI is never a stripe lane, so it needs no pin.
-    fn pin_ordered_lane(&self, vci_idx: usize) {
-        if vci_idx == FALLBACK_VCI || vci_idx >= 64 {
+    /// ordered comms/windows may share a lane after pool exhaustion). The
+    /// fallback VCI is never a stripe lane, so it needs no pin. Also used
+    /// by ordered RMA windows (`mpi::rma`).
+    pub(super) fn pin_ordered_lane(&self, vci_idx: usize) {
+        if vci_idx == FALLBACK_VCI {
             return;
         }
         let mut pins = self.ordered_pins.lock().unwrap_or_else(|e| e.into_inner());
         *pins.entry(vci_idx).or_insert(0) += 1;
-        self.stripe_excluded.fetch_or(1u64 << vci_idx, Ordering::Release);
+        self.stripe_excluded.pin(vci_idx);
     }
 
-    fn unpin_ordered_lane(&self, vci_idx: usize) {
-        if vci_idx == FALLBACK_VCI || vci_idx >= 64 {
+    pub(super) fn unpin_ordered_lane(&self, vci_idx: usize) {
+        if vci_idx == FALLBACK_VCI {
             return;
         }
         let mut pins = self.ordered_pins.lock().unwrap_or_else(|e| e.into_inner());
@@ -558,9 +615,15 @@ impl MpiProc {
             *c -= 1;
             if *c == 0 {
                 pins.remove(&vci_idx);
-                self.stripe_excluded.fetch_and(!(1u64 << vci_idx), Ordering::Release);
+                self.stripe_excluded.unpin(vci_idx);
             }
         }
+    }
+
+    /// Is lane `idx` currently pinned out of the stripe set? Test/bench
+    /// aid (proves ordered windows/comms protect their lanes).
+    pub fn stripe_lane_pinned(&self, idx: usize) -> bool {
+        self.stripe_excluded.excluded(idx)
     }
 
     /// If a striped arrival raced this communicator's creation, an engine
@@ -791,17 +854,10 @@ impl MpiProc {
             // sides agree on the matching path.
             return FALLBACK_VCI;
         }
-        let mask = self.stripe_excluded.load(Ordering::Acquire);
         match comm.policy.striping {
-            VciStriping::RoundRobin => {
-                for _ in 0..n - 1 {
-                    let lane = 1 + self.stripe_rr.fetch_add(1, Ordering::Relaxed) % (n - 1);
-                    if !lane_excluded(mask, lane) {
-                        return lane;
-                    }
-                }
-                self.comm_vci(comm, None)
-            }
+            VciStriping::RoundRobin => self
+                .rr_stripe_lane(n)
+                .unwrap_or_else(|| self.comm_vci(comm, None)),
             VciStriping::HashedByRequest => {
                 let z = crate::util::mix64(
                     comm.id
@@ -809,9 +865,71 @@ impl MpiProc {
                         .wrapping_add((dst as u64) << 32)
                         .wrapping_add(seq),
                 );
-                probe_stripe_lane(z, n, mask).unwrap_or_else(|| self.comm_vci(comm, None))
+                probe_stripe_lane(z, n, &self.stripe_excluded)
+                    .unwrap_or_else(|| self.comm_vci(comm, None))
             }
             VciStriping::Off => self.comm_vci(comm, None),
+        }
+    }
+
+    /// Round-robin selection of the next un-pinned stripe lane (the
+    /// process-wide cursor shared by two-sided and RMA striping, so
+    /// concurrent striped traffic naturally fans out). `None` when every
+    /// stripe lane is pinned.
+    fn rr_stripe_lane(&self, n: usize) -> Option<usize> {
+        for _ in 0..n - 1 {
+            let lane = 1 + self.stripe_rr.fetch_add(1, Ordering::Relaxed) % (n - 1);
+            if !self.stripe_excluded.excluded(lane) {
+                return Some(lane);
+            }
+        }
+        None
+    }
+
+    /// Stripe lane for one RMA op on a striped window, per the window's
+    /// [`WinPolicy`]: round-robin walks the pool with the shared cursor;
+    /// hashed scrambles (window id, target, op handle) so an op keeps its
+    /// lane deterministically. Exclusions mirror [`MpiProc::stripe_vci`]:
+    /// never the fallback VCI, never a lane pinned by an ordered comm,
+    /// endpoints comm, or ordered window; if every stripe lane is pinned
+    /// the op funnels through the window's home VCI (still ack-counted,
+    /// so both sides agree on the completion protocol).
+    pub(super) fn stripe_win_vci(&self, win: &Window, target: usize, seq: u64) -> usize {
+        let n = self.vcis().len();
+        let home = win.vci % n;
+        if n <= 1 {
+            return FALLBACK_VCI;
+        }
+        match win.policy.striping {
+            VciStriping::RoundRobin => self.rr_stripe_lane(n).unwrap_or(home),
+            VciStriping::HashedByRequest => {
+                let z = crate::util::mix64(
+                    win.id
+                        .wrapping_mul(0x9E3779B97F4A7C15)
+                        .wrapping_add((target as u64) << 32)
+                        .wrapping_add(seq),
+                );
+                probe_stripe_lane(z, n, &self.stripe_excluded).unwrap_or(home)
+            }
+            VciStriping::Off => home,
+        }
+    }
+
+    /// Drop window `win_id`'s striped-completion counters from every VCI
+    /// (window free). Off the critical path, like
+    /// [`MpiProc::purge_match_caches`].
+    pub(super) fn purge_rma_counters(&self, win_id: u64) {
+        if self.vcis.get().is_none() {
+            return;
+        }
+        let _cs = self.enter_cs();
+        let guard = self.guard();
+        for i in 0..self.vcis().len() {
+            let vci = self.vcis().get(i).clone();
+            vci.with_state(guard, |st| {
+                st.rma_issued.retain(|(w, _), _| *w != win_id);
+                st.rma_acked.retain(|(w, _), _| *w != win_id);
+            });
         }
     }
 
@@ -840,8 +958,8 @@ impl MpiProc {
         // anchor is purely local, but allocating on an ordered comm's
         // lane would contend with exactly the latency traffic the pin
         // protects. All lanes pinned degenerates to the home VCI.
-        let mask = self.stripe_excluded.load(Ordering::Acquire);
-        probe_stripe_lane(z, n, mask).unwrap_or_else(|| self.comm_vci(comm, None))
+        probe_stripe_lane(z, n, &self.stripe_excluded)
+            .unwrap_or_else(|| self.comm_vci(comm, None))
     }
 
     /// Which VCI a progress call on behalf of a request mapped to
@@ -871,28 +989,28 @@ impl MpiProc {
             return Some(req_vci);
         }
         let cursor = self.stripe_poll_rr.fetch_add(1, Ordering::Relaxed) % n;
-        let mask = self.stripe_excluded.load(Ordering::Acquire);
+        let mask = &self.stripe_excluded;
         if !doorbell {
-            if mask == 0 {
+            if !mask.any() {
                 return Some(cursor);
             }
             // The fallback lane (0) is never pinned, so this circular
             // scan always lands on an un-pinned index.
             let mut idx = cursor;
-            while lane_excluded(mask, idx) {
+            while mask.excluded(idx) {
                 idx = (idx + 1) % n;
             }
             return Some(idx);
         }
         let bell = self.vcis().doorbell().clone();
-        if mask == 0 {
+        if !mask.any() {
             return bell.next_set(cursor, n);
         }
         let mut start = cursor;
         for _ in 0..n {
             match bell.next_set(start, n) {
                 None => return None,
-                Some(idx) if !lane_excluded(mask, idx) => return Some(idx),
+                Some(idx) if !mask.excluded(idx) => return Some(idx),
                 Some(idx) => start = (idx + 1) % n,
             }
         }
@@ -965,5 +1083,49 @@ impl MpiProc {
     /// Cooperative yield used inside progress/wait loops.
     pub fn relax(&self) {
         pyield(self.backend);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::PinMask;
+
+    #[test]
+    fn pin_mask_covers_lanes_beyond_one_word() {
+        // The old single-u64 mask silently ignored lanes >= 64; the word
+        // array must pin and probe them like any other lane.
+        let m = PinMask::new(130);
+        assert!(!m.any());
+        for idx in [1usize, 63, 64, 100, 129] {
+            assert!(!m.excluded(idx));
+            m.pin(idx);
+            assert!(m.excluded(idx), "lane {idx} should pin");
+        }
+        assert!(m.any());
+        assert!(!m.excluded(65), "neighbors stay unpinned");
+        for idx in [1usize, 63, 64, 100, 129] {
+            m.unpin(idx);
+            assert!(!m.excluded(idx));
+        }
+        assert!(!m.any());
+    }
+
+    #[test]
+    fn pin_mask_is_idempotent_per_bit() {
+        // The refcounting lives in `ordered_pins`; the mask itself is a
+        // set — double-pinning one lane must not wedge the pinned count.
+        let m = PinMask::new(4);
+        m.pin(2);
+        m.pin(2);
+        assert!(m.any());
+        m.unpin(2);
+        assert!(!m.any(), "count tracks distinct pinned lanes, not pin calls");
+        assert!(!m.excluded(2));
+    }
+
+    #[test]
+    fn pin_mask_out_of_range_reads_are_unpinned() {
+        let m = PinMask::new(8);
+        assert!(!m.excluded(512), "beyond-capacity lanes read unpinned");
     }
 }

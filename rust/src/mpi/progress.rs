@@ -27,6 +27,13 @@
 //! comms: lanes pinned by ordered/endpoints communicators are skipped,
 //! with the paranoid global round as the starvation backstop.
 //!
+//! Striped RMA (per-window policy, `mpi::rma`) rides the same machinery:
+//! a striped put/accumulate arrives marked with its origin stripe lane,
+//! the target answers `RmaAckCount` toward that lane's context, and the
+//! origin's handler bumps the polled VCI's per-(window, target) ack
+//! counter — `win_flush` sweeps the stripe lanes (doorbell-gated per the
+//! window policy) until every recorded lane reaches its watermark.
+//!
 //! # Robustness
 //!
 //! No `expect`/`unwrap` panic is reachable from wire-message handling:
@@ -294,7 +301,7 @@ impl MpiProc {
                 slot.completed.store(1, self.charged_atomics());
             }
             // ---- software-emulated RMA (target side) ----
-            Payload::RmaPut { win, offset, data, flush_handle } => {
+            Payload::RmaPut { win, offset, data, flush_handle, lane } => {
                 let Some(mem) = self.fabric.find_window(self.rank(), win) else {
                     self.drop_stale();
                     return;
@@ -308,7 +315,13 @@ impl MpiProc {
                     self.costs.rma_am_handle + self.costs.memcpy_cost(data.len()),
                 );
                 mem.write(offset, &data);
-                self.reply(my_ctx_index, &sender, Payload::RmaAck { flush_handle });
+                // Striped ops (lane marked) complete by counted ack on the
+                // issuing lane; ordered ops keep the flush-handle ack.
+                let ack = match lane {
+                    Some(l) => Payload::RmaAckCount { win, lane: l },
+                    None => Payload::RmaAck { flush_handle },
+                };
+                self.reply(my_ctx_index, &sender, ack);
             }
             Payload::RmaGetReq { win, offset, len, get_handle } => {
                 let Some(mem) = self.fabric.find_window(self.rank(), win) else {
@@ -327,7 +340,7 @@ impl MpiProc {
                 padvance(self.backend, self.costs.completion_process);
                 st.get_done.insert(get_handle, data);
             }
-            Payload::RmaAcc { win, offset, data, op, flush_handle } => {
+            Payload::RmaAcc { win, offset, data, op, flush_handle, lane } => {
                 let Some(mem) = self.fabric.find_window(self.rank(), win) else {
                     self.drop_stale();
                     return;
@@ -343,7 +356,11 @@ impl MpiProc {
                     self.costs.rma_am_handle + 2 * self.costs.memcpy_cost(data.len()),
                 );
                 super::rma::apply_accumulate(&mem, offset, &data, op);
-                self.reply(my_ctx_index, &sender, Payload::RmaAck { flush_handle });
+                let ack = match lane {
+                    Some(l) => Payload::RmaAckCount { win, lane: l },
+                    None => Payload::RmaAck { flush_handle },
+                };
+                self.reply(my_ctx_index, &sender, ack);
             }
             Payload::RmaFetchOp { win, offset, operand, op, fetch_handle } => {
                 let Some(mem) = self.fabric.find_window(self.rank(), win) else {
@@ -378,6 +395,23 @@ impl MpiProc {
             Payload::RmaAck { flush_handle } => {
                 padvance(self.backend, self.costs.completion_process);
                 st.acked.insert(flush_handle);
+            }
+            Payload::RmaAckCount { win, lane } => {
+                // Counted striped-RMA completion: the ack returned to the
+                // issuing stripe lane's context (the target replies toward
+                // `src_ctx`), so this VCI's per-(window, target) counter is
+                // the one `win_flush` is watching; `lane` rides along as
+                // the wire-contract record of that routing. A straggler
+                // for a freed window just bumps a counter nobody waits on
+                // (purged again if the id is ever resurrected — win ids
+                // are never recycled).
+                debug_assert!(
+                    (lane as usize) >= self.vcis().len()
+                        || self.vcis().get(lane as usize).ctx_index == my_ctx_index,
+                    "counted RMA ack landed off its issuing lane {lane}"
+                );
+                padvance(self.backend, self.costs.completion_process);
+                *st.rma_acked.entry((win, sender.src_proc)).or_insert(0) += 1;
             }
         }
     }

@@ -11,6 +11,42 @@
 //!    shared-progress findings (Figs. 13-16, 24-25, 27).
 //!  * Accumulates ride the active-message path on both personalities
 //!    (datatype reductions are not NIC-offloadable in general).
+//!
+//! # Per-window policy and striped RMA
+//!
+//! Every window carries a [`WinPolicy`] resolved at creation
+//! ([`MpiProc::win_create_with_info`]) from MPI-style info keys —
+//! `accumulate_ordering=none`, `vcmpi_striping=off|rr|hash`,
+//! `vcmpi_rx_doorbell`, `mpi_assert_no_locks` — over the process default
+//! (the demoted `accumulate_ordering_none` hint on `MpiConfig`), mirroring
+//! how communicators resolve a `CommPolicy`. The decision table:
+//!
+//! | window policy                         | put            | accumulate        | completion                  |
+//! |---------------------------------------|----------------|-------------------|-----------------------------|
+//! | `striping=off` (ordered, the default) | home VCI       | home VCI¹         | flush handle → `acked` set  |
+//! | striped, `accumulate_ordering` kept   | stripe lanes   | home VCI (order!) | counted² / `acked` set      |
+//! | striped + `accumulate_ordering=none`  | stripe lanes   | stripe lanes      | per-lane ack counters²      |
+//!
+//! ¹ `accumulate_ordering=none` without striping keeps the pre-policy
+//!   *thread*-spread: each thread picks a VCI by its token (§6.3).
+//! ² Ack counting (the striped completion model): the origin bumps a
+//!   per-(window, target) **issue counter in the stripe lane's own
+//!   `VciState`** while injecting, and records the post-increment value as
+//!   the calling thread's watermark. The target applies the op and answers
+//!   `RmaAckCount` (echoing the lane), which returns to the issuing lane's
+//!   context and bumps that lane's **ack counter**. `win_flush` waits, per
+//!   recorded (target, lane), until `acked >= watermark` — correct because
+//!   each (origin lane, target) channel is FIFO both ways — so flushing no
+//!   longer funnels every completion through one VCI's `acked` set, and an
+//!   op never needs an individually tracked flush handle. Ordered windows
+//!   (and Get / Fetch_and_op everywhere — a striped MPI_Get is an open
+//!   follow-on) keep the flush-handle protocol unchanged.
+//!
+//! Ordered (`striping=off`) windows *pin their home VCI out of the
+//! stripe-lane set* like ordered communicators do, so striped bulk —
+//! two-sided or RMA — never queues behind their latency-sensitive ops;
+//! striped windows' lanes stay in the stripe set and their flush sweeps
+//! participate in doorbell-gated striped progress (`vcmpi_rx_doorbell`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -19,13 +55,15 @@ use std::sync::{Arc, Mutex};
 use crate::fabric::{AccOp, Interconnect, Payload, WindowMem};
 use crate::platform::{padvance, pnow};
 
+use super::policy::{Info, WinPolicy};
 use super::proc::{thread_token, MpiProc};
 
 /// An RMA window.
 pub struct Window {
     pub id: u64,
     /// VCI this window funnels through (paper §4.2: VCIs are assigned per
-    /// window just as per communicator).
+    /// window just as per communicator). Striped ops leave it for the
+    /// stripe lanes; ordered ops, gets, and fetch-ops stay on it.
     pub vci: usize,
     pub size: usize,
     mem: Arc<WindowMem>,
@@ -35,9 +73,9 @@ pub struct Window {
     /// Get results retrieved at flush time, keyed by the GetHandle.
     get_results: Mutex<HashMap<u64, Vec<u8>>>,
     next_handle: AtomicU64,
-    /// `accumulate_ordering=none` was hinted at creation: accumulates may
-    /// spread across VCIs (paper §6.3's closing recommendation).
-    pub relaxed_accumulate: bool,
+    /// Per-window policy resolved from info keys at creation — see the
+    /// module doc's decision table.
+    pub policy: Arc<WinPolicy>,
 }
 
 /// Handle to retrieve MPI_Get data after the next flush. Carries the VCI
@@ -50,8 +88,14 @@ pub struct GetHandle(pub u64, pub usize);
 enum OpRecord {
     /// Hardware completion at a fixed virtual time (IB personality).
     AtTime(u64),
-    /// Ack-based completion (software RMA): the ack arrives on `vci`.
+    /// Ack-based completion (software RMA, ordered windows): the ack
+    /// arrives on `vci` and lands in its `acked` set.
     OnAck { flush_handle: u64, vci: usize },
+    /// Counted completion (striped windows): flush is done with this op
+    /// once lane `lane`'s ack counter for (window, `target`) reaches
+    /// `watermark` — the lane's issue-counter value right after this op
+    /// was injected.
+    OnCount { target: usize, lane: usize, watermark: u64 },
 }
 
 /// Apply an accumulate op element-wise under the window-memory lock
@@ -142,21 +186,54 @@ fn check_origin_span(win: &Window, offset: usize, len: usize) {
 }
 
 impl MpiProc {
-    /// MPI_Win_create (collective over `comm`): exposes `size` bytes.
-    /// `relaxed_accumulate` maps the `accumulate_ordering=none` info hint.
+    /// MPI_Win_create (collective over `comm`): exposes `size` bytes under
+    /// the process-default [`WinPolicy`].
     pub fn win_create(&self, comm: &super::Comm, size: usize) -> Arc<Window> {
-        self.win_create_with(comm, size, self.cfg.hints.accumulate_ordering_none)
+        self.win_create_with_info(comm, size, &Info::new())
     }
 
+    /// Compatibility shim for the pre-policy API: the default policy with
+    /// `accumulate_ordering=none` forced on/off.
     pub fn win_create_with(
         &self,
         comm: &super::Comm,
         size: usize,
         relaxed_accumulate: bool,
     ) -> Arc<Window> {
+        let policy = WinPolicy { relaxed_accumulate, ..(*self.default_win_policy).clone() };
+        self.win_create_policy(comm, size, Arc::new(policy))
+    }
+
+    /// MPI_Win_create with an info argument: the window's [`WinPolicy`] is
+    /// resolved from `info`'s keys over the process default (see
+    /// `mpi::policy` for the vocabulary). Collective over `comm`, and —
+    /// like a communicator policy — part of the wire contract: every
+    /// member must pass identical info keys, since the striped ack format
+    /// differs from the ordered flush-handle format.
+    pub fn win_create_with_info(
+        &self,
+        comm: &super::Comm,
+        size: usize,
+        info: &Info,
+    ) -> Arc<Window> {
+        let policy = Arc::new(self.default_win_policy.with_info(info));
+        self.win_create_policy(comm, size, policy)
+    }
+
+    fn win_create_policy(
+        &self,
+        comm: &super::Comm,
+        size: usize,
+        policy: Arc<WinPolicy>,
+    ) -> Arc<Window> {
         let id = self.next_win_id.fetch_add(1, Ordering::AcqRel);
         padvance(self.backend, self.costs.instructions(300)); // win bookkeeping
         let vci = self.vcis().assign(1 << 32 | id); // distinct id-space from comms
+        if !policy.striped() {
+            // Ordered windows protect their lane from striped bulk, just
+            // like ordered communicators (unpinned again at win_free).
+            self.pin_ordered_lane(vci);
+        }
         let mem = WindowMem::new(size);
         self.fabric.register_window(id, mem.clone());
         let win = Arc::new(Window {
@@ -167,7 +244,7 @@ impl MpiProc {
             outstanding: Mutex::new(HashMap::new()),
             get_results: Mutex::new(HashMap::new()),
             next_handle: AtomicU64::new(1),
-            relaxed_accumulate,
+            policy,
         });
         self.windows.lock().unwrap_or_else(|e| e.into_inner()).push(win.clone());
         self.barrier(comm); // collective creation
@@ -183,6 +260,22 @@ impl MpiProc {
         } else {
             win.vci % self.vcis().len()
         }
+    }
+
+    /// Inject one striped (ack-counted) RMA active message from stripe
+    /// lane `vci_idx`: bumps the lane's issue counter for (window, target)
+    /// under its own lock, injects, and records the calling thread's
+    /// watermark for `win_flush`.
+    fn issue_counted(&self, win: &Window, target: usize, vci_idx: usize, payload: Payload) {
+        let vci = self.vcis().get(vci_idx).clone();
+        let wm = vci.with_state(self.guard(), |st| {
+            let e = st.rma_issued.entry((win.id, target)).or_insert(0);
+            *e += 1;
+            let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
+            self.fabric.inject(vci.ctx_index, target, dst_ctx, payload);
+            *e
+        });
+        win.record(OpRecord::OnCount { target, lane: vci_idx, watermark: wm });
     }
 
     /// MPI_Put (passive target).
@@ -203,11 +296,19 @@ impl MpiProc {
         padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
         check_origin_span(win, offset, data.len());
         let _cs = self.enter_cs();
-        let vci_idx = ep_vci.unwrap_or_else(|| self.rma_vci(win, false));
+        let striped = ep_vci.is_none() && win.policy.stripes_puts();
+        let h = win.fresh_handle();
+        let vci_idx = match ep_vci {
+            Some(v) => v,
+            None if striped => self.stripe_win_vci(win, target, h),
+            None => self.rma_vci(win, false),
+        };
         let vci = self.vcis().get(vci_idx).clone();
         match self.interconnect() {
             Interconnect::Ib => {
                 // Hardware put: initiator-side DMA into the target window.
+                // Striping only spreads which context injects; completion
+                // stays a fixed NIC timestamp.
                 let t = vci.with_state(self.guard(), |_st| {
                     let t = self.fabric.hw_rma_completion_time(target, data.len());
                     let mem = self.fabric.window(target, win.id);
@@ -216,9 +317,20 @@ impl MpiProc {
                 });
                 win.record(OpRecord::AtTime(t));
             }
+            Interconnect::Opa if striped => {
+                // Striped software put: fan out over the stripe lanes with
+                // counted completion (see the module doc).
+                self.issue_counted(win, target, vci_idx, Payload::RmaPut {
+                    win: win.id,
+                    offset,
+                    data: data.to_vec(),
+                    flush_handle: h,
+                    lane: Some(vci_idx as u32),
+                });
+            }
             Interconnect::Opa => {
-                // Software-emulated put: active message to the target.
-                let h = win.fresh_handle();
+                // Ordered software put: active message to the target,
+                // flush-handle completion on the window's VCI.
                 vci.with_state(self.guard(), |_st| {
                     let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
                     self.fabric.inject(vci.ctx_index, target, dst_ctx, Payload::RmaPut {
@@ -226,6 +338,7 @@ impl MpiProc {
                         offset,
                         data: data.to_vec(),
                         flush_handle: h,
+                        lane: None,
                     });
                 });
                 win.record(OpRecord::OnAck { flush_handle: h, vci: vci_idx });
@@ -280,10 +393,12 @@ impl MpiProc {
         GetHandle(h, vci_idx)
     }
 
-    /// MPI_Accumulate. Active-message path on both interconnects; ordered
-    /// through the window's single VCI unless `accumulate_ordering=none`
-    /// was hinted (then spread across VCIs — §6.3) or an endpoint VCI is
-    /// given.
+    /// MPI_Accumulate. Active-message path on both interconnects. Routing
+    /// follows the window's policy (module-doc decision table): ordered
+    /// windows funnel through the window's VCI (`accumulate_ordering=none`
+    /// without striping thread-spreads, §6.3); striped windows with
+    /// relaxed ordering fan a *single* thread's accumulates across the
+    /// stripe lanes with counted completion. An endpoint VCI overrides.
     pub fn accumulate(
         &self,
         win: &Window,
@@ -307,9 +422,25 @@ impl MpiProc {
         padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
         check_origin_span(win, offset, data.len());
         let _cs = self.enter_cs();
-        let vci_idx = ep_vci.unwrap_or_else(|| self.rma_vci(win, win.relaxed_accumulate));
-        let vci = self.vcis().get(vci_idx).clone();
+        let striped = ep_vci.is_none() && win.policy.stripes_accumulates();
         let h = win.fresh_handle();
+        let vci_idx = match ep_vci {
+            Some(v) => v,
+            None if striped => self.stripe_win_vci(win, target, h),
+            None => self.rma_vci(win, win.policy.relaxed_accumulate),
+        };
+        if striped {
+            self.issue_counted(win, target, vci_idx, Payload::RmaAcc {
+                win: win.id,
+                offset,
+                data: data.to_vec(),
+                op,
+                flush_handle: h,
+                lane: Some(vci_idx as u32),
+            });
+            return;
+        }
+        let vci = self.vcis().get(vci_idx).clone();
         vci.with_state(self.guard(), |_st| {
             let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
             self.fabric.inject(vci.ctx_index, target, dst_ctx, Payload::RmaAcc {
@@ -318,6 +449,7 @@ impl MpiProc {
                 data: data.to_vec(),
                 op,
                 flush_handle: h,
+                lane: None,
             });
         });
         win.record(OpRecord::OnAck { flush_handle: h, vci: vci_idx });
@@ -377,8 +509,20 @@ impl MpiProc {
             let mut t = win.outstanding.lock().unwrap_or_else(|e| e.into_inner());
             t.remove(&thread_token()).unwrap_or_default()
         };
+        // Striped ops coalesce into one watermark per (target, lane): the
+        // counters are monotone, so only the highest watermark per lane
+        // matters — this is where "issued == acked per lane" replaces
+        // per-op flush handles.
+        let mut counted: HashMap<(usize, usize), u64> = HashMap::new();
+        for c in &mine {
+            if let OpRecord::OnCount { target, lane, watermark } = c {
+                let e = counted.entry((*target, *lane)).or_insert(0);
+                *e = (*e).max(*watermark);
+            }
+        }
         for c in mine {
             match c {
+                OpRecord::OnCount { .. } => {} // waited below, coalesced
                 OpRecord::AtTime(t) => {
                     // Hardware completion: just wait out the NIC.
                     while pnow(self.backend) < t {
@@ -413,6 +557,26 @@ impl MpiProc {
                 }
             }
         }
+        // Striped completion: wait each recorded lane up to its watermark.
+        // The check reads the lane's OWN state (per-lane replicated
+        // counters — no single VCI funnels every flush), and progress
+        // sweeps the stripe lanes (doorbell-gated per the window policy)
+        // since acks for the remaining lanes drain concurrently.
+        for ((target, lane), watermark) in counted {
+            loop {
+                let acked = {
+                    let _cs = self.enter_cs();
+                    let v = self.vcis().get(lane).clone();
+                    v.with_state(self.guard(), |st| {
+                        st.rma_acked.get(&(win.id, target)).copied().unwrap_or(0)
+                    })
+                };
+                if acked >= watermark {
+                    break;
+                }
+                self.progress_with(lane, true, win.policy.rx_doorbell);
+            }
+        }
     }
 
     /// Retrieve MPI_Get data after a flush.
@@ -432,11 +596,17 @@ impl MpiProc {
 
     /// MPI_Win_free (collective): flush, then a barrier during which the
     /// caller keeps progressing the window's VCI — the behavior behind the
-    /// paper's Fig. 15 ("parallel Win_free restores progress").
+    /// paper's Fig. 15 ("parallel Win_free restores progress"). Tears the
+    /// per-window policy state down: the ordered-lane pin and every VCI's
+    /// striped-completion counters for this window.
     pub fn win_free(&self, comm: &super::Comm, win: Arc<Window>) {
         self.win_flush(&win);
         self.barrier_progressing(comm, Some(win.vci % self.vcis().len()));
         self.fabric.deregister_window(win.id);
+        if !win.policy.striped() {
+            self.unpin_ordered_lane(win.vci);
+        }
+        self.purge_rma_counters(win.id);
         self.vcis().release(win.vci);
         let mut t = self.windows.lock().unwrap_or_else(|e| e.into_inner());
         t.retain(|w| w.id != win.id);

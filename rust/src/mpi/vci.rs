@@ -28,6 +28,13 @@
 //! polled VCI's bit, and the doorbell-gated striped sweep (for comms
 //! whose policy opts in) skips VCIs (or the whole sweep) with nothing
 //! queued. See `mpi::matching` for the ordering story.
+//!
+//! RMA windows stripe the same way under a per-window policy
+//! (`mpi::policy::WinPolicy`, resolved at `win_create_with_info`): a
+//! striped window's puts/accumulates fan out over the stripe lanes and
+//! complete via per-lane issue/ack counters held in each lane's
+//! [`VciState`] (`rma_issued`/`rma_acked`) instead of the per-VCI `acked`
+//! set — see `mpi::rma` for the completion model and decision table.
 
 use std::cell::UnsafeCell;
 use std::collections::{HashMap, HashSet};
@@ -67,8 +74,22 @@ pub struct VciState {
     /// the VCI lock — no atomic/cacheline cost is charged (the point of the
     /// per-VCI replication, paper §4.3).
     pub lw_refs: std::sync::atomic::AtomicU64,
-    /// RMA: flush handles acked by targets (software-RMA completion).
+    /// RMA: flush handles acked by targets (software-RMA completion,
+    /// ordered windows).
     pub acked: HashSet<u64>,
+    /// RMA striped-completion issue counters: cumulative striped
+    /// puts/accumulates injected *from this VCI (= stripe lane)* per
+    /// (window id, target process). Bumped under this VCI's lock at
+    /// injection; `win_flush` records the post-increment value as its
+    /// per-thread watermark. Purged when the window is freed.
+    pub rma_issued: HashMap<(u64, usize), u64>,
+    /// RMA striped-completion ack counters: cumulative
+    /// [`crate::fabric::Payload::RmaAckCount`] acks *received on this VCI*
+    /// per (window id, target process). Acks return to the issuing lane's
+    /// context, so issued/acked for one (window, target, lane) live in the
+    /// same [`VciState`] — per-lane replicated state, no shared cache
+    /// line, and flush no longer funnels through one VCI's `acked` set.
+    pub rma_acked: HashMap<(u64, usize), u64>,
     /// RMA: get replies that have arrived, by get handle.
     pub get_done: HashMap<u64, Vec<u8>>,
     /// RMA: fetch-and-op replies.

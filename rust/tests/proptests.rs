@@ -646,6 +646,133 @@ fn prop_rma_random_puts_land_exactly() {
 }
 
 // ---------------------------------------------------------------------
+// RMA: a striped window must agree with the ordered single-VCI window on
+// the final window bytes for commutative programs — while a striped
+// communicator's p2p storm shares the pool (the mixed case).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_rma_striped_vs_ordered_window_oracle() {
+    use vcmpi::fabric::AccOp;
+    for seed in 0..cases(6) {
+        let stripe_mode = if seed % 2 == 0 { "rr" } else { "hash" };
+        let spec = ClusterSpec::new(
+            FabricConfig {
+                interconnect: Interconnect::Opa,
+                nodes: 2,
+                procs_per_node: 1,
+                max_contexts_per_node: 64,
+            },
+            MpiConfig::optimized(6),
+            2,
+        );
+        use std::collections::HashMap;
+        use std::sync::{Arc, Mutex};
+        type Shared = (vcmpi::mpi::Comm, Arc<vcmpi::mpi::Window>, Arc<vcmpi::mpi::Window>);
+        let shared: Arc<Mutex<HashMap<usize, Shared>>> = Arc::new(Mutex::new(HashMap::new()));
+        let bars: Arc<Vec<vcmpi::platform::PBarrier>> = Arc::new(
+            (0..2)
+                .map(|_| vcmpi::platform::PBarrier::new(vcmpi::platform::Backend::Sim, 2))
+                .collect(),
+        );
+        const WIN_BYTES: usize = 256; // 32 u64 cells
+        let r = run_cluster(spec, move |proc, t| {
+            let world = proc.comm_world();
+            let me = proc.rank();
+            if t == 0 {
+                // Symmetric creation order on both ranks: striped comm,
+                // ordered window, striped window.
+                let hot = proc.comm_dup_with_info(
+                    &world,
+                    &Info::new().with("vcmpi_striping", "rr").with("vcmpi_match_shards", "4"),
+                );
+                let ordered = proc.win_create(&world, WIN_BYTES);
+                let striped = proc.win_create_with_info(
+                    &world,
+                    WIN_BYTES,
+                    &Info::new()
+                        .with("accumulate_ordering", "none")
+                        .with("vcmpi_striping", stripe_mode)
+                        .with("vcmpi_rx_doorbell", "true"),
+                );
+                shared.lock().unwrap().insert(me, (hot, ordered, striped));
+            }
+            bars[me].wait();
+            let (hot, ordered, striped) = shared.lock().unwrap().get(&me).unwrap().clone();
+            if t == 1 {
+                // Concurrent striped p2p storm on the shared pool.
+                if me == 0 {
+                    let reqs: Vec<_> =
+                        (0..48).map(|_| proc.isend(&hot, 1, 3, &[0u8; 24])).collect();
+                    proc.waitall(reqs);
+                } else {
+                    let reqs: Vec<_> = (0..48)
+                        .map(|_| proc.irecv(&hot, Src::Rank(0), Tag::Value(3)))
+                        .collect();
+                    proc.waitall(reqs);
+                }
+            } else if me == 0 {
+                // Same random commutative program against BOTH windows:
+                // put-once slots (each written exactly once) + wrapping
+                // u64-sum accumulates (commutative AND associative, so
+                // any apply order yields identical bytes — f64 would
+                // not). `expected` is the independently computed oracle.
+                let mut rng = SplitMix64::new(seed.wrapping_mul(0x9E37) ^ 0xABCD);
+                let mut expected = vec![0u8; WIN_BYTES];
+                let nput = rng.gen_usize(8);
+                for slot in 0..nput {
+                    let val = [(seed as u8) ^ (slot as u8) | 0x11; 8];
+                    proc.put(&ordered, 1, slot * 8, &val);
+                    proc.put(&striped, 1, slot * 8, &val);
+                    expected[slot * 8..slot * 8 + 8].copy_from_slice(&val);
+                }
+                let nacc = 20 + rng.gen_usize(40);
+                for i in 0..nacc {
+                    let cell = nput + rng.gen_usize(32 - nput);
+                    let add = rng.next_u64();
+                    proc.accumulate(&ordered, 1, cell * 8, &add.to_le_bytes(), AccOp::SumU64);
+                    proc.accumulate(&striped, 1, cell * 8, &add.to_le_bytes(), AccOp::SumU64);
+                    let o = cell * 8;
+                    let cur = u64::from_le_bytes(expected[o..o + 8].try_into().unwrap());
+                    expected[o..o + 8].copy_from_slice(&cur.wrapping_add(add).to_le_bytes());
+                    if i % 16 == 15 {
+                        // Interleave flushes: watermarks must stay correct
+                        // across flush boundaries.
+                        proc.win_flush(&striped);
+                    }
+                }
+                proc.win_flush(&ordered);
+                proc.win_flush(&striped);
+                proc.send(&world, 1, 9, &expected);
+            } else {
+                let expected = proc.recv(&world, Src::Rank(0), Tag::Value(9));
+                assert_eq!(
+                    ordered.read_local(0, WIN_BYTES),
+                    expected,
+                    "seed {seed}: ordered window diverged from the oracle"
+                );
+                assert_eq!(
+                    striped.read_local(0, WIN_BYTES),
+                    expected,
+                    "seed {seed} ({stripe_mode}): striped window diverged from the oracle"
+                );
+            }
+            bars[me].wait();
+            if t == 0 {
+                proc.barrier(&world);
+                assert_eq!(proc.policy_mismatch_count(), 0, "seed {seed}: wire contract");
+                let (hot, ordered, striped) = { shared.lock().unwrap().remove(&me).unwrap() };
+                proc.win_free(&world, ordered);
+                proc.win_free(&world, striped);
+                proc.comm_free(hot);
+            }
+            bars[me].wait();
+        });
+        assert_eq!(r.outcome, SimOutcome::Completed, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------
 // Determinism: identical seeds -> bit-identical virtual end times.
 // ---------------------------------------------------------------------
 

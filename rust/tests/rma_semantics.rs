@@ -1,10 +1,13 @@
 //! RMA semantics across both interconnect personalities: put/get/
-//! accumulate/fetch-and-op correctness, flush completion, atomicity.
+//! accumulate/fetch-and-op correctness, flush completion, atomicity —
+//! plus the per-window policy layer: striped windows (info-keyed
+//! per-message fan-out with counted-ack flush) vs ordered windows
+//! (program order, pinned lanes).
 
 use std::sync::Arc;
 
 use vcmpi::fabric::{AccOp, FabricConfig, Interconnect};
-use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, MpiProc};
+use vcmpi::mpi::{run_cluster, ClusterSpec, Info, MpiConfig, MpiProc};
 use vcmpi::sim::SimOutcome;
 
 fn fabric(interconnect: Interconnect, nodes: usize) -> FabricConfig {
@@ -156,6 +159,235 @@ fn multiple_windows_are_independent_streams() {
         // Peer wrote into OUR window at the same offset with their pattern.
         assert_eq!(win.read_local(t * 128, 128), vec![t as u8 + 1; 128]);
         bars[proc.rank()].wait();
+    });
+}
+
+/// The striped-window info keys used across the policy tests.
+fn striped_info() -> Info {
+    Info::new()
+        .with("accumulate_ordering", "none")
+        .with("vcmpi_striping", "rr")
+        .with("vcmpi_rx_doorbell", "true")
+}
+
+#[test]
+fn striped_window_flush_under_concurrent_multi_target_accumulates() {
+    // Three origin threads on rank 0 stripe accumulates at TWO targets
+    // concurrently (each thread owns one 8-byte cell per target), each
+    // thread flushing its own ops: per-thread watermarks against the
+    // shared per-(window, target, lane) counters must complete exactly —
+    // no lost acks, no cross-thread confusion — and the sums must land.
+    const REPS: u64 = 16;
+    let spec = ClusterSpec::new(
+        FabricConfig {
+            interconnect: Interconnect::Opa,
+            nodes: 3,
+            procs_per_node: 1,
+            max_contexts_per_node: 64,
+        },
+        MpiConfig::optimized(6),
+        3,
+    );
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    let wins: Arc<Mutex<HashMap<usize, Arc<vcmpi::mpi::Window>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let bars: Arc<Vec<vcmpi::platform::PBarrier>> = Arc::new(
+        (0..3).map(|_| vcmpi::platform::PBarrier::new(vcmpi::platform::Backend::Sim, 3)).collect(),
+    );
+    run_ok(spec, move |proc, t| {
+        let world = proc.comm_world();
+        let me = proc.rank();
+        if t == 0 {
+            let win = proc.win_create_with_info(&world, 64, &striped_info());
+            wins.lock().unwrap().insert(me, win);
+        }
+        bars[me].wait();
+        let win = wins.lock().unwrap().get(&me).unwrap().clone();
+        if me == 0 {
+            for _ in 0..REPS {
+                for target in [1usize, 2] {
+                    proc.accumulate(&win, target, t * 8, &1u64.to_le_bytes(), AccOp::SumU64);
+                }
+            }
+            proc.win_flush(&win);
+        }
+        bars[me].wait();
+        if t == 0 {
+            proc.barrier(&world);
+        }
+        bars[me].wait();
+        if me != 0 && t == 0 {
+            for cell in 0..3 {
+                let v = u64::from_le_bytes(win.read_local(cell * 8, 8).try_into().unwrap());
+                assert_eq!(v, REPS, "rank {me} cell {cell}: striped accumulates lost/duplicated");
+            }
+        }
+        bars[me].wait();
+        if t == 0 {
+            let win = { wins.lock().unwrap().remove(&me) };
+            proc.win_free(&world, win.unwrap());
+        }
+    });
+}
+
+#[test]
+fn striped_window_without_relaxed_ordering_keeps_accumulate_program_order() {
+    // Decision table, middle row: `vcmpi_striping` alone stripes PUTS
+    // (MPI imposes no inter-put order) but accumulates stay on the home
+    // VCI in program order.
+    let spec = ClusterSpec::new(
+        FabricConfig {
+            interconnect: Interconnect::Opa,
+            nodes: 2,
+            procs_per_node: 1,
+            max_contexts_per_node: 64,
+        },
+        MpiConfig::optimized(5),
+        1,
+    );
+    run_ok(spec, move |proc, _t| {
+        let world = proc.comm_world();
+        let info = Info::new().with("vcmpi_striping", "hash");
+        let win = proc.win_create_with_info(&world, 512, &info);
+        assert!(win.policy.stripes_puts());
+        assert!(!win.policy.stripes_accumulates());
+        if proc.rank() == 0 {
+            // Striped puts to distinct slots...
+            for slot in 0..8usize {
+                proc.put(&win, 1, 64 + slot * 32, &[slot as u8 + 1; 32]);
+            }
+            // ...and ordered Replace accumulates to one cell.
+            proc.accumulate(&win, 1, 0, &[1u8; 8], AccOp::Replace);
+            proc.accumulate(&win, 1, 0, &[2u8; 8], AccOp::Replace);
+            proc.win_flush(&win);
+            proc.send(&world, 1, 1, &[]);
+        } else {
+            proc.recv(&world, vcmpi::mpi::Src::Rank(0), vcmpi::mpi::Tag::Value(1));
+            assert_eq!(win.read_local(0, 8), vec![2u8; 8], "accumulate program order");
+            for slot in 0..8usize {
+                assert_eq!(
+                    win.read_local(64 + slot * 32, 32),
+                    vec![slot as u8 + 1; 32],
+                    "striped put slot {slot}"
+                );
+            }
+        }
+        proc.win_free(&world, win);
+    });
+}
+
+#[test]
+fn ordered_window_pins_its_lane_striped_window_does_not() {
+    // Pin interaction: an ordered window protects its home VCI from
+    // striped bulk (two-sided OR one-sided), exactly like an ordered
+    // communicator; a striped window leaves its lane in the stripe set;
+    // win_free releases the pin.
+    let spec = ClusterSpec::new(
+        FabricConfig {
+            interconnect: Interconnect::Opa,
+            nodes: 1,
+            procs_per_node: 1,
+            max_contexts_per_node: 64,
+        },
+        MpiConfig::optimized(4),
+        1,
+    );
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let ordered = proc.win_create(&world, 64);
+        assert_ne!(ordered.vci, 0, "pool assigns a non-fallback lane");
+        assert!(proc.stripe_lane_pinned(ordered.vci), "ordered window pins its lane");
+        let striped = proc.win_create_with_info(&world, 64, &striped_info());
+        assert!(
+            !proc.stripe_lane_pinned(striped.vci),
+            "striped window's home lane stays a stripe lane"
+        );
+        let freed_lane = ordered.vci;
+        proc.win_free(&world, ordered);
+        assert!(!proc.stripe_lane_pinned(freed_lane), "win_free unpins");
+        proc.win_free(&world, striped);
+    });
+}
+
+#[test]
+fn ordered_window_and_striped_comm_share_the_pool() {
+    // Mixed-policy pool: a latency-ordered window (pinned lane,
+    // flush-handle completion) and an info-keyed striped communicator's
+    // p2p storm coexist in one process. The window must keep accumulate
+    // program order and the striped traffic must stay off its lane (by
+    // construction of the pin — asserted via the pin itself and a clean
+    // policy-mismatch count).
+    let spec = ClusterSpec::new(
+        FabricConfig {
+            interconnect: Interconnect::Opa,
+            nodes: 2,
+            procs_per_node: 1,
+            max_contexts_per_node: 64,
+        },
+        MpiConfig::optimized(5),
+        2,
+    );
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    type Shared = (vcmpi::mpi::Comm, Arc<vcmpi::mpi::Window>);
+    let shared: Arc<Mutex<HashMap<usize, Shared>>> = Arc::new(Mutex::new(HashMap::new()));
+    let bars: Arc<Vec<vcmpi::platform::PBarrier>> = Arc::new(
+        (0..2).map(|_| vcmpi::platform::PBarrier::new(vcmpi::platform::Backend::Sim, 2)).collect(),
+    );
+    run_ok(spec, move |proc, t| {
+        let world = proc.comm_world();
+        let me = proc.rank();
+        if t == 0 {
+            // Symmetric creation order: hot comm first, then the window.
+            let hot = proc.comm_dup_with_info(
+                &world,
+                &Info::new()
+                    .with("vcmpi_striping", "rr")
+                    .with("vcmpi_match_shards", "4")
+                    .with("vcmpi_rx_doorbell", "true"),
+            );
+            let win = proc.win_create(&world, 64);
+            assert!(proc.stripe_lane_pinned(win.vci));
+            shared.lock().unwrap().insert(me, (hot, win));
+        }
+        bars[me].wait();
+        let (hot, win) = shared.lock().unwrap().get(&me).unwrap().clone();
+        if t == 1 {
+            // Striped p2p storm on the hot comm, concurrent with the RMA.
+            if me == 0 {
+                let reqs: Vec<_> =
+                    (0..64).map(|_| proc.isend(&hot, 1, 7, &[0u8; 16])).collect();
+                proc.waitall(reqs);
+            } else {
+                let reqs: Vec<_> = (0..64)
+                    .map(|_| {
+                        proc.irecv(&hot, vcmpi::mpi::Src::Rank(0), vcmpi::mpi::Tag::Value(7))
+                    })
+                    .collect();
+                proc.waitall(reqs);
+            }
+        } else if me == 0 {
+            proc.accumulate(&win, 1, 0, &[1u8; 8], AccOp::Replace);
+            proc.accumulate(&win, 1, 0, &[2u8; 8], AccOp::Replace);
+            proc.win_flush(&win);
+            proc.send(&world, 1, 1, &[]);
+        } else {
+            proc.recv(&world, vcmpi::mpi::Src::Rank(0), vcmpi::mpi::Tag::Value(1));
+            assert_eq!(win.read_local(0, 8), vec![2u8; 8], "program order beside striped p2p");
+        }
+        bars[me].wait();
+        if t == 0 {
+            proc.barrier(&world);
+            assert_eq!(proc.policy_mismatch_count(), 0, "wire contract held");
+            if me == 1 {
+                assert!(proc.has_match_engine(hot.id), "hot comm sharded on the receiver");
+            }
+            let (hot, win) = { shared.lock().unwrap().remove(&me).unwrap() };
+            proc.win_free(&world, win);
+            proc.comm_free(hot);
+        }
+        bars[me].wait();
     });
 }
 

@@ -570,8 +570,20 @@ fn malformed_control_messages_are_dropped_not_fatal() {
                     needs_ack: false,
                     data: vec![1, 2, 3],
                 },
-                Payload::RmaPut { win: 0xFFFF, offset: 0, data: vec![0; 8], flush_handle: 1 },
-                Payload::RmaPut { win: win.id, offset: 60, data: vec![0; 32], flush_handle: 2 },
+                Payload::RmaPut {
+                    win: 0xFFFF,
+                    offset: 0,
+                    data: vec![0; 8],
+                    flush_handle: 1,
+                    lane: None,
+                },
+                Payload::RmaPut {
+                    win: win.id,
+                    offset: 60,
+                    data: vec![0; 32],
+                    flush_handle: 2,
+                    lane: Some(9999), // striped marker on a bad span still just drops
+                },
                 Payload::RmaGetReq { win: win.id, offset: 60, len: 32, get_handle: 3 },
                 Payload::RmaFetchOp {
                     win: win.id,
