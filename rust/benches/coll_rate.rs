@@ -1,0 +1,121 @@
+//! Bench: the collectives lane — segmented multi-lane allreduce vs the
+//! seed lockstep ring, and the dedicated-lane arm under a concurrent
+//! striped p2p storm, on the 2x2-proc topology. Deterministic DES runs;
+//! values are exact per configuration.
+//!
+//! Environment (mirrors the message_rate/rma_rate benches):
+//!  * `BENCH_REPS`   — allreduces per arm (default 8).
+//!  * `BENCH_JSON`   — write a machine-readable report (rates + counters +
+//!    gate ratios) to this path.
+//!  * `BENCH_GATE=1` — exit nonzero if a gate fails (segmented multi-lane
+//!    <= lockstep, the storm degrading the dedicated arm below 0.9x, a
+//!    dedicated lane not pinned during the run, or not released at free).
+
+use vcmpi::bench::{coll_rate_run, CollMode, CollRateParams, RateReport};
+
+struct Scenario {
+    name: &'static str,
+    threads: usize,
+    report: RateReport,
+}
+
+const COUNTER_KEYS: [&str; 4] =
+    ["stale_ctrl_drops", "policy_mismatch", "coll_lane_pinned", "coll_lane_released"];
+
+fn scenario_json(s: &Scenario) -> String {
+    let counters: Vec<String> = COUNTER_KEYS
+        .iter()
+        .map(|k| format!("\"{}\": {}", k, s.report.sum_stat(k) as u64))
+        .collect();
+    format!(
+        "    {{\"name\": \"{}\", \"threads\": {}, \"rate_msgs_per_sec\": {:.1}, \
+         \"counters\": {{{}}}}}",
+        s.name,
+        s.threads,
+        s.report.rate,
+        counters.join(", ")
+    )
+}
+
+fn main() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
+    let reps = reps.clamp(2, 64);
+    let threads = 8;
+    let base = CollRateParams {
+        threads,
+        elems: 32 * 1024,
+        reps,
+        segments: 8,
+        storm_msgs: 256,
+        ..Default::default()
+    };
+
+    println!("== coll_rate: 128 KiB f32 allreduce, 2x2 procs, {reps} reps ==");
+    println!("{:<22} {:>16}", "scenario", "Melem/s");
+    let lockstep = Scenario {
+        name: CollMode::CollLockstep.label(),
+        threads,
+        report: coll_rate_run(CollRateParams { mode: CollMode::CollLockstep, ..base.clone() }),
+    };
+    let striped = Scenario {
+        name: CollMode::CollStriped.label(),
+        threads,
+        report: coll_rate_run(CollRateParams { mode: CollMode::CollStriped, ..base.clone() }),
+    };
+    let quiet = Scenario {
+        name: CollMode::CollDedicated.label(),
+        threads,
+        report: coll_rate_run(CollRateParams { mode: CollMode::CollDedicated, ..base.clone() }),
+    };
+    let storm = Scenario {
+        name: CollMode::CollDedicatedStorm.label(),
+        threads,
+        report: coll_rate_run(CollRateParams {
+            mode: CollMode::CollDedicatedStorm,
+            ..base
+        }),
+    };
+    let scenarios = [&lockstep, &striped, &quiet, &storm];
+    for s in scenarios {
+        println!("{:<22} {:>16.3}", s.name, s.report.rate / 1e6);
+    }
+
+    // ---- regression gate (same ratios the unit tests assert, strict) ----
+    let coll_striped_over_lockstep = striped.report.rate / lockstep.report.rate;
+    let dedicated_storm_over_quiet = storm.report.rate / quiet.report.rate;
+    let dedicated_lane_lifecycle = storm.report.sum_stat("coll_lane_pinned") == 4.0
+        && storm.report.sum_stat("coll_lane_released") == 4.0
+        && storm.report.sum_stat("policy_mismatch") == 0.0;
+    let pass = coll_striped_over_lockstep > 1.0
+        && dedicated_storm_over_quiet >= 0.9
+        && dedicated_lane_lifecycle;
+    println!(
+        "\ngate: coll_striped/coll_lockstep = {coll_striped_over_lockstep:.3} (> 1.0 required)"
+    );
+    println!(
+        "gate: dedicated_storm/dedicated_quiet = {dedicated_storm_over_quiet:.3} (>= 0.9 required)"
+    );
+    println!("gate: dedicated lane pinned + released = {dedicated_lane_lifecycle}");
+    println!("gate: {}", if pass { "PASS" } else { "FAIL" });
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let body = format!(
+            "{{\n  \"bench\": \"coll_rate\",\n  \"reps\": {reps},\n  \
+             \"scenarios\": [\n{}\n  ],\n  \"gate\": {{\n    \
+             \"coll_striped_over_lockstep\": {coll_striped_over_lockstep:.4},\n    \
+             \"dedicated_storm_over_quiet\": {dedicated_storm_over_quiet:.4},\n    \
+             \"dedicated_lane_lifecycle\": {dedicated_lane_lifecycle},\n    \
+             \"pass\": {pass}\n  }}\n}}\n",
+            scenarios.into_iter().map(scenario_json).collect::<Vec<_>>().join(",\n"),
+        );
+        std::fs::write(&path, body).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+
+    let gate_enforced = std::env::var("BENCH_GATE").map(|v| v == "1").unwrap_or(false);
+    if gate_enforced && !pass {
+        eprintln!("coll_rate regression gate FAILED");
+        std::process::exit(1);
+    }
+}

@@ -215,6 +215,8 @@ pub fn table1() -> Csv {
         "shard_locks",
         "atomics",
         "anchored_allocs",
+        "coll_segments",
+        "coll_lane_spread",
     ]);
     let rows: Arc<Mutex<Vec<Vec<String>>>> = Arc::new(Mutex::new(Vec::new()));
     for (mode_name, cfg) in [
@@ -302,6 +304,27 @@ pub fn table1() -> Csv {
                 let _ = proc.recv(&world, Src::Rank(0), Tag::Value(8));
                 let _ = proc.recv(&world, Src::Rank(0), Tag::Value(99));
             }
+            // Segmented allreduce (collective on both ranks; rank 0
+            // measures), on a striped-collectives comm so BOTH new
+            // columns are live: coll_segments proves the segmented path
+            // runs, coll_lane_spread that segments leave the home lane
+            // (zero in the Global arm — a 1-lane pool has nowhere to
+            // spread).
+            {
+                use crate::mpi::instrument::snapshot;
+                let coll = proc.comm_dup_with_info(
+                    &world,
+                    &crate::mpi::Info::new().with("vcmpi_collectives", "striped"),
+                );
+                let mut v = [1.0f32; 64];
+                let base = snapshot();
+                proc.allreduce_f32(&coll, &mut v);
+                let d = snapshot() - base;
+                if proc.rank() == 0 {
+                    rows2.lock().unwrap().push(row(mode_name, "Allreduce (segmented)", &d));
+                }
+                proc.comm_free(coll);
+            }
             proc.barrier(&world);
             proc.win_free(&world, win);
         });
@@ -324,6 +347,8 @@ fn row(mode: &str, op: &str, d: &crate::mpi::instrument::OpCounters) -> Vec<Stri
         d.shard_locks.to_string(),
         d.atomics.to_string(),
         d.anchored_allocs.to_string(),
+        d.coll_segments.to_string(),
+        d.coll_lane_spread.to_string(),
     ]
 }
 

@@ -2,10 +2,12 @@
 //! every figure in the paper's evaluation (§5, §6), plus the per-figure
 //! drivers in [`figures`] that print the same rows/series the paper plots.
 
+pub mod coll_rate;
 pub mod figures;
 pub mod message_rate;
 pub mod rma_rate;
 
+pub use coll_rate::{coll_rate_run, CollMode, CollRateParams};
 pub use message_rate::{message_rate, message_rate_run, Mode, Op, RateParams, RateReport};
 pub use rma_rate::{ordered_window_program_order_preserved, rma_rate_run, RmaRateParams, WinMode};
 

@@ -7,7 +7,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::fabric::{FabricConfig, Interconnect};
-use crate::mpi::{run_cluster, ClusterSpec, MpiConfig};
+use crate::mpi::{run_cluster, ClusterSpec, Info, MpiConfig};
 use crate::platform::Backend;
 use crate::runtime::{SharedRuntime, Tensor};
 use crate::sim::SimOutcome;
@@ -91,7 +91,16 @@ pub fn train(cfg: TrainConfig) -> anyhow::Result<TrainReport> {
     let rt = rt.clone();
     let r = run_cluster(spec, move |proc, _t| {
         let world = proc.comm_world();
-        let comms: Vec<_> = (0..cfg2.buckets).map(|_| proc.comm_dup(&world)).collect();
+        // Bucket communicators opt into the segmented collectives policy:
+        // each bucket's allreduce pipelines its ring chunks as 8 tagged
+        // segments on a dedicated (pinned) lane, so the gradient exchange
+        // overlaps injection/wire/handling per step and can never queue
+        // behind other traffic sharing the pool.
+        let coll_info = Info::new()
+            .with("vcmpi_collectives", "dedicated")
+            .with("vcmpi_coll_segments", "8");
+        let comms: Vec<_> =
+            (0..cfg2.buckets).map(|_| proc.comm_dup_with_info(&world, &coll_info)).collect();
         let mut corpus = SyntheticCorpus::new(vocab, 0.05, cfg2.seed, proc.rank());
         let mut params = init.clone();
         let w = cfg2.workers as f32;

@@ -83,10 +83,16 @@ pub enum Payload {
     /// the target answers with [`Payload::RmaAckCount`] echoing the lane.
     /// `None` keeps the ordered flush-handle protocol.
     RmaPut { win: WinId, offset: usize, data: Vec<u8>, flush_handle: u64, lane: Option<u32> },
-    /// Software-emulated RMA get request.
-    RmaGetReq { win: WinId, offset: usize, len: usize, get_handle: u64 },
-    /// Reply carrying the got bytes.
-    RmaGetReply { get_handle: u64, data: Vec<u8> },
+    /// Software-emulated RMA get request. `lane` as in [`Payload::RmaPut`]:
+    /// `Some(l)` marks a striped get whose reply is counted per
+    /// (window, target, lane) instead of parked on a flush handle.
+    RmaGetReq { win: WinId, offset: usize, len: usize, get_handle: u64, lane: Option<u32> },
+    /// Reply carrying the got bytes. `win`/`lane` echo the request: a
+    /// striped get's reply (`lane: Some`) returns to the issuing lane's
+    /// context and bumps that lane's per-(window, target) ack counter —
+    /// the same counted-completion model as [`Payload::RmaAckCount`] —
+    /// while the data itself parks under `get_handle` as always.
+    RmaGetReply { win: WinId, get_handle: u64, data: Vec<u8>, lane: Option<u32> },
     /// Accumulate: applied by the target CPU on both personalities
     /// (MPI datatype reductions are not NIC-offloadable in general).
     /// `lane` as in [`Payload::RmaPut`].

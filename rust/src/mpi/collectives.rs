@@ -1,18 +1,113 @@
-//! Collectives built over point-to-point: barrier (dissemination), bcast
-//! (binomial), allgather (ring), allreduce (ring, bandwidth-optimal — used
-//! by the dist-train coordinator for gradient exchange).
+//! Collectives built over point-to-point — **segmented, pipelined, and
+//! multi-lane** (the per-comm collectives policy): barrier (dissemination
+//! with pre-posted rounds), bcast (binomial tree with segment pipelining
+//! down the tree), allgather (ring with pre-posted step receives), and
+//! allreduce (segmented ring, bandwidth-optimal — the gradient-exchange
+//! workhorse of the dist-train coordinator).
 //!
-//! Collectives use a reserved internal tag space so they never match user
-//! traffic on the same communicator.
+//! # Segmentation and pipelining
+//!
+//! The old collectives serialized every ring/tree step through blocking
+//! `wait` pairs on one logical channel: the whole chunk had to cross the
+//! wire — and be handled by the target — before the next step started.
+//! Now each allreduce ring step's chunk (and each bcast tree hop's
+//! payload) is split into `vcmpi_coll_segments` independently tagged
+//! nonblocking transfers:
+//!
+//! * every step's receives are **pre-posted** (sources and tags are fully
+//!   determined up front), so arrivals never wait in unexpected queues;
+//! * a segment is reduced — and the *next* step's copy of it forwarded —
+//!   the moment it lands, while the remaining segments of the same step
+//!   are still in flight (reduce-scatter step *s+1*'s injection overlaps
+//!   step *s*'s tail);
+//! * small payloads degenerate gracefully: the per-chunk segment count
+//!   never exceeds the chunk's element count, so a scalar allreduce costs
+//!   exactly the classic 2(n-1) tiny messages.
+//!
+//! # Lane mapping (the `vcmpi_collectives` decision table)
+//!
+//! | `vcmpi_collectives` | comm's `vcmpi_striping` | segment path | lanes used |
+//! |---------------------|-------------------------|--------------|------------|
+//! | `inherit` (default) | `off`                   | plain nonblocking isend/irecv | the comm's home VCI (or the §7 hinted spread) |
+//! | `inherit`           | `rr`\|`hash`            | striped isend (seq reorder, shard engine) | stripe lanes, per message |
+//! | `dedicated`         | any                     | explicit-lane isend/irecv | ONE reserved lane, **pinned** out of the stripe set |
+//! | `striped`           | any                     | explicit-lane isend/irecv | `1 + hash(comm, sender, tag) % (pool-1)`, per segment |
+//!
+//! `dedicated` reserves (pins) a lane derived deterministically from the
+//! comm id — see `MpiProc::dedicated_coll_lane` — so a hot striped comm's
+//! p2p storm sharing the pool can never head-of-line-block an allreduce;
+//! the pin is released at `comm_free`. `striped` spreads a single
+//! collective's segments over the pool by the pure envelope hash (legal
+//! without the §7 wildcard assertions because this tag space never posts
+//! wildcards); pins are *not* probed — pin state is process-local and
+//! probing it would break the wire-contract symmetry of the lane choice,
+//! so a segment may occasionally share a pinned lane.
+//!
+//! # Internal tag space
+//!
+//! Collectives use a reserved tag space (`>= INTERNAL_TAG_BASE`) so they
+//! never match user traffic on the same communicator, partitioned per
+//! (collective op, ring/tree position, segment):
+//!
+//! * barrier: `INTERNAL_TAG_BASE + round`
+//! * bcast: `INTERNAL_TAG_BASE + 1024 + segment`
+//! * allgather: `INTERNAL_TAG_BASE + 2048 + step`
+//! * allreduce: `INTERNAL_TAG_BASE + 4096 +
+//!   (phase·(n-1) + step)·MAX_COLL_SEGMENTS + segment`
+//!
+//! Collectives on one communicator are non-concurrent (MPI's ordering
+//! rule), so tags may be reused across invocations.
 
+use super::instrument;
 use super::matching::{Src, Tag};
+use super::policy::MAX_COLL_SEGMENTS;
 use super::proc::MpiProc;
+use super::request::Request;
 use super::Comm;
 
 /// Base of the internal (collective) tag space.
 pub const INTERNAL_TAG_BASE: i32 = 1 << 24;
+const BCAST_TAG: i32 = INTERNAL_TAG_BASE + 1024;
+const ALLGATHER_TAG: i32 = INTERNAL_TAG_BASE + 2048;
+const ALLREDUCE_TAG: i32 = INTERNAL_TAG_BASE + 4096;
+
+/// Even split of `len` items into `parts` pieces: bounds of piece `i`.
+/// Pure function of its inputs — every rank derives identical chunk and
+/// segment boundaries from the shared payload length.
+fn part_bounds(len: usize, parts: usize, i: usize) -> (usize, usize) {
+    let per = len.div_ceil(parts);
+    ((i * per).min(len), ((i + 1) * per).min(len))
+}
 
 impl MpiProc {
+    /// Issue one collective-internal segment send on `comm` (lane per the
+    /// policy's collectives mode), with Table-1 accounting.
+    fn coll_isend(&self, comm: &Comm, dst: usize, tag: i32, data: &[u8]) -> Request {
+        let lane = self.coll_segment_vci(comm, comm.rank, tag);
+        instrument::count_coll_segment();
+        if lane.is_some_and(|l| l != self.comm_vci(comm, None)) {
+            instrument::count_coll_lane_spread();
+        }
+        self.isend_coll(comm, dst, tag, data, lane)
+    }
+
+    /// Post one collective-internal segment receive from concrete source
+    /// `src` (the collective tag space never uses wildcards — that is what
+    /// makes the multi-lane mapping symmetric on both sides).
+    fn coll_irecv(&self, comm: &Comm, src: usize, tag: i32) -> Request {
+        let lane = self.coll_segment_vci(comm, src, tag);
+        self.irecv_coll(comm, Src::Rank(src), Tag::Value(tag), lane)
+    }
+
+    /// Per-chunk segment count: the policy's `vcmpi_coll_segments`,
+    /// bounded by the chunk's element count (at least one segment, so an
+    /// empty chunk still costs exactly one empty message and the ring
+    /// schedule stays uniform). Pure function of shared inputs — part of
+    /// the wire contract like the tag layout.
+    fn coll_segs(&self, comm: &Comm, chunk_elems: usize) -> usize {
+        comm.policy.coll_segments.clamp(1, MAX_COLL_SEGMENTS).min(chunk_elems.max(1))
+    }
+
     /// MPI_Barrier: dissemination algorithm — ceil(log2(n)) rounds.
     pub fn barrier(&self, comm: &Comm) {
         self.barrier_progressing(comm, None);
@@ -21,77 +116,114 @@ impl MpiProc {
     /// Barrier that additionally progresses `extra_vci` while waiting —
     /// models MPI_Win_free's "keep progressing my window's VCI" behavior
     /// (paper Fig. 15).
+    ///
+    /// All rounds' receives are pre-posted up front; the round-`k` *send*
+    /// is still posted only after round `k-1`'s receive completed — that
+    /// ordering is what makes dissemination a barrier (a rank's round-`k`
+    /// message certifies it has transitively heard from `2^k` ranks), so
+    /// sends can never be batch-pre-posted.
     pub fn barrier_progressing(&self, comm: &Comm, extra_vci: Option<usize>) {
         let n = comm.size;
         if n <= 1 {
             return;
         }
         let me = comm.rank;
-        let mut k = 0u32;
-        while (1usize << k) < n {
-            let dist = 1usize << k;
-            let dst = (me + dist) % n;
-            let src = (me + n - dist) % n;
-            let tag = INTERNAL_TAG_BASE + k as i32;
-            let sreq = self.isend(comm, dst, tag, &[]);
-            let rreq = self.irecv(comm, Src::Rank(src), Tag::Value(tag));
+        let rounds = (usize::BITS - (n - 1).leading_zeros()) as usize;
+        let rreqs: Vec<Request> = (0..rounds)
+            .map(|k| {
+                let src = (me + n - (1usize << k)) % n;
+                self.coll_irecv(comm, src, INTERNAL_TAG_BASE + k as i32)
+            })
+            .collect();
+        let mut sreqs = Vec::with_capacity(rounds);
+        for (k, rreq) in rreqs.into_iter().enumerate() {
+            let dst = (me + (1usize << k)) % n;
+            sreqs.push(self.coll_isend(comm, dst, INTERNAL_TAG_BASE + k as i32, &[]));
             if let Some(v) = extra_vci {
                 // Poke the extra VCI between waits (win_free semantics).
                 let _cs = self.enter_cs();
                 self.progress_vci(v);
             }
-            self.wait(sreq);
             self.wait(rreq);
-            k += 1;
         }
+        self.waitall(sreqs);
     }
 
-    /// MPI_Bcast (binomial tree) of a byte buffer from `root`.
+    /// MPI_Bcast (binomial tree) of a byte buffer from `root`, segment-
+    /// pipelined: an interior node forwards each segment to its children
+    /// the moment it arrives, so segment `g` travels tree level `l → l+1`
+    /// while segment `g+1` is still in flight toward level `l` — the tree
+    /// streams instead of storing-and-forwarding whole payloads.
+    ///
+    /// The segment count is the policy's `vcmpi_coll_segments` (part of
+    /// the wire contract — non-roots size their receive posts from it
+    /// without knowing the payload length; ragged or empty trailing
+    /// segments are fine).
     pub fn bcast(&self, comm: &Comm, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
         let n = comm.size;
         if n <= 1 {
             return data.expect("root must supply data");
         }
         let me = (comm.rank + n - root) % n; // virtual rank with root at 0
-        let tag = INTERNAL_TAG_BASE + 1024;
-        let mut buf = data;
-        // Receive from parent (virtual rank: clear lowest set bit).
-        if me != 0 {
-            let parent_virt = me & (me - 1);
-            let parent = (parent_virt + root) % n;
-            let got = self.recv(comm, Src::Rank(parent), Tag::Value(tag));
-            buf = Some(got);
-        }
-        let buf = buf.expect("bcast buffer");
-        // Send to children: me + 2^j for j past my lowest set bit.
-        let lowbit = if me == 0 { usize::BITS } else { me.trailing_zeros() };
-        let mut j = 0u32;
-        while j < lowbit && (me | (1 << j)) < n {
-            if (1usize << j) > me {
-                // children are me + 2^j where 2^j > me's low bits region
+        let segs = comm.policy.coll_segments.clamp(1, MAX_COLL_SEGMENTS);
+        // Children of virtual rank v: v + 2^j for every j below v's
+        // lowest set bit (all j for the root), bounded by the comm size —
+        // the binomial rule "parent = clear the lowest set bit" inverted.
+        // Correct for non-power-of-two sizes and any root (regression
+        // tests in tests/collectives.rs).
+        let max_j = if me == 0 { usize::BITS } else { me.trailing_zeros() };
+        let mut children = Vec::new();
+        for j in 0..max_j {
+            let child_virt = me + (1usize << j);
+            if child_virt >= n {
+                break;
             }
-            let child_virt = me | (1 << j);
-            if child_virt != me && child_virt < n {
-                let child = (child_virt + root) % n;
-                self.send(comm, child, tag, &buf);
-            }
-            j += 1;
+            children.push((child_virt + root) % n); // actual rank
         }
+        let mut sreqs = Vec::with_capacity(children.len() * segs);
+        let buf = if me == 0 {
+            let buf = data.expect("root must supply data");
+            for g in 0..segs {
+                let (lo, hi) = part_bounds(buf.len(), segs, g);
+                let tag = BCAST_TAG + g as i32;
+                for &child in &children {
+                    sreqs.push(self.coll_isend(comm, child, tag, &buf[lo..hi]));
+                }
+            }
+            buf
+        } else {
+            let parent = ((me & (me - 1)) + root) % n;
+            let rreqs: Vec<Request> = (0..segs)
+                .map(|g| self.coll_irecv(comm, parent, BCAST_TAG + g as i32))
+                .collect();
+            let mut buf = Vec::new();
+            for (g, rreq) in rreqs.into_iter().enumerate() {
+                let seg = self.wait(rreq).expect("bcast segment");
+                let tag = BCAST_TAG + g as i32;
+                for &child in &children {
+                    sreqs.push(self.coll_isend(comm, child, tag, &seg));
+                }
+                buf.extend_from_slice(&seg);
+            }
+            buf
+        };
+        self.waitall(sreqs);
         buf
     }
 
     /// MPI_Allgather of one u64 per rank (used by init's address exchange).
     pub fn allgather_u64(&self, comm: &Comm, mine: u64) -> Vec<u64> {
-        let bytes =
-            self.allgather_bytes(comm, &mine.to_le_bytes());
-        bytes
+        self.allgather_bytes(comm, &mine.to_le_bytes())
             .iter()
             .map(|b| u64::from_le_bytes(b.as_slice().try_into().expect("8-byte entries")))
             .collect()
     }
 
     /// MPI_Allgather (ring): every rank contributes `mine`, gets all
-    /// contributions in rank order.
+    /// contributions in rank order. All step receives are pre-posted up
+    /// front and sends are only waited once the ring completes; the block
+    /// sent at step `s` is the one received at step `s-1`, so sends are
+    /// data-dependent and the pipeline is receive-bounded by design.
     pub fn allgather_bytes(&self, comm: &Comm, mine: &[u8]) -> Vec<Vec<u8>> {
         let n = comm.size;
         let me = comm.rank;
@@ -102,25 +234,153 @@ impl MpiProc {
         }
         let right = (me + 1) % n;
         let left = (me + n - 1) % n;
-        let tag = INTERNAL_TAG_BASE + 2048;
-        // Ring: at step s, send the block that originated at (me - s) and
-        // receive the block that originated at (me - s - 1).
-        for s in 0..n - 1 {
-            let send_origin = (me + n - s) % n;
+        let rreqs: Vec<Request> = (0..n - 1)
+            .map(|s| self.coll_irecv(comm, left, ALLGATHER_TAG + s as i32))
+            .collect();
+        let mut sreqs = Vec::with_capacity(n - 1);
+        let mut block = mine.to_vec();
+        for (s, rreq) in rreqs.into_iter().enumerate() {
             let recv_origin = (me + n - s - 1) % n;
-            let block = out[send_origin].clone().expect("pipeline invariant");
-            let sreq = self.isend(comm, right, tag + s as i32, &block);
-            let rreq = self.irecv(comm, Src::Rank(left), Tag::Value(tag + s as i32));
+            sreqs.push(self.coll_isend(comm, right, ALLGATHER_TAG + s as i32, &block));
             let data = self.wait(rreq).expect("ring recv");
-            self.wait(sreq);
-            out[recv_origin] = Some(data);
+            out[recv_origin] = Some(data.clone());
+            block = data;
         }
+        self.waitall(sreqs);
         out.into_iter().map(|o| o.unwrap()).collect()
     }
 
+    /// Segmented, pipelined ring allreduce over a byte buffer of
+    /// `elem`-byte elements, combining equal-length element-aligned slices
+    /// with `reduce` (`acc ⊕= incoming`). Bandwidth-optimal 2(n-1)-step
+    /// ring; each step's chunk moves as up-to-`vcmpi_coll_segments`
+    /// independently tagged segments, pre-posted per step and forwarded
+    /// downstream the moment each is reduced (see the module doc).
+    fn allreduce_ring_segmented(
+        &self,
+        comm: &Comm,
+        data: &mut [u8],
+        elem: usize,
+        reduce: &dyn Fn(&mut [u8], &[u8]),
+    ) {
+        let n = comm.size;
+        if n <= 1 {
+            return;
+        }
+        debug_assert_eq!(data.len() % elem, 0, "payload must be element-aligned");
+        let me = comm.rank;
+        let right = (me + 1) % n;
+        let left = (me + n - 1) % n;
+        let elems = data.len() / elem;
+        // Byte bounds of segment g of chunk c (identical on every rank).
+        let seg_bounds = |c: usize, g: usize| -> (usize, usize) {
+            let (clo, chi) = part_bounds(elems, n, c);
+            let (slo, shi) = part_bounds(chi - clo, self.coll_segs(comm, chi - clo), g);
+            ((clo + slo) * elem, (clo + shi) * elem)
+        };
+        let tag_of = |phase: usize, step: usize, g: usize| -> i32 {
+            ALLREDUCE_TAG + ((phase * (n - 1) + step) * MAX_COLL_SEGMENTS + g) as i32
+        };
+        // Chunk the ring step works on (identical formulas to the classic
+        // ring schedule): phase 0 (reduce-scatter) receives chunk
+        // (me - s - 1), phase 1 (allgather) receives chunk (me - s); the
+        // chunk sent at step s+1 is always the chunk received at step s.
+        let chunk_segs = |c: usize| -> usize {
+            let (clo, chi) = part_bounds(elems, n, c);
+            self.coll_segs(comm, chi - clo)
+        };
+        let mut sreqs: Vec<Request> = Vec::new();
+
+        // ---- phase 1: reduce-scatter ----
+        let rreqs: Vec<Vec<Request>> = (0..n - 1)
+            .map(|s| {
+                let recv_chunk = (me + n - s - 1) % n;
+                (0..chunk_segs(recv_chunk))
+                    .map(|g| self.coll_irecv(comm, left, tag_of(0, s, g)))
+                    .collect()
+            })
+            .collect();
+        // Step 0 sends my own chunk; step s+1 forwards the chunk reduced
+        // at step s, segment by segment as each lands.
+        for g in 0..chunk_segs(me) {
+            let (lo, hi) = seg_bounds(me, g);
+            sreqs.push(self.coll_isend(comm, right, tag_of(0, 0, g), &data[lo..hi]));
+        }
+        for (s, step_rreqs) in rreqs.into_iter().enumerate() {
+            let recv_chunk = (me + n - s - 1) % n;
+            for (g, rreq) in step_rreqs.into_iter().enumerate() {
+                let got = self.wait(rreq).expect("allreduce segment");
+                let (lo, hi) = seg_bounds(recv_chunk, g);
+                debug_assert_eq!(got.len(), hi - lo, "segment length mismatch");
+                reduce(&mut data[lo..hi], &got);
+                if s + 1 < n - 1 {
+                    // This freshly reduced segment is exactly what step
+                    // s+1 sends: forward it immediately, overlapping the
+                    // remaining receives of step s.
+                    sreqs.push(self.coll_isend(comm, right, tag_of(0, s + 1, g), &data[lo..hi]));
+                }
+            }
+        }
+
+        // ---- phase 2: allgather of the reduced chunks ----
+        let rreqs: Vec<Vec<Request>> = (0..n - 1)
+            .map(|s| {
+                let recv_chunk = (me + n - s) % n;
+                (0..chunk_segs(recv_chunk))
+                    .map(|g| self.coll_irecv(comm, left, tag_of(1, s, g)))
+                    .collect()
+            })
+            .collect();
+        // After reduce-scatter, rank me owns the full sum of chunk
+        // (me+1) — phase 2 circulates the owned chunks.
+        let own = (me + 1) % n;
+        for g in 0..chunk_segs(own) {
+            let (lo, hi) = seg_bounds(own, g);
+            sreqs.push(self.coll_isend(comm, right, tag_of(1, 0, g), &data[lo..hi]));
+        }
+        for (s, step_rreqs) in rreqs.into_iter().enumerate() {
+            let recv_chunk = (me + n - s) % n;
+            for (g, rreq) in step_rreqs.into_iter().enumerate() {
+                let got = self.wait(rreq).expect("allreduce segment");
+                let (lo, hi) = seg_bounds(recv_chunk, g);
+                debug_assert_eq!(got.len(), hi - lo, "segment length mismatch");
+                data[lo..hi].copy_from_slice(&got);
+                if s + 1 < n - 1 {
+                    sreqs.push(self.coll_isend(comm, right, tag_of(1, s + 1, g), &data[lo..hi]));
+                }
+            }
+        }
+        self.waitall(sreqs);
+    }
+
     /// Ring allreduce (sum) over an f32 buffer — the gradient-exchange
-    /// workhorse. Bandwidth-optimal: 2(n-1) steps over n chunks.
+    /// workhorse. Segmented and pipelined per the comm's policy (see the
+    /// module doc); reduction order per element matches the classic ring,
+    /// so results are bit-identical across policies.
     pub fn allreduce_f32(&self, comm: &Comm, data: &mut [f32]) {
+        if comm.size <= 1 {
+            return;
+        }
+        let mut bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        self.allreduce_ring_segmented(comm, &mut bytes, 4, &|acc, inc| {
+            for (a, b) in acc.chunks_exact_mut(4).zip(inc.chunks_exact(4)) {
+                let v = f32::from_le_bytes((&a[..]).try_into().unwrap())
+                    + f32::from_le_bytes(b.try_into().unwrap());
+                a.copy_from_slice(&v.to_le_bytes());
+            }
+        });
+        for (d, c) in data.iter_mut().zip(bytes.chunks_exact(4)) {
+            *d = f32::from_le_bytes(c.try_into().unwrap());
+        }
+    }
+
+    /// The seed's lockstep ring allreduce — whole-chunk blocking wait
+    /// pairs on the communicator's regular path — kept verbatim as the
+    /// ablation baseline for `bench::coll_rate` (and the figure of merit
+    /// the CI gate compares the segmented multi-lane path against). New
+    /// code should use [`MpiProc::allreduce_f32`].
+    #[doc(hidden)]
+    pub fn allreduce_f32_lockstep(&self, comm: &Comm, data: &mut [f32]) {
         let n = comm.size;
         if n == 1 {
             return;
@@ -129,18 +389,9 @@ impl MpiProc {
         let right = (me + 1) % n;
         let left = (me + n - 1) % n;
         let len = data.len();
-        // Chunk boundaries (n chunks, last may be ragged).
-        let bounds: Vec<(usize, usize)> = (0..n)
-            .map(|i| {
-                let per = len.div_ceil(n);
-                let lo = (i * per).min(len);
-                let hi = ((i + 1) * per).min(len);
-                (lo, hi)
-            })
-            .collect();
-        let tag = INTERNAL_TAG_BASE + 4096;
-        // Phase 1: reduce-scatter. After step s, rank r owns the full sum
-        // of chunk (r+1-... ) — standard ring schedule.
+        let bounds: Vec<(usize, usize)> = (0..n).map(|i| part_bounds(len, n, i)).collect();
+        let tag = ALLREDUCE_TAG;
+        // Phase 1: reduce-scatter, one whole chunk per lockstep step.
         for s in 0..n - 1 {
             let send_chunk = (me + n - s) % n;
             let recv_chunk = (me + n - s - 1) % n;
@@ -178,10 +429,37 @@ impl MpiProc {
     }
 
     /// Allreduce a single f64 (sum) — convenience for scalar metrics.
+    /// Routed through the segmented ring (one 8-byte element): 2(n-1)
+    /// tiny messages, instead of the n² bytes the old allgather-everything
+    /// implementation moved.
     pub fn allreduce_scalar(&self, comm: &Comm, x: f64) -> f64 {
-        let all = self.allgather_bytes(comm, &x.to_le_bytes());
-        all.iter()
-            .map(|b| f64::from_le_bytes(b.as_slice().try_into().unwrap()))
-            .sum()
+        let mut bytes = x.to_le_bytes().to_vec();
+        self.allreduce_ring_segmented(comm, &mut bytes, 8, &|acc, inc| {
+            let v = f64::from_le_bytes((&acc[..]).try_into().unwrap())
+                + f64::from_le_bytes(inc.try_into().unwrap());
+            acc.copy_from_slice(&v.to_le_bytes());
+        });
+        f64::from_le_bytes(bytes.as_slice().try_into().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::part_bounds;
+
+    #[test]
+    fn part_bounds_cover_exactly_and_agree() {
+        for len in [0usize, 1, 7, 100, 1007] {
+            for parts in [1usize, 2, 3, 8, 64] {
+                let mut covered = 0;
+                for i in 0..parts {
+                    let (lo, hi) = part_bounds(len, parts, i);
+                    assert!(lo <= hi && hi <= len);
+                    assert_eq!(lo, covered, "pieces must tile contiguously");
+                    covered = hi;
+                }
+                assert_eq!(covered, len, "pieces must cover the whole range");
+            }
+        }
     }
 }

@@ -22,6 +22,13 @@
 //!   halo-exchange communicator and a latency-sensitive ordered
 //!   communicator therefore coexist in one process — the presets below
 //!   keep their exact pre-policy behavior through the default path.
+//! * **Per-communicator collectives keys** (no `MpiConfig` counterpart —
+//!   the mapping is inherently per-comm): `vcmpi_collectives=
+//!   inherit|dedicated|striped` selects how a communicator's collectives
+//!   map onto the VCI pool (`dedicated` reserves a pinned lane, `striped`
+//!   spreads segments by envelope hash — see `mpi::collectives` for the
+//!   decision table), and `vcmpi_coll_segments=N` sets the pipeline depth
+//!   of the segmented allreduce/bcast engine.
 //! * **Per-window defaults** (`accumulate_ordering_none` in [`Hints`],
 //!   plus `rx_doorbell` doing double duty): these seed the default
 //!   [`crate::mpi::WinPolicy`] every RMA window starts from. Individual

@@ -15,6 +15,8 @@ thread_local! {
     static LOCKS_SHARD: Cell<u64> = const { Cell::new(0) };
     static ATOMIC_OPS: Cell<u64> = const { Cell::new(0) };
     static ANCHORED_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static COLL_SEGMENTS: Cell<u64> = const { Cell::new(0) };
+    static COLL_LANE_SPREAD: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Which class of lock was taken (paper Table 1's columns, plus the
@@ -51,6 +53,22 @@ pub fn count_anchored_alloc() {
     ANCHORED_ALLOCS.with(|c| c.set(c.get() + 1));
 }
 
+/// One collective internal segment issued (a barrier round, a bcast or
+/// allreduce segment): the Table-1 proof that collectives are segmented
+/// rather than whole-payload lockstep.
+pub fn count_coll_segment() {
+    COLL_SEGMENTS.with(|c| c.set(c.get() + 1));
+}
+
+/// A collective segment issued on an explicit lane other than the
+/// communicator's home VCI (dedicated-lane or envelope-spread collective
+/// policies): the Table-1 proof that collective traffic leaves the home
+/// lane. (Inherit-mode segments on a striped comm spread too, but via the
+/// per-message striping path — counted there, not here.)
+pub fn count_coll_lane_spread() {
+    COLL_LANE_SPREAD.with(|c| c.set(c.get() + 1));
+}
+
 /// Snapshot of the calling thread's critical-path counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounters {
@@ -63,6 +81,12 @@ pub struct OpCounters {
     /// Striped receive posts whose request came from a shard-anchored
     /// VCI's cache rather than the communicator's home VCI.
     pub anchored_allocs: u64,
+    /// Collective internal segments issued (segmented pipelined
+    /// collectives — see `mpi::collectives`).
+    pub coll_segments: u64,
+    /// Collective segments issued on an explicit non-home lane
+    /// (dedicated / envelope-spread collective policies).
+    pub coll_lane_spread: u64,
 }
 
 impl OpCounters {
@@ -83,6 +107,8 @@ impl std::ops::Sub for OpCounters {
             shard_locks: self.shard_locks - rhs.shard_locks,
             atomics: self.atomics - rhs.atomics,
             anchored_allocs: self.anchored_allocs - rhs.anchored_allocs,
+            coll_segments: self.coll_segments - rhs.coll_segments,
+            coll_lane_spread: self.coll_lane_spread - rhs.coll_lane_spread,
         }
     }
 }
@@ -98,6 +124,8 @@ pub fn snapshot() -> OpCounters {
         shard_locks: LOCKS_SHARD.with(|c| c.get()),
         atomics: ATOMIC_OPS.with(|c| c.get()),
         anchored_allocs: ANCHORED_ALLOCS.with(|c| c.get()),
+        coll_segments: COLL_SEGMENTS.with(|c| c.get()),
+        coll_lane_spread: COLL_LANE_SPREAD.with(|c| c.get()),
     }
 }
 
@@ -269,13 +297,18 @@ mod tests {
         count_lock(LockClass::Shard);
         count_atomic();
         count_anchored_alloc();
+        count_coll_segment();
+        count_coll_segment();
+        count_coll_lane_spread();
         let d = snapshot() - base;
         assert_eq!(d.vci_locks, 2);
         assert_eq!(d.request_locks, 1);
         assert_eq!(d.shard_locks, 1);
         assert_eq!(d.atomics, 1);
         assert_eq!(d.anchored_allocs, 1);
-        assert_eq!(d.total_locks(), 4, "anchored allocs are not locks");
+        assert_eq!(d.coll_segments, 2);
+        assert_eq!(d.coll_lane_spread, 1);
+        assert_eq!(d.total_locks(), 4, "anchored allocs / coll segments are not locks");
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub mod world;
 pub use comm::{Comm, CommKind};
 pub use config::{CsMode, Hints, MpiConfig, VciPolicy, VciStriping};
 pub use matching::{Src, Tag};
-pub use policy::{CommPolicy, Info, WinPolicy};
+pub use policy::{CollectivesMode, CommPolicy, Info, MAX_COLL_SEGMENTS, WinPolicy};
 pub use shard::{CommMatch, EpochStats};
 pub use proc::MpiProc;
 pub use request::Request;

@@ -134,10 +134,41 @@ impl MpiProc {
         data: &[u8],
         sync: bool,
     ) -> Request {
+        self.isend_inner(comm, my_ep, dst, tag, data, sync, None)
+    }
+
+    /// Collective-internal isend: `coll_vci` forces the message onto an
+    /// explicit lane (dedicated / envelope-spread collectives — see
+    /// `mpi::collectives`), bypassing per-message striping so both sides
+    /// agree on the path from the envelope alone.
+    pub(super) fn isend_coll(
+        &self,
+        comm: &Comm,
+        dst: usize,
+        tag: i32,
+        data: &[u8],
+        coll_vci: Option<usize>,
+    ) -> Request {
+        self.isend_inner(comm, None, dst, tag, data, false, coll_vci)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn isend_inner(
+        &self,
+        comm: &Comm,
+        my_ep: Option<usize>,
+        dst: usize,
+        tag: i32,
+        data: &[u8],
+        sync: bool,
+        coll_vci: Option<usize>,
+    ) -> Request {
         padvance(self.backend, self.costs.mpi_sw_send + self.costs.instructions(8));
         let _cs = self.enter_cs();
         let guard = self.guard();
         // VCI selection, in precedence order:
+        //  0. A collective-segment lane override (dedicated-lane or
+        //     envelope-spread collectives): explicit, never striped.
         //  1. Per-message striping: any pool VCI, chosen per message; the
         //     receiver's reorder stage restores nonovertaking order from
         //     the shared (comm, dst) stream sequence.
@@ -145,8 +176,10 @@ impl MpiProc {
         //     the SENDER's rank + tag so the receiver can derive the same
         //     one (wildcards are asserted away).
         //  3. The communicator's / endpoint's assigned VCI.
-        let striped = my_ep.is_none() && self.striping_active(comm);
-        let (vci_idx, stripe_seq) = if striped {
+        let striped = coll_vci.is_none() && my_ep.is_none() && self.striping_active(comm);
+        let (vci_idx, stripe_seq) = if let Some(v) = coll_vci {
+            (v, None)
+        } else if striped {
             let seq = self.next_stripe_seq(comm.id, dst);
             (self.stripe_vci(comm, dst, seq), Some(seq))
         } else if my_ep.is_none() {
@@ -156,9 +189,12 @@ impl MpiProc {
         };
         let vci = self.vcis().get(vci_idx).clone();
         let (dst_proc, base_dst_ctx) = self.route(comm, dst);
-        let dst_ctx = if striped || (my_ep.is_none() && vci_idx != self.comm_vci(comm, None)) {
-            // Striped / hinted spread: target the mirror context on the
-            // receiver.
+        let dst_ctx = if striped
+            || coll_vci.is_some()
+            || (my_ep.is_none() && vci_idx != self.comm_vci(comm, None))
+        {
+            // Striped / hinted / collective-lane spread: target the mirror
+            // context on the receiver.
             self.remote_ctx_for_vci(dst_proc, vci_idx)
         } else {
             base_dst_ctx
@@ -262,9 +298,51 @@ impl MpiProc {
     }
 
     pub fn irecv_ep(&self, comm: &Comm, my_ep: Option<usize>, src: Src, tag: Tag) -> Request {
+        self.irecv_inner(comm, my_ep, src, tag, None)
+    }
+
+    /// Collective-internal irecv: `coll_vci` posts the receive into an
+    /// explicit lane's matching engine (the collective tag space never
+    /// uses wildcards, so the fully specified envelope selects the same
+    /// lane on both sides — see `MpiProc::coll_segment_vci`).
+    pub(super) fn irecv_coll(
+        &self,
+        comm: &Comm,
+        src: Src,
+        tag: Tag,
+        coll_vci: Option<usize>,
+    ) -> Request {
+        self.irecv_inner(comm, None, src, tag, coll_vci)
+    }
+
+    fn irecv_inner(
+        &self,
+        comm: &Comm,
+        my_ep: Option<usize>,
+        src: Src,
+        tag: Tag,
+        coll_vci: Option<usize>,
+    ) -> Request {
         padvance(self.backend, self.costs.mpi_sw_recv + self.costs.instructions(8));
         let _cs = self.enter_cs();
         let guard = self.guard();
+        if let Some(v) = coll_vci {
+            // Collective segment on an explicit lane: post into that VCI's
+            // own matching engine (never the sharded striped path — the
+            // matching sender marked no stripe_home, so its arrival is
+            // handled by this engine too).
+            let vci = self.vcis().get(v).clone();
+            return vci.with_state(guard, |st| {
+                let id = self.alloc_request(st);
+                self.slab.slot(id).vci.store(v, std::sync::atomic::Ordering::Relaxed);
+                padvance(self.backend, self.costs.instructions(3) + self.costs.match_cost);
+                let posted = PostedRecv { comm_id: comm.id, src, tag, req: id };
+                if let Some(m) = st.matching.on_post(posted) {
+                    self.consume_matched(vci.ctx_index, id, m);
+                }
+                Request::Real { id, vci: v }
+            });
+        }
         // Under striping (per this communicator's policy), receives post
         // into the communicator's sharded matching engine: a concrete
         // source goes to the shard that owns its stream (matched by

@@ -25,6 +25,8 @@
 //! | `vcmpi_rx_doorbell`        | `true`\|`false`   | participate in doorbell-gated striped sweeps |
 //! | `mpi_assert_no_any_source` | `true`\|`false`   | receives on this comm never use `MPI_ANY_SOURCE` |
 //! | `mpi_assert_no_any_tag`    | `true`\|`false`   | receives on this comm never use `MPI_ANY_TAG` |
+//! | `vcmpi_collectives`        | `inherit`\|`dedicated`\|`striped` | how this comm's collectives map onto the VCI pool (see [`CollectivesMode`]) |
+//! | `vcmpi_coll_segments`      | integer ≥ 1       | segments per collective payload (pipelined; clamped to [`MAX_COLL_SEGMENTS`]) |
 //!
 //! Windows resolve a [`WinPolicy`] from the same [`Info`] machinery at
 //! `MpiProc::win_create_with_info` (MPI_Win_create's info argument):
@@ -52,6 +54,41 @@
 //! arrives for a communicator whose registered policy says `off`.
 
 use super::config::{MpiConfig, VciStriping};
+
+/// Hard cap on `vcmpi_coll_segments`: the collective internal-tag space
+/// reserves this many tags per (collective op, ring step), so the cap is
+/// part of the wire contract (see `mpi::collectives` for the tag layout).
+pub const MAX_COLL_SEGMENTS: usize = 64;
+
+/// Default `vcmpi_coll_segments` when no info key overrides it: enough
+/// pipeline depth to overlap injection, wire time, and target-side
+/// handling for bulk payloads, while tiny payloads degenerate gracefully
+/// (segment counts never exceed the element count — empty trailing
+/// segments are elided by the collectives engine).
+pub const DEFAULT_COLL_SEGMENTS: usize = 4;
+
+/// How a communicator's collectives map onto the VCI pool
+/// (`vcmpi_collectives`). Collective internal traffic never uses
+/// wildcards, so its envelopes are always fully specified — that is what
+/// makes the `Striped` spread legal without the §7 hint assertions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectivesMode {
+    /// Collective segments ride the communicator's regular two-sided
+    /// path: striped comms stripe them per message (seq reorder, shard
+    /// engine), ordered comms funnel them through the home VCI.
+    Inherit,
+    /// Reserve (pin) one lane for this communicator's collective traffic:
+    /// the lane is derived deterministically from the comm id (wire
+    /// symmetry) and pinned out of the stripe-lane set, so a hot striped
+    /// comm's p2p storm sharing the pool can never head-of-line-block
+    /// this comm's allreduce. Released at `comm_free`.
+    Dedicated,
+    /// Spread collective segments over the pool by the pure
+    /// (comm, sender rank, tag) envelope hash — per-segment tags fan one
+    /// collective's segments across many lanes, matched per VCI with no
+    /// reorder stage (the envelope selects the lane on both sides).
+    Striped,
+}
 
 /// An MPI-4.0-style info object: an ordered list of `(key, value)`
 /// string pairs. Later `set`s of the same key win.
@@ -121,6 +158,14 @@ pub struct CommPolicy {
     pub no_any_source: bool,
     /// `mpi_assert_no_any_tag`: receives never use `MPI_ANY_TAG`.
     pub no_any_tag: bool,
+    /// How this communicator's collectives map onto the VCI pool
+    /// (`vcmpi_collectives`) — see [`CollectivesMode`].
+    pub collectives: CollectivesMode,
+    /// Segments per collective payload (`vcmpi_coll_segments`): allreduce
+    /// splits each ring-step chunk — and bcast each tree hop — into this
+    /// many independently tagged nonblocking transfers, pipelined as they
+    /// complete. Clamped to `1..=`[`MAX_COLL_SEGMENTS`].
+    pub coll_segments: usize,
 }
 
 impl Default for CommPolicy {
@@ -132,6 +177,8 @@ impl Default for CommPolicy {
             rx_doorbell: false,
             no_any_source: false,
             no_any_tag: false,
+            collectives: CollectivesMode::Inherit,
+            coll_segments: DEFAULT_COLL_SEGMENTS,
         }
     }
 }
@@ -147,6 +194,10 @@ impl CommPolicy {
             rx_doorbell: cfg.rx_doorbell,
             no_any_source: cfg.hints.no_any_source,
             no_any_tag: cfg.hints.no_any_tag,
+            // No process-wide knobs exist for the collectives mapping:
+            // it is inherently per-communicator (info keys only).
+            collectives: CollectivesMode::Inherit,
+            coll_segments: DEFAULT_COLL_SEGMENTS,
         }
     }
 
@@ -183,6 +234,19 @@ impl CommPolicy {
         }
         if let Some(v) = info.get("mpi_assert_no_any_tag") {
             p.no_any_tag = parse_bool("mpi_assert_no_any_tag", v);
+        }
+        if let Some(v) = info.get("vcmpi_collectives") {
+            p.collectives = parse_collectives(v);
+        }
+        if let Some(v) = info.get("vcmpi_coll_segments") {
+            p.coll_segments = v
+                .parse::<usize>()
+                .unwrap_or_else(|_| {
+                    panic!(
+                        "info key vcmpi_coll_segments: expected an integer, got {v:?} (erroneous program)"
+                    )
+                })
+                .clamp(1, MAX_COLL_SEGMENTS);
         }
         p
     }
@@ -301,6 +365,14 @@ impl WinPolicy {
     pub fn stripes_accumulates(&self) -> bool {
         self.striped() && self.relaxed_accumulate
     }
+
+    /// Gets stripe whenever striping is on, like puts: MPI imposes no
+    /// ordering between gets (or between gets and puts) within a passive
+    /// epoch, and completion is counted per (window, target, lane) — the
+    /// reply echoes the issuing lane exactly like `RmaAckCount`.
+    pub fn stripes_gets(&self) -> bool {
+        self.striped()
+    }
 }
 
 /// `accumulate_ordering` value: `none` relaxes ordering; a comma list
@@ -318,6 +390,17 @@ fn parse_accumulate_ordering(v: &str) -> bool {
         );
     }
     false
+}
+
+fn parse_collectives(v: &str) -> CollectivesMode {
+    match v {
+        "inherit" => CollectivesMode::Inherit,
+        "dedicated" => CollectivesMode::Dedicated,
+        "striped" => CollectivesMode::Striped,
+        other => panic!(
+            "info key vcmpi_collectives: expected inherit|dedicated|striped, got {other:?} (erroneous program)"
+        ),
+    }
 }
 
 fn parse_striping(v: &str) -> VciStriping {
@@ -388,6 +471,42 @@ mod tests {
         );
         assert!(p.no_any_source && p.no_any_tag);
         assert!(!p.ordered().striped());
+    }
+
+    #[test]
+    fn collectives_keys_parse_and_default_to_inherit() {
+        let base = CommPolicy::default();
+        assert_eq!(base.collectives, CollectivesMode::Inherit);
+        assert_eq!(base.coll_segments, DEFAULT_COLL_SEGMENTS);
+        let p = base.with_info(
+            &Info::new()
+                .with("vcmpi_collectives", "dedicated")
+                .with("vcmpi_coll_segments", "12"),
+        );
+        assert_eq!(p.collectives, CollectivesMode::Dedicated);
+        assert_eq!(p.coll_segments, 12);
+        let q = p.with_info(&Info::new().with("vcmpi_collectives", "striped"));
+        assert_eq!(q.collectives, CollectivesMode::Striped);
+        assert_eq!(q.coll_segments, 12, "unnamed keys inherit");
+        // Segment counts clamp into the wire-contract tag budget.
+        let r = base.with_info(&Info::new().with("vcmpi_coll_segments", "100000"));
+        assert_eq!(r.coll_segments, MAX_COLL_SEGMENTS);
+        let z = base.with_info(&Info::new().with("vcmpi_coll_segments", "0"));
+        assert_eq!(z.coll_segments, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "vcmpi_collectives")]
+    fn malformed_collectives_mode_is_erroneous() {
+        let _ =
+            CommPolicy::default().with_info(&Info::new().with("vcmpi_collectives", "sideways"));
+    }
+
+    #[test]
+    #[should_panic(expected = "vcmpi_coll_segments")]
+    fn malformed_coll_segments_is_erroneous() {
+        let _ =
+            CommPolicy::default().with_info(&Info::new().with("vcmpi_coll_segments", "several"));
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::sim::CostModel;
 use super::comm::{Comm, CommKind};
 use super::config::{CsMode, MpiConfig, VciStriping};
 use super::instrument::{count_lock, LockClass};
-use super::policy::{CommPolicy, Info, WinPolicy};
+use super::policy::{CollectivesMode, CommPolicy, Info, WinPolicy};
 use super::request::{RequestSlab, DEFAULT_SLAB_CAPACITY};
 use super::rma::Window;
 use super::shard::{CommMatch, EpochStats};
@@ -80,6 +80,15 @@ impl PinMask {
 /// purged); the finalize assertion only guards against later
 /// resurrection, so tracking the first ids is enough of a canary.
 const FREED_TRACK_CAP: usize = 1024;
+
+/// `1 + mix64(z) % (lanes - 1)`: the shared non-fallback lane scramble
+/// behind every deterministic lane derivation whose two wire ends must
+/// agree — the §7 envelope spread, striped-collectives segment lanes,
+/// and dedicated collective lanes. One formula so the wire contract
+/// cannot drift between them. Caller guarantees `lanes > 1`.
+fn scrambled_lane(z: u64, lanes: usize) -> usize {
+    1 + (crate::util::mix64(z) % (lanes as u64 - 1)) as usize
+}
 
 /// Deterministic probe for the first un-pinned stripe lane starting from
 /// scramble `z` (lanes `1..n`; the fallback lane 0 is never a stripe
@@ -194,6 +203,13 @@ pub struct MpiProc {
     /// Bitmask mirror of `ordered_pins` (a word array covering the whole
     /// configured pool), read lock-free on the per-message stripe paths.
     stripe_excluded: PinMask,
+    /// Dedicated collective lanes, keyed by comm id: a communicator whose
+    /// policy says `vcmpi_collectives=dedicated` reserves one lane for its
+    /// collective traffic on first use (pinned out of the stripe set via
+    /// `ordered_pins`, so striped p2p bulk never queues ahead of an
+    /// allreduce step) and releases it at `comm_free`. Host mutex:
+    /// consulted once per collective segment, off the wire path.
+    coll_lanes: Mutex<HashMap<u64, usize>>,
     /// The process-default [`WinPolicy`] — the demoted
     /// `accumulate_ordering_none` hint. Every window starts from it; info
     /// keys at `win_create_with_info` override per window.
@@ -259,6 +275,7 @@ impl MpiProc {
             freed_comms: Mutex::new(HashSet::new()),
             ordered_pins: Mutex::new(HashMap::new()),
             stripe_excluded: PinMask::new(pin_lanes),
+            coll_lanes: Mutex::new(HashMap::new()),
             default_win_policy,
             split_seqs: Mutex::new(HashMap::new()),
             policy_mismatches: AtomicU64::new(0),
@@ -583,6 +600,16 @@ impl MpiProc {
             _ if !comm.policy.striped() => self.unpin_ordered_lane(comm.vci),
             _ => {}
         }
+        // Release the dedicated collective lane, if this comm reserved one
+        // (the acceptance tripwire: a freed `vcmpi_collectives=dedicated`
+        // comm must not keep its lane pinned out of the stripe set).
+        let coll_lane = {
+            let mut t = self.coll_lanes.lock().unwrap_or_else(|e| e.into_inner());
+            t.remove(&comm.id)
+        };
+        if let Some(lane) = coll_lane {
+            self.unpin_ordered_lane(lane);
+        }
         self.match_engines.lock().unwrap_or_else(|e| e.into_inner()).remove(&comm.id);
         {
             let mut f = self.freed_comms.lock().unwrap_or_else(|e| e.into_inner());
@@ -743,13 +770,13 @@ impl MpiProc {
             return self.comm_vci(comm, None);
         }
         // SplitMix-style scramble of the full envelope.
-        let z = crate::util::mix64(
+        scrambled_lane(
             comm.id
                 .wrapping_mul(0x9E3779B97F4A7C15)
                 .wrapping_add((src_rank as u64) << 32)
                 .wrapping_add(tag as u32 as u64),
-        );
-        1 + (z % (self.vcis().len() as u64 - 1)) as usize
+            self.vcis().len(),
+        )
     }
 
     /// Does per-message VCI striping apply to two-sided traffic on `comm`?
@@ -960,6 +987,106 @@ impl MpiProc {
         // protects. All lanes pinned degenerates to the home VCI.
         probe_stripe_lane(z, n, &self.stripe_excluded)
             .unwrap_or_else(|| self.comm_vci(comm, None))
+    }
+
+    /// The lane space collective segments may target on `comm`: the local
+    /// pool, bounded by the smallest context pool any member actually
+    /// opened (hardware may grant a process fewer contexts than requested
+    /// — paper §4.2's "smaller pool" path). Bounding by the comm-wide
+    /// minimum makes the deterministic lane derivations below
+    /// wire-symmetric even across asymmetric pools: every derived lane is
+    /// `< space <=` every member's pool, so the mirror-context reduction
+    /// (`lane % remote_open`) is the identity on both sides and a
+    /// sender's segment always lands on the lane the receiver posted.
+    /// Pure function of post-init state (open counts are final once init
+    /// completes, and collectives only run after init).
+    fn coll_lane_space(&self, comm: &Comm) -> usize {
+        let mut space = self.vcis().len();
+        match &comm.kind {
+            CommKind::Procs => {
+                for p in 0..comm.size {
+                    space = space.min(self.fabric.open_count(p).max(1));
+                }
+            }
+            CommKind::Group { procs } => {
+                for &p in procs.iter() {
+                    space = space.min(self.fabric.open_count(p).max(1));
+                }
+            }
+            // Unreachable from the collectives lane paths (endpoints
+            // comms return None before consulting the space).
+            CommKind::Endpoints { .. } => {}
+        }
+        space
+    }
+
+    /// The dedicated collective lane of a `vcmpi_collectives=dedicated`
+    /// communicator, reserved lazily on first use. The lane index is a
+    /// pure function of the comm id and the comm's minimum member pool
+    /// ([`MpiProc::coll_lane_space`]) — every member derives the same
+    /// lane, the same wire-contract symmetry as `num_vcis` (pins are
+    /// deliberately NOT probed: pin state is process-local, and probing
+    /// it would make the two sides disagree on which mirror context
+    /// collective segments target). Reserving pins the lane out of the
+    /// stripe-lane set, so a hot striped comm's p2p storm sharing the
+    /// pool cannot head-of-line-block this comm's collectives;
+    /// `comm_free` releases the pin. Also a test/bench aid (proves the
+    /// reserve/release lifecycle via `stripe_lane_pinned`).
+    pub fn dedicated_coll_lane(&self, comm: &Comm) -> usize {
+        let space = self.coll_lane_space(comm);
+        if space <= 1 {
+            return FALLBACK_VCI;
+        }
+        let mut lanes = self.coll_lanes.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(&l) = lanes.get(&comm.id) {
+            return l;
+        }
+        let lane = scrambled_lane(
+            comm.id.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xC011_EC71),
+            space,
+        );
+        // Pin while holding the table lock: a racing first collective on
+        // another thread blocks on the mutex above and then finds the
+        // entry, so the pin refcount rises exactly once per comm.
+        self.pin_ordered_lane(lane);
+        lanes.insert(comm.id, lane);
+        lane
+    }
+
+    /// The VCI override for one collective segment on `comm`, per its
+    /// policy's `vcmpi_collectives` mode. `None` (inherit) routes the
+    /// segment through the communicator's regular two-sided path — a
+    /// striped comm stripes it per message with receiver-side reordering,
+    /// an ordered comm funnels it through the home VCI. `Dedicated`
+    /// forces the comm's reserved lane. `Striped` spreads segments over
+    /// the comm's [`coll_lane_space`](MpiProc::coll_lane_space) by the
+    /// pure (comm, sender rank, tag) envelope hash — the same
+    /// [`scrambled_lane`] formula as [`MpiProc::vci_for_envelope`], legal
+    /// without the §7 hint assertions because the collective internal tag
+    /// space never posts wildcards; per-segment tags fan one collective's
+    /// segments across many lanes, and both sides derive the same lane
+    /// from the envelope alone.
+    pub(super) fn coll_segment_vci(&self, comm: &Comm, src_rank: usize, tag: i32) -> Option<usize> {
+        if comm.is_endpoints() {
+            return None;
+        }
+        match comm.policy.collectives {
+            CollectivesMode::Inherit => None,
+            CollectivesMode::Dedicated => Some(self.dedicated_coll_lane(comm)),
+            CollectivesMode::Striped => {
+                let space = self.coll_lane_space(comm);
+                if space <= 1 {
+                    return Some(FALLBACK_VCI);
+                }
+                Some(scrambled_lane(
+                    comm.id
+                        .wrapping_mul(0x9E3779B97F4A7C15)
+                        .wrapping_add((src_rank as u64) << 32)
+                        .wrapping_add(tag as u32 as u64),
+                    space,
+                ))
+            }
+        }
     }
 
     /// Which VCI a progress call on behalf of a request mapped to

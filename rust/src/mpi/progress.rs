@@ -33,6 +33,15 @@
 //! origin's handler bumps the polled VCI's per-(window, target) ack
 //! counter — `win_flush` sweeps the stripe lanes (doorbell-gated per the
 //! window policy) until every recorded lane reaches its watermark.
+//! Striped gets complete the same way: the `RmaGetReply` echoes the
+//! issuing lane, parks the data under the get handle, and bumps the same
+//! per-lane counter.
+//!
+//! Collective segments (see `mpi::collectives`) use explicit lanes
+//! chosen symmetrically from the envelope (dedicated or hashed per
+//! segment): their requests are NOT striped-flagged, so a collective
+//! waiter polls exactly the lane its segment lives on, with the hybrid
+//! global round as the cross-lane backstop.
 //!
 //! # Robustness
 //!
@@ -323,7 +332,7 @@ impl MpiProc {
                 };
                 self.reply(my_ctx_index, &sender, ack);
             }
-            Payload::RmaGetReq { win, offset, len, get_handle } => {
+            Payload::RmaGetReq { win, offset, len, get_handle, lane } => {
                 let Some(mem) = self.fabric.find_window(self.rank(), win) else {
                     self.drop_stale();
                     return;
@@ -334,11 +343,23 @@ impl MpiProc {
                 }
                 padvance(self.backend, self.costs.rma_am_handle + self.costs.memcpy_cost(len));
                 let data = mem.read(offset, len);
-                self.reply(my_ctx_index, &sender, Payload::RmaGetReply { get_handle, data });
+                self.reply(
+                    my_ctx_index,
+                    &sender,
+                    Payload::RmaGetReply { win, get_handle, data, lane },
+                );
             }
-            Payload::RmaGetReply { get_handle, data } => {
+            Payload::RmaGetReply { win, get_handle, data, lane } => {
                 padvance(self.backend, self.costs.completion_process);
                 st.get_done.insert(get_handle, data);
+                if lane.is_some() {
+                    // Counted striped-get completion: the reply returned
+                    // to the issuing lane's context (like RmaAckCount), so
+                    // this VCI's per-(window, target) ack counter is the
+                    // one `win_flush` is watching — one thread's gets fan
+                    // out across lanes exactly like its puts.
+                    *st.rma_acked.entry((win, sender.src_proc)).or_insert(0) += 1;
+                }
             }
             Payload::RmaAcc { win, offset, data, op, flush_handle, lane } => {
                 let Some(mem) = self.fabric.find_window(self.rank(), win) else {

@@ -38,9 +38,13 @@
 //!   recorded (target, lane), until `acked >= watermark` — correct because
 //!   each (origin lane, target) channel is FIFO both ways — so flushing no
 //!   longer funnels every completion through one VCI's `acked` set, and an
-//!   op never needs an individually tracked flush handle. Ordered windows
-//!   (and Get / Fetch_and_op everywhere — a striped MPI_Get is an open
-//!   follow-on) keep the flush-handle protocol unchanged.
+//!   op never needs an individually tracked flush handle. **Gets stripe
+//!   the same way**: a striped window's `MPI_Get` issues on a stripe lane
+//!   and its reply (which parks the data under the get handle as always)
+//!   additionally bumps the issuing lane's ack counter — one thread's gets
+//!   fan out exactly like its puts. Ordered windows (and Fetch_and_op
+//!   everywhere — a blocking round-trip striping cannot help) keep the
+//!   flush-handle protocol unchanged.
 //!
 //! Ordered (`striping=off`) windows *pin their home VCI out of the
 //! stripe-lane set* like ordered communicators do, so striped bulk —
@@ -363,11 +367,18 @@ impl MpiProc {
         padvance(self.backend, self.costs.mpi_sw_rma + self.costs.instructions(8));
         check_origin_span(win, offset, len);
         let _cs = self.enter_cs();
-        let vci_idx = ep_vci.unwrap_or_else(|| self.rma_vci(win, false));
-        let vci = self.vcis().get(vci_idx).clone();
         let h = win.fresh_handle();
+        let striped = ep_vci.is_none() && win.policy.stripes_gets();
+        let vci_idx = match ep_vci {
+            Some(v) => v,
+            None if striped => self.stripe_win_vci(win, target, h),
+            None => self.rma_vci(win, false),
+        };
+        let vci = self.vcis().get(vci_idx).clone();
         match self.interconnect() {
             Interconnect::Ib => {
+                // Hardware get: striping only spreads which context reads;
+                // completion stays a fixed NIC timestamp.
                 let t = vci.with_state(self.guard(), |_st| {
                     let t = self.fabric.hw_rma_completion_time(target, len);
                     let mem = self.fabric.window(target, win.id);
@@ -377,6 +388,19 @@ impl MpiProc {
                 });
                 win.record(OpRecord::AtTime(t));
             }
+            Interconnect::Opa if striped => {
+                // Striped software get: fan out over the stripe lanes with
+                // counted completion, exactly like puts — the reply echoes
+                // the issuing lane, bumps that lane's per-(window, target)
+                // ack counter, and parks the data under the get handle.
+                self.issue_counted(win, target, vci_idx, Payload::RmaGetReq {
+                    win: win.id,
+                    offset,
+                    len,
+                    get_handle: h,
+                    lane: Some(vci_idx as u32),
+                });
+            }
             Interconnect::Opa => {
                 vci.with_state(self.guard(), |_st| {
                     let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
@@ -385,6 +409,7 @@ impl MpiProc {
                         offset,
                         len,
                         get_handle: h,
+                        lane: None,
                     });
                 });
                 win.record(OpRecord::OnAck { flush_handle: h, vci: vci_idx });

@@ -31,10 +31,20 @@
 //!
 //! RMA windows stripe the same way under a per-window policy
 //! (`mpi::policy::WinPolicy`, resolved at `win_create_with_info`): a
-//! striped window's puts/accumulates fan out over the stripe lanes and
-//! complete via per-lane issue/ack counters held in each lane's
-//! [`VciState`] (`rma_issued`/`rma_acked`) instead of the per-VCI `acked`
-//! set — see `mpi::rma` for the completion model and decision table.
+//! striped window's puts/accumulates — and gets — fan out over the
+//! stripe lanes and complete via per-lane issue/ack counters held in
+//! each lane's [`VciState`] (`rma_issued`/`rma_acked`) instead of the
+//! per-VCI `acked` set — see `mpi::rma` for the completion model and
+//! decision table.
+//!
+//! Collectives add a third lane-mapping layer (`vcmpi_collectives` on
+//! the comm policy — see `mpi::collectives`): a `dedicated` comm
+//! reserves one lane for collective traffic through the same pin
+//! machinery ordered comms use (so striped bulk never queues ahead of an
+//! allreduce step), while a `striped` collectives policy spreads each
+//! collective's per-segment tags over the pool by the pure envelope hash
+//! — matched per VCI, no reorder stage, because the internal collective
+//! tag space never posts wildcards.
 
 use std::cell::UnsafeCell;
 use std::collections::{HashMap, HashSet};

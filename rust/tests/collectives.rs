@@ -1,7 +1,9 @@
-//! Collectives over p2p: barrier, bcast, allgather, allreduce.
+//! Collectives over p2p: barrier, bcast, allgather, allreduce — including
+//! the segmented/pipelined engine under every `vcmpi_collectives` policy
+//! and the dedicated-lane reserve/release lifecycle.
 
 use vcmpi::fabric::{FabricConfig, Interconnect};
-use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, MpiProc};
+use vcmpi::mpi::{run_cluster, ClusterSpec, Info, MpiConfig, MpiProc};
 use vcmpi::sim::SimOutcome;
 
 fn spec(nodes: usize) -> ClusterSpec {
@@ -94,6 +96,111 @@ fn allreduce_scalar_sums() {
         let world = proc.comm_world();
         let s = proc.allreduce_scalar(&world, (proc.rank() + 1) as f64);
         assert!((s - 21.0).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn bcast_non_power_of_two_sizes_and_nonzero_roots() {
+    // Regression for the binomial child computation (the seed carried a
+    // dead guard block): every (size, root) pair must deliver, including
+    // non-power-of-two sizes where the deepest subtree is truncated, and
+    // payloads whose length does not divide the segment count.
+    for n in [3usize, 5, 6, 7] {
+        for root in 0..n {
+            run_ok(spec(n), move |proc, _t| {
+                let world = proc.comm_world();
+                let payload: Vec<u8> = (0..37).map(|i| (root * 31 + i) as u8).collect();
+                let data = if proc.rank() == root { Some(payload.clone()) } else { None };
+                let got = proc.bcast(&world, root, data);
+                assert_eq!(got, payload, "n={n} root={root} rank={}", proc.rank());
+            });
+        }
+    }
+}
+
+#[test]
+fn segmented_allreduce_matches_oracle_under_all_collectives_policies() {
+    // The same reduction, under each `vcmpi_collectives` lane mapping
+    // (inherit on an ordered comm, inherit on a striped comm, dedicated,
+    // striped) and a non-default segment count: all must agree with the
+    // host-computed oracle. Buffer length deliberately not divisible by
+    // the comm size or the segment count.
+    let arms: Vec<(&str, Option<(&str, &str)>, MpiConfig)> = vec![
+        ("inherit/ordered", None, MpiConfig::optimized(6)),
+        ("inherit/striped", None, MpiConfig::striped_sharded(6)),
+        ("dedicated", Some(("vcmpi_collectives", "dedicated")), MpiConfig::optimized(6)),
+        ("striped", Some(("vcmpi_collectives", "striped")), MpiConfig::optimized(6)),
+    ];
+    for (label, key, cfg) in arms {
+        let label = label.to_string();
+        let spec = ClusterSpec::new(
+            FabricConfig {
+                interconnect: Interconnect::Ib,
+                nodes: 4,
+                procs_per_node: 1,
+                max_contexts_per_node: 64,
+            },
+            cfg,
+            1,
+        );
+        let r = run_cluster(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let mut info = Info::new().with("vcmpi_coll_segments", "3");
+            if let Some((k, v)) = key {
+                info.set(k, v);
+            }
+            let comm = proc.comm_dup_with_info(&world, &info);
+            let len = 1000 + 7;
+            let mut data: Vec<f32> =
+                (0..len).map(|i| (proc.rank() + 1) as f32 * i as f32).collect();
+            proc.allreduce_f32(&comm, &mut data);
+            let scale: f32 = (1..=4).map(|r| r as f32).sum();
+            for (i, &v) in data.iter().enumerate() {
+                let want = scale * i as f32;
+                assert!(
+                    (v - want).abs() <= want.abs() * 1e-5 + 1e-3,
+                    "{label} idx={i}: got {v}, want {want}"
+                );
+            }
+            // Scalar metrics ride the same segmented ring.
+            let s = proc.allreduce_scalar(&comm, (proc.rank() + 1) as f64);
+            assert!((s - 10.0).abs() < 1e-12, "{label}: scalar sum {s}");
+            proc.comm_free(comm);
+        });
+        assert_eq!(r.outcome, SimOutcome::Completed, "{:?}", r.outcome);
+    }
+}
+
+#[test]
+fn dedicated_collective_lane_is_pinned_then_released_at_comm_free() {
+    // The dedicated-lane lifecycle: first collective reserves (pins) the
+    // comm's lane out of the stripe set; comm_free releases it (the
+    // finalize tripwire stays clean — the run completing proves it).
+    let spec2 = ClusterSpec::new(
+        FabricConfig {
+            interconnect: Interconnect::Ib,
+            nodes: 2,
+            procs_per_node: 1,
+            max_contexts_per_node: 64,
+        },
+        MpiConfig::optimized(6),
+        1,
+    );
+    run_ok(spec2, |proc, _t| {
+        let world = proc.comm_world();
+        let comm = proc
+            .comm_dup_with_info(&world, &Info::new().with("vcmpi_collectives", "dedicated"));
+        let lane = proc.dedicated_coll_lane(&comm);
+        assert_ne!(lane, 0, "the fallback lane is never a dedicated lane");
+        assert!(proc.stripe_lane_pinned(lane), "reserving pins the lane");
+        // Collectives route over the reserved lane and still work.
+        proc.barrier(&comm);
+        let mut v = vec![1.0f32; 97];
+        proc.allreduce_f32(&comm, &mut v);
+        assert!(v.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        assert!(proc.stripe_lane_pinned(lane), "pin survives the collectives");
+        proc.comm_free(comm);
+        assert!(!proc.stripe_lane_pinned(lane), "comm_free releases the reserved lane");
     });
 }
 

@@ -140,6 +140,26 @@ fn fig9_p2p_mixed_policy_completes() {
     assert_eq!(fig9_p2p_mixed(MpiConfig::striped_sharded(8), true), SimOutcome::Completed);
 }
 
+#[test]
+fn dedicated_lane_allreduce_completes_under_striped_p2p_storm() {
+    // The collectives-policy deadlock case: thread 0 on every proc runs
+    // dedicated-lane allreduces while the remaining threads drive a
+    // striped p2p storm over an info-keyed hot comm on the same pool.
+    // The reserved lane is pinned out of the striped sweep, so the
+    // collective's completion depends on its own lane polling plus the
+    // global-round backstop — it must complete, never starve.
+    let r = vcmpi::bench::coll_rate_run(vcmpi::bench::CollRateParams {
+        mode: vcmpi::bench::CollMode::CollDedicatedStorm,
+        threads: 4,
+        elems: 4096,
+        reps: 2,
+        segments: 4,
+        storm_msgs: 128,
+        cfg_override: None,
+    });
+    assert!(r.rate > 0.0, "dedicated-lane allreduce must make progress under the storm");
+}
+
 /// Fig. 9 (right), transcribed (software-RMA fabric, large Gets):
 /// Rank 0:              Get(win1); Get(win2); flush(win1); flush(win2);
 /// Rank 1 / Thread 0:   Get(win1); B; B; flush(win1);

@@ -419,6 +419,78 @@ fn prop_random_traffic_striped_eager_and_rendezvous() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Collectives: the segmented/pipelined engine vs a host-computed
+// reduction oracle, across every `vcmpi_collectives` policy (rides the
+// nightly PROPTEST_CASES=400 soak).
+// ---------------------------------------------------------------------
+
+/// Random payload sizes, segment counts, comm sizes, and collectives
+/// policies (inherit on ordered and striped comms, dedicated, striped):
+/// allreduce must match the host-computed per-element sum, the scalar
+/// path must be exact, and bcast from a random root must deliver — then
+/// `comm_free` tears the policy (and any dedicated lane) down cleanly.
+#[test]
+fn prop_collectives_vs_scalar_oracle() {
+    for seed in 0..cases(10) {
+        let mut rng = SplitMix64::new(0xC011 ^ (seed << 4));
+        let nprocs = 2 + rng.gen_usize(4); // 2..=5
+        let len = 1 + rng.gen_usize(700);
+        let segments = 1 + rng.gen_usize(9); // 1..=9
+        let (arm, cfg) = match rng.gen_usize(4) {
+            0 => (None, MpiConfig::optimized(5)),
+            1 => (None, MpiConfig::striped_sharded(5)),
+            2 => (Some("dedicated"), MpiConfig::optimized(5)),
+            _ => (Some("striped"), MpiConfig::optimized(5)),
+        };
+        let root = rng.gen_usize(nprocs);
+        let spec = ClusterSpec::new(
+            FabricConfig {
+                interconnect: Interconnect::Ib,
+                nodes: nprocs,
+                procs_per_node: 1,
+                max_contexts_per_node: 64,
+            },
+            cfg,
+            1,
+        );
+        let r = run_cluster(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let mut info = Info::new().with("vcmpi_coll_segments", segments.to_string());
+            if let Some(mode) = arm {
+                info.set("vcmpi_collectives", mode);
+            }
+            let comm = proc.comm_dup_with_info(&world, &info);
+            let n = proc.nprocs();
+            let mut data: Vec<f32> =
+                (0..len).map(|i| ((proc.rank() * 1000 + i) % 97) as f32).collect();
+            proc.allreduce_f32(&comm, &mut data);
+            for (i, &v) in data.iter().enumerate() {
+                let want: f32 = (0..n).map(|r| ((r * 1000 + i) % 97) as f32).sum();
+                assert!(
+                    (v - want).abs() <= want.abs() * 1e-5 + 1e-3,
+                    "seed {seed} i={i}: got {v}, want {want}"
+                );
+            }
+            // Scalar metrics ride the same segmented ring, exactly.
+            let s = proc.allreduce_scalar(&comm, (proc.rank() + 1) as f64);
+            let want_s: f64 = (1..=n).map(|r| r as f64).sum();
+            assert!((s - want_s).abs() < 1e-12, "seed {seed}: scalar {s} want {want_s}");
+            // Bcast from a random root through the same policy.
+            let payload: Vec<u8> = (0..(len % 211) + 1).map(|i| (i * 7 + root) as u8).collect();
+            let got = proc.bcast(
+                &comm,
+                root,
+                if proc.rank() == root { Some(payload.clone()) } else { None },
+            );
+            assert_eq!(got, payload, "seed {seed}: bcast mismatch");
+            proc.comm_free(comm);
+            proc.barrier(&world);
+        });
+        assert_eq!(r.outcome, SimOutcome::Completed, "seed {seed}");
+    }
+}
+
 /// Mixed per-communicator policies against the single-engine oracle: one
 /// process set hosts a striped+sharded comm, an ordered (`off`) comm, and
 /// a wildcard-heavy hashed-striped comm — created from info keys on a

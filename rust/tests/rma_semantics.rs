@@ -232,6 +232,48 @@ fn striped_window_flush_under_concurrent_multi_target_accumulates() {
 }
 
 #[test]
+fn striped_window_gets_fan_out_and_flush_counts_per_lane() {
+    // The striped-MPI_Get mirror of the striped-put watermark test: one
+    // origin thread issues a batch of gets on a striped window; each
+    // reply carries the issuing lane (like RmaAckCount), counts toward
+    // that lane's per-(window, target) watermark, and the data must land
+    // exactly — spread across multiple lanes, not funneled through one.
+    const SLOTS: usize = 16;
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 2), MpiConfig::optimized(6), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let win = proc.win_create_with_info(&world, SLOTS * 8, &striped_info());
+        assert!(win.policy.stripes_gets());
+        if proc.rank() == 1 {
+            for i in 0..SLOTS {
+                win.write_local(i * 8, &(0xA0A0_0000_u64 + i as u64).to_le_bytes());
+            }
+        }
+        proc.barrier(&world);
+        if proc.rank() == 0 {
+            let handles: Vec<_> = (0..SLOTS).map(|i| proc.get(&win, 1, i * 8, 8)).collect();
+            proc.win_flush(&win);
+            let lanes: std::collections::HashSet<usize> =
+                handles.iter().map(|h| h.1).collect();
+            assert!(
+                lanes.len() > 1,
+                "striped gets must fan out across lanes, got only {lanes:?}"
+            );
+            for (i, h) in handles.into_iter().enumerate() {
+                assert_eq!(
+                    proc.get_data(&win, h),
+                    (0xA0A0_0000_u64 + i as u64).to_le_bytes().to_vec(),
+                    "slot {i}"
+                );
+            }
+            assert_eq!(proc.stale_ctrl_drop_count(), 0);
+        }
+        proc.barrier(&world);
+        proc.win_free(&world, win);
+    });
+}
+
+#[test]
 fn striped_window_without_relaxed_ordering_keeps_accumulate_program_order() {
     // Decision table, middle row: `vcmpi_striping` alone stripes PUTS
     // (MPI imposes no inter-put order) but accumulates stay on the home

@@ -584,7 +584,13 @@ fn malformed_control_messages_are_dropped_not_fatal() {
                     flush_handle: 2,
                     lane: Some(9999), // striped marker on a bad span still just drops
                 },
-                Payload::RmaGetReq { win: win.id, offset: 60, len: 32, get_handle: 3 },
+                Payload::RmaGetReq {
+                    win: win.id,
+                    offset: 60,
+                    len: 32,
+                    get_handle: 3,
+                    lane: Some(9999), // striped get on a bad span drops too
+                },
                 Payload::RmaFetchOp {
                     win: win.id,
                     offset: 0,
