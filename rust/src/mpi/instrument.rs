@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::platform::{padvance, Backend};
 use crate::sim;
+use crate::sim::sanitizer::{self, LockTag};
 
 thread_local! {
     static LOCKS_VCI: Cell<u64> = const { Cell::new(0) };
@@ -19,8 +20,14 @@ thread_local! {
     static COLL_LANE_SPREAD: Cell<u64> = const { Cell::new(0) };
 }
 
-/// Which class of lock was taken (paper Table 1's columns, plus the
-/// matching-shard locks introduced by per-source sharded matching).
+/// Which class of lock was taken.
+///
+/// The first five are the paper Table 1 columns (plus the matching-shard
+/// locks introduced by per-source sharded matching) and are counted per
+/// thread. The remainder exist for SimSan's lock-order checking: they name
+/// every host (`std::sync`) mutex in `mpi/` plus the wildcard-epoch
+/// control lock, and are *not* counted (they are not Table-1 critical-path
+/// locks — EpochCtl was never counted, and host mutexes are bookkeeping).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LockClass {
     Global,
@@ -29,6 +36,39 @@ pub enum LockClass {
     Hook,
     /// A per-communicator matching shard (see `mpi::shard`).
     Shard,
+    /// Wildcard-epoch / engine-retirement control (`mpi::shard::EpochCtl`).
+    EpochCtl,
+    // --- host mutex classes (leaf-only; see sim::sanitizer) ---
+    /// `MpiProc::comms`.
+    HostComms,
+    /// `MpiProc::windows`.
+    HostWindows,
+    /// `MpiProc::stripe_seq`.
+    HostStripeSeq,
+    /// `MpiProc::split_seqs`.
+    HostSplitSeqs,
+    /// `MpiProc::freed_comms` (tripwire; may nest into the engine table).
+    HostFreedComms,
+    /// `MpiProc::match_engines` (the host engine table).
+    HostMatchEngines,
+    /// `MpiProc::policies` (nested inside the engine table on misses).
+    HostPolicies,
+    /// `MpiProc::coll_lanes` (may nest into the pin table).
+    HostCollLanes,
+    /// `MpiProc::ordered_pins`.
+    HostOrderedPins,
+    /// `Window::outstanding` (RMA completion records).
+    HostRmaOutstanding,
+    /// `Window::get_results` (parked MPI_Get payloads).
+    HostRmaResults,
+    /// `ReqSlot::data` (received payload parking).
+    HostSlotData,
+    /// `Vci::deferred_frees` (striped-flagged request frees).
+    HostDeferredFrees,
+    /// `VciPool::free` (VCI allocation free list).
+    HostPoolFree,
+    /// `world::NATIVE_MEASUREMENTS` (native-backend bench recording).
+    HostMeasurements,
 }
 
 pub fn count_lock(class: LockClass) {
@@ -38,8 +78,114 @@ pub fn count_lock(class: LockClass) {
         LockClass::Request => &LOCKS_REQUEST,
         LockClass::Hook => &LOCKS_HOOK,
         LockClass::Shard => &LOCKS_SHARD,
+        // Not Table-1 critical-path locks: uncounted.
+        _ => return,
     };
     cell.with(|c| c.set(c.get() + 1));
+}
+
+// ---------------------------------------------------------------------------
+// SimSan lock tags (see sim::sanitizer for the checking machinery)
+// ---------------------------------------------------------------------------
+//
+// Rank layout — strictly increasing along every legal nesting chain:
+//
+//   sim locks:   Global 10 < Hook 20 < Vci 30 < Request 40 < EpochCtl 50
+//                < Shard 60 (multi, ascending shard index)
+//   host locks:  rank >= 100, leaf-only relative to sim locks, ordered
+//                among themselves to permit the three legal host-host
+//                nestings: freed_comms -> match_engines -> policies
+//                (finalize / comm_match) and coll_lanes -> ordered_pins
+//                (dedicated_coll_lane).
+
+macro_rules! tags {
+    ($($cls:ident => $name:ident { $lit:literal, $rank:literal, $multi:literal, $host:literal }),+ $(,)?) => {
+        $(static $name: LockTag = LockTag {
+            name: $lit,
+            rank: $rank,
+            ordered: true,
+            multi: $multi,
+            host: $host,
+        };)+
+        /// The SimSan tag for a lock class (static identity; ranks above).
+        pub fn tag_of(class: LockClass) -> &'static LockTag {
+            match class {
+                $(LockClass::$cls => &$name,)+
+            }
+        }
+    };
+}
+
+tags! {
+    Global => TAG_GLOBAL { "cs.global", 10, false, false },
+    Hook => TAG_HOOK { "progress.hook", 20, false, false },
+    Vci => TAG_VCI { "vci.state", 30, false, false },
+    Request => TAG_REQUEST { "request.free", 40, false, false },
+    EpochCtl => TAG_EPOCH_CTL { "shard.epoch_ctl", 50, false, false },
+    Shard => TAG_SHARD { "shard.leaf", 60, true, false },
+    HostComms => TAG_HOST_COMMS { "host.comms", 100, false, true },
+    HostWindows => TAG_HOST_WINDOWS { "host.windows", 105, false, true },
+    HostStripeSeq => TAG_HOST_STRIPE_SEQ { "host.stripe_seq", 110, false, true },
+    HostSplitSeqs => TAG_HOST_SPLIT_SEQS { "host.split_seqs", 115, false, true },
+    HostFreedComms => TAG_HOST_FREED_COMMS { "host.freed_comms", 120, false, true },
+    HostMatchEngines => TAG_HOST_MATCH_ENGINES { "host.match_engines", 125, false, true },
+    HostPolicies => TAG_HOST_POLICIES { "host.policies", 130, false, true },
+    HostCollLanes => TAG_HOST_COLL_LANES { "host.coll_lanes", 135, false, true },
+    HostOrderedPins => TAG_HOST_ORDERED_PINS { "host.ordered_pins", 140, false, true },
+    HostRmaOutstanding => TAG_HOST_RMA_OUTSTANDING { "host.rma_outstanding", 145, false, true },
+    HostRmaResults => TAG_HOST_RMA_RESULTS { "host.rma_results", 150, false, true },
+    HostSlotData => TAG_HOST_SLOT_DATA { "host.slot_data", 155, false, true },
+    HostDeferredFrees => TAG_HOST_DEFERRED_FREES { "host.deferred_frees", 160, false, true },
+    HostPoolFree => TAG_HOST_POOL_FREE { "host.pool_free", 165, false, true },
+    HostMeasurements => TAG_HOST_MEASUREMENTS { "host.measurements", 170, false, true },
+}
+
+/// An instrumented host mutex: the only sanctioned way to use a
+/// `std::sync::Mutex` inside `mpi/` (enforced by
+/// `scripts/lint_lock_discipline.py`). Acquisition requires a
+/// [`LockClass`], participates in SimSan's held-lock stack (so holding one
+/// across a scheduler yield/park is reported), and recovers from poison
+/// like the rest of the crate.
+pub struct HostMutex<T> {
+    inner: std::sync::Mutex<T>, // lint:allow-host-mutex (the wrapper itself)
+}
+
+impl<T> HostMutex<T> {
+    pub fn new(value: T) -> Self {
+        HostMutex { inner: std::sync::Mutex::new(value) } // lint:allow-host-mutex
+    }
+
+    #[track_caller]
+    pub fn lock(&self, class: LockClass) -> HostMutexGuard<'_, T> {
+        let id = &self.inner as *const _ as *const u8 as usize;
+        sanitizer::lock_attempt(tag_of(class), id, 0);
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner()); // lint:allow-host-mutex
+        HostMutexGuard { guard: g, id }
+    }
+}
+
+pub struct HostMutexGuard<'a, T> {
+    guard: std::sync::MutexGuard<'a, T>,
+    id: usize,
+}
+
+impl<T> std::ops::Deref for HostMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::DerefMut for HostMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+impl<T> Drop for HostMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        sanitizer::lock_released(self.id);
+    }
 }
 
 pub fn count_atomic() {

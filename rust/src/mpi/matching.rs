@@ -278,17 +278,20 @@ impl MatchingState {
     /// cross-stream interleaving is not an MPI-visible order.
     ///
     /// A stream present in BOTH engines is only reachable from engine
-    /// adoption (`CommMatch::absorb_engine` merging a drained engine into
-    /// one that a concurrent striped arrival re-created) — epoch flips
-    /// move each stream whole. The re-created record cannot have matched
-    /// or admitted anything ahead of the migrated one beyond parking
-    /// in-window arrivals, and no receive can be posted before the
-    /// creation call returns, so the merge below reconciles exactly:
-    /// farthest admission point wins, parked arrivals the other engine
-    /// already admitted drop as counted duplicates, and any contiguous
-    /// run the union completes is admitted to the unexpected queue
-    /// (behind the migrated engine's earlier-seq admissions, preserving
-    /// per-stream order; the posted queue is empty in this scenario).
+    /// adoption — epoch flips move each stream whole. Between the
+    /// adoption's table swap and its stop-the-world drain
+    /// (`CommMatch::retire_into`), new arrivals land in the successor
+    /// while the retired engine still holds the stream's earlier state,
+    /// which is then migrated here. Each sequence number is delivered
+    /// once and admission is strictly sequential, so the two records
+    /// never admitted the same seq, and no receive can be posted before
+    /// the creation call returns — the merge below therefore reconciles
+    /// exactly: farthest admission point wins, parked arrivals the other
+    /// engine already admitted drop as counted duplicates (replays
+    /// straddling the adoption window), and any contiguous run the union
+    /// completes is admitted to the unexpected queue behind the
+    /// earlier-seq admissions, preserving per-stream order (the posted
+    /// queue is empty in this scenario).
     pub(crate) fn absorb_parts(&mut self, parts: MatchingParts) {
         self.posted.extend(parts.posted);
         self.unexpected.extend(parts.unexpected);
@@ -526,44 +529,47 @@ mod tests {
 
     #[test]
     fn absorb_parts_merges_colliding_streams_at_the_farthest_admission_point() {
-        // Engine-adoption double-race shape: the migrated engine admitted
-        // seqs 1-2 and parked 5; the raced-in engine parked 3 and 4
-        // (admitted nothing — its record started fresh). The merge must
+        // Adoption-window shape: the retired engine admitted seqs 1-2 and
+        // parked 5 before the table swap; seqs 3 and 4 then landed in the
+        // successor (parked — its record started fresh). The merge must
         // admit 3..5 behind 1-2 and leave the stream continuous at 6.
-        let mut migrated = MatchingState::new();
-        assert!(migrated.on_striped_arrival(umsg(1, 2, 7, 1)).is_empty());
-        assert!(migrated.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty());
-        assert!(migrated.on_striped_arrival(umsg(1, 2, 7, 5)).is_empty());
-        let mut winner = MatchingState::new();
-        assert!(winner.on_striped_arrival(umsg(1, 2, 7, 3)).is_empty());
-        assert!(winner.on_striped_arrival(umsg(1, 2, 7, 4)).is_empty());
-        assert_eq!(winner.unexpected_len(), 0, "fresh record parks everything");
-        winner.absorb_parts(migrated.take_parts());
-        assert_eq!(winner.unexpected_len(), 5, "union completes the run");
-        assert_eq!(winner.reorder_parked(), 0);
-        assert_eq!(winner.next_expected_seq(1, 2), 6);
+        let mut retired = MatchingState::new();
+        assert!(retired.on_striped_arrival(umsg(1, 2, 7, 1)).is_empty());
+        assert!(retired.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty());
+        assert!(retired.on_striped_arrival(umsg(1, 2, 7, 5)).is_empty());
+        let mut successor = MatchingState::new();
+        assert!(successor.on_striped_arrival(umsg(1, 2, 7, 3)).is_empty());
+        assert!(successor.on_striped_arrival(umsg(1, 2, 7, 4)).is_empty());
+        assert_eq!(successor.unexpected_len(), 0, "fresh record parks everything");
+        successor.absorb_parts(retired.take_parts());
+        assert_eq!(successor.unexpected_len(), 5, "union completes the run");
+        assert_eq!(successor.reorder_parked(), 0);
+        assert_eq!(successor.next_expected_seq(1, 2), 6);
         for want in 1..=5u64 {
-            let got = winner.on_post(precv(1, Src::Rank(2), Tag::Value(7), 9)).unwrap();
+            let got = successor.on_post(precv(1, Src::Rank(2), Tag::Value(7), 9)).unwrap();
             assert_eq!(got.seq, want, "merged stream out of order");
         }
-        assert_eq!(winner.dup_seq_drops(), 0, "no duplicates were in play");
+        assert_eq!(successor.dup_seq_drops(), 0, "no duplicates were in play");
     }
 
     #[test]
     fn absorb_parts_drops_already_admitted_parked_arrivals() {
-        // The raced-in engine parked a seq the migrated engine had already
+        // The successor parked a seq the retired engine had already
         // admitted (a replay straddling the adoption window): it must be
         // dropped and counted, not re-admitted.
-        let mut migrated = MatchingState::new();
-        assert!(migrated.on_striped_arrival(umsg(1, 2, 7, 1)).is_empty());
-        assert!(migrated.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty());
-        let mut winner = MatchingState::new();
-        assert!(winner.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty(), "parks on fresh record");
-        winner.absorb_parts(migrated.take_parts());
-        assert_eq!(winner.unexpected_len(), 2, "only the admitted 1-2 survive");
-        assert_eq!(winner.next_expected_seq(1, 2), 3);
-        assert_eq!(winner.dup_seq_drops(), 1, "replayed seq 2 dropped and counted");
-        assert_eq!(winner.reorder_parked(), 0);
+        let mut retired = MatchingState::new();
+        assert!(retired.on_striped_arrival(umsg(1, 2, 7, 1)).is_empty());
+        assert!(retired.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty());
+        let mut successor = MatchingState::new();
+        assert!(
+            successor.on_striped_arrival(umsg(1, 2, 7, 2)).is_empty(),
+            "parks on fresh record"
+        );
+        successor.absorb_parts(retired.take_parts());
+        assert_eq!(successor.unexpected_len(), 2, "only the admitted 1-2 survive");
+        assert_eq!(successor.next_expected_seq(1, 2), 3);
+        assert_eq!(successor.dup_seq_drops(), 1, "replayed seq 2 dropped and counted");
+        assert_eq!(successor.reorder_parked(), 0);
     }
 
     #[test]

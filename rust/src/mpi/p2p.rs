@@ -13,7 +13,7 @@ use crate::fabric::{P2pProtocol, Payload};
 use crate::platform::{padvance, pnow};
 
 use super::config::CsMode;
-use super::instrument::count_lock;
+use super::instrument::LockClass;
 use super::matching::{Arrival, PostedRecv, SenderInfo, Src, Tag, UnexpectedMsg};
 use super::proc::MpiProc;
 use super::request::{ReqId, Request, REQ_FLAG_DOORBELL, REQ_FLAG_STRIPED};
@@ -384,8 +384,21 @@ impl MpiProc {
                 (id, self.cached_comm_match(st, comm.id))
             });
             padvance(self.backend, self.costs.instructions(3) + self.costs.match_cost);
-            let posted = PostedRecv { comm_id: comm.id, src, tag, req: id };
-            if let Some(m) = cm.post(posted) {
+            let mut cm = cm;
+            let mut posted = PostedRecv { comm_id: comm.id, src, tag, req: id };
+            let matched = loop {
+                match cm.post(posted) {
+                    Ok(m) => break m,
+                    Err(back) => {
+                        // The engine was retired by a policy adoption
+                        // between resolution and post: the table already
+                        // holds the successor — retry there.
+                        posted = back;
+                        cm = self.comm_match(comm.id);
+                    }
+                }
+            };
+            if let Some(m) = matched {
                 // Matched straight off the unexpected queue (wildcard
                 // epoch accounting, if any, happened inside `post`).
                 self.consume_matched(vci.ctx_index, id, m);
@@ -429,7 +442,7 @@ impl MpiProc {
                     self.backend,
                     self.costs.memcpy_cost(data.len()) + self.costs.completion_process,
                 );
-                *self.slab.slot(id).data.lock().unwrap_or_else(|e| e.into_inner()) = Some(data);
+                *self.slab.slot(id).data.lock(LockClass::HostSlotData) = Some(data);
                 self.slab.slot(id).completed.store(1, self.charged_atomics());
                 if needs_ack {
                     self.reply(my_ctx_index, &m.sender, Payload::SendAck {
@@ -489,8 +502,7 @@ impl MpiProc {
         match req {
             Request::Lightweight { vci } => {
                 if self.cfg.cs_mode == CsMode::Global && self.guard() != Guard::None {
-                    count_lock(super::instrument::LockClass::Global);
-                    let _g = self.global_cs.lock();
+                    let _g = self.global_cs.lock_class(LockClass::Global);
                     self.lightweight_release(vci);
                 } else {
                     self.lightweight_release(vci);
@@ -511,8 +523,7 @@ impl MpiProc {
                     }
                     self.progress_with(vci, striped, doorbell);
                 }
-                let data =
-                    self.slab.slot(id).data.lock().unwrap_or_else(|e| e.into_inner()).take();
+                let data = self.slab.slot(id).data.lock(LockClass::HostSlotData).take();
                 if self.guard() == Guard::GlobalHeld {
                     let _cs = self.enter_cs();
                     self.release_request(id, vci);

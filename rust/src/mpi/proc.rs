@@ -5,7 +5,7 @@
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 use crate::fabric::{Interconnect, ProcFabric};
 use crate::platform::{padvance, pyield, Backend, PMutex};
@@ -13,7 +13,7 @@ use crate::sim::CostModel;
 
 use super::comm::{Comm, CommKind};
 use super::config::{CsMode, MpiConfig, VciStriping};
-use super::instrument::{count_lock, LockClass};
+use super::instrument::{HostMutex, LockClass};
 use super::policy::{CollectivesMode, CommPolicy, Info, WinPolicy};
 use super::request::{RequestSlab, DEFAULT_SLAB_CAPACITY};
 use super::rma::Window;
@@ -157,8 +157,8 @@ pub struct MpiProc {
     pub global_cs: PMutex<()>,
     pub hooks: [ProgressHook; 2],
     /// Live communicators (host table; creation is off the critical path).
-    comms: Mutex<Vec<Comm>>,
-    pub(super) windows: Mutex<Vec<Arc<Window>>>,
+    comms: HostMutex<Vec<Comm>>,
+    pub(super) windows: HostMutex<Vec<Arc<Window>>>,
     next_comm_id: AtomicU64,
     pub(super) next_win_id: AtomicU64,
     /// Signals service threads (PSM2-style progress) to stop.
@@ -169,7 +169,7 @@ pub struct MpiProc {
     /// out across VCIs — the receiver's reorder stage keys off it. Host
     /// mutex; the modeled cost of the shared fetch-add is charged at the
     /// call site ([`MpiProc::next_stripe_seq`]).
-    stripe_seq: Mutex<HashMap<(u64, usize), u64>>,
+    stripe_seq: HostMutex<HashMap<(u64, usize), u64>>,
     /// Striping: round-robin cursor for per-message send VCI selection.
     stripe_rr: AtomicUsize,
     /// Striping: rotation cursor for progress polling (a striped comm's
@@ -178,7 +178,7 @@ pub struct MpiProc {
     /// Sharded matching engines, one per communicator seen carrying
     /// striped traffic (created lazily; see `mpi::shard`). Host mutex: the
     /// lookup models a comm-id indexed table walk, free in virtual time.
-    match_engines: Mutex<HashMap<u64, Arc<CommMatch>>>,
+    match_engines: HostMutex<HashMap<u64, Arc<CommMatch>>>,
     /// The process-default [`CommPolicy`] — the demoted `MpiConfig` knobs.
     /// Every communicator (including MPI_COMM_WORLD) starts from it; info
     /// keys at creation override per communicator.
@@ -187,19 +187,19 @@ pub struct MpiProc {
     /// only sees comm ids on the wire, so engine creation resolves the
     /// registered policy here. Host mutex (creation path + first-message
     /// engine builds only).
-    policies: Mutex<HashMap<u64, Arc<CommPolicy>>>,
+    policies: HostMutex<HashMap<u64, Arc<CommPolicy>>>,
     /// Comm ids freed by `comm_free`/`free_endpoints` — finalize asserts
     /// none of them remains cached in any VCI's `match_cache` or in the
     /// engine table (a freed comm must not pin shard engines forever).
     /// Diagnostic tripwire, bounded at [`FREED_TRACK_CAP`] ids so a
     /// per-iteration create/free loop cannot grow it without bound.
-    freed_comms: Mutex<HashSet<u64>>,
+    freed_comms: HostMutex<HashSet<u64>>,
     /// Stripe-lane pins: per-VCI count of live ordered (`striping=off`)
     /// and endpoints communicators — and ordered RMA windows — funneling
     /// through it. A pinned lane is excluded from stripe-VCI selection and
     /// the striped progress sweep, so a latency-ordered communicator's (or
     /// ordered window's) VCI never queues striped bulk.
-    ordered_pins: Mutex<HashMap<usize, u32>>,
+    ordered_pins: HostMutex<HashMap<usize, u32>>,
     /// Bitmask mirror of `ordered_pins` (a word array covering the whole
     /// configured pool), read lock-free on the per-message stripe paths.
     stripe_excluded: PinMask,
@@ -209,7 +209,7 @@ pub struct MpiProc {
     /// `ordered_pins`, so striped p2p bulk never queues ahead of an
     /// allreduce step) and releases it at `comm_free`. Host mutex:
     /// consulted once per collective segment, off the wire path.
-    coll_lanes: Mutex<HashMap<u64, usize>>,
+    coll_lanes: HostMutex<HashMap<u64, usize>>,
     /// The process-default [`WinPolicy`] — the demoted
     /// `accumulate_ordering_none` hint. Every window starts from it; info
     /// keys at `win_create_with_info` override per window.
@@ -219,7 +219,7 @@ pub struct MpiProc {
     /// the parent's members only, so a per-parent counter stays symmetric
     /// even when subgroups split independently (a process-wide counter
     /// would diverge between members with different split histories).
-    split_seqs: Mutex<HashMap<u64, u64>>,
+    split_seqs: HostMutex<HashMap<u64, u64>>,
     /// Striped envelopes that forced an engine for a communicator whose
     /// registered policy says `striping=off` — a wire-contract violation
     /// (members passed different info keys). Counted, never fatal.
@@ -260,24 +260,24 @@ impl MpiProc {
                 ProgressHook { lock: PMutex::new(backend, ()), active: AtomicBool::new(false) },
                 ProgressHook { lock: PMutex::new(backend, ()), active: AtomicBool::new(false) },
             ],
-            comms: Mutex::new(Vec::new()),
-            windows: Mutex::new(Vec::new()),
+            comms: HostMutex::new(Vec::new()),
+            windows: HostMutex::new(Vec::new()),
             next_comm_id: AtomicU64::new(1),
             next_win_id: AtomicU64::new(1),
             finalized: AtomicBool::new(false),
             initialized: AtomicBool::new(false),
-            stripe_seq: Mutex::new(HashMap::new()),
+            stripe_seq: HostMutex::new(HashMap::new()),
             stripe_rr: AtomicUsize::new(0),
             stripe_poll_rr: AtomicUsize::new(0),
-            match_engines: Mutex::new(HashMap::new()),
+            match_engines: HostMutex::new(HashMap::new()),
             default_policy,
-            policies: Mutex::new(policies),
-            freed_comms: Mutex::new(HashSet::new()),
-            ordered_pins: Mutex::new(HashMap::new()),
+            policies: HostMutex::new(policies),
+            freed_comms: HostMutex::new(HashSet::new()),
+            ordered_pins: HostMutex::new(HashMap::new()),
             stripe_excluded: PinMask::new(pin_lanes),
-            coll_lanes: Mutex::new(HashMap::new()),
+            coll_lanes: HostMutex::new(HashMap::new()),
             default_win_policy,
-            split_seqs: Mutex::new(HashMap::new()),
+            split_seqs: HostMutex::new(HashMap::new()),
             policy_mismatches: AtomicU64::new(0),
             doorbell_skips: AtomicU64::new(0),
             empty_polls: AtomicU64::new(0),
@@ -314,10 +314,7 @@ impl MpiProc {
             return None;
         }
         match self.cfg.cs_mode {
-            CsMode::Global => {
-                count_lock(LockClass::Global);
-                Some(self.global_cs.lock())
-            }
+            CsMode::Global => Some(self.global_cs.lock_class(LockClass::Global)),
             CsMode::Fg => None,
         }
     }
@@ -417,13 +414,12 @@ impl MpiProc {
             // and not as a cached handle in any VCI (either would pin the
             // freed comm's shard engines for the life of the process).
             let freed: Vec<u64> = {
-                let f = self.freed_comms.lock().unwrap_or_else(|e| e.into_inner());
+                let f = self.freed_comms.lock(LockClass::HostFreedComms);
                 f.iter().copied().collect()
             };
             if !freed.is_empty() {
                 {
-                    let engines =
-                        self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+                    let engines = self.match_engines.lock(LockClass::HostMatchEngines);
                     for id in &freed {
                         assert!(
                             !engines.contains_key(id),
@@ -499,7 +495,7 @@ impl MpiProc {
             kind: parent.kind.clone(),
             policy,
         };
-        self.comms.lock().unwrap_or_else(|e| e.into_inner()).push(c.clone());
+        self.comms.lock(LockClass::HostComms).push(c.clone());
         self.register_comm(&c);
         c
     }
@@ -531,7 +527,7 @@ impl MpiProc {
         let procs: Vec<usize> = members.iter().map(|&r| self.route(parent, r).0).collect();
         padvance(self.backend, self.costs.instructions(400)); // split bookkeeping
         let seq = {
-            let mut t = self.split_seqs.lock().unwrap_or_else(|e| e.into_inner());
+            let mut t = self.split_seqs.lock(LockClass::HostSplitSeqs);
             let e = t.entry(parent.id).or_insert(0);
             *e += 1;
             *e
@@ -548,7 +544,7 @@ impl MpiProc {
             kind: CommKind::Group { procs: Arc::new(procs) },
             policy,
         };
-        self.comms.lock().unwrap_or_else(|e| e.into_inner()).push(c.clone());
+        self.comms.lock(LockClass::HostComms).push(c.clone());
         self.register_comm(&c);
         c
     }
@@ -561,7 +557,7 @@ impl MpiProc {
     pub fn comm_free(&self, comm: Comm) {
         self.vcis().release(comm.vci);
         {
-            let mut t = self.comms.lock().unwrap_or_else(|e| e.into_inner());
+            let mut t = self.comms.lock(LockClass::HostComms);
             t.retain(|c| c.id != comm.id);
         }
         self.unregister_comm(&comm);
@@ -572,10 +568,7 @@ impl MpiProc {
     /// endpoints comms exclude their VCIs from striping), and adoption of
     /// any engine a racing striped arrival created with the default shape.
     pub(super) fn register_comm(&self, comm: &Comm) {
-        self.policies
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .insert(comm.id, comm.policy.clone());
+        self.policies.lock(LockClass::HostPolicies).insert(comm.id, comm.policy.clone());
         match &comm.kind {
             CommKind::Endpoints { vcis, .. } => {
                 for &v in vcis.iter() {
@@ -590,7 +583,7 @@ impl MpiProc {
 
     /// Reverse of [`MpiProc::register_comm`], at communicator free.
     pub(super) fn unregister_comm(&self, comm: &Comm) {
-        self.policies.lock().unwrap_or_else(|e| e.into_inner()).remove(&comm.id);
+        self.policies.lock(LockClass::HostPolicies).remove(&comm.id);
         match &comm.kind {
             CommKind::Endpoints { vcis, .. } => {
                 for &v in vcis.iter() {
@@ -604,15 +597,15 @@ impl MpiProc {
         // (the acceptance tripwire: a freed `vcmpi_collectives=dedicated`
         // comm must not keep its lane pinned out of the stripe set).
         let coll_lane = {
-            let mut t = self.coll_lanes.lock().unwrap_or_else(|e| e.into_inner());
+            let mut t = self.coll_lanes.lock(LockClass::HostCollLanes);
             t.remove(&comm.id)
         };
         if let Some(lane) = coll_lane {
             self.unpin_ordered_lane(lane);
         }
-        self.match_engines.lock().unwrap_or_else(|e| e.into_inner()).remove(&comm.id);
+        self.match_engines.lock(LockClass::HostMatchEngines).remove(&comm.id);
         {
-            let mut f = self.freed_comms.lock().unwrap_or_else(|e| e.into_inner());
+            let mut f = self.freed_comms.lock(LockClass::HostFreedComms);
             if f.len() < FREED_TRACK_CAP {
                 f.insert(comm.id);
             }
@@ -628,7 +621,7 @@ impl MpiProc {
         if vci_idx == FALLBACK_VCI {
             return;
         }
-        let mut pins = self.ordered_pins.lock().unwrap_or_else(|e| e.into_inner());
+        let mut pins = self.ordered_pins.lock(LockClass::HostOrderedPins);
         *pins.entry(vci_idx).or_insert(0) += 1;
         self.stripe_excluded.pin(vci_idx);
     }
@@ -637,7 +630,7 @@ impl MpiProc {
         if vci_idx == FALLBACK_VCI {
             return;
         }
-        let mut pins = self.ordered_pins.lock().unwrap_or_else(|e| e.into_inner());
+        let mut pins = self.ordered_pins.lock(LockClass::HostOrderedPins);
         if let Some(c) = pins.get_mut(&vci_idx) {
             *c -= 1;
             if *c == 0 {
@@ -655,15 +648,19 @@ impl MpiProc {
 
     /// If a striped arrival raced this communicator's creation, an engine
     /// was lazily built with the process-default shape; replace it with
-    /// one built from the registered policy, migrating queued state whole
-    /// (per-stream order and seq continuity preserved — see
-    /// `CommMatch::absorb_engine`), then drop every VCI's stale handle.
+    /// one built from the registered policy via a stop-the-world adoption
+    /// epoch (`CommMatch::retire_into`). The table entry is swapped to
+    /// the successor FIRST, so the entry exists throughout and a
+    /// concurrent striped arrival can never lazily create a third engine
+    /// mid-migration — the double-adoption race the old
+    /// remove/rebuild/reinsert protocol left open.
     fn adopt_policy_engine(&self, comm_id: u64, policy: &CommPolicy) {
         // Never hold the host table mutex across shard (PMutex) locks: a
         // sim-side park under a host lock would host-deadlock the DES
-        // (same discipline as `reorder_stats`).
-        let old = {
-            let mut table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+        // (same discipline as `reorder_stats`). Building the successor
+        // under the table lock is fine — `CommMatch::new` takes no locks.
+        let swapped = {
+            let mut table = self.match_engines.lock(LockClass::HostMatchEngines);
             let mismatch = match table.get(&comm_id) {
                 Some(old) => {
                     old.shard_count() != policy.shard_mask() + 1
@@ -674,34 +671,29 @@ impl MpiProc {
             if !mismatch {
                 return;
             }
-            table.remove(&comm_id)
+            let fresh = CommMatch::new(
+                self.backend,
+                comm_id,
+                policy.match_shards,
+                policy.wildcard_linger,
+            );
+            let old = table
+                .insert(comm_id, fresh.clone())
+                .expect("mismatched engine vanished under the table lock");
+            (old, fresh)
         };
-        let Some(old) = old else { return };
-        // Order matters: purge every VCI's cached handle BEFORE draining
-        // the old engine. The purge takes each VCI's state lock, so it
-        // serializes behind any in-flight handler still holding a cached
-        // reference — by the time the purge completes, every such handler
-        // has finished depositing into `old` and nobody can resolve it
-        // again (the table entry is gone, the caches are empty). Only
-        // then is it safe to migrate `old`'s queues without stranding a
-        // concurrent arrival or post in an abandoned engine.
+        let (old, fresh) = swapped;
+        // Quiesce the caches: drop every VCI's handle to `old`. The purge
+        // takes each VCI's state lock, so it serializes behind in-flight
+        // handlers that resolved `old` from their cache; each such handler
+        // either finishes depositing before the drain below (its state
+        // migrates) or observes the `retired` flag under its shard lock
+        // and retries through the table, which has resolved `fresh` since
+        // the swap above.
         self.purge_match_caches(comm_id);
-        let fresh =
-            CommMatch::new(self.backend, comm_id, policy.match_shards, policy.wildcard_linger);
-        fresh.absorb_engine(&old);
-        let winner = {
-            let mut table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
-            table.entry(comm_id).or_insert_with(|| fresh.clone()).clone()
-        };
-        if !Arc::ptr_eq(&winner, &fresh) {
-            // A striped arrival raced the swap window and re-created the
-            // engine — with the registered policy's shape, since the
-            // policy table was updated first. Merge our migrated state
-            // into it (streams never straddle engines, so per-stream
-            // order is preserved; the collision debug-assert in
-            // `absorb_parts` is the tripwire).
-            winner.absorb_engine(&fresh);
-        }
+        // Retire: under ALL of old's shard locks (ascending index — the
+        // wildcard-epoch pattern), flag it and migrate its queues whole.
+        old.retire_into(&fresh);
     }
 
     /// Drop `comm_id`'s cached engine handle from every VCI (comm free or
@@ -805,12 +797,12 @@ impl MpiProc {
     /// where we would not — a wire-contract violation, counted in
     /// [`MpiProc::policy_mismatch_count`].
     pub fn comm_match(&self, comm_id: u64) -> Arc<CommMatch> {
-        let mut table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+        let mut table = self.match_engines.lock(LockClass::HostMatchEngines);
         table
             .entry(comm_id)
             .or_insert_with(|| {
                 let (shards, linger, off) = {
-                    let p = self.policies.lock().unwrap_or_else(|e| e.into_inner());
+                    let p = self.policies.lock(LockClass::HostPolicies);
                     match p.get(&comm_id) {
                         Some(pol) => (pol.match_shards, pol.wildcard_linger, !pol.striped()),
                         None => (
@@ -832,7 +824,7 @@ impl MpiProc {
     /// Test/bench aid: proves which communicators carried striped traffic
     /// (an ordered comm must never grow one).
     pub fn has_match_engine(&self, comm_id: u64) -> bool {
-        self.match_engines.lock().unwrap_or_else(|e| e.into_inner()).contains_key(&comm_id)
+        self.match_engines.lock(LockClass::HostMatchEngines).contains_key(&comm_id)
     }
 
     /// Striped envelopes seen for communicators whose registered policy
@@ -856,7 +848,7 @@ impl MpiProc {
     /// transfer (the line ping-pongs between sender threads).
     pub(super) fn next_stripe_seq(&self, comm_id: u64, dst: usize) -> u64 {
         padvance(self.backend, self.costs.atomic_rmw + self.costs.cacheline_transfer);
-        let mut t = self.stripe_seq.lock().unwrap_or_else(|e| e.into_inner());
+        let mut t = self.stripe_seq.lock(LockClass::HostStripeSeq);
         let e = t.entry((comm_id, dst)).or_insert(0);
         *e += 1;
         *e
@@ -1037,7 +1029,7 @@ impl MpiProc {
         if space <= 1 {
             return FALLBACK_VCI;
         }
-        let mut lanes = self.coll_lanes.lock().unwrap_or_else(|e| e.into_inner());
+        let mut lanes = self.coll_lanes.lock(LockClass::HostCollLanes);
         if let Some(&l) = lanes.get(&comm.id) {
             return l;
         }
@@ -1172,7 +1164,7 @@ impl MpiProc {
             parked += p;
         }
         let engines: Vec<Arc<CommMatch>> = {
-            let table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+            let table = self.match_engines.lock(LockClass::HostMatchEngines);
             table.values().cloned().collect()
         };
         for cm in engines {
@@ -1186,7 +1178,7 @@ impl MpiProc {
     /// Wildcard-epoch statistics summed over this process's sharded
     /// communicator engines.
     pub fn epoch_stats(&self) -> EpochStats {
-        let table = self.match_engines.lock().unwrap_or_else(|e| e.into_inner());
+        let table = self.match_engines.lock(LockClass::HostMatchEngines);
         let mut total = EpochStats::default();
         for cm in table.values() {
             let s = cm.epoch_stats();

@@ -56,7 +56,7 @@ use std::sync::atomic::Ordering;
 use crate::fabric::{P2pProtocol, Payload, WireMsg};
 use crate::platform::padvance;
 
-use super::instrument::{self, count_lock, LockClass};
+use super::instrument::{self, LockClass};
 use super::matching::{Arrival, SenderInfo, Src, UnexpectedMsg};
 use super::proc::MpiProc;
 use super::vci::VciState;
@@ -178,8 +178,7 @@ impl MpiProc {
         for hook in &self.hooks {
             padvance(self.backend, self.costs.progress_hook_check);
             if hook.active.load(Ordering::Relaxed) && self.guard() == Guard::VciLock {
-                count_lock(LockClass::Hook);
-                let _g = hook.lock.lock();
+                let _g = hook.lock.lock_class(LockClass::Hook);
                 // (No hook workloads are registered in this reproduction;
                 // the lock models the cost structure for Table 1.)
             }
@@ -200,8 +199,21 @@ impl MpiProc {
     /// matched pairs are already bound, so consumption order across
     /// requests is not MPI-visible.
     fn sharded_arrival(&self, st: &mut VciState, my_ctx_index: usize, um: UnexpectedMsg) {
-        let cm = self.cached_comm_match(st, um.comm_id);
-        let matched = cm.striped_arrival(um);
+        let mut um = um;
+        let (cm, matched) = loop {
+            let cm = self.cached_comm_match(st, um.comm_id);
+            match cm.striped_arrival(um) {
+                Ok(matched) => break (cm, matched),
+                Err(back) => {
+                    // The engine was retired by a policy adoption
+                    // mid-flight: the table was swapped to the successor
+                    // before the drain, so refresh this VCI's stale
+                    // handle and retry there.
+                    st.match_cache.remove(&back.comm_id);
+                    um = back;
+                }
+            }
+        };
         let mut wildcards = 0u64;
         for (p, um) in matched {
             if p.src == Src::Any {
@@ -296,7 +308,7 @@ impl MpiProc {
                             self.backend,
                             self.costs.memcpy_cost(data.len()) + self.costs.completion_process,
                         );
-                        *slot.data.lock().unwrap_or_else(|e| e.into_inner()) = Some(data);
+                        *slot.data.lock(LockClass::HostSlotData) = Some(data);
                         slot.completed.store(1, self.charged_atomics());
                     }
                 }

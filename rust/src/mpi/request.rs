@@ -2,12 +2,11 @@
 //! caches, and lightweight pre-completed requests (paper §4.1 and §4.3).
 
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 use crate::platform::{padvance, Backend, PMutex};
 use crate::sim::CostModel;
 
-use super::instrument::{count_lock, LockClass, ModeledCounter};
+use super::instrument::{HostMutex, LockClass, ModeledCounter};
 
 /// Slab index of a real request.
 pub type ReqId = u32;
@@ -68,7 +67,7 @@ pub struct ReqSlot {
     /// ordered comm's request polls only its own VCI, in the same process.
     pub flags: AtomicU8,
     /// Received payload (recv requests) or fetched data (RMA).
-    pub data: Mutex<Option<Vec<u8>>>,
+    pub data: HostMutex<Option<Vec<u8>>>,
     /// Generation counter guarding against stale handles (debug aid).
     pub generation: AtomicU64,
 }
@@ -80,7 +79,7 @@ impl ReqSlot {
             complete_at: AtomicU64::new(0),
             vci: AtomicUsize::new(0),
             flags: AtomicU8::new(0),
-            data: Mutex::new(None),
+            data: HostMutex::new(None),
             generation: AtomicU64::new(0),
         }
     }
@@ -126,8 +125,7 @@ impl RequestSlab {
     /// so `take_lock` is false and no lock is counted.
     pub fn alloc_global(&self, costs: &CostModel, take_lock: bool) -> ReqId {
         let id = if take_lock {
-            count_lock(LockClass::Request);
-            let mut f = self.free.lock();
+            let mut f = self.free.lock_class(LockClass::Request);
             padvance(self.backend, costs.request_pool_op);
             f.pop().expect("request slab exhausted")
         } else {
@@ -135,7 +133,7 @@ impl RequestSlab {
             // mode (paper Fig. 12 — unsafely racy in real code; here the
             // host lock keeps the data sane and charges only the
             // uncontended fast path).
-            let mut f = self.free.lock();
+            let mut f = self.free.lock_uncounted(LockClass::Request);
             padvance(self.backend, costs.request_pool_op);
             f.pop().expect("request slab exhausted")
         };
@@ -144,19 +142,18 @@ impl RequestSlab {
         s.complete_at.store(0, Ordering::Release);
         s.flags.store(0, Ordering::Relaxed);
         s.generation.fetch_add(1, Ordering::AcqRel);
-        *s.data.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        *s.data.lock(LockClass::HostSlotData) = None;
         id
     }
 
     /// Return a request to the global pool.
     pub fn free_global(&self, id: ReqId, costs: &CostModel, take_lock: bool) {
         if take_lock {
-            count_lock(LockClass::Request);
-            let mut f = self.free.lock();
+            let mut f = self.free.lock_class(LockClass::Request);
             padvance(self.backend, costs.request_pool_op);
             f.push(id);
         } else {
-            let mut f = self.free.lock();
+            let mut f = self.free.lock_uncounted(LockClass::Request);
             padvance(self.backend, costs.request_pool_op);
             f.push(id);
         }
@@ -166,10 +163,11 @@ impl RequestSlab {
     /// of requests (slab style — also how MPICH batches pool traffic).
     /// Returns the ids; the caller stashes all but one in its cache.
     pub fn alloc_chunk(&self, costs: &CostModel, take_lock: bool, n: usize) -> Vec<ReqId> {
-        if take_lock {
-            count_lock(LockClass::Request);
-        }
-        let mut f = self.free.lock();
+        let mut f = if take_lock {
+            self.free.lock_class(LockClass::Request)
+        } else {
+            self.free.lock_uncounted(LockClass::Request)
+        };
         padvance(self.backend, costs.request_pool_op);
         let len = f.len();
         let take = n.min(len);
@@ -185,7 +183,7 @@ impl RequestSlab {
         s.complete_at.store(0, Ordering::Release);
         s.flags.store(0, Ordering::Relaxed);
         s.generation.fetch_add(1, Ordering::AcqRel);
-        *s.data.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        *s.data.lock(LockClass::HostSlotData) = None;
     }
 
     pub fn capacity(&self) -> usize {
@@ -219,12 +217,12 @@ mod tests {
         let c = CostModel::default();
         let a = s.alloc_global(&c, true);
         s.slot(a).completed.store(1, false);
-        *s.slot(a).data.lock().unwrap() = Some(vec![1, 2, 3]);
+        *s.slot(a).data.lock(LockClass::HostSlotData) = Some(vec![1, 2, 3]);
         s.free_global(a, &c, true);
         let a2 = s.alloc_global(&c, true);
         assert_eq!(a2, a);
         assert_eq!(s.slot(a2).completed.load(), 0);
-        assert!(s.slot(a2).data.lock().unwrap().is_none());
+        assert!(s.slot(a2).data.lock(LockClass::HostSlotData).is_none());
     }
 
     #[test]

@@ -54,11 +54,12 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::fabric::{AccOp, Interconnect, Payload, WindowMem};
 use crate::platform::{padvance, pnow};
 
+use super::instrument::{HostMutex, LockClass};
 use super::policy::{Info, WinPolicy};
 use super::proc::{thread_token, MpiProc};
 
@@ -73,9 +74,9 @@ pub struct Window {
     mem: Arc<WindowMem>,
     /// Per-thread outstanding-operation records (host table; threads only
     /// ever touch their own entry).
-    outstanding: Mutex<HashMap<u64, Vec<OpRecord>>>,
+    outstanding: HostMutex<HashMap<u64, Vec<OpRecord>>>,
     /// Get results retrieved at flush time, keyed by the GetHandle.
-    get_results: Mutex<HashMap<u64, Vec<u8>>>,
+    get_results: HostMutex<HashMap<u64, Vec<u8>>>,
     next_handle: AtomicU64,
     /// Per-window policy resolved from info keys at creation — see the
     /// module doc's decision table.
@@ -161,7 +162,7 @@ impl Window {
     }
 
     fn record(&self, c: OpRecord) {
-        let mut t = self.outstanding.lock().unwrap_or_else(|e| e.into_inner());
+        let mut t = self.outstanding.lock(LockClass::HostRmaOutstanding);
         t.entry(thread_token()).or_default().push(c);
     }
 
@@ -245,12 +246,12 @@ impl MpiProc {
             vci,
             size,
             mem,
-            outstanding: Mutex::new(HashMap::new()),
-            get_results: Mutex::new(HashMap::new()),
+            outstanding: HostMutex::new(HashMap::new()),
+            get_results: HostMutex::new(HashMap::new()),
             next_handle: AtomicU64::new(1),
             policy,
         });
-        self.windows.lock().unwrap_or_else(|e| e.into_inner()).push(win.clone());
+        self.windows.lock(LockClass::HostWindows).push(win.clone());
         self.barrier(comm); // collective creation
         win
     }
@@ -383,7 +384,7 @@ impl MpiProc {
                     let t = self.fabric.hw_rma_completion_time(target, len);
                     let mem = self.fabric.window(target, win.id);
                     let data = mem.read(offset, len);
-                    win.get_results.lock().unwrap_or_else(|e| e.into_inner()).insert(h, data);
+                    win.get_results.lock(LockClass::HostRmaResults).insert(h, data);
                     t
                 });
                 win.record(OpRecord::AtTime(t));
@@ -531,7 +532,7 @@ impl MpiProc {
     pub fn win_flush(&self, win: &Window) {
         padvance(self.backend, self.costs.instructions(20));
         let mine = {
-            let mut t = win.outstanding.lock().unwrap_or_else(|e| e.into_inner());
+            let mut t = win.outstanding.lock(LockClass::HostRmaOutstanding);
             t.remove(&thread_token()).unwrap_or_default()
         };
         // Striped ops coalesce into one watermark per (target, lane): the
@@ -606,9 +607,7 @@ impl MpiProc {
 
     /// Retrieve MPI_Get data after a flush.
     pub fn get_data(&self, win: &Window, h: GetHandle) -> Vec<u8> {
-        if let Some(d) =
-            win.get_results.lock().unwrap_or_else(|e| e.into_inner()).remove(&h.0)
-        {
+        if let Some(d) = win.get_results.lock(LockClass::HostRmaResults).remove(&h.0) {
             return d;
         }
         // OPA path: the reply was parked in the issuing VCI's state.
@@ -633,7 +632,7 @@ impl MpiProc {
         }
         self.purge_rma_counters(win.id);
         self.vcis().release(win.vci);
-        let mut t = self.windows.lock().unwrap_or_else(|e| e.into_inner());
+        let mut t = self.windows.lock(LockClass::HostWindows);
         t.retain(|w| w.id != win.id);
     }
 }

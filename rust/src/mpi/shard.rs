@@ -50,6 +50,17 @@
 //! only while no shard lock is held. No path takes a VCI lock while
 //! holding a shard lock, so the discipline is acyclic.
 //!
+//! # Engine retirement (policy adoption)
+//!
+//! When a communicator's registration replaces a lazily built engine
+//! (the striped arrival raced the creating call), the old engine is
+//! **retired** under all of its shard locks — the same stop-the-world
+//! pattern as an epoch flip — after the table entry has been swapped to
+//! the successor. An operation still holding the old handle observes the
+//! `retired` flag under its shard lock, gets its operand handed back
+//! (`Err` from [`CommMatch::striped_arrival`] / [`CommMatch::post`]),
+//! and retries via the engine table. See [`CommMatch::retire_into`].
+//!
 //! Robustness note: a striped envelope with an unknown `comm_id` cannot
 //! be told apart from one whose communicator the receiver is about to
 //! create (comm creation is symmetric but unsynchronized), so it lazily
@@ -66,7 +77,7 @@ use std::sync::Arc;
 
 use crate::platform::{Backend, PMutex, PMutexGuard};
 
-use super::instrument::{self, count_lock, LockClass};
+use super::instrument::{self, LockClass};
 use super::matching::{MatchingState, PostedRecv, Src, UnexpectedMsg};
 
 /// Index of the home shard (wildcard-epoch serialization target).
@@ -110,6 +121,12 @@ pub struct CommMatch {
     /// Are we inside a serialized wildcard epoch? Read lock-free on every
     /// routing decision; written only with all shard locks held.
     serialized: AtomicBool,
+    /// Has a policy adoption retired this engine? Written only with all
+    /// shard locks held (like `serialized`), so a single shard lock is
+    /// enough to observe it; a retired engine's queues were drained into
+    /// its successor and every operation on it must retry via the engine
+    /// table. See [`CommMatch::retire_into`].
+    retired: AtomicBool,
     /// Epoch bookkeeping. A `PMutex`, NOT a host mutex: it is held across
     /// shard-lock acquisition during transitions, and in the DES parking
     /// on a virtual-time lock while holding a host mutex would deadlock
@@ -131,6 +148,7 @@ impl CommMatch {
             shards: (0..n).map(|_| PMutex::new(backend, MatchingState::new())).collect(),
             mask: n - 1,
             serialized: AtomicBool::new(false),
+            retired: AtomicBool::new(false),
             ctl: PMutex::new(backend, EpochCtl { pending_wildcards: 0, linger_left: 0 }),
             linger,
             flips: AtomicU64::new(0),
@@ -158,44 +176,72 @@ impl CommMatch {
         shard_index(self.comm_id, src_rank, self.mask)
     }
 
-    /// Move every shard's queued state out of `old` into this engine,
-    /// re-bucketed by this engine's shard map. Used when a communicator's
-    /// registered policy replaces an engine that was lazily created with
-    /// the process-default shape (a striped arrival raced communicator
-    /// creation). Streams move whole, so per-stream queue order and
-    /// reorder-stage seq continuity are preserved; `old` is left empty.
-    pub(crate) fn absorb_engine(&self, old: &CommMatch) {
-        debug_assert_eq!(old.comm_id, self.comm_id, "engine migration across comms");
-        for i in 0..old.shards.len() {
-            let parts = {
-                let mut guard = old.lock_shard(i);
-                guard.take_parts()
-            };
-            let buckets = parts.split_by_source(self.shards.len(), |src| self.shard_of(src));
+    /// Stop-the-world retirement (policy adoption): with EVERY shard lock
+    /// held in index order — the wildcard-epoch pattern — mark this engine
+    /// retired and drain its queues, then re-bucket them into `fresh` by
+    /// the successor's shard map. Streams move whole, so per-stream queue
+    /// order and reorder-stage seq continuity are preserved.
+    ///
+    /// Setting the flag under all shard locks makes a single-shard-lock
+    /// double-check authoritative: an in-flight operation that raced the
+    /// engine-table swap either finished depositing before the drain (its
+    /// state migrates with everything else) or observes `retired` under
+    /// its shard lock, gets its operand handed back, and retries via the
+    /// table — which has resolved the successor since before the drain
+    /// began. Two live engines can therefore never hold parts of the same
+    /// stream, which is what the old remove/rebuild/reinsert adoption
+    /// could not guarantee.
+    ///
+    /// Adoption runs during communicator registration, before the
+    /// creating call returns the `Comm` handle, so no receive — in
+    /// particular no wildcard — has been posted yet: the engine cannot be
+    /// inside a serialized epoch.
+    pub(crate) fn retire_into(&self, fresh: &CommMatch) {
+        debug_assert_eq!(self.comm_id, fresh.comm_id, "engine migration across comms");
+        debug_assert!(!self.is_serialized(), "retiring an engine mid wildcard epoch");
+        let parts: Vec<_> = {
+            let mut guards: Vec<PMutexGuard<'_, MatchingState>> =
+                (0..self.shards.len()).map(|i| self.lock_shard(i)).collect();
+            self.retired.store(true, Ordering::Release);
+            guards.iter_mut().map(|g| g.take_parts()).collect()
+        };
+        for p in parts {
+            let buckets = p.split_by_source(fresh.shards.len(), |src| fresh.shard_of(src));
             for (idx, bucket) in buckets.into_iter().enumerate() {
-                let mut guard = self.lock_shard(idx);
+                let mut guard = fresh.lock_shard(idx);
                 guard.absorb_parts(bucket);
             }
         }
     }
 
+    /// Has a policy adoption retired this engine? Test aid — the hot
+    /// paths read the flag under their shard lock, not here.
+    pub fn is_retired(&self) -> bool {
+        self.retired.load(Ordering::Acquire)
+    }
+
     fn lock_shard(&self, idx: usize) -> PMutexGuard<'_, MatchingState> {
-        count_lock(LockClass::Shard);
-        self.shards[idx].lock()
+        self.shards[idx].lock_ordinal(LockClass::Shard, idx as u32)
     }
 
     /// Lock the shard that owns operations for `src_rank` *right now*,
     /// honoring the epoch: the mode flag is read lock-free, the shard
     /// locked, and the flag re-checked — a transition that raced us holds
     /// (or waits for) every shard lock, so a stale pick is always
-    /// detected and retried.
-    fn route_lock(&self, src_rank: usize) -> PMutexGuard<'_, MatchingState> {
+    /// detected and retried. `None` means the engine was retired by a
+    /// policy adoption (flag set under every shard lock, so this shard's
+    /// lock suffices to observe it): the caller must re-resolve the
+    /// engine from the table and retry there.
+    fn route_lock(&self, src_rank: usize) -> Option<PMutexGuard<'_, MatchingState>> {
         loop {
             let serialized = self.serialized.load(Ordering::Acquire);
             let idx = if serialized { HOME_SHARD } else { self.shard_of(src_rank) };
             let guard = self.lock_shard(idx);
+            if self.retired.load(Ordering::Acquire) {
+                return None;
+            }
             if self.serialized.load(Ordering::Acquire) == serialized {
-                return guard;
+                return Some(guard);
             }
             drop(guard);
         }
@@ -205,10 +251,17 @@ impl CommMatch {
     /// owning shard's reorder stage + matching. The returned pairs are
     /// consumed by the caller *after* this returns (no shard lock held);
     /// the caller must then report them via [`CommMatch::note_arrival`].
-    pub fn striped_arrival(&self, msg: UnexpectedMsg) -> Vec<(PostedRecv, UnexpectedMsg)> {
+    /// `Err` hands the message back: the engine was retired by a policy
+    /// adoption and the caller must retry via the engine table.
+    pub fn striped_arrival(
+        &self,
+        msg: UnexpectedMsg,
+    ) -> Result<Vec<(PostedRecv, UnexpectedMsg)>, UnexpectedMsg> {
         debug_assert_eq!(msg.comm_id, self.comm_id);
-        let mut guard = self.route_lock(msg.src_rank);
-        guard.on_striped_arrival(msg)
+        match self.route_lock(msg.src_rank) {
+            Some(mut guard) => Ok(guard.on_striped_arrival(msg)),
+            None => Err(msg),
+        }
     }
 
     /// Post a receive. Concrete sources go to their owning shard;
@@ -216,26 +269,31 @@ impl CommMatch {
     /// before posting to the home shard. An immediately matched wildcard
     /// is accounted here; a match returned for a *wildcard* receive from a
     /// later arrival must be reported via [`CommMatch::note_arrival`].
-    pub fn post(&self, recv: PostedRecv) -> Option<UnexpectedMsg> {
+    /// `Err` hands the receive back: the engine was retired by a policy
+    /// adoption and the caller must retry via the engine table.
+    pub fn post(&self, recv: PostedRecv) -> Result<Option<UnexpectedMsg>, PostedRecv> {
         debug_assert_eq!(recv.comm_id, self.comm_id);
         match recv.src {
             Src::Rank(src) => {
-                let matched = {
-                    let mut guard = self.route_lock(src);
-                    guard.on_post(recv)
+                let matched = match self.route_lock(src) {
+                    Some(mut guard) => guard.on_post(recv),
+                    None => return Err(recv),
                 };
                 // Concrete posts also tick the linger hysteresis (cheap
                 // flag load outside an epoch; see `linger_tick`).
                 if self.shards.len() > 1 && self.serialized.load(Ordering::Acquire) {
                     self.linger_tick();
                 }
-                matched
+                Ok(matched)
             }
             Src::Any => {
+                if self.retired.load(Ordering::Acquire) {
+                    return Err(recv);
+                }
                 self.wildcard_posts.fetch_add(1, Ordering::Relaxed);
                 instrument::record_wildcard_post();
                 if self.shards.len() > 1 {
-                    let mut ctl = self.ctl.lock();
+                    let mut ctl = self.ctl.lock_class(LockClass::EpochCtl);
                     ctl.pending_wildcards += 1;
                     if !self.serialized.load(Ordering::Acquire) {
                         self.flip_to_serialized();
@@ -245,6 +303,19 @@ impl CommMatch {
                 }
                 let matched = {
                     let mut guard = self.lock_shard(HOME_SHARD);
+                    if self.retired.load(Ordering::Acquire) {
+                        // Raced the retirement (cannot happen through the
+                        // MPI surface — adoption precedes the first post —
+                        // but the protocol stays safe anyway): undo the
+                        // epoch accounting on the abandoned engine and
+                        // hand the receive back for a retry.
+                        drop(guard);
+                        if self.shards.len() > 1 {
+                            let mut ctl = self.ctl.lock_class(LockClass::EpochCtl);
+                            ctl.pending_wildcards -= 1;
+                        }
+                        return Err(recv);
+                    }
                     guard.on_post(recv)
                 };
                 if matched.is_some() {
@@ -252,7 +323,7 @@ impl CommMatch {
                     // wildcard is already complete.
                     self.wildcard_done(1);
                 }
-                matched
+                Ok(matched)
             }
         }
     }
@@ -283,7 +354,7 @@ impl CommMatch {
         if self.shards.len() == 1 {
             return; // single-shard engines never entered an epoch
         }
-        let mut ctl = self.ctl.lock();
+        let mut ctl = self.ctl.lock_class(LockClass::EpochCtl);
         debug_assert!(ctl.pending_wildcards >= n, "wildcard accounting underflow");
         ctl.pending_wildcards = ctl.pending_wildcards.saturating_sub(n);
         if ctl.pending_wildcards == 0 {
@@ -298,7 +369,7 @@ impl CommMatch {
         if self.shards.len() == 1 {
             return;
         }
-        let mut ctl = self.ctl.lock();
+        let mut ctl = self.ctl.lock_class(LockClass::EpochCtl);
         if ctl.pending_wildcards > 0 || !self.serialized.load(Ordering::Acquire) {
             return;
         }
@@ -418,8 +489,8 @@ mod tests {
     #[test]
     fn concrete_traffic_matches_without_epochs() {
         let m = engine(8, 0);
-        assert!(m.post(precv(7, Src::Rank(2), Tag::Value(5), 10)).is_none());
-        let hits = m.striped_arrival(umsg(7, 2, 5, 1));
+        assert!(m.post(precv(7, Src::Rank(2), Tag::Value(5), 10)).unwrap().is_none());
+        let hits = m.striped_arrival(umsg(7, 2, 5, 1)).unwrap();
         m.note_arrival(0);
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].0.req, 10);
@@ -431,16 +502,16 @@ mod tests {
     fn streams_shard_independently() {
         let m = engine(8, 0);
         // Gap one source's stream; other sources keep flowing.
-        assert!(m.striped_arrival(umsg(7, 0, 5, 2)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 0, 5, 2)).unwrap().is_empty());
         m.note_arrival(0);
-        assert!(m.striped_arrival(umsg(7, 1, 5, 1)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 1, 5, 1)).unwrap().is_empty());
         m.note_arrival(0);
         let (_, unexpected) = m.queue_lens();
         assert_eq!(unexpected, 1, "src 1 admitted; src 0 parked on its gap");
         let (dups, parked) = m.reorder_stats();
         assert_eq!((dups, parked), (0, 1));
         // Fill the gap: both of src 0's messages admit in order.
-        assert!(m.striped_arrival(umsg(7, 0, 5, 1)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 0, 5, 1)).unwrap().is_empty());
         m.note_arrival(0);
         assert_eq!(m.queue_lens().1, 3);
         assert_eq!(m.reorder_stats(), (0, 0));
@@ -450,14 +521,14 @@ mod tests {
     fn wildcard_flips_epoch_and_matches_across_shards() {
         let m = engine(8, 0);
         // Unexpected messages from two sources land in two shards.
-        assert!(m.striped_arrival(umsg(7, 0, 5, 1)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 0, 5, 1)).unwrap().is_empty());
         m.note_arrival(0);
-        assert!(m.striped_arrival(umsg(7, 3, 5, 1)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 3, 5, 1)).unwrap().is_empty());
         m.note_arrival(0);
         // A wildcard post serializes and must see BOTH queued messages.
-        let first = m.post(precv(7, Src::Any, Tag::Value(5), 20));
+        let first = m.post(precv(7, Src::Any, Tag::Value(5), 20)).unwrap();
         assert!(first.is_some(), "wildcard must match a queued message");
-        let second = m.post(precv(7, Src::Any, Tag::Value(5), 21));
+        let second = m.post(precv(7, Src::Any, Tag::Value(5), 21)).unwrap();
         assert!(second.is_some());
         let srcs = [first.unwrap().src_rank, second.unwrap().src_rank];
         assert!(srcs.contains(&0) && srcs.contains(&3));
@@ -472,19 +543,19 @@ mod tests {
     #[test]
     fn pending_wildcard_holds_epoch_until_arrival_matches() {
         let m = engine(4, 0);
-        assert!(m.post(precv(7, Src::Any, Tag::Any, 20)).is_none());
+        assert!(m.post(precv(7, Src::Any, Tag::Any, 20)).unwrap().is_none());
         assert!(m.is_serialized(), "unmatched wildcard keeps the epoch open");
         // Concrete posts during the epoch go to the home shard, behind
         // the wildcard in post order.
-        assert!(m.post(precv(7, Src::Rank(1), Tag::Any, 21)).is_none());
-        let hits = m.striped_arrival(umsg(7, 1, 9, 1));
+        assert!(m.post(precv(7, Src::Rank(1), Tag::Any, 21)).unwrap().is_none());
+        let hits = m.striped_arrival(umsg(7, 1, 9, 1)).unwrap();
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].0.req, 20, "earlier-posted wildcard matches first");
         let wilds = hits.iter().filter(|(p, _)| p.src == Src::Any).count() as u64;
         m.note_arrival(wilds);
         assert!(!m.is_serialized(), "last wildcard completion flips back");
         // The concrete recv survived the flip-back and still matches.
-        let hits = m.striped_arrival(umsg(7, 1, 9, 2));
+        let hits = m.striped_arrival(umsg(7, 1, 9, 2)).unwrap();
         m.note_arrival(0);
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].0.req, 21);
@@ -494,13 +565,13 @@ mod tests {
     fn reorder_state_survives_epoch_round_trip() {
         let m = engine(8, 0);
         // Seq 2 parks (gap); then an epoch flips state into home and back.
-        assert!(m.striped_arrival(umsg(7, 4, 5, 2)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 4, 5, 2)).unwrap().is_empty());
         m.note_arrival(0);
-        let got = m.post(precv(7, Src::Any, Tag::Value(5), 20));
+        let got = m.post(precv(7, Src::Any, Tag::Value(5), 20)).unwrap();
         assert!(got.is_none(), "parked arrival is not matchable");
         assert!(m.is_serialized());
         // Seq 1 arrives during the epoch: admits both, wildcard gets seq 1.
-        let hits = m.striped_arrival(umsg(7, 4, 5, 1));
+        let hits = m.striped_arrival(umsg(7, 4, 5, 1)).unwrap();
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].1.seq, 1);
         let wilds = hits.iter().filter(|(p, _)| p.src == Src::Any).count() as u64;
@@ -508,10 +579,10 @@ mod tests {
         m.note_arrival(wilds);
         assert!(!m.is_serialized());
         // Seq 2 sits in the unexpected queue of src 4's shard again.
-        let got = m.post(precv(7, Src::Rank(4), Tag::Value(5), 21)).unwrap();
+        let got = m.post(precv(7, Src::Rank(4), Tag::Value(5), 21)).unwrap().unwrap();
         assert_eq!(got.seq, 2);
         // Stream continuity: next expected seq is 3, not reset.
-        assert!(m.striped_arrival(umsg(7, 4, 5, 3)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 4, 5, 3)).unwrap().is_empty());
         m.note_arrival(0);
         assert_eq!(m.queue_lens().1, 1);
         assert_eq!(m.reorder_stats(), (0, 0));
@@ -520,14 +591,14 @@ mod tests {
     #[test]
     fn linger_keeps_epoch_open_for_n_arrivals() {
         let m = engine(4, 2);
-        assert!(m.striped_arrival(umsg(7, 2, 5, 1)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 2, 5, 1)).unwrap().is_empty());
         m.note_arrival(0);
-        assert!(m.post(precv(7, Src::Any, Tag::Value(5), 20)).is_some());
+        assert!(m.post(precv(7, Src::Any, Tag::Value(5), 20)).unwrap().is_some());
         assert!(m.is_serialized(), "linger holds the epoch after completion");
-        assert!(m.striped_arrival(umsg(7, 2, 5, 2)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 2, 5, 2)).unwrap().is_empty());
         m.note_arrival(0);
         assert!(m.is_serialized(), "one linger tick left");
-        assert!(m.striped_arrival(umsg(7, 2, 5, 3)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 2, 5, 3)).unwrap().is_empty());
         m.note_arrival(0);
         assert!(!m.is_serialized(), "linger exhausted: flipped back");
         assert_eq!(m.queue_lens().1, 2);
@@ -537,16 +608,16 @@ mod tests {
     #[test]
     fn linger_ticks_on_concrete_posts_too() {
         let m = engine(4, 2);
-        assert!(m.striped_arrival(umsg(7, 2, 5, 1)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 2, 5, 1)).unwrap().is_empty());
         m.note_arrival(0);
-        assert!(m.post(precv(7, Src::Any, Tag::Value(5), 20)).is_some());
+        assert!(m.post(precv(7, Src::Any, Tag::Value(5), 20)).unwrap().is_some());
         assert!(m.is_serialized(), "linger holds after the wildcard completes");
-        assert!(m.post(precv(7, Src::Rank(2), Tag::Value(5), 21)).is_none());
+        assert!(m.post(precv(7, Src::Rank(2), Tag::Value(5), 21)).unwrap().is_none());
         assert!(m.is_serialized(), "one linger tick left");
-        assert!(m.post(precv(7, Src::Rank(2), Tag::Value(5), 22)).is_none());
+        assert!(m.post(precv(7, Src::Rank(2), Tag::Value(5), 22)).unwrap().is_none());
         assert!(!m.is_serialized(), "concrete posts exhaust the linger");
         // The concrete recvs migrated back to their shard in post order.
-        let hits = m.striped_arrival(umsg(7, 2, 5, 2));
+        let hits = m.striped_arrival(umsg(7, 2, 5, 2)).unwrap();
         m.note_arrival(0);
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].0.req, 21);
@@ -555,10 +626,10 @@ mod tests {
     #[test]
     fn single_shard_engine_never_epochs() {
         let m = engine(1, 0);
-        assert!(m.post(precv(7, Src::Any, Tag::Any, 20)).is_none());
+        assert!(m.post(precv(7, Src::Any, Tag::Any, 20)).unwrap().is_none());
         assert!(!m.is_serialized(), "one shard needs no serialization");
         assert_eq!(m.epoch_stats().flips, 0);
-        let hits = m.striped_arrival(umsg(7, 5, 1, 1));
+        let hits = m.striped_arrival(umsg(7, 5, 1, 1)).unwrap();
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].0.req, 20);
         let wilds = hits.iter().filter(|(p, _)| p.src == Src::Any).count() as u64;
@@ -567,39 +638,77 @@ mod tests {
     }
 
     #[test]
-    fn absorb_engine_migrates_queues_and_stream_continuity() {
+    fn retire_into_migrates_queues_and_stream_continuity() {
         // A lazily created 1-shard engine accumulates unexpected arrivals
-        // (including a parked gap); policy adoption rebuilds it with 4
-        // shards and must preserve per-stream order and next_seq.
+        // (including a parked gap); policy adoption retires it into a
+        // 4-shard successor and must preserve per-stream order and
+        // next_seq.
         let old = engine(1, 0);
-        assert!(old.striped_arrival(umsg(7, 2, 5, 1)).is_empty());
+        assert!(old.striped_arrival(umsg(7, 2, 5, 1)).unwrap().is_empty());
         old.note_arrival(0);
-        assert!(old.striped_arrival(umsg(7, 3, 5, 1)).is_empty());
+        assert!(old.striped_arrival(umsg(7, 3, 5, 1)).unwrap().is_empty());
         old.note_arrival(0);
-        assert!(old.striped_arrival(umsg(7, 2, 5, 3)).is_empty(), "seq 3 parks on its gap");
+        assert!(
+            old.striped_arrival(umsg(7, 2, 5, 3)).unwrap().is_empty(),
+            "seq 3 parks on its gap"
+        );
         old.note_arrival(0);
         let fresh = engine(4, 0);
-        fresh.absorb_engine(&old);
+        old.retire_into(&fresh);
+        assert!(old.is_retired());
         assert_eq!(old.queue_lens(), (0, 0), "old engine drained");
         assert_eq!(fresh.queue_lens().1, 2, "both admitted arrivals migrated");
         // Stream continuity: seq 2 fills the gap and drains parked seq 3.
-        assert!(fresh.striped_arrival(umsg(7, 2, 5, 2)).is_empty());
+        assert!(fresh.striped_arrival(umsg(7, 2, 5, 2)).unwrap().is_empty());
         fresh.note_arrival(0);
         assert_eq!(fresh.queue_lens().1, 4);
         assert_eq!(fresh.reorder_stats(), (0, 0));
         for want in 1..=3u64 {
-            let got = fresh.post(precv(7, Src::Rank(2), Tag::Value(5), 10)).unwrap();
+            let got = fresh.post(precv(7, Src::Rank(2), Tag::Value(5), 10)).unwrap().unwrap();
             assert_eq!(got.seq, want, "migrated stream must stay in seq order");
         }
-        assert_eq!(fresh.post(precv(7, Src::Rank(3), Tag::Value(5), 11)).unwrap().seq, 1);
+        let got = fresh.post(precv(7, Src::Rank(3), Tag::Value(5), 11)).unwrap().unwrap();
+        assert_eq!(got.seq, 1);
+    }
+
+    #[test]
+    fn retired_engine_bounces_stragglers_to_the_successor() {
+        // The engine-adoption double race: a handler still holding the old
+        // engine's handle deposits AFTER the drain. With the retire
+        // protocol the straggler gets its operand handed back and retries
+        // on the successor — the stream never straddles two live engines,
+        // so continuity survives with no duplicate drops.
+        let old = engine(1, 0);
+        assert!(old.striped_arrival(umsg(7, 2, 5, 1)).unwrap().is_empty());
+        old.note_arrival(0);
+        let fresh = engine(4, 0);
+        old.retire_into(&fresh);
+        // Straggler arrival bounces off the retired engine...
+        let back = old.striped_arrival(umsg(7, 2, 5, 2)).expect_err("retired engine must bounce");
+        assert_eq!(back.seq, 2);
+        // ...and lands on the successor with seq continuity intact.
+        assert!(fresh.striped_arrival(back).unwrap().is_empty());
+        fresh.note_arrival(0);
+        assert_eq!(fresh.queue_lens().1, 2);
+        assert_eq!(fresh.reorder_stats(), (0, 0), "no duplicate drops, nothing parked");
+        // Straggler posts bounce the same way (concrete and wildcard).
+        let recv = old
+            .post(precv(7, Src::Rank(2), Tag::Value(5), 30))
+            .expect_err("retired engine must bounce posts");
+        assert_eq!(fresh.post(recv).unwrap().unwrap().seq, 1, "post retries on the successor");
+        let wild = old
+            .post(precv(7, Src::Any, Tag::Any, 31))
+            .expect_err("retired engine must bounce wildcard posts");
+        assert_eq!(wild.req, 31);
+        assert!(!old.is_serialized(), "bounced wildcard leaves no epoch behind");
     }
 
     #[test]
     fn duplicate_drops_counted_across_shards() {
         let m = engine(8, 0);
-        assert!(m.striped_arrival(umsg(7, 1, 5, 1)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 1, 5, 1)).unwrap().is_empty());
         m.note_arrival(0);
-        assert!(m.striped_arrival(umsg(7, 1, 5, 1)).is_empty());
+        assert!(m.striped_arrival(umsg(7, 1, 5, 1)).unwrap().is_empty());
         m.note_arrival(0);
         assert_eq!(m.reorder_stats().0, 1);
     }

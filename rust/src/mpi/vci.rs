@@ -49,14 +49,14 @@
 use std::cell::UnsafeCell;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::fabric::RxDoorbell;
 use crate::platform::{Backend, PMutex, PMutexGuard};
 use crate::sim::CacheLine;
 
 use super::config::{CsMode, MpiConfig, VciPolicy};
-use super::instrument::{count_lock, LockClass};
+use super::instrument::{HostMutex, LockClass};
 use super::matching::MatchingState;
 use super::request::ReqId;
 use super::shard::CommMatch;
@@ -158,7 +158,7 @@ pub struct Vci {
     /// VCI's lock is the hot resource, so completed requests are pushed
     /// here and absorbed into `VciState::req_cache` by the next locked
     /// entry instead of paying a dedicated lock acquisition each).
-    deferred_frees: Mutex<Vec<ReqId>>,
+    deferred_frees: HostMutex<Vec<ReqId>>,
 }
 
 impl Vci {
@@ -175,7 +175,7 @@ impl Vci {
             active: AtomicBool::new(false),
             progress_failures: AtomicUsize::new(0),
             lw_deferred: std::sync::atomic::AtomicU64::new(0),
-            deferred_frees: Mutex::new(Vec::new()),
+            deferred_frees: HostMutex::new(Vec::new()),
         }
     }
 
@@ -191,7 +191,7 @@ impl Vci {
     /// push is charged by the caller). Absorbed by the next
     /// [`Vci::with_state`].
     pub fn defer_request_free(&self, id: ReqId) {
-        self.deferred_frees.lock().unwrap_or_else(|e| e.into_inner()).push(id);
+        self.deferred_frees.lock(LockClass::HostDeferredFrees).push(id);
     }
 
     /// Reconcile parked lightweight releases and request frees into the
@@ -202,7 +202,7 @@ impl Vci {
         if d != 0 {
             st.lw_refs.fetch_sub(d, std::sync::atomic::Ordering::Relaxed);
         }
-        let mut f = self.deferred_frees.lock().unwrap_or_else(|e| e.into_inner());
+        let mut f = self.deferred_frees.lock(LockClass::HostDeferredFrees);
         if !f.is_empty() {
             st.req_cache.append(&mut f);
         }
@@ -212,10 +212,7 @@ impl Vci {
     /// discipline of the configured critical-section mode.
     pub fn with_state<R>(&self, guard: Guard, f: impl FnOnce(&mut VciState) -> R) -> R {
         let _held: Option<PMutexGuard<'_, ()>> = match guard {
-            Guard::VciLock => {
-                count_lock(LockClass::Vci);
-                Some(self.lock.lock())
-            }
+            Guard::VciLock => Some(self.lock.lock_class(LockClass::Vci)),
             Guard::GlobalHeld | Guard::None => None,
         };
         // SAFETY: serialized per the `Guard` contract (see StateCell).
@@ -228,8 +225,7 @@ impl Vci {
     pub fn try_with_state<R>(&self, guard: Guard, f: impl FnOnce(&mut VciState) -> R) -> Option<R> {
         match guard {
             Guard::VciLock => {
-                let g = self.lock.try_lock()?;
-                count_lock(LockClass::Vci);
+                let g = self.lock.try_lock_class(LockClass::Vci)?;
                 let st = unsafe { &mut *self.state.0.get() };
                 self.drain_deferred_lightweight(st);
                 let r = f(st);
@@ -255,7 +251,7 @@ pub struct VciPool {
     /// Free-list for the FirstComePool policy. Host mutex: pool maintenance
     /// happens at communicator/window creation, off the critical path; its
     /// modeled cost is charged explicitly by the callers.
-    free: Mutex<Vec<usize>>,
+    free: HostMutex<Vec<usize>>,
     rr_next: AtomicUsize,
     policy: VciPolicy,
     /// Pool-wide rx doorbell: bit `i` is rung while VCI `i`'s hardware
@@ -301,7 +297,7 @@ impl VciPool {
         let free = (1..n).rev().collect();
         VciPool {
             vcis,
-            free: Mutex::new(free),
+            free: HostMutex::new(free),
             rr_next: AtomicUsize::new(1),
             policy,
             doorbell: RxDoorbell::new(n),
@@ -334,12 +330,9 @@ impl VciPool {
     /// §4.2) — the source of the Fig. 17 mapping-mismatch effect.
     pub fn assign(&self, id: u64) -> usize {
         let idx = match self.policy {
-            VciPolicy::FirstComePool => self
-                .free
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .pop()
-                .unwrap_or(FALLBACK_VCI),
+            VciPolicy::FirstComePool => {
+                self.free.lock(LockClass::HostPoolFree).pop().unwrap_or(FALLBACK_VCI)
+            }
             VciPolicy::RoundRobin => {
                 if self.vcis.len() == 1 {
                     FALLBACK_VCI
@@ -371,7 +364,7 @@ impl VciPool {
         }
         if self.policy == VciPolicy::FirstComePool {
             self.vcis[idx].active.store(false, Ordering::Release);
-            self.free.lock().unwrap_or_else(|e| e.into_inner()).push(idx);
+            self.free.lock(LockClass::HostPoolFree).push(idx);
         }
     }
 }

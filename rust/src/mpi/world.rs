@@ -3,13 +3,14 @@
 //! user body / MPI_Finalize per process, on either backend.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 use crate::fabric::{FabricConfig, Interconnect, Network};
 use crate::platform::{padvance, pnow, Backend, PBarrier};
 use crate::sim::{CostModel, Sim, SimOutcome};
 
 use super::config::MpiConfig;
+use super::instrument::{HostMutex, LockClass};
 use super::proc::{set_active_costs, MpiProc};
 
 /// Everything needed to stand up a cluster run.
@@ -52,7 +53,7 @@ pub struct RunReport {
     pub wall_ms: f64,
 }
 
-static NATIVE_MEASUREMENTS: OnceLock<Mutex<HashMap<String, f64>>> = OnceLock::new();
+static NATIVE_MEASUREMENTS: OnceLock<HostMutex<HashMap<String, f64>>> = OnceLock::new();
 
 /// Record a named measurement from inside a workload body (both backends).
 pub fn record(name: impl Into<String>, value: f64) {
@@ -60,9 +61,8 @@ pub fn record(name: impl Into<String>, value: f64) {
         crate::sim::record(name, value);
     } else {
         NATIVE_MEASUREMENTS
-            .get_or_init(|| Mutex::new(HashMap::new()))
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
+            .get_or_init(|| HostMutex::new(HashMap::new()))
+            .lock(LockClass::HostMeasurements)
             .insert(name.into(), value);
     }
 }
@@ -153,7 +153,7 @@ where
         }
         Backend::Native => {
             if let Some(m) = NATIVE_MEASUREMENTS.get() {
-                m.lock().unwrap_or_else(|e| e.into_inner()).clear();
+                m.lock(LockClass::HostMeasurements).clear();
             }
             let t0 = std::time::Instant::now();
             let mut handles = Vec::new();
@@ -186,9 +186,8 @@ where
                 }
             }
             let measurements = NATIVE_MEASUREMENTS
-                .get_or_init(|| Mutex::new(HashMap::new()))
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
+                .get_or_init(|| HostMutex::new(HashMap::new()))
+                .lock(LockClass::HostMeasurements)
                 .clone();
             RunReport {
                 outcome: match panicked {

@@ -17,6 +17,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
+use crate::mpi::instrument::{count_lock, tag_of, LockClass};
 use crate::sim;
 
 /// Which execution substrate a component runs on.
@@ -108,12 +109,51 @@ impl<T: Send> PMutex<T> {
         }
     }
 
+    /// Unclassed acquisition (scratch users, tests). Inside `mpi/` every
+    /// call site must use [`PMutex::lock_class`] instead — enforced by
+    /// `scripts/lint_lock_discipline.py`.
     pub fn lock(&self) -> PMutexGuard<'_, T> {
         match &self.inner {
             MutexImpl::Native(m) => {
                 PMutexGuard::Native(m.lock().unwrap_or_else(|e| e.into_inner()))
             }
             MutexImpl::Sim(m) => PMutexGuard::Sim(m.lock()),
+        }
+    }
+
+    /// Classed acquisition: counts the Table-1 column for `class` and (in
+    /// sim, under `simsan`) checks the acquisition against the declared
+    /// lock hierarchy and the dynamic lock-order graph.
+    #[track_caller]
+    pub fn lock_class(&self, class: LockClass) -> PMutexGuard<'_, T> {
+        self.lock_ordinal(class, 0)
+    }
+
+    /// Classed acquisition of one instance of a `multi` class (the shard
+    /// leaves): several may be held at once when acquired in ascending
+    /// `ordinal` order.
+    #[track_caller]
+    pub fn lock_ordinal(&self, class: LockClass, ordinal: u32) -> PMutexGuard<'_, T> {
+        count_lock(class);
+        match &self.inner {
+            MutexImpl::Native(m) => {
+                PMutexGuard::Native(m.lock().unwrap_or_else(|e| e.into_inner()))
+            }
+            MutexImpl::Sim(m) => PMutexGuard::Sim(m.lock_tagged(tag_of(class), ordinal)),
+        }
+    }
+
+    /// Classed acquisition that deliberately skips the Table-1 count: the
+    /// Global-CS fast paths take the inner lock only for host data safety
+    /// (the big lock already serializes, so the modeled program performs no
+    /// lock op). Ordering/hierarchy checks still apply under `simsan`.
+    #[track_caller]
+    pub fn lock_uncounted(&self, class: LockClass) -> PMutexGuard<'_, T> {
+        match &self.inner {
+            MutexImpl::Native(m) => {
+                PMutexGuard::Native(m.lock().unwrap_or_else(|e| e.into_inner()))
+            }
+            MutexImpl::Sim(m) => PMutexGuard::Sim(m.lock_tagged(tag_of(class), 0)),
         }
     }
 
@@ -128,6 +168,25 @@ impl<T: Send> PMutex<T> {
             },
             MutexImpl::Sim(m) => m.try_lock().map(PMutexGuard::Sim),
         }
+    }
+
+    /// Classed non-blocking acquisition. Counts only on success (matching
+    /// the historical `try_lock`-then-count call sites); exempt from
+    /// ordering checks (a try can't deadlock) but the hold is tracked.
+    #[track_caller]
+    pub fn try_lock_class(&self, class: LockClass) -> Option<PMutexGuard<'_, T>> {
+        let g = match &self.inner {
+            MutexImpl::Native(m) => match m.try_lock() {
+                Ok(g) => Some(PMutexGuard::Native(g)),
+                Err(std::sync::TryLockError::Poisoned(e)) => {
+                    Some(PMutexGuard::Native(e.into_inner()))
+                }
+                Err(std::sync::TryLockError::WouldBlock) => None,
+            },
+            MutexImpl::Sim(m) => m.try_lock_tagged(tag_of(class)).map(PMutexGuard::Sim),
+        }?;
+        count_lock(class);
+        Some(g)
     }
 }
 

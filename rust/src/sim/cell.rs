@@ -2,6 +2,8 @@
 
 use std::cell::UnsafeCell;
 
+use super::sanitizer::{self, CellMeta};
+
 /// A cell whose contents may be freely mutated by simulated threads.
 ///
 /// # Safety invariant
@@ -15,8 +17,20 @@ use std::cell::UnsafeCell;
 /// (i.e. between scheduler grants). All users in this crate follow the
 /// pattern `sync-point -> mutate -> continue`, where the sync point is a
 /// scheduler interaction ([`super::sched::advance`]/lock/queue ops).
+///
+/// # SimSan
+/// Baton order makes a cross-thread plain access *memory-safe*, but not
+/// *meaningful*: without a simulated sync edge the interleaving is an
+/// artifact of the min-clock rule, i.e. the modeled program has a data
+/// race. With the `simsan` feature, [`SimCell::get`] therefore records a
+/// last-writer epoch and panics when an access is not ordered after the
+/// previous writer by a vector-clock edge (see [`super::sanitizer`]). The
+/// simulation primitives themselves (`SimMutex` lock words, event/barrier
+/// wait lists) are the *sources* of those edges and use the untracked
+/// [`SimCell::get_raw`] instead.
 pub struct SimCell<T> {
     inner: UnsafeCell<T>,
+    meta: CellMeta,
 }
 
 // SAFETY: see type-level invariant above — mutual exclusion and ordering are
@@ -26,12 +40,25 @@ unsafe impl<T: Send> Sync for SimCell<T> {}
 
 impl<T> SimCell<T> {
     pub fn new(value: T) -> Self {
-        SimCell { inner: UnsafeCell::new(value) }
+        SimCell { inner: UnsafeCell::new(value), meta: CellMeta::new() }
     }
 
-    /// Shared view. Caller must be the running simulated thread.
+    /// Shared view. Caller must be the running simulated thread, and the
+    /// access must be ordered after the previous writer by a simulated
+    /// sync edge (checked under `simsan`).
     #[allow(clippy::mut_from_ref)]
+    #[track_caller]
     pub fn get(&self) -> &mut T {
+        sanitizer::cell_access(&self.meta);
+        // SAFETY: scheduler-enforced mutual exclusion (see type docs).
+        unsafe { &mut *self.inner.get() }
+    }
+
+    /// Untracked view for the synchronization primitives' own state, which
+    /// is by construction touched only at scheduler interaction points and
+    /// *provides* (rather than consumes) happens-before edges.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) fn get_raw(&self) -> &mut T {
         // SAFETY: scheduler-enforced mutual exclusion (see type docs).
         unsafe { &mut *self.inner.get() }
     }

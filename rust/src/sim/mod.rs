@@ -18,15 +18,61 @@
 //! *shape* of the paper's figures deterministically.
 //!
 //! # Memory model
-//! Because exactly one simulated thread executes at a time and batons are
-//! handed through a host `Mutex`/`Condvar`, all simulated-shared state is
-//! totally ordered with proper happens-before edges; [`SimCell`] exploits
-//! this to provide zero-cost interior mutability for simulation state.
+//!
+//! Two layers of ordering exist, and conflating them is the bug class
+//! SimSan ([`sanitizer`]) was built to catch:
+//!
+//! * **Host-level (memory safety).** Exactly one simulated thread executes
+//!   at a time and batons are handed through a host `Mutex`/`Condvar`, so
+//!   all simulated-shared state is totally ordered with proper host
+//!   happens-before edges; [`SimCell`] exploits this to provide zero-cost
+//!   interior mutability for simulation state.
+//! * **Simulation-level (program meaning).** Baton order is an artifact of
+//!   the min-clock rule, *not* a synchronization edge of the modeled
+//!   program. Only the simulated primitives create simulated
+//!   happens-before: `SimMutex` release → next acquire, `SimEvent` signal
+//!   → wait-return, `SimBarrier` arrival → release, `SimAtomicU64`
+//!   operations, and scheduler unpark (direct lock handoff). A plain
+//!   [`SimCell`] access that is not ordered after the previous writer by
+//!   one of those edges is a data race in the modeled program, even though
+//!   it is memory-safe on the host.
+//!
+//! ## Lock hierarchy (enforced by SimSan under `--features simsan`)
+//!
+//! ```text
+//!   rank  10  Global     process-wide critical section (CsMode::Global)
+//!   rank  20  Hook       progress-hook registration lock
+//!   rank  30  Vci        per-VCI state lock (THE per-lane lock)
+//!   rank  40  Request    request-slab free list
+//!   rank  50  EpochCtl   wildcard-epoch / engine-retirement control
+//!   rank  60  Shard      per-communicator matching shard (multi: may hold
+//!                        several, ascending shard index — epoch pattern)
+//!   rank 100+ Host*      host std::sync mutexes (instrument::HostMutex):
+//!                        leaf-only, never held across a yield/park
+//! ```
+//!
+//! Acquisitions must strictly increase in rank along any nesting chain;
+//! host mutexes must be released before any sim lock, yield, or park.
+//! SimSan additionally learns the dynamic class-order graph and reports
+//! any cycle-closing acquisition with both first-acquisition sites.
+//!
+//! ## What SimSan does and does not catch
+//!
+//! It catches: rank/hierarchy inversions and class-order cycles (at the
+//! acquisition attempt, before the deadlock manifests), host mutexes held
+//! across scheduler interactions, and unsynchronized cross-thread
+//! [`SimCell`] access (last-writer epoch vs. vector clock). It does not
+//! catch: races on host atomics (`AtomicU64` with relaxed ordering is
+//! assumed intentional), ABBA orders that never share a class pair in one
+//! run, lost updates through `ModeledCounter` (host-atomic by design), or
+//! anything in `Backend::Native` runs — the checker only observes
+//! simulated threads.
 
 mod cell;
 mod clock;
 mod costs;
 mod sched;
+pub mod sanitizer;
 mod sync;
 
 pub use cell::SimCell;

@@ -1,0 +1,495 @@
+//! SimSan — a deterministic lock-order + happens-before sanitizer for the
+//! DES.
+//!
+//! The conservative baton-passing scheduler makes every run bit-for-bit
+//! deterministic, which turns the classic dynamic-analysis trade-off on its
+//! head: a ThreadSanitizer-equivalent built *into* the simulation's own
+//! synchronization layer has zero false-positive flakiness — a reported
+//! violation reproduces on every run with the same seed. SimSan checks two
+//! contracts:
+//!
+//! 1. **Lock order.** Every classed acquisition ([`LockTag`], see
+//!    `mpi::instrument::tag_of`) is pushed onto a per-simulated-thread
+//!    held-lock stack and checked against (a) the declared rank hierarchy
+//!    (host table → VCI → shard leaf; equal-rank re-acquisition only for
+//!    `multi` classes in ascending ordinal order — the all-shard epoch
+//!    pattern) and (b) a per-run lock-order graph whose edges carry the two
+//!    first-acquisition sites; an acquisition that closes a cycle panics
+//!    with both sites. Host (`std::sync`) mutexes additionally must never
+//!    be held across a scheduler interaction: a parked holder would
+//!    deadlock the *host* process, invisibly to virtual time.
+//! 2. **Happens-before.** Each simulated thread carries a vector clock,
+//!    advanced at the DES sync points (`SimMutex` release/acquire,
+//!    `SimEvent` signal/wait, `SimBarrier`, `SimAtomicU64` ops, scheduler
+//!    unpark). Plain [`super::SimCell`] accesses record a last-writer epoch;
+//!    a cross-thread access not ordered after the last write by one of
+//!    those edges is reported as a data race instead of silently resolving
+//!    in baton-pass order.
+//!
+//! Everything here is feature-gated (`simsan`, a default feature): with
+//! the feature off, every hook is a no-op and [`SyncClock`]/[`CellMeta`]
+//! are zero-sized, so release benches pay nothing. Violations are raised
+//! as ordinary `panic!(String)`s so a simulated run surfaces them as
+//! `SimOutcome::Panicked("SimSan: ...")` — deterministic and assertable.
+
+#![allow(dead_code)]
+
+/// Static identity + ordering contract of a lock class.
+///
+/// Instances are `'static` (see `mpi::instrument::tag_of`); identity is by
+/// reference address.
+pub struct LockTag {
+    pub name: &'static str,
+    /// Position in the declared hierarchy; strictly increasing along any
+    /// legal nesting chain (host table → VCI → shard leaf).
+    pub rank: u32,
+    /// Participates in rank/cycle checking. `false` for [`TAG_ANON`]:
+    /// unclassed locks (sim unit tests, scratch users) are still tracked
+    /// for the host-across-park check but impose no ordering constraints.
+    pub ordered: bool,
+    /// Several instances of this class may be held at once, provided they
+    /// are acquired in ascending `ordinal` order (the stop-the-world
+    /// all-shard pattern of `mpi::shard`).
+    pub multi: bool,
+    /// A host `std::sync` mutex. Must be leaf-only in practice and must
+    /// never be held across a scheduler interaction (yield/park): the DES
+    /// runs one OS thread at a time, so a baton handoff with a host lock
+    /// held can deadlock the host process.
+    pub host: bool,
+}
+
+/// The unclassed tag used by plain `SimMutex::lock()` /`PMutex::lock()`.
+pub static TAG_ANON: LockTag =
+    LockTag { name: "anon", rank: 0, ordered: false, multi: false, host: false };
+
+// ---------------------------------------------------------------------------
+// Per-object state carried by primitives (zero-sized with the feature off)
+// ---------------------------------------------------------------------------
+
+/// Vector clock attached to a synchronization object (mutex, event,
+/// barrier, atomic). Mutated only by the running simulated thread.
+pub struct SyncClock {
+    #[cfg(feature = "simsan")]
+    inner: std::cell::UnsafeCell<(usize, Vec<u64>)>, // (run id, clock)
+}
+
+// SAFETY: accessed only under the scheduler baton (one running thread),
+// with happens-before edges provided by the baton's host mutex.
+unsafe impl Send for SyncClock {}
+unsafe impl Sync for SyncClock {}
+
+impl SyncClock {
+    pub const fn new() -> Self {
+        SyncClock {
+            #[cfg(feature = "simsan")]
+            inner: std::cell::UnsafeCell::new((0, Vec::new())),
+        }
+    }
+}
+
+impl Default for SyncClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Last-writer epoch attached to a [`super::SimCell`].
+pub struct CellMeta {
+    #[cfg(feature = "simsan")]
+    last: std::cell::UnsafeCell<Option<imp::LastWrite>>,
+}
+
+// SAFETY: as for `SyncClock`.
+unsafe impl Send for CellMeta {}
+unsafe impl Sync for CellMeta {}
+
+impl CellMeta {
+    pub const fn new() -> Self {
+        CellMeta {
+            #[cfg(feature = "simsan")]
+            last: std::cell::UnsafeCell::new(None),
+        }
+    }
+}
+
+impl Default for CellMeta {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Feature-on implementation
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "simsan")]
+mod imp {
+    use std::cell::UnsafeCell;
+    use std::collections::HashMap;
+    use std::panic::Location;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::super::sched::{current_core, current_tid, in_sim};
+    use super::{CellMeta, LockTag, SyncClock};
+
+    /// Distinguishes sequential `Sim` runs that share primitives (a mutex
+    /// in an `Arc` reused by a follow-up verification run): epochs from a
+    /// finished run must not alias a new run's thread ids.
+    static NEXT_RUN: AtomicUsize = AtomicUsize::new(1);
+
+    #[derive(Clone, Copy)]
+    pub(super) struct LastWrite {
+        run: usize,
+        tid: usize,
+        clock: u64,
+        site: &'static Location<'static>,
+    }
+
+    #[derive(Clone, Copy)]
+    struct Held {
+        tag: &'static LockTag,
+        id: usize,
+        ordinal: u32,
+        site: &'static Location<'static>,
+        /// Acquired via `try_lock`: cannot block, so it is exempt from
+        /// rank/cycle checking (both as acquirer and as held constraint),
+        /// but still release-tracked and host-park-checked.
+        exempt: bool,
+    }
+
+    struct ThreadSan {
+        vc: Vec<u64>,
+        held: Vec<Held>,
+    }
+
+    struct EdgeInfo {
+        held_site: &'static Location<'static>,
+        acq_site: &'static Location<'static>,
+    }
+
+    struct SanState {
+        run: usize,
+        threads: Vec<ThreadSan>,
+        /// First-observed acquisition order between lock classes, with the
+        /// two sites that established each edge.
+        edges: HashMap<(&'static str, &'static str), EdgeInfo>,
+        adj: HashMap<&'static str, Vec<&'static str>>,
+    }
+
+    /// Per-`Sim` sanitizer state. Lives in `SimCore`; every access happens
+    /// on the thread currently holding the baton.
+    pub struct SanCore {
+        state: UnsafeCell<SanState>,
+    }
+
+    // SAFETY: scheduler-enforced mutual exclusion plus baton-handoff
+    // happens-before, exactly as for `SimCell`.
+    unsafe impl Send for SanCore {}
+    unsafe impl Sync for SanCore {}
+
+    impl SanCore {
+        pub fn new() -> Self {
+            SanCore {
+                state: UnsafeCell::new(SanState {
+                    run: 0,
+                    threads: Vec::new(),
+                    edges: HashMap::new(),
+                    adj: HashMap::new(),
+                }),
+            }
+        }
+
+        /// Called once from `Sim::run` before any thread starts.
+        pub(crate) fn init(&self, n_threads: usize) {
+            let s = unsafe { &mut *self.state.get() };
+            s.run = NEXT_RUN.fetch_add(1, Ordering::Relaxed);
+            s.threads = (0..n_threads)
+                .map(|i| {
+                    let mut vc = vec![0u64; n_threads];
+                    vc[i] = 1; // first epoch must be nonzero
+                    ThreadSan { vc, held: Vec::new() }
+                })
+                .collect();
+        }
+
+        /// Host-lock-across-park check, run at every scheduler interaction
+        /// *before* the baton can move.
+        pub(crate) fn check_yield(&self, tid: usize) {
+            let s = unsafe { &mut *self.state.get() };
+            if let Some(h) = s.threads[tid].held.iter().find(|h| h.tag.host) {
+                panic!(
+                    "SimSan: host lock '{}' (acquired at {}) held across a scheduler \
+                     interaction; a parked holder would deadlock the host process — \
+                     release host mutexes before any sim lock/yield/park",
+                    h.tag.name, h.site
+                );
+            }
+        }
+
+        /// Happens-before edge from the unparking thread to the woken one.
+        pub(crate) fn unpark_edge(&self, from: usize, to: usize) {
+            let s = unsafe { &mut *self.state.get() };
+            if from == to || s.threads.is_empty() {
+                return;
+            }
+            let src = s.threads[from].vc.clone();
+            join(&mut s.threads[to].vc, &src);
+        }
+    }
+
+    fn with_state<R>(f: impl FnOnce(&mut SanState, usize) -> R) -> Option<R> {
+        if !in_sim() {
+            return None;
+        }
+        let core = current_core();
+        let me = current_tid();
+        let s = unsafe { &mut *core.san.state.get() };
+        if s.threads.is_empty() {
+            return None; // primitive used outside a sanitized run
+        }
+        Some(f(s, me))
+    }
+
+    fn join(dst: &mut Vec<u64>, src: &[u64]) {
+        if dst.len() < src.len() {
+            dst.resize(src.len(), 0);
+        }
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d = (*d).max(*s);
+        }
+    }
+
+    /// DFS: is `to` reachable from `from` through recorded edges?
+    /// Returns the path (class names) if so.
+    fn path(s: &SanState, from: &'static str, to: &'static str) -> Option<Vec<&'static str>> {
+        let mut stack = vec![(from, vec![from])];
+        let mut seen = std::collections::HashSet::new();
+        while let Some((n, p)) = stack.pop() {
+            if n == to {
+                return Some(p);
+            }
+            if !seen.insert(n) {
+                continue;
+            }
+            if let Some(next) = s.adj.get(n) {
+                for &m in next {
+                    let mut p2 = p.clone();
+                    p2.push(m);
+                    stack.push((m, p2));
+                }
+            }
+        }
+        None
+    }
+
+    fn on_attempt(
+        s: &mut SanState,
+        me: usize,
+        tag: &'static LockTag,
+        id: usize,
+        ordinal: u32,
+        site: &'static Location<'static>,
+        exempt: bool,
+    ) {
+        if tag.ordered && !exempt {
+            let held: Vec<Held> = s.threads[me].held.clone();
+            for h in held.iter().filter(|h| !h.exempt && h.tag.ordered) {
+                if h.id == id {
+                    panic!(
+                        "SimSan: recursive acquisition of lock '{}' at {} (first acquired \
+                         at {})",
+                        tag.name, site, h.site
+                    );
+                }
+                let same_class = std::ptr::eq(h.tag, tag);
+                let legal = tag.rank > h.tag.rank
+                    || (same_class && tag.multi && ordinal > h.ordinal);
+                if !legal {
+                    panic!(
+                        "SimSan: lock-order violation: acquiring '{}' (rank {}, ordinal \
+                         {}) at {} while holding '{}' (rank {}, ordinal {}) acquired at \
+                         {}; the declared hierarchy is host table -> VCI -> shard leaf \
+                         with strictly increasing ranks",
+                        tag.name, tag.rank, ordinal, site, h.tag.name, h.tag.rank,
+                        h.ordinal, h.site
+                    );
+                }
+                // Record the class-order edge; a new edge that closes a
+                // cycle is a latent deadlock even if ranks were misdeclared.
+                if !same_class && !s.edges.contains_key(&(h.tag.name, tag.name)) {
+                    if let Some(p) = path(s, tag.name, h.tag.name) {
+                        let back = s
+                            .edges
+                            .get(&(p[0], p[1]))
+                            .map(|e| format!(" (reverse order first seen held at {}, acquired at {})", e.held_site, e.acq_site))
+                            .unwrap_or_default();
+                        panic!(
+                            "SimSan: lock-order cycle: acquiring '{}' at {} while \
+                             holding '{}' (acquired at {}) contradicts the established \
+                             order {}{}",
+                            tag.name,
+                            site,
+                            h.tag.name,
+                            h.site,
+                            p.join(" -> "),
+                            back
+                        );
+                    }
+                    s.edges.insert(
+                        (h.tag.name, tag.name),
+                        EdgeInfo { held_site: h.site, acq_site: site },
+                    );
+                    s.adj.entry(h.tag.name).or_default().push(tag.name);
+                }
+            }
+        }
+        s.threads[me].held.push(Held { tag, id, ordinal, site, exempt });
+    }
+
+    #[track_caller]
+    pub fn lock_attempt(tag: &'static LockTag, id: usize, ordinal: u32) {
+        let site = Location::caller();
+        with_state(|s, me| on_attempt(s, me, tag, id, ordinal, site, false));
+    }
+
+    /// `try_lock` success: bookkeeping only, exempt from ordering checks.
+    #[track_caller]
+    pub fn lock_attempt_try(tag: &'static LockTag, id: usize) {
+        let site = Location::caller();
+        with_state(|s, me| on_attempt(s, me, tag, id, 0, site, true));
+    }
+
+    pub fn lock_released(id: usize) {
+        with_state(|s, me| {
+            let held = &mut s.threads[me].held;
+            if let Some(i) = held.iter().rposition(|h| h.id == id) {
+                held.remove(i);
+            }
+        });
+    }
+
+    fn obj_clock<'a>(s: &SanState, obj: &'a SyncClock) -> &'a mut Vec<u64> {
+        // SAFETY: baton-holder exclusivity, as everywhere in this module.
+        let slot = unsafe { &mut *obj.inner.get() };
+        if slot.0 != s.run {
+            // Object last used by a previous (finished) run: stale epochs.
+            slot.0 = s.run;
+            slot.1.clear();
+        }
+        &mut slot.1
+    }
+
+    /// Acquire edge: the object's history happens-before me.
+    pub fn vc_acquire(obj: &SyncClock) {
+        with_state(|s, me| {
+            let oc = obj_clock(s, obj).clone();
+            join(&mut s.threads[me].vc, &oc);
+        });
+    }
+
+    /// Release edge: my history happens-before the next acquirer; bump my
+    /// epoch so later work is not retroactively ordered.
+    pub fn vc_release(obj: &SyncClock) {
+        with_state(|s, me| {
+            let vc = s.threads[me].vc.clone();
+            join(obj_clock(s, obj), &vc);
+            s.threads[me].vc[me] += 1;
+        });
+    }
+
+    /// Full fence (atomic RMW): release + acquire.
+    pub fn vc_fence(obj: &SyncClock) {
+        with_state(|s, me| {
+            let vc = s.threads[me].vc.clone();
+            let oc = obj_clock(s, obj);
+            join(oc, &vc);
+            let oc = oc.clone();
+            join(&mut s.threads[me].vc, &oc);
+            s.threads[me].vc[me] += 1;
+        });
+    }
+
+    /// A plain `SimCell` access (treated as a write — `get` hands out
+    /// `&mut`). Race iff the last writer is a different thread and its
+    /// write epoch is not covered by my vector clock.
+    #[track_caller]
+    pub fn cell_access(meta: &CellMeta) {
+        let site = Location::caller();
+        with_state(|s, me| {
+            // SAFETY: baton-holder exclusivity.
+            let last = unsafe { &mut *meta.last.get() };
+            if let Some(lw) = *last {
+                if lw.run == s.run && lw.tid != me {
+                    let seen = s.threads[me].vc.get(lw.tid).copied().unwrap_or(0);
+                    if lw.clock > seen {
+                        panic!(
+                            "SimSan: data race on SimCell: thread {} wrote at {} \
+                             (epoch {}) with no happens-before edge to thread {}'s \
+                             access at {} (vc[{}] = {}); synchronize via \
+                             SimMutex/SimEvent/SimBarrier/SimAtomicU64 — baton order \
+                             alone is not an HB edge",
+                            lw.tid, lw.site, lw.clock, me, site, lw.tid, seen
+                        );
+                    }
+                }
+            }
+            *last = Some(LastWrite {
+                run: s.run,
+                tid: me,
+                clock: s.threads[me].vc[me],
+                site,
+            });
+        });
+    }
+}
+
+#[cfg(feature = "simsan")]
+pub use imp::SanCore;
+#[cfg(feature = "simsan")]
+pub(crate) use imp::{
+    cell_access, lock_attempt, lock_attempt_try, lock_released, vc_acquire, vc_fence,
+    vc_release,
+};
+
+// ---------------------------------------------------------------------------
+// Feature-off stubs (everything inlines to nothing)
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "simsan"))]
+mod noop {
+    use super::{CellMeta, LockTag, SyncClock};
+
+    pub struct SanCore;
+
+    impl SanCore {
+        pub fn new() -> Self {
+            SanCore
+        }
+        pub(crate) fn init(&self, _n: usize) {}
+        pub(crate) fn check_yield(&self, _tid: usize) {}
+        pub(crate) fn unpark_edge(&self, _from: usize, _to: usize) {}
+    }
+
+    #[inline(always)]
+    pub fn lock_attempt(_tag: &'static LockTag, _id: usize, _ordinal: u32) {}
+    #[inline(always)]
+    pub fn lock_attempt_try(_tag: &'static LockTag, _id: usize) {}
+    #[inline(always)]
+    pub fn lock_released(_id: usize) {}
+    #[inline(always)]
+    pub fn vc_acquire(_obj: &SyncClock) {}
+    #[inline(always)]
+    pub fn vc_release(_obj: &SyncClock) {}
+    #[inline(always)]
+    pub fn vc_fence(_obj: &SyncClock) {}
+    #[inline(always)]
+    pub fn cell_access(_meta: &CellMeta) {}
+}
+
+#[cfg(not(feature = "simsan"))]
+pub use noop::SanCore;
+#[cfg(not(feature = "simsan"))]
+pub(crate) use noop::{
+    cell_access, lock_attempt, lock_attempt_try, lock_released, vc_acquire, vc_fence,
+    vc_release,
+};

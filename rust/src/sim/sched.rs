@@ -83,6 +83,8 @@ struct Sched {
 pub(crate) struct SimCore {
     sched: Mutex<Sched>,
     pub costs: CostModel,
+    /// SimSan per-run state (zero-sized unless the `simsan` feature is on).
+    pub(crate) san: super::sanitizer::SanCore,
 }
 
 thread_local! {
@@ -141,6 +143,9 @@ impl SimCore {
     /// On return the calling thread is `Running` again (possibly after
     /// having lost and regained the baton) and its local clock is valid.
     fn interaction(self: &Arc<Self>, ctx: &ThreadCtx) {
+        // A host mutex held here could deadlock the host process the moment
+        // the baton moves; SimSan reports it at the yield, deterministically.
+        self.san.check_yield(ctx.tid);
         let mut s = self.sched.lock().unwrap_or_else(|e| e.into_inner());
         s.slots[ctx.tid].clock = ctx.clock.get();
         self.check_abort(&s);
@@ -166,6 +171,7 @@ impl SimCore {
     pub(crate) fn park(self: &Arc<Self>, register: impl FnOnce()) {
         with_ctx(|ctx| {
             debug_assert!(Arc::ptr_eq(&ctx.core, self), "cross-sim primitive use");
+            self.san.check_yield(ctx.tid);
             // We still hold the baton: safe to touch primitive state.
             register();
             let mut s = self.sched.lock().unwrap_or_else(|e| e.into_inner());
@@ -189,6 +195,9 @@ impl SimCore {
     /// Caller keeps the baton; the woken thread becomes Runnable and will be
     /// scheduled by the min-clock rule at the next interaction.
     pub(crate) fn unpark(self: &Arc<Self>, tid: usize, wake_clock: Nanos) {
+        // Happens-before: the waker's history is visible to the woken
+        // thread (direct mutex handoff, event signal, barrier release).
+        self.san.unpark_edge(current_tid(), tid);
         let mut s = self.sched.lock().unwrap_or_else(|e| e.into_inner());
         debug_assert_eq!(s.slots[tid].state, RunState::Blocked, "unpark of non-blocked thread");
         s.slots[tid].clock = s.slots[tid].clock.max(wake_clock);
@@ -319,6 +328,7 @@ impl Sim {
                     measurements: HashMap::new(),
                 }),
                 costs,
+                san: super::sanitizer::SanCore::new(),
             }),
             threads: Vec::new(),
             time_limit: Nanos::MAX,
@@ -358,6 +368,7 @@ impl Sim {
                 s.slots[0].state = RunState::Running;
             }
         }
+        core.san.init(core.sched.lock().unwrap_or_else(|e| e.into_inner()).slots.len());
         let mut joins = Vec::new();
         for (tid, (name, f)) in threads.into_iter().enumerate() {
             let core = core.clone();

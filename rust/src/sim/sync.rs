@@ -11,6 +11,7 @@ use std::ops::{Deref, DerefMut};
 use std::sync::Arc;
 
 use super::cell::SimCell;
+use super::sanitizer::{self, LockTag, SyncClock, TAG_ANON};
 use super::sched::{advance, current_core, current_tid, now, yield_now};
 
 /// Models one 64-byte cache line's ownership for false-sharing accounting.
@@ -31,7 +32,7 @@ impl CacheLine {
     /// Charge the calling thread for touching this line.
     pub fn touch(&self) {
         let me = current_tid();
-        let owner = self.last_owner.get();
+        let owner = self.last_owner.get_raw();
         if *owner != Some(me) {
             let c = current_core();
             advance(c.costs.cacheline_transfer);
@@ -55,6 +56,8 @@ pub struct SimMutex<T> {
     state: SimCell<MutexState>,
     data: SimCell<T>,
     line: Option<Arc<CacheLine>>,
+    /// SimSan: vector clock carrying release -> acquire happens-before.
+    clock: SyncClock,
 }
 
 impl<T: Send> SimMutex<T> {
@@ -63,7 +66,13 @@ impl<T: Send> SimMutex<T> {
             state: SimCell::new(MutexState { held_by: None, waiters: VecDeque::new() }),
             data: SimCell::new(data),
             line: None,
+            clock: SyncClock::new(),
         }
+    }
+
+    /// Stable identity for SimSan's held-lock bookkeeping.
+    fn san_id(&self) -> usize {
+        &self.state as *const _ as usize
     }
 
     /// Place this mutex's lock word on an explicit cache line (for
@@ -75,8 +84,17 @@ impl<T: Send> SimMutex<T> {
     }
 
     pub fn lock(&self) -> SimMutexGuard<'_, T> {
+        self.lock_tagged(&TAG_ANON, 0)
+    }
+
+    /// Classed acquisition: SimSan checks `tag` against the held-lock
+    /// stack and the lock-order graph *before* any park (so a latent
+    /// deadlock is reported at the acquisition attempt, deterministically).
+    #[track_caller]
+    pub fn lock_tagged(&self, tag: &'static LockTag, ordinal: u32) -> SimMutexGuard<'_, T> {
         let core = current_core();
         let me = current_tid();
+        sanitizer::lock_attempt(tag, self.san_id(), ordinal);
         yield_now(); // ordering point for this interaction
         if let Some(line) = &self.line {
             line.touch();
@@ -87,7 +105,7 @@ impl<T: Send> SimMutex<T> {
         // and wake-up latency on the waiter). This is the regime a
         // contended global critical section degrades into — the 10-100x
         // collapse of paper Figs. 3/10.
-        let st = self.state.get();
+        let st = self.state.get_raw();
         debug_assert_ne!(st.held_by, Some(me), "recursive SimMutex lock");
         if st.held_by.is_none() && st.waiters.is_empty() {
             st.held_by = Some(me);
@@ -95,13 +113,21 @@ impl<T: Send> SimMutex<T> {
             st.waiters.push_back(me);
             core.park(|| {});
             // Woken by the releaser, which transferred ownership to us.
-            debug_assert_eq!(self.state.get().held_by, Some(me));
+            debug_assert_eq!(self.state.get_raw().held_by, Some(me));
         }
+        sanitizer::vc_acquire(&self.clock);
         SimMutexGuard { mutex: self }
     }
 
     /// Non-blocking acquire.
     pub fn try_lock(&self) -> Option<SimMutexGuard<'_, T>> {
+        self.try_lock_tagged(&TAG_ANON)
+    }
+
+    /// Non-blocking classed acquire. Cannot deadlock, so it is exempt from
+    /// SimSan's ordering checks, but the hold is still tracked.
+    #[track_caller]
+    pub fn try_lock_tagged(&self, tag: &'static LockTag) -> Option<SimMutexGuard<'_, T>> {
         let core = current_core();
         let me = current_tid();
         yield_now();
@@ -109,9 +135,11 @@ impl<T: Send> SimMutex<T> {
             line.touch();
         }
         advance(core.costs.lock_acquire);
-        let st = self.state.get();
+        let st = self.state.get_raw();
         if st.held_by.is_none() {
             st.held_by = Some(me);
+            sanitizer::lock_attempt_try(tag, self.san_id());
+            sanitizer::vc_acquire(&self.clock);
             Some(SimMutexGuard { mutex: self })
         } else {
             None
@@ -121,8 +149,10 @@ impl<T: Send> SimMutex<T> {
     fn unlock(&self) {
         let core = current_core();
         advance(core.costs.lock_release);
+        // Release edge before ownership can move to a waiter.
+        sanitizer::vc_release(&self.clock);
         yield_now();
-        let st = self.state.get();
+        let st = self.state.get_raw();
         debug_assert_eq!(st.held_by, Some(current_tid()));
         if let Some(next) = st.waiters.pop_front() {
             // FUTEX_WAKE: the releaser pays the syscall + line migration;
@@ -134,6 +164,7 @@ impl<T: Send> SimMutex<T> {
         } else {
             st.held_by = None;
         }
+        sanitizer::lock_released(self.san_id());
     }
 }
 
@@ -173,17 +204,25 @@ impl<T: Send> Drop for SimMutexGuard<'_, T> {
 pub struct SimAtomicU64 {
     v: SimCell<u64>,
     owner: SimCell<Option<usize>>,
+    /// SimSan: RMWs and stores are modeled as full fences, loads as
+    /// acquires (a deliberate over-approximation — seq-cst hardware
+    /// atomics give at least this much).
+    clock: SyncClock,
 }
 
 impl SimAtomicU64 {
     pub fn new(v: u64) -> Self {
-        SimAtomicU64 { v: SimCell::new(v), owner: SimCell::new(None) }
+        SimAtomicU64 {
+            v: SimCell::new(v),
+            owner: SimCell::new(None),
+            clock: SyncClock::new(),
+        }
     }
 
     fn charge(&self, rmw: bool) {
         let core = current_core();
         let me = current_tid();
-        let owner = self.owner.get();
+        let owner = self.owner.get_raw();
         if *owner != Some(me) {
             advance(core.costs.cacheline_transfer);
             *owner = Some(me);
@@ -196,19 +235,22 @@ impl SimAtomicU64 {
     pub fn load(&self) -> u64 {
         yield_now();
         self.charge(false);
-        *self.v.get()
+        sanitizer::vc_acquire(&self.clock);
+        *self.v.get_raw()
     }
 
     pub fn store(&self, v: u64) {
         yield_now();
         self.charge(true);
-        *self.v.get() = v;
+        sanitizer::vc_fence(&self.clock);
+        *self.v.get_raw() = v;
     }
 
     pub fn fetch_add(&self, d: u64) -> u64 {
         yield_now();
         self.charge(true);
-        let p = self.v.get();
+        sanitizer::vc_fence(&self.clock);
+        let p = self.v.get_raw();
         let old = *p;
         *p = old.wrapping_add(d);
         old
@@ -217,7 +259,8 @@ impl SimAtomicU64 {
     pub fn fetch_sub(&self, d: u64) -> u64 {
         yield_now();
         self.charge(true);
-        let p = self.v.get();
+        sanitizer::vc_fence(&self.clock);
+        let p = self.v.get_raw();
         let old = *p;
         *p = old.wrapping_sub(d);
         old
@@ -227,6 +270,8 @@ impl SimAtomicU64 {
 /// A one-shot / resettable event: threads park until signaled.
 pub struct SimEvent {
     state: SimCell<EventState>,
+    /// SimSan: signal -> wait-return happens-before.
+    clock: SyncClock,
 }
 
 struct EventState {
@@ -236,25 +281,31 @@ struct EventState {
 
 impl SimEvent {
     pub fn new() -> Self {
-        SimEvent { state: SimCell::new(EventState { signaled: false, waiters: Vec::new() }) }
+        SimEvent {
+            state: SimCell::new(EventState { signaled: false, waiters: Vec::new() }),
+            clock: SyncClock::new(),
+        }
     }
 
     pub fn wait(&self) {
         let core = current_core();
         yield_now();
-        let st = self.state.get();
+        let st = self.state.get_raw();
         if st.signaled {
+            sanitizer::vc_acquire(&self.clock);
             return;
         }
         let me = current_tid();
         st.waiters.push(me);
         core.park(|| {});
+        sanitizer::vc_acquire(&self.clock);
     }
 
     pub fn signal(&self) {
         let core = current_core();
         yield_now();
-        let st = self.state.get();
+        sanitizer::vc_release(&self.clock);
+        let st = self.state.get_raw();
         st.signaled = true;
         let t = now();
         for w in st.waiters.drain(..) {
@@ -264,12 +315,16 @@ impl SimEvent {
 
     pub fn is_signaled(&self) -> bool {
         yield_now();
-        self.state.get().signaled
+        let signaled = self.state.get_raw().signaled;
+        if signaled {
+            sanitizer::vc_acquire(&self.clock);
+        }
+        signaled
     }
 
     pub fn reset(&self) {
         yield_now();
-        self.state.get().signaled = false;
+        self.state.get_raw().signaled = false;
     }
 }
 
@@ -283,6 +338,9 @@ impl Default for SimEvent {
 pub struct SimBarrier {
     state: SimCell<BarrierState>,
     parties: usize,
+    /// SimSan: all pre-barrier work happens-before all post-barrier work.
+    /// The clock persists across generations (conservatively safe).
+    clock: SyncClock,
 }
 
 struct BarrierState {
@@ -296,6 +354,7 @@ impl SimBarrier {
         SimBarrier {
             state: SimCell::new(BarrierState { arrived: 0, waiters: Vec::new() }),
             parties,
+            clock: SyncClock::new(),
         }
     }
 
@@ -305,10 +364,14 @@ impl SimBarrier {
         let core = current_core();
         yield_now();
         advance(core.costs.atomic_rmw); // barrier arrival counter
-        let st = self.state.get();
+        sanitizer::vc_release(&self.clock); // arrival: publish my history
+        let st = self.state.get_raw();
         st.arrived += 1;
         if st.arrived == self.parties {
             st.arrived = 0;
+            // Last arriver: absorb everyone's history before waking them,
+            // so the unpark edge carries the full pre-barrier state.
+            sanitizer::vc_acquire(&self.clock);
             let t = now();
             for w in st.waiters.drain(..) {
                 core.unpark(w, t);
@@ -316,6 +379,7 @@ impl SimBarrier {
         } else {
             st.waiters.push(current_tid());
             core.park(|| {});
+            sanitizer::vc_acquire(&self.clock);
         }
     }
 }

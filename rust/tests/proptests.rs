@@ -202,7 +202,7 @@ fn prop_sharded_matching_matches_single_engine_oracle() {
             oracle_order: &mut [Vec<u64>],
             wildcards_matched_sharded: &mut u64,
         ) {
-            let pairs = m.striped_arrival(umsg(1, src, 7, seq));
+            let pairs = m.striped_arrival(umsg(1, src, 7, seq)).expect("engine never retired");
             let wilds = pairs.iter().filter(|(p, _)| p.src == Src::Any).count() as u64;
             for (_p, um) in &pairs {
                 sharded_order[um.src_rank].push(um.seq);
@@ -236,7 +236,7 @@ fn prop_sharded_matching_matches_single_engine_oracle() {
                     Src::Rank(rng.gen_usize(srcs))
                 };
                 let recv = PostedRecv { comm_id: 1, src, tag: Tag::Value(7), req: 0 };
-                if let Some(um) = m.post(recv.clone()) {
+                if let Some(um) = m.post(recv.clone()).expect("engine never retired") {
                     sharded_order[um.src_rank].push(um.seq);
                     if src == Src::Any {
                         wildcards_matched_sharded += 1;
@@ -265,7 +265,7 @@ fn prop_sharded_matching_matches_single_engine_oracle() {
         for src in 0..srcs {
             let recv =
                 || PostedRecv { comm_id: 1, src: Src::Rank(src), tag: Tag::Value(7), req: 0 };
-            while let Some(um) = m.post(recv()) {
+            while let Some(um) = m.post(recv()).expect("engine never retired") {
                 sharded_order[um.src_rank].push(um.seq);
             }
             while let Some(um) = oracle.on_post(recv()) {

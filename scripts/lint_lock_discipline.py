@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Lock-discipline lint for rust/src/mpi/ (the static half of SimSan).
+
+SimSan (rust/src/sim/sanitizer.rs) checks lock ORDER dynamically, but it can
+only see acquisitions that carry a LockClass. This lint closes the gap
+statically by rejecting, in every .rs file under rust/src/mpi/:
+
+  1. raw `std::sync::Mutex` / `std::sync::RwLock` — host locks in mpi/ must
+     go through `instrument::HostMutex`, whose acquisition takes a LockClass
+     and participates in SimSan's held-lock stack (so holding one across a
+     scheduler park is caught);
+  2. unclassed acquisitions — bare `.lock()` / `.try_lock()` call sites,
+     which SimSan would track only under the anonymous (unordered) tag.
+     Sanctioned spellings: `.lock_class(..)`, `.lock_ordinal(..)`,
+     `.lock_uncounted(..)`, `.try_lock_class(..)`, and
+     `HostMutex::lock(LockClass::..)`.
+
+A line ending in a `lint:allow-host-mutex` comment is exempt from both
+rules — used exactly once, inside `instrument::HostMutex` itself (the
+sanctioned wrapper has to contain the raw mutex it wraps).
+
+Exit status: 0 clean, 1 violations (printed as file:line: message).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ALLOW_MARKER = "lint:allow-host-mutex"
+
+# Rule 1: raw host lock types. \b keeps std::sync::MutexGuard (in type
+# positions of the sanctioned wrapper) from matching.
+RAW_HOST_LOCK = re.compile(r"\bstd::sync::(Mutex|RwLock)\b|\buse\s+std::sync::.*\b(Mutex|RwLock)\b")
+
+# Rule 2: an acquisition with no LockClass argument. `.lock(LockClass::..)`
+# (HostMutex) does not match because of the empty-parens requirement;
+# `.lock_class(` / `.lock_ordinal(` / `.lock_uncounted(` /
+# `.try_lock_class(` do not match because of the word boundary after "lock".
+BARE_ACQUIRE = re.compile(r"\.(lock|try_lock)\(\s*\)")
+
+
+def strip_strings(line: str) -> str:
+    """Blank out string literals so quoted examples never trip the rules."""
+    return re.sub(r'"(?:[^"\\]|\\.)*"', '""', line)
+
+
+def lint_file(path: Path) -> list[str]:
+    errors = []
+    for lineno, raw in enumerate(path.read_text().splitlines(), start=1):
+        if ALLOW_MARKER in raw:
+            continue
+        # Drop line comments (incl. doc comments) before matching: prose is
+        # allowed to *name* std::sync::Mutex.
+        code = strip_strings(raw).split("//", 1)[0]
+        if RAW_HOST_LOCK.search(code):
+            errors.append(
+                f"{path}:{lineno}: raw std::sync lock in mpi/ — use "
+                f"instrument::HostMutex and pass a LockClass (or mark the "
+                f"line `// {ALLOW_MARKER}` if it IS the wrapper)"
+            )
+        if BARE_ACQUIRE.search(code):
+            errors.append(
+                f"{path}:{lineno}: unclassed lock acquisition — pass a "
+                f"LockClass via .lock_class()/.lock_ordinal()/"
+                f".lock_uncounted()/.try_lock_class() (or .lock(LockClass::..) "
+                f"on a HostMutex) so SimSan can order-check it"
+            )
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path("rust/src/mpi")
+    if not root.is_dir():
+        print(f"lint_lock_discipline: no such directory: {root}", file=sys.stderr)
+        return 2
+    files = sorted(root.rglob("*.rs"))
+    if not files:
+        print(f"lint_lock_discipline: no .rs files under {root}", file=sys.stderr)
+        return 2
+    errors = [e for f in files for e in lint_file(f)]
+    for e in errors:
+        print(e)
+    print(
+        f"lint_lock_discipline: {len(files)} files, "
+        f"{len(errors)} violation(s)",
+        file=sys.stderr,
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
