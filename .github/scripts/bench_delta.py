@@ -1,14 +1,19 @@
 #!/usr/bin/env python3
 """Run-over-run bench delta table for the CI job summary.
 
-Usage: bench_delta.py BASELINE_DIR CURRENT_JSON [CURRENT_JSON ...]
+Usage: bench_delta.py [--fail-over PCT] BASELINE_DIR CURRENT_JSON [...]
 
 Each CURRENT_JSON is a BENCH_*.json report produced by a bench binary
 ({"bench": ..., "scenarios": [{"name", "rate_msgs_per_sec", ...}],
 "gate": {...}}). The baseline directory holds the previous successful
 run's reports under the same file names (downloaded as artifacts); when a
 baseline file is missing the table still prints, with the delta column
-empty — the step must never fail the job.
+empty.
+
+With --fail-over PCT the script exits nonzero if any scenario's rate
+dropped more than PCT percent against its baseline — run-over-run
+erosion fails the job instead of only printing. Missing baselines never
+trip the threshold (there is nothing to regress against).
 
 Output is GitHub-flavored markdown on stdout.
 """
@@ -40,14 +45,26 @@ def fmt_rate(r):
 
 
 def main():
-    if len(sys.argv) < 3:
-        print("usage: bench_delta.py BASELINE_DIR CURRENT_JSON...", file=sys.stderr)
+    args = sys.argv[1:]
+    fail_over = None
+    if args and args[0] == "--fail-over":
+        if len(args) < 2:
+            print("--fail-over requires a percentage", file=sys.stderr)
+            return 2
+        fail_over = float(args[1])
+        args = args[2:]
+    if len(args) < 2:
+        print(
+            "usage: bench_delta.py [--fail-over PCT] BASELINE_DIR CURRENT_JSON...",
+            file=sys.stderr,
+        )
         return 1
-    baseline_dir = sys.argv[1]
+    baseline_dir = args[0]
     print("## Bench rates, run over run")
     print()
     any_baseline = False
-    for cur_path in sys.argv[2:]:
+    regressions = []
+    for cur_path in args[1:]:
         cur = load(cur_path)
         if cur is None:
             print(f"_{cur_path}: missing or unreadable; skipped_")
@@ -64,8 +81,11 @@ def main():
         for scen, rate in rates(cur).items():
             prev = base_rates.get(scen)
             if prev and prev > 0.0:
-                delta = f"{(rate - prev) / prev * 100.0:+.1f}%"
+                pct = (rate - prev) / prev * 100.0
+                delta = f"{pct:+.1f}%"
                 prev_s = fmt_rate(prev)
+                if fail_over is not None and pct < -fail_over:
+                    regressions.append(f"{name}/{scen} {pct:+.1f}%")
             else:
                 delta, prev_s = "–", "–"
             print(f"| {scen} | {prev_s} | {fmt_rate(rate)} | {delta} |")
@@ -81,6 +101,14 @@ def main():
     if not any_baseline:
         print("_No baseline reports found (first run on this branch?); "
               "deltas will appear from the next run._")
+    if regressions:
+        print(
+            f"**FAIL: rate regressed more than {fail_over:g}% against the "
+            f"previous run: {', '.join(regressions)}**"
+        )
+        for r in regressions:
+            print(f"bench regression over threshold: {r}", file=sys.stderr)
+        return 1
     return 0
 
 

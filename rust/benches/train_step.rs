@@ -1,0 +1,109 @@
+//! Bench: the train-step lane — overlapped bucket allreduce (iallreduce
+//! issued during the backward pass, waited at step end) vs blocking
+//! bucket-by-bucket, on the 2x2-proc topology. Deterministic DES runs;
+//! values are exact per configuration.
+//!
+//! Environment (mirrors the message_rate/rma_rate/coll_rate benches):
+//!  * `BENCH_REPS`   — train steps per arm (default 8).
+//!  * `BENCH_JSON`   — write a machine-readable report (rates + counters +
+//!    gate ratios) to this path.
+//!  * `BENCH_GATE=1` — exit nonzero if a gate fails (overlap <= blocking,
+//!    no communication actually hidden, dedicated bucket lanes colliding,
+//!    or a wire-contract violation).
+
+use vcmpi::bench::{train_step_run, RateReport, StepMode, TrainStepParams};
+
+struct Scenario {
+    name: &'static str,
+    threads: usize,
+    report: RateReport,
+}
+
+const COUNTER_KEYS: [&str; 3] =
+    ["stale_ctrl_drops", "policy_mismatch", "distinct_coll_lanes"];
+
+fn scenario_json(s: &Scenario) -> String {
+    let counters: Vec<String> = COUNTER_KEYS
+        .iter()
+        .map(|k| format!("\"{}\": {}", k, s.report.sum_stat(k) as u64))
+        .collect();
+    format!(
+        "    {{\"name\": \"{}\", \"threads\": {}, \"rate_msgs_per_sec\": {:.1}, \
+         \"counters\": {{{}}}}}",
+        s.name,
+        s.threads,
+        s.report.rate,
+        counters.join(", ")
+    )
+}
+
+fn main() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
+    let reps = reps.clamp(2, 64);
+    let threads = 8;
+    let buckets = 4;
+    let base = TrainStepParams {
+        threads,
+        buckets,
+        elems: 32 * 1024,
+        compute_ns: 50_000,
+        steps: reps,
+        ..Default::default()
+    };
+
+    println!("== train_step: 128 KiB f32 grads, {buckets} buckets, 2x2 procs, {reps} steps ==");
+    println!("{:<22} {:>16}", "scenario", "Melem/s");
+    let blocking = Scenario {
+        name: StepMode::StepBlocking.label(),
+        threads,
+        report: train_step_run(TrainStepParams { mode: StepMode::StepBlocking, ..base.clone() }),
+    };
+    let overlap = Scenario {
+        name: StepMode::StepOverlap.label(),
+        threads,
+        report: train_step_run(TrainStepParams { mode: StepMode::StepOverlap, ..base }),
+    };
+    let scenarios = [&blocking, &overlap];
+    for s in scenarios {
+        println!("{:<22} {:>16.3}", s.name, s.report.rate / 1e6);
+    }
+
+    // ---- regression gate (same ratios the unit test asserts, strict) ----
+    let overlap_over_blocking = overlap.report.rate / blocking.report.rate;
+    let overlap_hidden_ns = overlap.report.measurements["coll_overlap_ns"];
+    // 4 procs x `buckets` dedicated comms, each on its own lane.
+    let distinct_lanes_ok =
+        overlap.report.sum_stat("distinct_coll_lanes") == (4 * buckets) as f64;
+    let wire_contract_ok = overlap.report.sum_stat("policy_mismatch") == 0.0
+        && overlap.report.sum_stat("stale_ctrl_drops") == 0.0;
+    let pass = overlap_over_blocking > 1.0
+        && overlap_hidden_ns > 0.0
+        && distinct_lanes_ok
+        && wire_contract_ok;
+    println!("\ngate: step_overlap/step_blocking = {overlap_over_blocking:.3} (> 1.0 required)");
+    println!("gate: coll_overlap_ns = {overlap_hidden_ns:.0} (> 0 required)");
+    println!("gate: distinct dedicated bucket lanes = {distinct_lanes_ok}");
+    println!("gate: wire contract clean = {wire_contract_ok}");
+    println!("gate: {}", if pass { "PASS" } else { "FAIL" });
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let body = format!(
+            "{{\n  \"bench\": \"train_step\",\n  \"reps\": {reps},\n  \
+             \"scenarios\": [\n{}\n  ],\n  \"gate\": {{\n    \
+             \"overlap_over_blocking\": {overlap_over_blocking:.4},\n    \
+             \"coll_overlap_ns\": {overlap_hidden_ns:.0},\n    \
+             \"distinct_coll_lanes\": {distinct_lanes_ok},\n    \
+             \"pass\": {pass}\n  }}\n}}\n",
+            scenarios.into_iter().map(scenario_json).collect::<Vec<_>>().join(",\n"),
+        );
+        std::fs::write(&path, body).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+
+    let gate_enforced = std::env::var("BENCH_GATE").map(|v| v == "1").unwrap_or(false);
+    if gate_enforced && !pass {
+        eprintln!("train_step regression gate FAILED");
+        std::process::exit(1);
+    }
+}

@@ -6,10 +6,12 @@ pub mod coll_rate;
 pub mod figures;
 pub mod message_rate;
 pub mod rma_rate;
+pub mod train_step;
 
 pub use coll_rate::{coll_rate_run, CollMode, CollRateParams};
 pub use message_rate::{message_rate, message_rate_run, Mode, Op, RateParams, RateReport};
 pub use rma_rate::{ordered_window_program_order_preserved, rma_rate_run, RmaRateParams, WinMode};
+pub use train_step::{train_step_run, StepMode, TrainStepParams};
 
 /// A simple CSV emitter for figure output.
 pub struct Csv {

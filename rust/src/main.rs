@@ -53,12 +53,16 @@ fn main() {
             match vcmpi::coordinator::train(cfg) {
                 Ok(r) => {
                     println!(
-                        "loss {:.4} -> {:.4} over {} steps ({} params, {:.1} ms/step)",
+                        "loss {:.4} -> {:.4} over {} steps ({} params, {:.1} ms/step, \
+                         allreduce {:.1} ms = {:.1} blocked + {:.1} overlapped)",
                         r.first_loss,
                         r.final_loss,
                         r.losses.len(),
                         r.params,
-                        r.step_ms
+                        r.step_ms,
+                        r.allreduce_ms,
+                        r.allreduce_blocked_ms,
+                        r.allreduce_overlap_ms
                     );
                 }
                 Err(e) => {

@@ -1,0 +1,648 @@
+//! Nonblocking collectives: `MPI_Iallreduce` / `MPI_Ibcast` as
+//! request-shaped handles riding the segmented collective engine.
+//!
+//! The blocking segmented ring/binomial tree in `mpi::collectives`
+//! already pre-posts every step's receives; the only thing its step loop
+//! added was a thread parked in `wait`. This module factors that loop
+//! into a resumable state machine — [`CollSched`] — so the schedule can
+//! be driven incrementally by *any* thread's progress call, and the
+//! issuing thread is free to compute while the collective is in flight.
+//!
+//! # State machine
+//!
+//! A [`CollSched`] holds the working buffer, the full receive schedule
+//! (every phase/step/segment receive is posted at initiation — legal
+//! because the internal tag space is distinct per (phase, step,
+//! segment)), a cursor over it, and the outstanding child send requests.
+//! Advancing the machine consumes completed receives **strictly in
+//! schedule order** (so the reduction order — and therefore the floating
+//! point result — is bit-identical to the blocking path), applies each
+//! segment (reduce for the reduce-scatter phase, copy for the allgather
+//! phase, append for bcast), and forwards the freshly updated segment
+//! downstream exactly as the blocking loop did. Once the receive
+//! schedule is exhausted the machine drains its sends, then parks the
+//! result in the buffer.
+//!
+//! # Progress-hook contract
+//!
+//! Initiating a nonblocking collective registers its schedule in
+//! `MpiProc::coll_scheds` and arms progress hook 0. Every
+//! `progress_with` iteration ends in `check_hooks` (`mpi::progress`),
+//! which — in FG mode, under the hook's own lock — snapshots the
+//! registry and advances each schedule. That gives the MPICH-style
+//! asynchronous-progress property: *any* thread waiting on *any*
+//! request (a p2p storm, an RMA flush, another collective) drives every
+//! outstanding collective forward. `coll_wait` additionally drives
+//! progress itself (polling the lane of the head blocked child, per its
+//! recorded striping flags), so completion never depends on other
+//! threads existing. Under the Global critical section the hooks do not
+//! run (`guard() != VciLock`) and the waiter alone drives the schedule —
+//! same liveness, serialized like every other Global-CS path.
+//!
+//! Lock discipline (see `mpi::instrument`): the hook path nests
+//! `Hook (20) → CollSched (25) → Vci (30)`, strictly ascending. The
+//! advancement step itself takes **no** sim lock other than `CollSched`:
+//! child sends are issued with the schedule lock *released* (the cursor
+//! already moved, so a racing advancer cannot double-issue), and
+//! completed children are retired after the lock is dropped. Child
+//! completion is observed only via the lock-free `is_complete` — the
+//! machine never calls `progress` while holding any lock, which is what
+//! makes the hook re-entrancy-free.
+//!
+//! # Tag-space constraint
+//!
+//! The internal collective tag space admits ONE outstanding nonblocking
+//! collective per communicator (tags are reused across invocations —
+//! `mpi::collectives` module doc). Initiating a second one on the same
+//! comm while the first is outstanding is erroneous and panics;
+//! overlapping collectives (the trainer's gradient buckets, the
+//! deadlock suite) use distinct communicators, which is also what gives
+//! them independent lanes.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::platform::{pnow, PMutex};
+
+use super::collectives::{allreduce_tag, bcast_tag, part_bounds};
+use super::instrument::{self, LockClass};
+use super::policy::MAX_COLL_SEGMENTS;
+use super::proc::MpiProc;
+use super::request::{Request, REQ_FLAG_DOORBELL, REQ_FLAG_STRIPED};
+use super::Comm;
+
+/// Reduction operator of a nonblocking allreduce (closures cannot ride a
+/// handle that outlives the initiating call, so the op is data).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RedOp {
+    /// Element-wise f32 sum (little-endian 4-byte elements).
+    SumF32,
+    /// Element-wise f64 sum (little-endian 8-byte elements).
+    SumF64,
+}
+
+impl RedOp {
+    pub(super) fn elem(self) -> usize {
+        match self {
+            RedOp::SumF32 => 4,
+            RedOp::SumF64 => 8,
+        }
+    }
+
+    /// `acc ⊕= inc`, element-aligned. Accumulation order is fixed by the
+    /// schedule cursor, so results are bit-identical to the blocking ring.
+    fn apply(self, acc: &mut [u8], inc: &[u8]) {
+        match self {
+            RedOp::SumF32 => {
+                for (a, b) in acc.chunks_exact_mut(4).zip(inc.chunks_exact(4)) {
+                    let v = f32::from_le_bytes((&a[..]).try_into().unwrap())
+                        + f32::from_le_bytes(b.try_into().unwrap());
+                    a.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            RedOp::SumF64 => {
+                for (a, b) in acc.chunks_exact_mut(8).zip(inc.chunks_exact(8)) {
+                    let v = f64::from_le_bytes((&a[..]).try_into().unwrap())
+                        + f64::from_le_bytes(b.try_into().unwrap());
+                    a.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+/// What consuming a received segment does to the working buffer.
+#[derive(Clone, Copy)]
+enum Combine {
+    /// Reduce-scatter phase: `buf[lo..hi] ⊕= segment`.
+    Reduce,
+    /// Allgather phase: `buf[lo..hi] = segment`.
+    Copy,
+    /// Bcast: segments arrive in order and are appended (non-roots never
+    /// know the payload length up front).
+    Append,
+}
+
+/// Sends to issue the moment a segment is consumed (the pipelining step
+/// of the blocking loop, made explicit).
+#[derive(Clone)]
+struct ForwardSpec {
+    tag: i32,
+    dsts: Vec<usize>,
+}
+
+/// One pre-posted segment receive plus its downstream forwarding.
+struct SegRecv {
+    req: Request,
+    /// Byte bounds in the working buffer (unused for `Combine::Append`).
+    lo: usize,
+    hi: usize,
+    forward: Option<ForwardSpec>,
+}
+
+/// One ring/tree step: its segment receives, consumed in order.
+struct RecvStep {
+    combine: Combine,
+    segs: Vec<SegRecv>,
+}
+
+/// A send the advancer must issue once the schedule lock is released.
+struct SendAction {
+    dst: usize,
+    tag: i32,
+    data: Vec<u8>,
+}
+
+/// Outcome of one locked advancement pass.
+enum Locked {
+    /// The head child request is incomplete: progress its lane (routing
+    /// flags read from the live slot, under the schedule lock).
+    Blocked { vci: usize, striped: bool, doorbell: bool },
+    /// Issue these sends (lock released), deposit the requests, re-enter.
+    Issue(Vec<SendAction>),
+    Done,
+}
+
+/// Outcome of a full advancement drive ([`MpiProc::coll_advance`]).
+pub(super) enum CollStatus {
+    Blocked { vci: usize, striped: bool, doorbell: bool },
+    Done,
+}
+
+/// Mutable schedule state, serialized by the `CollSched` lock.
+struct SchedState {
+    buf: Vec<u8>,
+    op: Option<RedOp>,
+    steps: Vec<RecvStep>,
+    cursor_step: usize,
+    cursor_seg: usize,
+    sends: Vec<Request>,
+    /// `sends[..send_drained]` are retired.
+    send_drained: usize,
+    /// Completed children awaiting retirement — drained by the driver
+    /// *after* the schedule lock is dropped (retirement takes VCI /
+    /// Global locks the advancer must not nest under `CollSched`).
+    to_free: Vec<Request>,
+    done: bool,
+    /// Virtual time the schedule reached `done` (clamps the overlap
+    /// metric: compute after completion is not "hidden" communication).
+    completed_at: u64,
+}
+
+/// A resumable nonblocking-collective schedule (see the module doc).
+pub struct CollSched {
+    pub(super) comm: Comm,
+    issued_at: u64,
+    registered: bool,
+    state: PMutex<SchedState>,
+}
+
+/// The user-visible handle of a nonblocking collective. Complete it with
+/// [`MpiProc::coll_wait`] (which yields the result buffer); poll it with
+/// [`MpiProc::coll_test`].
+pub struct CollReq {
+    sched: Arc<CollSched>,
+}
+
+impl MpiProc {
+    /// Per-chunk segment count: static `vcmpi_coll_segments`, or the
+    /// topology-aware [`MpiProc::auto_coll_segments`] when the policy
+    /// says `auto` — either way bounded by the chunk's element count.
+    /// Pure function of shared inputs (policy, cost model, payload
+    /// length): part of the wire contract like the tag layout.
+    pub(super) fn coll_segs(&self, comm: &Comm, chunk_elems: usize, elem: usize) -> usize {
+        let base = if comm.policy.coll_segments_auto {
+            self.auto_coll_segments(chunk_elems * elem)
+        } else {
+            comm.policy.coll_segments.clamp(1, MAX_COLL_SEGMENTS)
+        };
+        base.min(chunk_elems.max(1))
+    }
+
+    /// MPI_Iallreduce over an element-aligned byte buffer: initiates the
+    /// segmented ring (posting EVERY phase's receives and the first
+    /// step's sends) and returns a handle the progress hooks advance.
+    pub fn iallreduce(&self, comm: &Comm, data: &[u8], op: RedOp) -> CollReq {
+        let elem = op.elem();
+        assert_eq!(data.len() % elem, 0, "payload must be element-aligned");
+        let buf = data.to_vec();
+        let n = comm.size;
+        if n <= 1 {
+            return self.coll_trivial(comm, buf);
+        }
+        let me = comm.rank;
+        let right = (me + 1) % n;
+        let left = (me + n - 1) % n;
+        let elems = buf.len() / elem;
+        let chunk_segs = |c: usize| -> usize {
+            let (clo, chi) = part_bounds(elems, n, c);
+            self.coll_segs(comm, chi - clo, elem)
+        };
+        // Byte bounds of segment g of chunk c (identical on every rank).
+        let seg_bounds = |c: usize, g: usize| -> (usize, usize) {
+            let (clo, chi) = part_bounds(elems, n, c);
+            let (slo, shi) = part_bounds(chi - clo, chunk_segs(c), g);
+            ((clo + slo) * elem, (clo + shi) * elem)
+        };
+        // Full receive schedule, both phases pre-posted (tags are unique
+        // per (phase, step, segment)). Phase 0 (reduce-scatter) step s
+        // receives chunk (me-s-1); phase 1 (allgather) receives chunk
+        // (me-s). A consumed segment forwards to the right neighbor as
+        // the next step's send — the last reduce-scatter step's segments
+        // (chunk me+1, fully reduced here) forward as allgather step 0,
+        // which is exactly what the blocking loop sent there.
+        let mut steps = Vec::with_capacity(2 * (n - 1));
+        for phase in 0..2usize {
+            for s in 0..n - 1 {
+                let chunk =
+                    if phase == 0 { (me + n - s - 1) % n } else { (me + n - s) % n };
+                let combine = if phase == 0 { Combine::Reduce } else { Combine::Copy };
+                let segs = (0..chunk_segs(chunk))
+                    .map(|g| {
+                        let (lo, hi) = seg_bounds(chunk, g);
+                        let forward = if s + 1 < n - 1 {
+                            Some(ForwardSpec {
+                                tag: allreduce_tag(n, phase, s + 1, g),
+                                dsts: vec![right],
+                            })
+                        } else if phase == 0 {
+                            Some(ForwardSpec { tag: allreduce_tag(n, 1, 0, g), dsts: vec![right] })
+                        } else {
+                            None
+                        };
+                        SegRecv {
+                            req: self.coll_irecv(comm, left, allreduce_tag(n, phase, s, g)),
+                            lo,
+                            hi,
+                            forward,
+                        }
+                    })
+                    .collect();
+                steps.push(RecvStep { combine, segs });
+            }
+        }
+        // Reduce-scatter step 0 sends my own chunk.
+        let mut sends = Vec::with_capacity(chunk_segs(me));
+        for g in 0..chunk_segs(me) {
+            let (lo, hi) = seg_bounds(me, g);
+            sends.push(self.coll_isend(comm, right, allreduce_tag(n, 0, 0, g), &buf[lo..hi]));
+        }
+        self.coll_activate(comm, SchedState {
+            buf,
+            op: Some(op),
+            steps,
+            cursor_step: 0,
+            cursor_seg: 0,
+            sends,
+            send_drained: 0,
+            to_free: Vec::new(),
+            done: false,
+            completed_at: 0,
+        })
+    }
+
+    /// MPI_Iallreduce (sum) over an f32 buffer — the gradient-exchange
+    /// entry point. Pair with [`MpiProc::coll_wait_f32`].
+    pub fn iallreduce_f32(&self, comm: &Comm, data: &[f32]) -> CollReq {
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        self.iallreduce(comm, &bytes, RedOp::SumF32)
+    }
+
+    /// MPI_Ibcast (binomial tree, segment-pipelined) from `root`; only
+    /// the root supplies `data`. `coll_wait` yields the full buffer on
+    /// every rank. Non-roots size their receive posts from the policy's
+    /// STATIC segment count — `vcmpi_coll_segments=auto` cannot apply
+    /// here because they do not know the payload length (see
+    /// `mpi::policy`).
+    pub fn ibcast(&self, comm: &Comm, root: usize, data: Option<Vec<u8>>) -> CollReq {
+        let n = comm.size;
+        if n <= 1 {
+            return self.coll_trivial(comm, data.expect("root must supply data"));
+        }
+        let me = (comm.rank + n - root) % n; // virtual rank with root at 0
+        let segs = comm.policy.coll_segments.clamp(1, MAX_COLL_SEGMENTS);
+        let max_j = if me == 0 { usize::BITS } else { me.trailing_zeros() };
+        let mut children = Vec::new();
+        for j in 0..max_j {
+            let child_virt = me + (1usize << j);
+            if child_virt >= n {
+                break;
+            }
+            children.push((child_virt + root) % n); // actual rank
+        }
+        let st = if me == 0 {
+            let buf = data.expect("root must supply data");
+            let mut sends = Vec::with_capacity(children.len() * segs);
+            for g in 0..segs {
+                let (lo, hi) = part_bounds(buf.len(), segs, g);
+                for &child in &children {
+                    sends.push(self.coll_isend(comm, child, bcast_tag(g), &buf[lo..hi]));
+                }
+            }
+            SchedState {
+                buf,
+                op: None,
+                steps: Vec::new(),
+                cursor_step: 0,
+                cursor_seg: 0,
+                sends,
+                send_drained: 0,
+                to_free: Vec::new(),
+                done: false,
+                completed_at: 0,
+            }
+        } else {
+            let parent = ((me & (me - 1)) + root) % n;
+            let forward_dsts = children;
+            let segs = (0..segs)
+                .map(|g| SegRecv {
+                    req: self.coll_irecv(comm, parent, bcast_tag(g)),
+                    lo: 0,
+                    hi: 0,
+                    forward: if forward_dsts.is_empty() {
+                        None
+                    } else {
+                        Some(ForwardSpec { tag: bcast_tag(g), dsts: forward_dsts.clone() })
+                    },
+                })
+                .collect();
+            SchedState {
+                buf: Vec::new(),
+                op: None,
+                steps: vec![RecvStep { combine: Combine::Append, segs }],
+                cursor_step: 0,
+                cursor_seg: 0,
+                sends: Vec::new(),
+                send_drained: 0,
+                to_free: Vec::new(),
+                done: false,
+                completed_at: 0,
+            }
+        };
+        self.coll_activate(comm, st)
+    }
+
+    /// Complete a nonblocking collective: drive its schedule (progressing
+    /// the head blocked child's lane between passes) until done, retire
+    /// it from the hook registry, and return the result buffer. Credits
+    /// the issue-to-wait gap — clamped at the schedule's completion time
+    /// — to the Table-1 `coll_overlap_ms` column: the compute this thread
+    /// did while the collective was genuinely in flight.
+    pub fn coll_wait(&self, req: CollReq) -> Vec<u8> {
+        let sched = req.sched;
+        let wait_entry = pnow(self.backend);
+        loop {
+            match self.coll_advance(&sched) {
+                CollStatus::Done => break,
+                CollStatus::Blocked { vci, striped, doorbell } => {
+                    self.progress_with(vci, striped, doorbell);
+                }
+            }
+        }
+        if sched.registered {
+            self.coll_unregister(&sched);
+        }
+        let (buf, completed_at) = {
+            let mut st = sched.state.lock_class(LockClass::CollSched);
+            (std::mem::take(&mut st.buf), st.completed_at)
+        };
+        instrument::count_coll_overlap_ns(
+            completed_at.min(wait_entry).saturating_sub(sched.issued_at),
+        );
+        buf
+    }
+
+    /// [`MpiProc::coll_wait`] into an f32 slice.
+    pub fn coll_wait_f32(&self, req: CollReq, out: &mut [f32]) {
+        let bytes = self.coll_wait(req);
+        for (d, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *d = f32::from_le_bytes(c.try_into().unwrap());
+        }
+    }
+
+    /// MPI_Test for a collective handle: one advancement drive, one
+    /// progress pass if blocked, then a re-check. `true` means the
+    /// schedule is complete — the handle must still be passed to
+    /// [`MpiProc::coll_wait`] to fetch the result and retire it (which
+    /// then returns without progressing, like `wait` on a completed
+    /// request).
+    pub fn coll_test(&self, req: &CollReq) -> bool {
+        match self.coll_advance(&req.sched) {
+            CollStatus::Done => true,
+            CollStatus::Blocked { vci, striped, doorbell } => {
+                self.progress_with(vci, striped, doorbell);
+                matches!(self.coll_advance(&req.sched), CollStatus::Done)
+            }
+        }
+    }
+
+    /// Hook-0 workload (called from `check_hooks` under the Hook lock,
+    /// FG mode only): snapshot the registry, then advance every
+    /// outstanding schedule as far as its completed children allow. The
+    /// host registry lock is dropped before any schedule lock is taken.
+    pub(super) fn advance_registered_colls(&self) {
+        let scheds: Vec<Arc<CollSched>> = {
+            let t = self.coll_scheds.lock(LockClass::HostCollScheds);
+            t.clone()
+        };
+        for sched in scheds {
+            // Blocked is fine — the snapshot pass is opportunistic.
+            let _ = self.coll_advance(&sched);
+        }
+    }
+
+    /// Drive one schedule as far as it can go without progressing:
+    /// consume completed receives in order (issuing the forwards with the
+    /// schedule lock released), then drain sends. Retires completed
+    /// children after every locked pass.
+    pub(super) fn coll_advance(&self, sched: &Arc<CollSched>) -> CollStatus {
+        loop {
+            let outcome = {
+                let mut st = sched.state.lock_class(LockClass::CollSched);
+                self.advance_locked(&mut st)
+            };
+            match outcome {
+                Locked::Issue(actions) => {
+                    let reqs: Vec<Request> = actions
+                        .into_iter()
+                        .map(|a| self.coll_isend(&sched.comm, a.dst, a.tag, &a.data))
+                        .collect();
+                    let mut st = sched.state.lock_class(LockClass::CollSched);
+                    st.sends.extend(reqs);
+                }
+                Locked::Blocked { vci, striped, doorbell } => {
+                    self.coll_drain_free(sched);
+                    return CollStatus::Blocked { vci, striped, doorbell };
+                }
+                Locked::Done => {
+                    self.coll_drain_free(sched);
+                    return CollStatus::Done;
+                }
+            }
+        }
+    }
+
+    /// One pass under the schedule lock. Never blocks, never progresses,
+    /// takes no sim lock below `CollSched` (slot data locks are host
+    /// leaves): completion is observed via the lock-free `is_complete`.
+    fn advance_locked(&self, st: &mut SchedState) -> Locked {
+        loop {
+            if st.cursor_step < st.steps.len() {
+                let combine = st.steps[st.cursor_step].combine;
+                let (req, lo, hi, forward) = {
+                    let seg = &st.steps[st.cursor_step].segs[st.cursor_seg];
+                    (seg.req, seg.lo, seg.hi, seg.forward.clone())
+                };
+                let Request::Real { id, vci } = req else {
+                    unreachable!("collective segment receives are slab-backed")
+                };
+                if !self.is_complete(id) {
+                    let flags = self.slab.slot(id).flags.load(Ordering::Relaxed);
+                    return Locked::Blocked {
+                        vci,
+                        striped: flags & REQ_FLAG_STRIPED != 0,
+                        doorbell: flags & REQ_FLAG_DOORBELL != 0,
+                    };
+                }
+                let data = self
+                    .slab
+                    .slot(id)
+                    .data
+                    .lock(LockClass::HostSlotData)
+                    .take()
+                    .expect("collective segment payload");
+                let (flo, fhi) = match combine {
+                    Combine::Reduce => {
+                        debug_assert_eq!(data.len(), hi - lo, "segment length mismatch");
+                        st.op.expect("reduce op").apply(&mut st.buf[lo..hi], &data);
+                        (lo, hi)
+                    }
+                    Combine::Copy => {
+                        debug_assert_eq!(data.len(), hi - lo, "segment length mismatch");
+                        st.buf[lo..hi].copy_from_slice(&data);
+                        (lo, hi)
+                    }
+                    Combine::Append => {
+                        let lo = st.buf.len();
+                        st.buf.extend_from_slice(&data);
+                        (lo, st.buf.len())
+                    }
+                };
+                st.to_free.push(req);
+                st.cursor_seg += 1;
+                if st.cursor_seg == st.steps[st.cursor_step].segs.len() {
+                    st.cursor_seg = 0;
+                    st.cursor_step += 1;
+                }
+                if let Some(f) = forward {
+                    let payload = st.buf[flo..fhi].to_vec();
+                    let actions = f
+                        .dsts
+                        .iter()
+                        .map(|&dst| SendAction { dst, tag: f.tag, data: payload.clone() })
+                        .collect();
+                    return Locked::Issue(actions);
+                }
+                continue;
+            }
+            while st.send_drained < st.sends.len() {
+                let r = st.sends[st.send_drained];
+                if let Request::Real { id, vci } = r {
+                    if !self.is_complete(id) {
+                        let flags = self.slab.slot(id).flags.load(Ordering::Relaxed);
+                        return Locked::Blocked {
+                            vci,
+                            striped: flags & REQ_FLAG_STRIPED != 0,
+                            doorbell: flags & REQ_FLAG_DOORBELL != 0,
+                        };
+                    }
+                }
+                st.to_free.push(r);
+                st.send_drained += 1;
+            }
+            if !st.done {
+                st.done = true;
+                st.completed_at = pnow(self.backend);
+            }
+            return Locked::Done;
+        }
+    }
+
+    /// Retire completed children parked by the advancer. Runs with the
+    /// schedule lock released (a retire takes VCI — or, under the Global
+    /// CS, the Global — lock, which must not nest under `CollSched`).
+    /// Every parked request is complete, so `wait` returns without a
+    /// single progress call.
+    fn coll_drain_free(&self, sched: &Arc<CollSched>) {
+        let to_free: Vec<Request> = {
+            let mut st = sched.state.lock_class(LockClass::CollSched);
+            std::mem::take(&mut st.to_free)
+        };
+        for r in to_free {
+            self.wait(r);
+        }
+    }
+
+    /// Build, register, and stamp a live schedule (children already
+    /// posted/issued by the initiator — single-threaded until this
+    /// registers it).
+    fn coll_activate(&self, comm: &Comm, st: SchedState) -> CollReq {
+        let sched = Arc::new(CollSched {
+            comm: comm.clone(),
+            issued_at: pnow(self.backend),
+            registered: true,
+            state: PMutex::new(self.backend, st),
+        });
+        self.coll_register(&sched);
+        CollReq { sched }
+    }
+
+    /// A pre-completed schedule (single-member comm): never registered.
+    fn coll_trivial(&self, comm: &Comm, buf: Vec<u8>) -> CollReq {
+        let now = pnow(self.backend);
+        let sched = Arc::new(CollSched {
+            comm: comm.clone(),
+            issued_at: now,
+            registered: false,
+            state: PMutex::new(self.backend, SchedState {
+                buf,
+                op: None,
+                steps: Vec::new(),
+                cursor_step: 0,
+                cursor_seg: 0,
+                sends: Vec::new(),
+                send_drained: 0,
+                to_free: Vec::new(),
+                done: true,
+                completed_at: now,
+            }),
+        });
+        CollReq { sched }
+    }
+
+    /// Register a schedule and arm progress hook 0. One outstanding
+    /// nonblocking collective per communicator (the tag-space contract —
+    /// module doc); a second initiation on the same comm is erroneous.
+    fn coll_register(&self, sched: &Arc<CollSched>) {
+        let mut t = self.coll_scheds.lock(LockClass::HostCollScheds);
+        assert!(
+            !t.iter().any(|s| s.comm.id == sched.comm.id),
+            "a nonblocking collective is already outstanding on comm {} — the internal \
+             collective tag space admits one per communicator; overlap across distinct \
+             comms instead (erroneous program)",
+            sched.comm.id
+        );
+        t.push(sched.clone());
+        self.hooks[0].active.store(true, Ordering::Release);
+    }
+
+    /// Remove a completed schedule; disarm hook 0 when the registry
+    /// empties (so idle progress loops go back to one atomic load).
+    fn coll_unregister(&self, sched: &Arc<CollSched>) {
+        let mut t = self.coll_scheds.lock(LockClass::HostCollScheds);
+        t.retain(|s| !Arc::ptr_eq(s, sched));
+        if t.is_empty() {
+            self.hooks[0].active.store(false, Ordering::Release);
+        }
+    }
+}

@@ -33,15 +33,36 @@
 //! | `dedicated`         | any                     | explicit-lane isend/irecv | ONE reserved lane, **pinned** out of the stripe set |
 //! | `striped`           | any                     | explicit-lane isend/irecv | `1 + hash(comm, sender, tag) % (pool-1)`, per segment |
 //!
-//! `dedicated` reserves (pins) a lane derived deterministically from the
-//! comm id — see `MpiProc::dedicated_coll_lane` — so a hot striped comm's
-//! p2p storm sharing the pool can never head-of-line-block an allreduce;
+//! `dedicated` reserves (pins) the least-loaded lane at comm creation,
+//! deterministically across ranks — see `MpiProc::dedicated_coll_lane` —
+//! so a hot striped comm's p2p storm sharing the pool can never
+//! head-of-line-block an allreduce, and two dedicated comms land on
+//! distinct lanes while the pool has them;
 //! the pin is released at `comm_free`. `striped` spreads a single
 //! collective's segments over the pool by the pure envelope hash (legal
 //! without the §7 wildcard assertions because this tag space never posts
 //! wildcards); pins are *not* probed — pin state is process-local and
 //! probing it would break the wire-contract symmetry of the lane choice,
 //! so a segment may occasionally share a pinned lane.
+//!
+//! # Blocking vs nonblocking (the operation rows of the decision table)
+//!
+//! | operation | shape | driven by |
+//! |-----------|-------|-----------|
+//! | `barrier` / `allgather_*` | blocking, pre-posted rounds/steps | the calling thread's `wait`s |
+//! | `bcast` | `ibcast` + `coll_wait` | progress hook 0 + the waiter |
+//! | `allreduce_f32` / `allreduce_scalar` | `iallreduce` + `coll_wait` | progress hook 0 + the waiter |
+//! | `iallreduce` / `ibcast` (`mpi::coll_nb`) | resumable [`CollSched`](super::coll_nb::CollSched) state machine | **any** thread's progress call (hook 0), `coll_wait`/`coll_test` |
+//!
+//! The nonblocking forms are the primitive: initiation pre-posts the
+//! FULL receive schedule (every phase/step/segment — legal because the
+//! tag space below is unique per position) and registers a resumable
+//! schedule that every progress iteration's `check_hooks` advances, so
+//! the collective proceeds while the initiator computes (the trainer's
+//! bucket overlap). The blocking forms are literally initiate + wait —
+//! one engine, so blocking/nonblocking results are bit-identical by
+//! construction. See `mpi::coll_nb` for the state-machine and
+//! progress-hook contract (lock ordering, re-entrancy, retirement).
 //!
 //! # Internal tag space
 //!
@@ -56,8 +77,11 @@
 //!   (phase·(n-1) + step)·MAX_COLL_SEGMENTS + segment`
 //!
 //! Collectives on one communicator are non-concurrent (MPI's ordering
-//! rule), so tags may be reused across invocations.
+//! rule), so tags may be reused across invocations — which is also why
+//! at most ONE nonblocking collective may be outstanding per
+//! communicator (enforced at initiation; overlap uses distinct comms).
 
+use super::coll_nb::RedOp;
 use super::instrument;
 use super::matching::{Src, Tag};
 use super::policy::MAX_COLL_SEGMENTS;
@@ -74,15 +98,28 @@ const ALLREDUCE_TAG: i32 = INTERNAL_TAG_BASE + 4096;
 /// Even split of `len` items into `parts` pieces: bounds of piece `i`.
 /// Pure function of its inputs — every rank derives identical chunk and
 /// segment boundaries from the shared payload length.
-fn part_bounds(len: usize, parts: usize, i: usize) -> (usize, usize) {
+pub(super) fn part_bounds(len: usize, parts: usize, i: usize) -> (usize, usize) {
     let per = len.div_ceil(parts);
     ((i * per).min(len), ((i + 1) * per).min(len))
+}
+
+/// Allreduce segment tag: unique per (phase, ring step, segment) for an
+/// n-rank ring — the tag layout the module doc specifies, shared by the
+/// blocking wrapper and the nonblocking schedule (`mpi::coll_nb`).
+pub(super) fn allreduce_tag(n: usize, phase: usize, step: usize, g: usize) -> i32 {
+    ALLREDUCE_TAG + ((phase * (n - 1) + step) * MAX_COLL_SEGMENTS + g) as i32
+}
+
+/// Bcast segment tag (one tag per segment; every tree level reuses it —
+/// sources differ per hop, so matching stays unambiguous).
+pub(super) fn bcast_tag(g: usize) -> i32 {
+    BCAST_TAG + g as i32
 }
 
 impl MpiProc {
     /// Issue one collective-internal segment send on `comm` (lane per the
     /// policy's collectives mode), with Table-1 accounting.
-    fn coll_isend(&self, comm: &Comm, dst: usize, tag: i32, data: &[u8]) -> Request {
+    pub(super) fn coll_isend(&self, comm: &Comm, dst: usize, tag: i32, data: &[u8]) -> Request {
         let lane = self.coll_segment_vci(comm, comm.rank, tag);
         instrument::count_coll_segment();
         if lane.is_some_and(|l| l != self.comm_vci(comm, None)) {
@@ -94,18 +131,9 @@ impl MpiProc {
     /// Post one collective-internal segment receive from concrete source
     /// `src` (the collective tag space never uses wildcards — that is what
     /// makes the multi-lane mapping symmetric on both sides).
-    fn coll_irecv(&self, comm: &Comm, src: usize, tag: i32) -> Request {
+    pub(super) fn coll_irecv(&self, comm: &Comm, src: usize, tag: i32) -> Request {
         let lane = self.coll_segment_vci(comm, src, tag);
         self.irecv_coll(comm, Src::Rank(src), Tag::Value(tag), lane)
-    }
-
-    /// Per-chunk segment count: the policy's `vcmpi_coll_segments`,
-    /// bounded by the chunk's element count (at least one segment, so an
-    /// empty chunk still costs exactly one empty message and the ring
-    /// schedule stays uniform). Pure function of shared inputs — part of
-    /// the wire contract like the tag layout.
-    fn coll_segs(&self, comm: &Comm, chunk_elems: usize) -> usize {
-        comm.policy.coll_segments.clamp(1, MAX_COLL_SEGMENTS).min(chunk_elems.max(1))
     }
 
     /// MPI_Barrier: dissemination algorithm — ceil(log2(n)) rounds.
@@ -155,60 +183,13 @@ impl MpiProc {
     /// while segment `g+1` is still in flight toward level `l` — the tree
     /// streams instead of storing-and-forwarding whole payloads.
     ///
-    /// The segment count is the policy's `vcmpi_coll_segments` (part of
-    /// the wire contract — non-roots size their receive posts from it
-    /// without knowing the payload length; ragged or empty trailing
-    /// segments are fine).
+    /// Literally [`MpiProc::ibcast`] + [`MpiProc::coll_wait`] — one
+    /// engine for both forms. The segment count is the policy's static
+    /// `vcmpi_coll_segments` (part of the wire contract — non-roots size
+    /// their receive posts from it without knowing the payload length;
+    /// ragged or empty trailing segments are fine).
     pub fn bcast(&self, comm: &Comm, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
-        let n = comm.size;
-        if n <= 1 {
-            return data.expect("root must supply data");
-        }
-        let me = (comm.rank + n - root) % n; // virtual rank with root at 0
-        let segs = comm.policy.coll_segments.clamp(1, MAX_COLL_SEGMENTS);
-        // Children of virtual rank v: v + 2^j for every j below v's
-        // lowest set bit (all j for the root), bounded by the comm size —
-        // the binomial rule "parent = clear the lowest set bit" inverted.
-        // Correct for non-power-of-two sizes and any root (regression
-        // tests in tests/collectives.rs).
-        let max_j = if me == 0 { usize::BITS } else { me.trailing_zeros() };
-        let mut children = Vec::new();
-        for j in 0..max_j {
-            let child_virt = me + (1usize << j);
-            if child_virt >= n {
-                break;
-            }
-            children.push((child_virt + root) % n); // actual rank
-        }
-        let mut sreqs = Vec::with_capacity(children.len() * segs);
-        let buf = if me == 0 {
-            let buf = data.expect("root must supply data");
-            for g in 0..segs {
-                let (lo, hi) = part_bounds(buf.len(), segs, g);
-                let tag = BCAST_TAG + g as i32;
-                for &child in &children {
-                    sreqs.push(self.coll_isend(comm, child, tag, &buf[lo..hi]));
-                }
-            }
-            buf
-        } else {
-            let parent = ((me & (me - 1)) + root) % n;
-            let rreqs: Vec<Request> = (0..segs)
-                .map(|g| self.coll_irecv(comm, parent, BCAST_TAG + g as i32))
-                .collect();
-            let mut buf = Vec::new();
-            for (g, rreq) in rreqs.into_iter().enumerate() {
-                let seg = self.wait(rreq).expect("bcast segment");
-                let tag = BCAST_TAG + g as i32;
-                for &child in &children {
-                    sreqs.push(self.coll_isend(comm, child, tag, &seg));
-                }
-                buf.extend_from_slice(&seg);
-            }
-            buf
-        };
-        self.waitall(sreqs);
-        buf
+        self.coll_wait(self.ibcast(comm, root, data))
     }
 
     /// MPI_Allgather of one u64 per rank (used by init's address exchange).
@@ -250,128 +231,19 @@ impl MpiProc {
         out.into_iter().map(|o| o.unwrap()).collect()
     }
 
-    /// Segmented, pipelined ring allreduce over a byte buffer of
-    /// `elem`-byte elements, combining equal-length element-aligned slices
-    /// with `reduce` (`acc ⊕= incoming`). Bandwidth-optimal 2(n-1)-step
-    /// ring; each step's chunk moves as up-to-`vcmpi_coll_segments`
-    /// independently tagged segments, pre-posted per step and forwarded
-    /// downstream the moment each is reduced (see the module doc).
-    fn allreduce_ring_segmented(
-        &self,
-        comm: &Comm,
-        data: &mut [u8],
-        elem: usize,
-        reduce: &dyn Fn(&mut [u8], &[u8]),
-    ) {
-        let n = comm.size;
-        if n <= 1 {
-            return;
-        }
-        debug_assert_eq!(data.len() % elem, 0, "payload must be element-aligned");
-        let me = comm.rank;
-        let right = (me + 1) % n;
-        let left = (me + n - 1) % n;
-        let elems = data.len() / elem;
-        // Byte bounds of segment g of chunk c (identical on every rank).
-        let seg_bounds = |c: usize, g: usize| -> (usize, usize) {
-            let (clo, chi) = part_bounds(elems, n, c);
-            let (slo, shi) = part_bounds(chi - clo, self.coll_segs(comm, chi - clo), g);
-            ((clo + slo) * elem, (clo + shi) * elem)
-        };
-        let tag_of = |phase: usize, step: usize, g: usize| -> i32 {
-            ALLREDUCE_TAG + ((phase * (n - 1) + step) * MAX_COLL_SEGMENTS + g) as i32
-        };
-        // Chunk the ring step works on (identical formulas to the classic
-        // ring schedule): phase 0 (reduce-scatter) receives chunk
-        // (me - s - 1), phase 1 (allgather) receives chunk (me - s); the
-        // chunk sent at step s+1 is always the chunk received at step s.
-        let chunk_segs = |c: usize| -> usize {
-            let (clo, chi) = part_bounds(elems, n, c);
-            self.coll_segs(comm, chi - clo)
-        };
-        let mut sreqs: Vec<Request> = Vec::new();
-
-        // ---- phase 1: reduce-scatter ----
-        let rreqs: Vec<Vec<Request>> = (0..n - 1)
-            .map(|s| {
-                let recv_chunk = (me + n - s - 1) % n;
-                (0..chunk_segs(recv_chunk))
-                    .map(|g| self.coll_irecv(comm, left, tag_of(0, s, g)))
-                    .collect()
-            })
-            .collect();
-        // Step 0 sends my own chunk; step s+1 forwards the chunk reduced
-        // at step s, segment by segment as each lands.
-        for g in 0..chunk_segs(me) {
-            let (lo, hi) = seg_bounds(me, g);
-            sreqs.push(self.coll_isend(comm, right, tag_of(0, 0, g), &data[lo..hi]));
-        }
-        for (s, step_rreqs) in rreqs.into_iter().enumerate() {
-            let recv_chunk = (me + n - s - 1) % n;
-            for (g, rreq) in step_rreqs.into_iter().enumerate() {
-                let got = self.wait(rreq).expect("allreduce segment");
-                let (lo, hi) = seg_bounds(recv_chunk, g);
-                debug_assert_eq!(got.len(), hi - lo, "segment length mismatch");
-                reduce(&mut data[lo..hi], &got);
-                if s + 1 < n - 1 {
-                    // This freshly reduced segment is exactly what step
-                    // s+1 sends: forward it immediately, overlapping the
-                    // remaining receives of step s.
-                    sreqs.push(self.coll_isend(comm, right, tag_of(0, s + 1, g), &data[lo..hi]));
-                }
-            }
-        }
-
-        // ---- phase 2: allgather of the reduced chunks ----
-        let rreqs: Vec<Vec<Request>> = (0..n - 1)
-            .map(|s| {
-                let recv_chunk = (me + n - s) % n;
-                (0..chunk_segs(recv_chunk))
-                    .map(|g| self.coll_irecv(comm, left, tag_of(1, s, g)))
-                    .collect()
-            })
-            .collect();
-        // After reduce-scatter, rank me owns the full sum of chunk
-        // (me+1) — phase 2 circulates the owned chunks.
-        let own = (me + 1) % n;
-        for g in 0..chunk_segs(own) {
-            let (lo, hi) = seg_bounds(own, g);
-            sreqs.push(self.coll_isend(comm, right, tag_of(1, 0, g), &data[lo..hi]));
-        }
-        for (s, step_rreqs) in rreqs.into_iter().enumerate() {
-            let recv_chunk = (me + n - s) % n;
-            for (g, rreq) in step_rreqs.into_iter().enumerate() {
-                let got = self.wait(rreq).expect("allreduce segment");
-                let (lo, hi) = seg_bounds(recv_chunk, g);
-                debug_assert_eq!(got.len(), hi - lo, "segment length mismatch");
-                data[lo..hi].copy_from_slice(&got);
-                if s + 1 < n - 1 {
-                    sreqs.push(self.coll_isend(comm, right, tag_of(1, s + 1, g), &data[lo..hi]));
-                }
-            }
-        }
-        self.waitall(sreqs);
-    }
-
     /// Ring allreduce (sum) over an f32 buffer — the gradient-exchange
-    /// workhorse. Segmented and pipelined per the comm's policy (see the
-    /// module doc); reduction order per element matches the classic ring,
-    /// so results are bit-identical across policies.
+    /// workhorse. Literally [`MpiProc::iallreduce_f32`] +
+    /// [`MpiProc::coll_wait_f32`]: the segmented, pipelined 2(n-1)-step
+    /// ring schedule of `mpi::coll_nb`, driven to completion by the
+    /// caller (and any concurrent progress). Reduction order per element
+    /// matches the classic ring, so results are bit-identical across
+    /// policies and across the blocking/nonblocking forms.
     pub fn allreduce_f32(&self, comm: &Comm, data: &mut [f32]) {
         if comm.size <= 1 {
             return;
         }
-        let mut bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
-        self.allreduce_ring_segmented(comm, &mut bytes, 4, &|acc, inc| {
-            for (a, b) in acc.chunks_exact_mut(4).zip(inc.chunks_exact(4)) {
-                let v = f32::from_le_bytes((&a[..]).try_into().unwrap())
-                    + f32::from_le_bytes(b.try_into().unwrap());
-                a.copy_from_slice(&v.to_le_bytes());
-            }
-        });
-        for (d, c) in data.iter_mut().zip(bytes.chunks_exact(4)) {
-            *d = f32::from_le_bytes(c.try_into().unwrap());
-        }
+        let req = self.iallreduce_f32(comm, data);
+        self.coll_wait_f32(req, data);
     }
 
     /// The seed's lockstep ring allreduce — whole-chunk blocking wait
@@ -433,13 +305,8 @@ impl MpiProc {
     /// tiny messages, instead of the n² bytes the old allgather-everything
     /// implementation moved.
     pub fn allreduce_scalar(&self, comm: &Comm, x: f64) -> f64 {
-        let mut bytes = x.to_le_bytes().to_vec();
-        self.allreduce_ring_segmented(comm, &mut bytes, 8, &|acc, inc| {
-            let v = f64::from_le_bytes((&acc[..]).try_into().unwrap())
-                + f64::from_le_bytes(inc.try_into().unwrap());
-            acc.copy_from_slice(&v.to_le_bytes());
-        });
-        f64::from_le_bytes(bytes.as_slice().try_into().unwrap())
+        let req = self.iallreduce(comm, &x.to_le_bytes(), RedOp::SumF64);
+        f64::from_le_bytes(self.coll_wait(req).as_slice().try_into().unwrap())
     }
 }
 

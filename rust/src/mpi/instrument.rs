@@ -18,6 +18,7 @@ thread_local! {
     static ANCHORED_ALLOCS: Cell<u64> = const { Cell::new(0) };
     static COLL_SEGMENTS: Cell<u64> = const { Cell::new(0) };
     static COLL_LANE_SPREAD: Cell<u64> = const { Cell::new(0) };
+    static COLL_OVERLAP_NS: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Which class of lock was taken.
@@ -38,6 +39,9 @@ pub enum LockClass {
     Shard,
     /// Wildcard-epoch / engine-retirement control (`mpi::shard::EpochCtl`).
     EpochCtl,
+    /// A nonblocking-collective schedule (`mpi::coll_nb::CollSched`):
+    /// serializes the waiter and the progress hook advancing one handle.
+    CollSched,
     // --- host mutex classes (leaf-only; see sim::sanitizer) ---
     /// `MpiProc::comms`.
     HostComms,
@@ -55,6 +59,8 @@ pub enum LockClass {
     HostPolicies,
     /// `MpiProc::coll_lanes` (may nest into the pin table).
     HostCollLanes,
+    /// `MpiProc::coll_scheds` (outstanding nonblocking-collective registry).
+    HostCollScheds,
     /// `MpiProc::ordered_pins`.
     HostOrderedPins,
     /// `Window::outstanding` (RMA completion records).
@@ -90,10 +96,13 @@ pub fn count_lock(class: LockClass) {
 //
 // Rank layout — strictly increasing along every legal nesting chain:
 //
-//   sim locks:   Global 10 < Hook 20 < Vci 30 < Request 40 < EpochCtl 50
-//                < Shard 60 (multi, ascending shard index)
+//   sim locks:   Global 10 < Hook 20 < CollSched 25 < Vci 30 < Request 40
+//                < EpochCtl 50 < Shard 60 (multi, ascending shard index)
+//                (CollSched sits between Hook and Vci: the progress hook
+//                advances a nonblocking-collective schedule, and advancing
+//                one issues sends that take VCI locks.)
 //   host locks:  rank >= 100, leaf-only relative to sim locks, ordered
-//                among themselves to permit the three legal host-host
+//                among themselves to permit the legal host-host
 //                nestings: freed_comms -> match_engines -> policies
 //                (finalize / comm_match) and coll_lanes -> ordered_pins
 //                (dedicated_coll_lane).
@@ -121,6 +130,7 @@ tags! {
     Hook => TAG_HOOK { "progress.hook", 20, false, false },
     Vci => TAG_VCI { "vci.state", 30, false, false },
     Request => TAG_REQUEST { "request.free", 40, false, false },
+    CollSched => TAG_COLL_SCHED { "coll.sched", 25, false, false },
     EpochCtl => TAG_EPOCH_CTL { "shard.epoch_ctl", 50, false, false },
     Shard => TAG_SHARD { "shard.leaf", 60, true, false },
     HostComms => TAG_HOST_COMMS { "host.comms", 100, false, true },
@@ -131,6 +141,7 @@ tags! {
     HostMatchEngines => TAG_HOST_MATCH_ENGINES { "host.match_engines", 125, false, true },
     HostPolicies => TAG_HOST_POLICIES { "host.policies", 130, false, true },
     HostCollLanes => TAG_HOST_COLL_LANES { "host.coll_lanes", 135, false, true },
+    HostCollScheds => TAG_HOST_COLL_SCHEDS { "host.coll_scheds", 137, false, true },
     HostOrderedPins => TAG_HOST_ORDERED_PINS { "host.ordered_pins", 140, false, true },
     HostRmaOutstanding => TAG_HOST_RMA_OUTSTANDING { "host.rma_outstanding", 145, false, true },
     HostRmaResults => TAG_HOST_RMA_RESULTS { "host.rma_results", 150, false, true },
@@ -215,6 +226,14 @@ pub fn count_coll_lane_spread() {
     COLL_LANE_SPREAD.with(|c| c.set(c.get() + 1));
 }
 
+/// Virtual nanoseconds of compute the calling thread performed while a
+/// nonblocking collective it had issued was still in flight (issue-to-wait
+/// gap, clamped at completion): the Table-1 proof that `Iallreduce` hides
+/// communication behind compute instead of blocking per bucket.
+pub fn count_coll_overlap_ns(ns: u64) {
+    COLL_OVERLAP_NS.with(|c| c.set(c.get() + ns));
+}
+
 /// Snapshot of the calling thread's critical-path counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounters {
@@ -233,6 +252,9 @@ pub struct OpCounters {
     /// Collective segments issued on an explicit non-home lane
     /// (dedicated / envelope-spread collective policies).
     pub coll_lane_spread: u64,
+    /// Virtual ns of compute overlapped with in-flight nonblocking
+    /// collectives (issue-to-wait gap; see `mpi::coll_nb`).
+    pub coll_overlap_ns: u64,
 }
 
 impl OpCounters {
@@ -255,6 +277,7 @@ impl std::ops::Sub for OpCounters {
             anchored_allocs: self.anchored_allocs - rhs.anchored_allocs,
             coll_segments: self.coll_segments - rhs.coll_segments,
             coll_lane_spread: self.coll_lane_spread - rhs.coll_lane_spread,
+            coll_overlap_ns: self.coll_overlap_ns - rhs.coll_overlap_ns,
         }
     }
 }
@@ -272,6 +295,7 @@ pub fn snapshot() -> OpCounters {
         anchored_allocs: ANCHORED_ALLOCS.with(|c| c.get()),
         coll_segments: COLL_SEGMENTS.with(|c| c.get()),
         coll_lane_spread: COLL_LANE_SPREAD.with(|c| c.get()),
+        coll_overlap_ns: COLL_OVERLAP_NS.with(|c| c.get()),
     }
 }
 
@@ -446,6 +470,7 @@ mod tests {
         count_coll_segment();
         count_coll_segment();
         count_coll_lane_spread();
+        count_coll_overlap_ns(1500);
         let d = snapshot() - base;
         assert_eq!(d.vci_locks, 2);
         assert_eq!(d.request_locks, 1);
@@ -454,6 +479,7 @@ mod tests {
         assert_eq!(d.anchored_allocs, 1);
         assert_eq!(d.coll_segments, 2);
         assert_eq!(d.coll_lane_spread, 1);
+        assert_eq!(d.coll_overlap_ns, 1500);
         assert_eq!(d.total_locks(), 4, "anchored allocs / coll segments are not locks");
     }
 

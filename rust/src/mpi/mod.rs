@@ -15,12 +15,15 @@
 //!  * [`progress`] — per-VCI / global / hybrid progress + wire handlers
 //!  * [`rma`] — windows, put/get/accumulate/fetch-op, flush, win_free
 //!  * [`collectives`] — barrier/bcast/allgather/allreduce over p2p
+//!  * [`coll_nb`] — nonblocking collectives: resumable segment schedules
+//!    advanced by progress hook 0 (`MPI_Iallreduce`/`MPI_Ibcast`)
 //!  * [`endpoints`] — user-visible endpoints (comparison arm)
 //!  * [`proc`] — process state, MPI_Init/Finalize, connection setup
 //!  * [`world`] — cluster runner: spawns processes x threads on either
 //!    backend and runs a workload closure per thread
 //!  * [`instrument`] — lock/atomic counters (Table 1)
 
+pub mod coll_nb;
 pub mod collectives;
 pub mod comm;
 pub mod config;
@@ -37,6 +40,7 @@ pub mod shard;
 pub mod vci;
 pub mod world;
 
+pub use coll_nb::{CollReq, RedOp};
 pub use comm::{Comm, CommKind};
 pub use config::{CsMode, Hints, MpiConfig, VciPolicy, VciStriping};
 pub use matching::{Src, Tag};

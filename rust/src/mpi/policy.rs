@@ -26,7 +26,7 @@
 //! | `mpi_assert_no_any_source` | `true`\|`false`   | receives on this comm never use `MPI_ANY_SOURCE` |
 //! | `mpi_assert_no_any_tag`    | `true`\|`false`   | receives on this comm never use `MPI_ANY_TAG` |
 //! | `vcmpi_collectives`        | `inherit`\|`dedicated`\|`striped` | how this comm's collectives map onto the VCI pool (see [`CollectivesMode`]) |
-//! | `vcmpi_coll_segments`      | integer ≥ 1       | segments per collective payload (pipelined; clamped to [`MAX_COLL_SEGMENTS`]) |
+//! | `vcmpi_coll_segments`      | integer ≥ 1 \| `auto` | segments per collective payload (pipelined; clamped to [`MAX_COLL_SEGMENTS`]). `auto` sizes topology-aware from the fabric cost model: per-chunk DMA time balanced against per-segment latency (see `MpiProc::auto_coll_segments`) |
 //!
 //! Windows resolve a [`WinPolicy`] from the same [`Info`] machinery at
 //! `MpiProc::win_create_with_info` (MPI_Win_create's info argument):
@@ -166,6 +166,16 @@ pub struct CommPolicy {
     /// many independently tagged nonblocking transfers, pipelined as they
     /// complete. Clamped to `1..=`[`MAX_COLL_SEGMENTS`].
     pub coll_segments: usize,
+    /// `vcmpi_coll_segments=auto`: derive the allreduce segment count from
+    /// the fabric cost model (chunk DMA time vs per-segment wire+inject
+    /// latency) instead of the static [`coll_segments`] value. Pure
+    /// function of shared state (cost model + payload length), so all
+    /// members derive the same count — wire-contract symmetric. Bcast
+    /// cannot use it (non-roots don't know the payload length before the
+    /// first segment arrives) and falls back to the static count.
+    ///
+    /// [`coll_segments`]: CommPolicy::coll_segments
+    pub coll_segments_auto: bool,
 }
 
 impl Default for CommPolicy {
@@ -179,6 +189,7 @@ impl Default for CommPolicy {
             no_any_tag: false,
             collectives: CollectivesMode::Inherit,
             coll_segments: DEFAULT_COLL_SEGMENTS,
+            coll_segments_auto: false,
         }
     }
 }
@@ -198,6 +209,7 @@ impl CommPolicy {
             // it is inherently per-communicator (info keys only).
             collectives: CollectivesMode::Inherit,
             coll_segments: DEFAULT_COLL_SEGMENTS,
+            coll_segments_auto: false,
         }
     }
 
@@ -239,14 +251,19 @@ impl CommPolicy {
             p.collectives = parse_collectives(v);
         }
         if let Some(v) = info.get("vcmpi_coll_segments") {
-            p.coll_segments = v
-                .parse::<usize>()
-                .unwrap_or_else(|_| {
-                    panic!(
-                        "info key vcmpi_coll_segments: expected an integer, got {v:?} (erroneous program)"
-                    )
-                })
-                .clamp(1, MAX_COLL_SEGMENTS);
+            if v == "auto" {
+                p.coll_segments_auto = true;
+            } else {
+                p.coll_segments = v
+                    .parse::<usize>()
+                    .unwrap_or_else(|_| {
+                        panic!(
+                            "info key vcmpi_coll_segments: expected an integer or auto, got {v:?} (erroneous program)"
+                        )
+                    })
+                    .clamp(1, MAX_COLL_SEGMENTS);
+                p.coll_segments_auto = false;
+            }
         }
         p
     }
@@ -493,6 +510,21 @@ mod tests {
         assert_eq!(r.coll_segments, MAX_COLL_SEGMENTS);
         let z = base.with_info(&Info::new().with("vcmpi_coll_segments", "0"));
         assert_eq!(z.coll_segments, 1);
+    }
+
+    #[test]
+    fn coll_segments_auto_parses_and_explicit_count_clears_it() {
+        let base = CommPolicy::default();
+        assert!(!base.coll_segments_auto);
+        let auto = base.with_info(&Info::new().with("vcmpi_coll_segments", "auto"));
+        assert!(auto.coll_segments_auto);
+        assert_eq!(
+            auto.coll_segments, DEFAULT_COLL_SEGMENTS,
+            "the static count survives as the bcast fallback"
+        );
+        let back = auto.with_info(&Info::new().with("vcmpi_coll_segments", "6"));
+        assert!(!back.coll_segments_auto, "an explicit count overrides auto");
+        assert_eq!(back.coll_segments, 6);
     }
 
     #[test]

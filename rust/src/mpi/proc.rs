@@ -14,7 +14,7 @@ use crate::sim::CostModel;
 use super::comm::{Comm, CommKind};
 use super::config::{CsMode, MpiConfig, VciStriping};
 use super::instrument::{HostMutex, LockClass};
-use super::policy::{CollectivesMode, CommPolicy, Info, WinPolicy};
+use super::policy::{CollectivesMode, CommPolicy, Info, WinPolicy, MAX_COLL_SEGMENTS};
 use super::request::{RequestSlab, DEFAULT_SLAB_CAPACITY};
 use super::rma::Window;
 use super::shard::{CommMatch, EpochStats};
@@ -205,11 +205,17 @@ pub struct MpiProc {
     stripe_excluded: PinMask,
     /// Dedicated collective lanes, keyed by comm id: a communicator whose
     /// policy says `vcmpi_collectives=dedicated` reserves one lane for its
-    /// collective traffic on first use (pinned out of the stripe set via
-    /// `ordered_pins`, so striped p2p bulk never queues ahead of an
+    /// collective traffic at registration (pinned out of the stripe set
+    /// via `ordered_pins`, so striped p2p bulk never queues ahead of an
     /// allreduce step) and releases it at `comm_free`. Host mutex:
     /// consulted once per collective segment, off the wire path.
     coll_lanes: HostMutex<HashMap<u64, usize>>,
+    /// Outstanding nonblocking-collective schedules (`mpi::coll_nb`),
+    /// the workload behind progress hook 0: every progress iteration's
+    /// `check_hooks` snapshots this registry and advances each schedule.
+    /// Non-empty iff `hooks[0].active` (armed at initiation, disarmed
+    /// when the last `coll_wait` retires its schedule).
+    pub(super) coll_scheds: HostMutex<Vec<Arc<super::coll_nb::CollSched>>>,
     /// The process-default [`WinPolicy`] — the demoted
     /// `accumulate_ordering_none` hint. Every window starts from it; info
     /// keys at `win_create_with_info` override per window.
@@ -276,6 +282,7 @@ impl MpiProc {
             ordered_pins: HostMutex::new(HashMap::new()),
             stripe_excluded: PinMask::new(pin_lanes),
             coll_lanes: HostMutex::new(HashMap::new()),
+            coll_scheds: HostMutex::new(Vec::new()),
             default_win_policy,
             split_seqs: HostMutex::new(HashMap::new()),
             policy_mismatches: AtomicU64::new(0),
@@ -577,6 +584,20 @@ impl MpiProc {
             }
             _ if !comm.policy.striped() => self.pin_ordered_lane(comm.vci),
             _ => {}
+        }
+        // Dedicated collective lanes are placed EAGERLY, not on first
+        // collective: nonblocking collectives let ranks reach their first
+        // collective on different comms in different orders (rank 0 may
+        // issue iallreduce(A) then iallreduce(B) while rank 1 overlaps
+        // them B-first), so first-use order is not wire-symmetric —
+        // comm-creation order is. (Pre-init registration skips this; the
+        // lane is then placed lazily by `dedicated_coll_lane`, still in a
+        // symmetric order because pre-init comms are created in lockstep.)
+        if matches!(comm.policy.collectives, CollectivesMode::Dedicated)
+            && !comm.is_endpoints()
+            && self.vcis.get().is_some()
+        {
+            self.dedicated_coll_lane(comm);
         }
         self.adopt_policy_engine(comm.id, &comm.policy);
     }
@@ -1013,17 +1034,25 @@ impl MpiProc {
     }
 
     /// The dedicated collective lane of a `vcmpi_collectives=dedicated`
-    /// communicator, reserved lazily on first use. The lane index is a
-    /// pure function of the comm id and the comm's minimum member pool
-    /// ([`MpiProc::coll_lane_space`]) — every member derives the same
-    /// lane, the same wire-contract symmetry as `num_vcis` (pins are
-    /// deliberately NOT probed: pin state is process-local, and probing
-    /// it would make the two sides disagree on which mirror context
-    /// collective segments target). Reserving pins the lane out of the
-    /// stripe-lane set, so a hot striped comm's p2p storm sharing the
-    /// pool cannot head-of-line-block this comm's collectives;
-    /// `comm_free` releases the pin. Also a test/bench aid (proves the
-    /// reserve/release lifecycle via `stripe_lane_pinned`).
+    /// communicator, reserved eagerly at [`MpiProc::register_comm`] and
+    /// placed on the **least-loaded** unpinned lane of the comm's minimum
+    /// member pool ([`MpiProc::coll_lane_space`]). Load is counted only
+    /// from prior dedicated placements in this table — a pure function of
+    /// the comm-creation sequence, which the collective wire contract
+    /// already requires to be identical on every member (the same
+    /// symmetry argument as `num_vcis`; process-local pin state is
+    /// deliberately NOT probed). Ties break by a scrambled probe start
+    /// derived from the comm id, so two comms created in the same order
+    /// on every rank still agree on a lane while avoiding a fixed bias
+    /// toward lane 1. This replaces the old pure comm-id hash, under
+    /// which two dedicated comms could collide on one lane and serialize
+    /// each other's collectives.
+    ///
+    /// Reserving pins the lane out of the stripe-lane set, so a hot
+    /// striped comm's p2p storm sharing the pool cannot
+    /// head-of-line-block this comm's collectives; `comm_free` releases
+    /// the pin. Also a test/bench aid (proves the reserve/release
+    /// lifecycle via `stripe_lane_pinned`).
     pub fn dedicated_coll_lane(&self, comm: &Comm) -> usize {
         let space = self.coll_lane_space(comm);
         if space <= 1 {
@@ -1033,16 +1062,54 @@ impl MpiProc {
         if let Some(&l) = lanes.get(&comm.id) {
             return l;
         }
-        let lane = scrambled_lane(
+        // Placement load per candidate lane (lanes 1..space; lane 0 is
+        // the home/fallback VCI and never dedicated). Placements outside
+        // this comm's space (a wider sibling comm's lane) don't contend
+        // for these candidates and are ignored.
+        let mut load = vec![0u32; space];
+        for &l in lanes.values() {
+            if l < space {
+                load[l] += 1;
+            }
+        }
+        let start = scrambled_lane(
             comm.id.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xC011_EC71),
             space,
         );
-        // Pin while holding the table lock: a racing first collective on
+        let mut lane = start;
+        for k in 0..space - 1 {
+            let cand = 1 + (start - 1 + k) % (space - 1);
+            if load[cand] < load[lane] {
+                lane = cand;
+            }
+        }
+        // Pin while holding the table lock: a racing placement on
         // another thread blocks on the mutex above and then finds the
         // entry, so the pin refcount rises exactly once per comm.
         self.pin_ordered_lane(lane);
         lanes.insert(comm.id, lane);
         lane
+    }
+
+    /// Topology-aware segment count for one pipelined collective chunk of
+    /// `chunk_bytes`, used when the comm's policy says
+    /// `vcmpi_coll_segments=auto`. Balances the fabric cost model's
+    /// per-byte DMA time against the fixed per-segment launch cost: with
+    /// `k` segments the pipeline's exposed latency is roughly
+    /// `k·(wire_latency + nic_inject) + dma(chunk)/k`, minimized at
+    /// `k = sqrt(dma(chunk) / (wire_latency + nic_inject))`. Small
+    /// chunks collapse to one segment; chunks past the rendezvous
+    /// threshold get at least enough segments for each to stay on the
+    /// eager path. Clamped to `1..=`[`MAX_COLL_SEGMENTS`]. Symmetric:
+    /// every member sees the same cost model and chunk size.
+    pub fn auto_coll_segments(&self, chunk_bytes: usize) -> usize {
+        if chunk_bytes == 0 {
+            return 1;
+        }
+        let per_seg = (self.costs.wire_latency + self.costs.nic_inject).max(1);
+        let balanced = (self.costs.dma_cost(chunk_bytes) as f64 / per_seg as f64).sqrt() as usize;
+        let eager_floor = chunk_bytes.div_ceil(self.costs.rendezvous_threshold.max(1));
+        balanced.max(eager_floor).clamp(1, MAX_COLL_SEGMENTS)
     }
 
     /// The VCI override for one collective segment on `comm`, per its

@@ -175,12 +175,23 @@ impl MpiProc {
     /// thread's progress loop would serialize on two process-wide locks.
     pub(super) fn check_hooks(&self) {
         use super::vci::Guard;
-        for hook in &self.hooks {
+        for (i, hook) in self.hooks.iter().enumerate() {
             padvance(self.backend, self.costs.progress_hook_check);
             if hook.active.load(Ordering::Relaxed) && self.guard() == Guard::VciLock {
                 let _g = hook.lock.lock_class(LockClass::Hook);
-                // (No hook workloads are registered in this reproduction;
-                // the lock models the cost structure for Table 1.)
+                // Hook 0 carries the nonblocking-collective schedules
+                // (`mpi::coll_nb`): any thread's progress call advances
+                // every outstanding schedule — consuming completed
+                // segment receives, reducing, and issuing the next
+                // pipeline step — so a collective keeps moving while the
+                // initiator computes. Hook 1 has no workload; its lock
+                // models the second MPICH hook's cost for Table 1.
+                // Ordering is legal: Hook (20) < CollSched (25) < Vci
+                // (30), and schedule advancement never re-enters
+                // progress.
+                if i == 0 {
+                    self.advance_registered_colls();
+                }
             }
         }
     }

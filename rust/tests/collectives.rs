@@ -205,6 +205,96 @@ fn dedicated_collective_lane_is_pinned_then_released_at_comm_free() {
 }
 
 #[test]
+fn two_dedicated_comms_get_distinct_lanes_on_a_small_pool() {
+    // Regression: dedicated-lane placement used to be a pure comm-id
+    // hash, so two dedicated comms could collide on one lane and
+    // serialize each other's collectives. Placement is now least-loaded
+    // (tiebroken by a scrambled probe start, symmetric because
+    // placements happen in comm-creation order): on a small pool with
+    // exactly two candidate lanes, two dedicated comms MUST occupy both.
+    let spec2 = ClusterSpec::new(
+        FabricConfig {
+            interconnect: Interconnect::Ib,
+            nodes: 2,
+            procs_per_node: 1,
+            max_contexts_per_node: 64,
+        },
+        MpiConfig::optimized(3),
+        1,
+    );
+    run_ok(spec2, |proc, _t| {
+        let world = proc.comm_world();
+        let ded = Info::new().with("vcmpi_collectives", "dedicated");
+        let a = proc.comm_dup_with_info(&world, &ded);
+        let b = proc.comm_dup_with_info(&world, &ded);
+        let la = proc.dedicated_coll_lane(&a);
+        let lb = proc.dedicated_coll_lane(&b);
+        assert_ne!(la, 0, "the fallback lane is never a dedicated lane");
+        assert_ne!(lb, 0, "the fallback lane is never a dedicated lane");
+        assert_ne!(la, lb, "two dedicated comms must not share a lane while the pool has two");
+        assert!(proc.stripe_lane_pinned(la) && proc.stripe_lane_pinned(lb));
+        // Both comms' collectives work over their reserved lanes.
+        let mut va = vec![1.0f32; 61];
+        proc.allreduce_f32(&a, &mut va);
+        assert!(va.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        let mut vb = vec![2.0f32; 61];
+        proc.allreduce_f32(&b, &mut vb);
+        assert!(vb.iter().all(|&x| (x - 4.0).abs() < 1e-6));
+        proc.comm_free(a);
+        proc.comm_free(b);
+        assert!(!proc.stripe_lane_pinned(la) && !proc.stripe_lane_pinned(lb));
+    });
+}
+
+#[test]
+fn iallreduce_overlaps_across_comms_and_coll_test_polls() {
+    // Two nonblocking allreduces in flight at once on distinct comms
+    // (the tag-space contract allows one per comm), completed out of
+    // issue order: poll the first with coll_test, wait the second first.
+    run_ok(spec(3), |proc, _t| {
+        let world = proc.comm_world();
+        let a = proc.comm_dup(&world);
+        let b = proc.comm_dup(&world);
+        let len = 257;
+        let xs: Vec<f32> = (0..len).map(|i| (proc.rank() + 1) as f32 + i as f32).collect();
+        let ys: Vec<f32> = (0..len).map(|i| 2.0 * i as f32).collect();
+        let ra = proc.iallreduce_f32(&a, &xs);
+        let rb = proc.iallreduce_f32(&b, &ys);
+        let mut outb = vec![0.0f32; len];
+        proc.coll_wait_f32(rb, &mut outb);
+        while !proc.coll_test(&ra) {}
+        let mut outa = vec![0.0f32; len];
+        proc.coll_wait_f32(ra, &mut outa);
+        for i in 0..len {
+            let want_a = 6.0 + 3.0 * i as f32; // sum of (r+1) + i over 3 ranks
+            let want_b = 6.0 * i as f32;
+            assert!((outa[i] - want_a).abs() <= want_a.abs() * 1e-5 + 1e-3);
+            assert!((outb[i] - want_b).abs() <= want_b.abs() * 1e-5 + 1e-3);
+        }
+        proc.comm_free(a);
+        proc.comm_free(b);
+    });
+}
+
+#[test]
+fn ibcast_delivers_while_root_computes() {
+    // The root issues the ibcast and "computes" before waiting; interior
+    // nodes forward segments as they land (driven by the waiters'
+    // progress + hook 0).
+    for root in [0usize, 2] {
+        run_ok(spec(5), move |proc, _t| {
+            let world = proc.comm_world();
+            let payload: Vec<u8> = (0..149).map(|i| (root * 17 + i) as u8).collect();
+            let data = if proc.rank() == root { Some(payload.clone()) } else { None };
+            let req = proc.ibcast(&world, root, data);
+            vcmpi::sim::advance(50_000);
+            let got = proc.coll_wait(req);
+            assert_eq!(got, payload, "root={root} rank={}", proc.rank());
+        });
+    }
+}
+
+#[test]
 fn collectives_do_not_cross_match_user_traffic() {
     // User messages with tags colliding numerically with nothing internal:
     // run a barrier between user isend and recv to stress the matcher.

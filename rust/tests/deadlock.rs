@@ -160,6 +160,96 @@ fn dedicated_lane_allreduce_completes_under_striped_p2p_storm() {
     assert!(r.rate > 0.0, "dedicated-lane allreduce must make progress under the storm");
 }
 
+#[test]
+fn outstanding_iallreduces_on_distinct_comms_complete_under_striped_storm() {
+    // Nonblocking-collectives deadlock case: thread 0 on every proc
+    // issues THREE iallreduces on distinct dedicated comms and leaves
+    // them all outstanding while the remaining threads drive a striped
+    // p2p storm over an info-keyed hot comm on the same pool. The
+    // schedules advance only via progress hooks fired from whoever polls
+    // (the storm threads' waits included) plus the waiter's own loop —
+    // every collective must complete and reduce correctly, never starve
+    // behind the storm or each other.
+    const NCOLL: usize = 3;
+    const ELEMS: usize = 2048;
+    let mut spec = ClusterSpec::new(fabric(Interconnect::Ib), MpiConfig::optimized(8), 3);
+    spec.time_limit = Some(1_000_000_000); // 1 virtual s: plenty for valid runs
+    spec.service_threads = false;
+    type CommSet = (Vec<vcmpi::mpi::Comm>, vcmpi::mpi::Comm);
+    let comms: Arc<Mutex<std::collections::HashMap<usize, CommSet>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let setup: Arc<Vec<PBarrier>> =
+        Arc::new((0..2).map(|_| PBarrier::new(Backend::Sim, 3)).collect());
+    let c2 = comms.clone();
+    let r = run_cluster(spec, move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let coll: Vec<_> = (0..NCOLL)
+                .map(|_| {
+                    proc.comm_dup_with_info(
+                        &world,
+                        &vcmpi::mpi::Info::new()
+                            .with("vcmpi_collectives", "dedicated")
+                            .with("vcmpi_coll_segments", "4"),
+                    )
+                })
+                .collect();
+            let hot = proc.comm_dup_with_info(
+                &world,
+                &vcmpi::mpi::Info::new()
+                    .with("vcmpi_striping", "rr")
+                    .with("vcmpi_match_shards", "4"),
+            );
+            c2.lock().unwrap().insert(proc.rank(), (coll, hot));
+        }
+        setup[proc.rank()].wait();
+        let (coll, hot) = c2.lock().unwrap().get(&proc.rank()).unwrap().clone();
+        let peer = 1 - proc.rank();
+        if t == 0 {
+            // Issue all N, keep them outstanding, then wait newest-first
+            // so every wait still has older schedules in flight.
+            let data: Vec<Vec<f32>> = (0..NCOLL)
+                .map(|c| {
+                    (0..ELEMS)
+                        .map(|i| ((proc.rank() * 100 + c * 10 + i) % 13) as f32)
+                        .collect()
+                })
+                .collect();
+            let mut reqs: Vec<_> = coll
+                .iter()
+                .zip(data.iter())
+                .map(|(comm, d)| proc.iallreduce_f32(comm, d))
+                .collect();
+            let mut c = NCOLL;
+            while let Some(req) = reqs.pop() {
+                c -= 1;
+                let mut out = vec![0.0f32; ELEMS];
+                proc.coll_wait_f32(req, &mut out);
+                for (i, &v) in out.iter().enumerate() {
+                    let want: f32 =
+                        (0..2).map(|rk| ((rk * 100 + c * 10 + i) % 13) as f32).sum();
+                    assert!(
+                        (v - want).abs() < 1e-4,
+                        "comm {c} elem {i}: got {v}, want {want}"
+                    );
+                }
+            }
+            for comm in coll {
+                proc.comm_free(comm);
+            }
+        } else {
+            // Striped p2p storm, tag-disjoint per thread.
+            let payload = vec![t as u8; 512];
+            for _ in 0..64 {
+                proc.send(&hot, peer, t as i32, &payload);
+                let rr = proc.irecv(&hot, Src::Rank(peer), Tag::Value(t as i32));
+                proc.wait(rr);
+            }
+        }
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed);
+}
+
 /// Fig. 9 (right), transcribed (software-RMA fabric, large Gets):
 /// Rank 0:              Get(win1); Get(win2); flush(win1); flush(win2);
 /// Rank 1 / Thread 0:   Get(win1); B; B; flush(win1);

@@ -491,6 +491,88 @@ fn prop_collectives_vs_scalar_oracle() {
     }
 }
 
+/// Nonblocking collectives vs the blocking path + host oracle: random
+/// payload sizes, segment counts (including `auto`), comm sizes, and all
+/// three lane policies (inherit, dedicated, striped). The blocking forms
+/// are initiate+wait over the same resumable schedule, so iallreduce
+/// must match blocking allreduce **bit-identically** (same schedule,
+/// same reduction order) — and both must match the host-computed sum;
+/// ibcast must deliver the root payload with compute between issue and
+/// wait on every rank.
+#[test]
+fn prop_iallreduce_ibcast_vs_blocking() {
+    for seed in 0..cases(10) {
+        let mut rng = SplitMix64::new(0x1A11 ^ (seed << 5));
+        let nprocs = 2 + rng.gen_usize(4); // 2..=5
+        let len = 1 + rng.gen_usize(600);
+        let segments = if rng.gen_usize(3) == 0 {
+            "auto".to_string()
+        } else {
+            (1 + rng.gen_usize(9)).to_string()
+        };
+        let (arm, cfg) = match rng.gen_usize(4) {
+            0 => (None, MpiConfig::optimized(5)),
+            1 => (None, MpiConfig::striped_sharded(5)),
+            2 => (Some("dedicated"), MpiConfig::optimized(5)),
+            _ => (Some("striped"), MpiConfig::optimized(5)),
+        };
+        let root = rng.gen_usize(nprocs);
+        let spec = ClusterSpec::new(
+            FabricConfig {
+                interconnect: Interconnect::Ib,
+                nodes: nprocs,
+                procs_per_node: 1,
+                max_contexts_per_node: 64,
+            },
+            cfg,
+            1,
+        );
+        let r = run_cluster(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let mut info = Info::new().with("vcmpi_coll_segments", segments.clone());
+            if let Some(mode) = arm {
+                info.set("vcmpi_collectives", mode);
+            }
+            let comm = proc.comm_dup_with_info(&world, &info);
+            let n = proc.nprocs();
+            let orig: Vec<f32> =
+                (0..len).map(|i| ((proc.rank() * 1000 + i) % 97) as f32).collect();
+            // Blocking reference (same engine, driven synchronously).
+            let mut blocking = orig.clone();
+            proc.allreduce_f32(&comm, &mut blocking);
+            // Nonblocking, with compute between issue and wait.
+            let req = proc.iallreduce_f32(&comm, &orig);
+            vcmpi::sim::advance(10_000 + (seed % 7) * 3_000);
+            let mut overlapped = vec![0.0f32; len];
+            proc.coll_wait_f32(req, &mut overlapped);
+            assert_eq!(
+                overlapped, blocking,
+                "seed {seed}: iallreduce must be bit-identical to blocking"
+            );
+            for (i, &v) in overlapped.iter().enumerate() {
+                let want: f32 = (0..n).map(|r| ((r * 1000 + i) % 97) as f32).sum();
+                assert!(
+                    (v - want).abs() <= want.abs() * 1e-5 + 1e-3,
+                    "seed {seed} i={i}: got {v}, want {want}"
+                );
+            }
+            // Ibcast from a random root through the same policy.
+            let payload: Vec<u8> = (0..(len % 181) + 1).map(|i| (i * 11 + root) as u8).collect();
+            let breq = proc.ibcast(
+                &comm,
+                root,
+                if proc.rank() == root { Some(payload.clone()) } else { None },
+            );
+            vcmpi::sim::advance(5_000);
+            let got = proc.coll_wait(breq);
+            assert_eq!(got, payload, "seed {seed}: ibcast mismatch");
+            proc.comm_free(comm);
+            proc.barrier(&world);
+        });
+        assert_eq!(r.outcome, SimOutcome::Completed, "seed {seed}");
+    }
+}
+
 /// Mixed per-communicator policies against the single-engine oracle: one
 /// process set hosts a striped+sharded comm, an ordered (`off`) comm, and
 /// a wildcard-heavy hashed-striped comm — created from info keys on a
