@@ -8,7 +8,8 @@
 //!  * `BENCH_JSON`  — write a machine-readable report (rates + engine
 //!    counters + regression ratios) to this path.
 //!  * `BENCH_GATE=1`— exit nonzero if a regression-gate ratio fails
-//!    (striped <= single-VCI baseline, or sharded <= home engine).
+//!    (striped <= single-VCI baseline, sharded <= home engine, or the
+//!    streamed arm <= its locked par_comm twin / not lock-free).
 //!  * `BENCH_QUICK=1` — skip the printed figure tables and run only the
 //!    gate scenarios (what the CI `bench` job does).
 
@@ -141,9 +142,42 @@ fn main() {
         threads,
         report: message_rate_run(RateParams { mode: Mode::SerCommMixedPolicy, ..base.clone() }),
     };
-    let scenarios = [&single, &striped, &sharded, &home, &wildcard, &mixed];
+    let locked = Scenario {
+        name: "par_comm+vcis",
+        threads,
+        report: message_rate_run(RateParams { mode: Mode::ParCommVcis, ..base.clone() }),
+    };
+    let streamed = Scenario {
+        name: "par_comm+streamed",
+        threads,
+        report: message_rate_run(RateParams { mode: Mode::SerCommStreamed, ..base.clone() }),
+    };
+    let scenarios = [&single, &striped, &sharded, &home, &wildcard, &mixed, &locked, &streamed];
     for s in scenarios {
         println!("{:<26} {:>14.3}", s.name, s.report.rate / 1e6);
+    }
+
+    // ---- Table 1: per-op critical-path cost, locked twin vs stream ----
+    // Both arms run the identical topology (per-thread comms, one VCI
+    // each); the probe brackets only the measured phase, so the columns
+    // are exact per-(isend|irecv|wait-progress) acquisition counts.
+    let t1_ops = (2 * threads * gate_msgs) as f64;
+    let per_op = |s: &Scenario, k: &str| s.report.sum_stat(k) / t1_ops;
+    println!("\n== Table 1: critical-path acquisitions per posted op ==");
+    println!(
+        "{:<20} {:>10} {:>10} {:>12} {:>12} {:>14}",
+        "arm", "vci_lock", "req_lock", "global_lock", "stream_ops", "freelist_hits"
+    );
+    for s in [&locked, &streamed] {
+        println!(
+            "{:<20} {:>10.3} {:>10.3} {:>12.3} {:>12.3} {:>14.3}",
+            s.name,
+            per_op(s, "t1_vci_locks"),
+            per_op(s, "t1_request_locks"),
+            per_op(s, "t1_global_locks"),
+            per_op(s, "t1_stream_ops"),
+            per_op(s, "t1_freelist_hits"),
+        );
     }
 
     // ---- regression gate (same ratios the unit tests assert) ----
@@ -160,16 +194,28 @@ fn main() {
     let mixed_ordered_serialized = mixed.report.sum_stat("ordered_striped_engine") == 0.0
         && mixed.report.sum_stat("policy_mismatch") == 0.0
         && mixed.report.sum_stat("striped_engine") > 0.0;
+    // Stream gate (PR 8): the single-writer fast path must beat its locked
+    // twin AND take literally zero VCI/Request/Global locks in the
+    // measured window while actually riding the stream entry.
+    let streamed_over_locked = streamed.report.rate / locked.report.rate;
+    let streamed_lock_free = streamed.report.sum_stat("t1_vci_locks") == 0.0
+        && streamed.report.sum_stat("t1_request_locks") == 0.0
+        && streamed.report.sum_stat("t1_global_locks") == 0.0
+        && streamed.report.sum_stat("t1_stream_ops") > 0.0;
     let pass = striped_over_single > 1.0
         && sharded_over_home > 1.0
         && epochs_resolved
         && mixed_over_sharded >= 0.9
-        && mixed_ordered_serialized;
+        && mixed_ordered_serialized
+        && streamed_over_locked > 1.0
+        && streamed_lock_free;
     println!("\ngate: striped/single_vci = {striped_over_single:.3} (> 1.0 required)");
     println!("gate: sharded/home_engine = {sharded_over_home:.3} (> 1.0 required)");
     println!("gate: wildcard epochs resolved = {epochs_resolved}");
     println!("gate: mixed_policy/striped_sharded = {mixed_over_sharded:.3} (>= 0.9 required)");
     println!("gate: mixed ordered comm serialized = {mixed_ordered_serialized}");
+    println!("gate: streamed/locked = {streamed_over_locked:.3} (> 1.0 required)");
+    println!("gate: streamed arm lock-free = {streamed_lock_free}");
     println!("gate: {}", if pass { "PASS" } else { "FAIL" });
 
     if let Ok(path) = std::env::var("BENCH_JSON") {
@@ -188,6 +234,8 @@ fn main() {
              \"wildcard_epochs_resolved\": {epochs_resolved},\n    \
              \"mixed_over_striped_sharded\": {mixed_over_sharded:.4},\n    \
              \"mixed_ordered_serialized\": {mixed_ordered_serialized},\n    \
+             \"streamed_over_locked\": {streamed_over_locked:.4},\n    \
+             \"streamed_lock_free\": {streamed_lock_free},\n    \
              \"pass\": {pass}\n  }}\n}}\n",
             scenarios.into_iter().map(scenario_json).collect::<Vec<_>>().join(",\n"),
             pc.stale_ctrl_drops,

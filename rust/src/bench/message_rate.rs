@@ -51,6 +51,15 @@ pub enum Mode {
     ParCommOrig,
     /// MPI+threads, per-thread communicators/windows, multi-VCI library.
     ParCommVcis,
+    /// Serial execution streams: the `par_comm+vcis` topology (per-thread
+    /// communicators, one VCI each), but every communicator carries
+    /// `vcmpi_stream=local` and its thread binds it with `stream_bind`
+    /// before the measured phase — so every measured isend/irecv/wait
+    /// takes the lock-free single-writer fast path. The Table-1 probe
+    /// records the measured phase's lock counts (`t1_vci_locks` et al
+    /// must be ZERO here, nonzero on the locked twin) and the CI gate
+    /// demands rate > `par_comm+vcis`.
+    SerCommStreamed,
     /// MPI+threads with user-visible endpoints (one per thread).
     Endpoints,
 }
@@ -67,6 +76,7 @@ impl Mode {
             Mode::SerCommMixedPolicy => "ser_comm+mixed_policy",
             Mode::ParCommOrig => "par_comm+orig_mpich",
             Mode::ParCommVcis => "par_comm+vcis",
+            Mode::SerCommStreamed => "par_comm+streamed",
             Mode::Endpoints => "endpoints",
         }
     }
@@ -151,6 +161,9 @@ fn derive(p: &RateParams) -> (FabricConfig, MpiConfig, usize) {
         // t+2 VCIs = fallback + the ordered comm's pinned lane + t stripe
         // lanes (the same lane count as the pure sharded arm).
         Mode::SerCommMixedPolicy => (fabric(2), MpiConfig::optimized(t + 2), t + 1),
+        // Identical shape to ParCommVcis so the rate ratio isolates the
+        // stream layer's lock elision (same lanes, same traffic).
+        Mode::SerCommStreamed => (fabric(1), MpiConfig::optimized(t + 1), t),
         // +1 VCI: endpoints come from the pool (fallback excluded).
         Mode::Endpoints => (fabric(1), MpiConfig::optimized(t + 1), t),
     };
@@ -210,6 +223,12 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
             b.insert(proc, Arc::new(PBarrier::new(Backend::Sim, tpp)));
         }
     }
+    // Cluster-wide quiesce barrier for the streamed arm's Table-1 probe: a
+    // sim-object barrier spanning every thread of every proc (NOT an MPI
+    // barrier — it must not touch any locked comm path). It brackets the
+    // lock-count snapshots so no rank's locked world-barrier traffic can
+    // leak into another rank's probe window through the shared counters.
+    let probe_bar = Arc::new(PBarrier::new(Backend::Sim, 2 * nodes_procs * tpp));
 
     let r = run_cluster(spec, move |proc, t| {
         let p = &*pp;
@@ -225,6 +244,20 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
             match p.mode {
                 Mode::ParCommOrig | Mode::ParCommVcis => {
                     let v: Vec<Comm> = (0..p.threads).map(|_| proc.comm_dup(&world)).collect();
+                    comms.lock().unwrap().insert(me, v);
+                }
+                Mode::SerCommStreamed => {
+                    // Per-thread comms, each declared a serial execution
+                    // stream; the owning thread binds its own below
+                    // (binding is a calling-thread property).
+                    let v: Vec<Comm> = (0..p.threads)
+                        .map(|_| {
+                            proc.comm_dup_with_info(
+                                &world,
+                                &Info::new().with("vcmpi_stream", "local"),
+                            )
+                        })
+                        .collect();
                     comms.lock().unwrap().insert(me, v);
                 }
                 Mode::Endpoints => {
@@ -262,12 +295,37 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
         // Funneled world barrier (collectives are per-process ops; only
         // one thread may drive a given communicator's collective).
         bar.wait();
+        if p.mode == Mode::SerCommStreamed && t < p.threads {
+            // Bind outside the measured window: the bind's one locked
+            // ownership transition must not pollute the zero-lock claim.
+            let c = comms.lock().unwrap().get(&me).unwrap()[t].clone();
+            proc.stream_bind(&c);
+        }
         if t == 0 {
             proc.barrier(&world);
         }
         bar.wait();
 
         // ---- the measured phase ----
+        // Table-1 probe: snapshot the critical-path counters around the
+        // measured phase, on BOTH twins — the locked par_comm+vcis arm and
+        // the streamed arm — so the bench can print per-op lock/atomic
+        // costs side by side. On the Sim backend these thread-locals are
+        // shared by every simulated thread (one OS thread runs them all),
+        // so the diff counts the WHOLE cluster's measured-phase lock
+        // traffic — which is exactly the claim: zero VCI/Request/Global
+        // acquisitions while every thread drives its stream. The probe
+        // barrier guarantees every rank's (locked) world barrier fully
+        // retired before any base snapshot is taken.
+        let probed = matches!(p.mode, Mode::SerCommStreamed | Mode::ParCommVcis);
+        if probed {
+            probe_bar.wait();
+        }
+        let table1 = if probed && t == 0 {
+            Some(crate::mpi::instrument::snapshot())
+        } else {
+            None
+        };
         let t0 = crate::platform::pnow(proc.backend);
         match p.op {
             Op::Isend if p.mode == Mode::SerCommStripedSharded => {
@@ -405,7 +463,7 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
                         let peer = 1 - me;
                         (world.clone(), None, peer, t as i32)
                     }
-                    Mode::ParCommOrig | Mode::ParCommVcis => {
+                    Mode::ParCommOrig | Mode::ParCommVcis | Mode::SerCommStreamed => {
                         let c = comms.lock().unwrap().get(&me).unwrap()[t].clone();
                         (c, None, 1 - me, t as i32)
                     }
@@ -464,6 +522,28 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
             }
         }
         bar.wait();
+        if probed {
+            // Quiesce the whole cluster, snapshot, then quiesce again —
+            // the locked world barrier below must not start anywhere
+            // until every rank has ended its Table-1 window.
+            probe_bar.wait();
+        }
+        if let Some(base) = table1 {
+            // End the Table-1 window before the world barrier below (the
+            // barrier rides the ordered world comm's locked path).
+            let d = crate::mpi::instrument::snapshot() - base;
+            crate::mpi::world::record(format!("t1_vci_locks_p{me}"), d.vci_locks as f64);
+            crate::mpi::world::record(format!("t1_request_locks_p{me}"), d.request_locks as f64);
+            crate::mpi::world::record(format!("t1_global_locks_p{me}"), d.global_locks as f64);
+            crate::mpi::world::record(format!("t1_stream_ops_p{me}"), d.stream_ops as f64);
+            crate::mpi::world::record(
+                format!("t1_freelist_hits_p{me}"),
+                d.stream_freelist_hits as f64,
+            );
+        }
+        if probed {
+            probe_bar.wait();
+        }
         if t == 0 {
             proc.barrier(&world);
         }
@@ -524,6 +604,13 @@ pub fn message_rate_run(p: RateParams) -> RateReport {
 
         // ---- teardown ----
         bar.wait();
+        if p.mode == Mode::SerCommStreamed && t < p.threads {
+            // Each stream's OWNER must free (and thereby unbind) its own
+            // comm — only the binding thread may tear a stream down, and
+            // finalize asserts no lane is left stream-owned.
+            let mine = { comms.lock().unwrap().get(&me).unwrap()[t].clone() };
+            proc.comm_free(mine);
+        }
         if t == 0 {
             // Host lock must not be held across collective win_free (see
             // apps::ebms teardown comment).
@@ -569,7 +656,10 @@ fn put_channel(
         | Mode::SerCommStriped
         | Mode::SerCommStripedSharded
         | Mode::SerCommStripedWildcard
-        | Mode::SerCommMixedPolicy => {
+        | Mode::SerCommMixedPolicy
+        | Mode::SerCommStreamed => {
+            // Streams accelerate the two-sided path; RMA windows stay on
+            // the shared (locked) channel, so one window suffices.
             (wins.lock().unwrap().get(&me).unwrap()[0].clone(), None)
         }
         Mode::ParCommOrig | Mode::ParCommVcis => {
@@ -764,6 +854,52 @@ mod tests {
             "every epoch must resolve by quiescence"
         );
         assert_eq!(r.sum_stat("dup_seq_drops"), 0.0);
+    }
+
+    #[test]
+    fn streamed_beats_locked_par_comm_with_zero_locks() {
+        // The PR-8 tentpole ratio AND the Table-1 zero-lock claim, on the
+        // same topology: par_comm+vcis takes the SimMutex VCI lock and the
+        // shared request cache for every op; par_comm+streamed binds each
+        // thread to its comm's lane and must (a) come out ahead and
+        // (b) acquire ZERO VCI/Request/Global locks inside the measured
+        // window — the whole point of a serial execution stream.
+        let base = RateParams {
+            threads: 4,
+            msgs_per_core: 512,
+            window: 32,
+            ..Default::default()
+        };
+        let streamed = message_rate_run(RateParams { mode: Mode::SerCommStreamed, ..base.clone() });
+        let locked = message_rate_run(RateParams { mode: Mode::ParCommVcis, ..base });
+        assert!(
+            streamed.rate > locked.rate,
+            "stream fast path must beat the locked twin on identical topology: \
+             streamed={:.0} locked={:.0}",
+            streamed.rate,
+            locked.rate
+        );
+        // Table-1 columns: the probe brackets the measured phase with a
+        // cluster-wide quiesce, so any nonzero count here is a real lock
+        // acquisition on the streamed critical path.
+        assert_eq!(streamed.sum_stat("t1_vci_locks"), 0.0, "VCI lock on stream path");
+        assert_eq!(streamed.sum_stat("t1_request_locks"), 0.0, "request-cache lock on stream path");
+        assert_eq!(streamed.sum_stat("t1_global_locks"), 0.0, "global lock on stream path");
+        assert!(
+            streamed.sum_stat("t1_stream_ops") > 0.0,
+            "measured phase must actually ride the single-writer entry"
+        );
+        assert!(
+            streamed.sum_stat("t1_freelist_hits") > 0.0,
+            "receive-side allocs must come from the per-lane freelist"
+        );
+        // The locked twin pays for every op under the same probe: its VCI
+        // lock column must be nonzero and its stream column zero.
+        assert!(
+            locked.sum_stat("t1_vci_locks") > 0.0,
+            "locked twin must show per-op VCI acquisitions"
+        );
+        assert_eq!(locked.sum_stat("t1_stream_ops"), 0.0, "locked twin has no stream entries");
     }
 
     #[test]

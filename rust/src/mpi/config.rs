@@ -22,6 +22,15 @@
 //!   halo-exchange communicator and a latency-sensitive ordered
 //!   communicator therefore coexist in one process — the presets below
 //!   keep their exact pre-policy behavior through the default path.
+//! * **Per-communicator stream key** (no `MpiConfig` counterpart — a
+//!   thread binding is inherently per-comm): `vcmpi_stream=local` declares
+//!   that exactly one thread drives the communicator, binding that thread
+//!   to a dedicated VCI in single-writer mode so its isend/irecv/wait
+//!   bypass the VCI lock and shared request cache entirely (MPIX-Stream's
+//!   "serial execution stream" contract; see [`crate::mpi::vci`] for the
+//!   decision table). Mutually exclusive with `vcmpi_striping`, requires
+//!   `vcmpi_cs=fg`; cross-thread use is erroneous and trips a
+//!   deterministic SimSan tripwire.
 //! * **Per-communicator collectives keys** (no `MpiConfig` counterpart —
 //!   the mapping is inherently per-comm): `vcmpi_collectives=
 //!   inherit|dedicated|striped` selects how a communicator's collectives

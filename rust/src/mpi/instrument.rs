@@ -19,6 +19,8 @@ thread_local! {
     static COLL_SEGMENTS: Cell<u64> = const { Cell::new(0) };
     static COLL_LANE_SPREAD: Cell<u64> = const { Cell::new(0) };
     static COLL_OVERLAP_NS: Cell<u64> = const { Cell::new(0) };
+    static STREAM_OPS: Cell<u64> = const { Cell::new(0) };
+    static STREAM_FREELIST_HITS: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Which class of lock was taken.
@@ -63,6 +65,8 @@ pub enum LockClass {
     HostCollScheds,
     /// `MpiProc::ordered_pins`.
     HostOrderedPins,
+    /// `MpiProc::streams` (serial-execution-stream bind table).
+    HostStreams,
     /// `Window::outstanding` (RMA completion records).
     HostRmaOutstanding,
     /// `Window::get_results` (parked MPI_Get payloads).
@@ -143,6 +147,7 @@ tags! {
     HostCollLanes => TAG_HOST_COLL_LANES { "host.coll_lanes", 135, false, true },
     HostCollScheds => TAG_HOST_COLL_SCHEDS { "host.coll_scheds", 137, false, true },
     HostOrderedPins => TAG_HOST_ORDERED_PINS { "host.ordered_pins", 140, false, true },
+    HostStreams => TAG_HOST_STREAMS { "host.streams", 142, false, true },
     HostRmaOutstanding => TAG_HOST_RMA_OUTSTANDING { "host.rma_outstanding", 145, false, true },
     HostRmaResults => TAG_HOST_RMA_RESULTS { "host.rma_results", 150, false, true },
     HostSlotData => TAG_HOST_SLOT_DATA { "host.slot_data", 155, false, true },
@@ -234,6 +239,20 @@ pub fn count_coll_overlap_ns(ns: u64) {
     COLL_OVERLAP_NS.with(|c| c.set(c.get() + ns));
 }
 
+/// One single-writer (stream) state entry — `Vci::with_state_stream`: the
+/// Table-1 proof that the streamed arm's ops bypass the VCI lock (a
+/// streamed run shows `stream_ops > 0` with `vci_locks == 0`).
+pub fn count_stream_op() {
+    STREAM_OPS.with(|c| c.set(c.get() + 1));
+}
+
+/// A stream request allocation satisfied from the thread-local freelist
+/// (no shared request cache, no Request lock — Table 1's streamed
+/// request-path column).
+pub fn count_stream_freelist_hit() {
+    STREAM_FREELIST_HITS.with(|c| c.set(c.get() + 1));
+}
+
 /// Snapshot of the calling thread's critical-path counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounters {
@@ -255,6 +274,12 @@ pub struct OpCounters {
     /// Virtual ns of compute overlapped with in-flight nonblocking
     /// collectives (issue-to-wait gap; see `mpi::coll_nb`).
     pub coll_overlap_ns: u64,
+    /// Single-writer stream state entries (`Vci::with_state_stream`) —
+    /// lock-free ops on a stream-bound lane.
+    pub stream_ops: u64,
+    /// Stream request allocations served by the thread-local freelist
+    /// (no Request lock, no shared cache).
+    pub stream_freelist_hits: u64,
 }
 
 impl OpCounters {
@@ -278,6 +303,8 @@ impl std::ops::Sub for OpCounters {
             coll_segments: self.coll_segments - rhs.coll_segments,
             coll_lane_spread: self.coll_lane_spread - rhs.coll_lane_spread,
             coll_overlap_ns: self.coll_overlap_ns - rhs.coll_overlap_ns,
+            stream_ops: self.stream_ops - rhs.stream_ops,
+            stream_freelist_hits: self.stream_freelist_hits - rhs.stream_freelist_hits,
         }
     }
 }
@@ -296,6 +323,8 @@ pub fn snapshot() -> OpCounters {
         coll_segments: COLL_SEGMENTS.with(|c| c.get()),
         coll_lane_spread: COLL_LANE_SPREAD.with(|c| c.get()),
         coll_overlap_ns: COLL_OVERLAP_NS.with(|c| c.get()),
+        stream_ops: STREAM_OPS.with(|c| c.get()),
+        stream_freelist_hits: STREAM_FREELIST_HITS.with(|c| c.get()),
     }
 }
 
@@ -471,6 +500,10 @@ mod tests {
         count_coll_segment();
         count_coll_lane_spread();
         count_coll_overlap_ns(1500);
+        count_stream_op();
+        count_stream_op();
+        count_stream_op();
+        count_stream_freelist_hit();
         let d = snapshot() - base;
         assert_eq!(d.vci_locks, 2);
         assert_eq!(d.request_locks, 1);
@@ -480,7 +513,9 @@ mod tests {
         assert_eq!(d.coll_segments, 2);
         assert_eq!(d.coll_lane_spread, 1);
         assert_eq!(d.coll_overlap_ns, 1500);
-        assert_eq!(d.total_locks(), 4, "anchored allocs / coll segments are not locks");
+        assert_eq!(d.stream_ops, 3);
+        assert_eq!(d.stream_freelist_hits, 1);
+        assert_eq!(d.total_locks(), 4, "anchored allocs / coll segments / stream ops are not locks");
     }
 
     #[test]

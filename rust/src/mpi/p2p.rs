@@ -15,8 +15,8 @@ use crate::platform::{padvance, pnow};
 use super::config::CsMode;
 use super::instrument::LockClass;
 use super::matching::{Arrival, PostedRecv, SenderInfo, Src, Tag, UnexpectedMsg};
-use super::proc::MpiProc;
-use super::request::{ReqId, Request, REQ_FLAG_DOORBELL, REQ_FLAG_STRIPED};
+use super::proc::{thread_token, MpiProc};
+use super::request::{ReqId, Request, REQ_FLAG_DOORBELL, REQ_FLAG_STREAM, REQ_FLAG_STRIPED};
 use super::vci::{Guard, VciState};
 use super::Comm;
 
@@ -28,6 +28,11 @@ fn req_flags(comm: &Comm, striped: bool) -> u8 {
     }
     REQ_FLAG_STRIPED | if comm.policy.rx_doorbell { REQ_FLAG_DOORBELL } else { 0 }
 }
+
+/// How many request ids a stream refill pulls from the shared slab in one
+/// (amortized) lock acquisition. Also the `stream_bind` pre-charge, so
+/// the first window of ops on a fresh stream is already lock-free.
+const STREAM_FREELIST_PREFILL: usize = 64;
 
 impl MpiProc {
     /// True when completion counters must be updated atomically (FG mode
@@ -59,13 +64,80 @@ impl MpiProc {
         self.slab.alloc_global(&self.costs, self.take_pool_lock())
     }
 
+    /// Pre-charge `lane`'s stream freelist so a fresh stream's first
+    /// window of ops never touches the shared slab lock (called by
+    /// `stream_bind`, after the lane entered single-writer mode).
+    pub(super) fn stream_prefill(&self, lane: usize) {
+        let chunk =
+            self.slab.alloc_chunk(&self.costs, self.take_pool_lock(), STREAM_FREELIST_PREFILL);
+        self.stream_freelist_outstanding
+            .fetch_add(chunk.len(), std::sync::atomic::Ordering::Relaxed);
+        let vci = self.vcis().get(lane).clone();
+        vci.with_state_stream(|st| st.stream_freelist.extend(chunk));
+    }
+
+    /// Drain `lane`'s stream freelist back to the shared slab (the unbind
+    /// path — must run while the caller still owns the stream).
+    pub(super) fn stream_drain_freelist(&self, lane: usize) {
+        let vci = self.vcis().get(lane).clone();
+        let drained = vci.with_state_stream(|st| std::mem::take(&mut st.stream_freelist));
+        if drained.is_empty() {
+            return;
+        }
+        self.stream_freelist_outstanding
+            .fetch_sub(drained.len(), std::sync::atomic::Ordering::Relaxed);
+        let take_lock = self.take_pool_lock();
+        for id in drained {
+            self.slab.free_global(id, &self.costs, take_lock);
+        }
+    }
+
+    /// Stream-path request allocation: pop the lane-local freelist (zero
+    /// locks, zero shared-cache touches) or refill a chunk from the
+    /// shared slab — one amortized lock acquisition, the same honesty as
+    /// the per-VCI cache refill in [`MpiProc::alloc_request`].
+    fn alloc_request_stream(&self, st: &mut VciState) -> ReqId {
+        if let Some(id) = st.stream_freelist.pop() {
+            super::instrument::count_stream_freelist_hit();
+            padvance(self.backend, self.costs.request_cache_op);
+            self.slab.reset_slot(id);
+            return id;
+        }
+        let mut chunk =
+            self.slab.alloc_chunk(&self.costs, self.take_pool_lock(), STREAM_FREELIST_PREFILL);
+        self.stream_freelist_outstanding
+            .fetch_add(chunk.len(), std::sync::atomic::Ordering::Relaxed);
+        let id = chunk.pop().expect("chunk non-empty");
+        st.stream_freelist.extend(chunk);
+        self.slab.reset_slot(id);
+        id
+    }
+
     /// Free a request after wait/test observes completion. Runs *outside*
     /// the VCI critical section that observed completion (paper §4.3: the
     /// VCI lock is taken a second time for the free).
     pub(super) fn release_request(&self, id: ReqId, vci_idx: usize) {
         let guard = self.guard();
+        let flags = self.slab.slot(id).flags.load(std::sync::atomic::Ordering::Relaxed);
+        if flags & REQ_FLAG_STREAM != 0 {
+            let vci = self.vcis().get(vci_idx).clone();
+            if vci.stream_owned_by(thread_token()) {
+                // Owner free: back onto the lane-local freelist, lock-free.
+                vci.with_state_stream(|st| {
+                    padvance(self.backend, self.costs.request_cache_op);
+                    st.stream_freelist.push(id);
+                });
+            } else {
+                // The lane was unbound between initiation and this free:
+                // return the id straight to the shared slab so nothing
+                // leaks (finalize asserts the checkout count balanced).
+                self.stream_freelist_outstanding
+                    .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                self.slab.free_global(id, &self.costs, guard == Guard::VciLock);
+            }
+            return;
+        }
         if self.cfg.per_vci_req_cache {
-            let flags = self.slab.slot(id).flags.load(std::sync::atomic::Ordering::Relaxed);
             if flags & REQ_FLAG_STRIPED != 0 {
                 // Striping (per the owning comm's policy): the allocating
                 // VCI's lock is a hot resource, so don't pay a dedicated
@@ -103,6 +175,17 @@ impl MpiProc {
 
     fn lightweight_release(&self, vci_idx: usize) {
         if self.cfg.per_vci_lightweight {
+            let vci = self.vcis().get(vci_idx);
+            if vci.stream_owned_by(thread_token()) {
+                // Single-writer lane: decrement in place — the lock-free
+                // twin of the deferred release below (nothing to defer to:
+                // no other thread ever enters this lane's state, and the
+                // stream's own ops never drain the deferral list).
+                vci.clone().with_state_stream(|st| {
+                    st.lw_refs.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                });
+                return;
+            }
             // Deferred decrement: MPI_Wait on a lightweight request takes
             // zero locks (paper Table 1). The release parks on the owning
             // VCI and is reconciled by its next locked operation; balance
@@ -111,6 +194,49 @@ impl MpiProc {
         } else {
             self.slab.global_lightweight_refs.fetch_sub(1, self.charged_atomics());
         }
+    }
+
+    /// Resolve the serial-execution-stream fast path for an op on `comm`:
+    /// `Some(lane)` when the calling thread owns the comm's lane as a
+    /// stream — binding implicitly on the first touch of a
+    /// `vcmpi_stream=local` communicator (the info-key flavor of
+    /// [`MpiProc::stream_bind`]). Streams never combine with striping or
+    /// the §7 envelope-spread hints (the traffic must funnel through the
+    /// one bound lane), and a stream comm driven from a second thread is
+    /// erroneous — caught here, deterministically.
+    fn stream_lane(&self, comm: &Comm) -> Option<usize> {
+        if comm.is_endpoints()
+            || self.striping_active(comm)
+            || (comm.policy.no_any_source && comm.policy.no_any_tag && self.vcis().len() > 1)
+        {
+            return None;
+        }
+        let lane = self.comm_vci(comm, None);
+        if lane == super::vci::FALLBACK_VCI {
+            return None; // the shared world lane never streams
+        }
+        let vci = self.vcis().get(lane);
+        let me = thread_token();
+        if vci.stream_owned_by(me) {
+            return Some(lane);
+        }
+        if !comm.policy.stream {
+            return None;
+        }
+        if !vci.is_stream_owned() {
+            if self.guard() != Guard::VciLock {
+                return None; // coarse CS modes have no per-VCI lock to elide
+            }
+            self.stream_bind(comm);
+            return Some(lane);
+        }
+        panic!(
+            "stream comm {} driven from thread token {me}, but its lane {lane} is \
+             stream-owned by token {}; a serial execution stream has exactly one driving \
+             thread (erroneous program)",
+            comm.id,
+            vci.stream_owner()
+        );
     }
 
     /// MPI_Isend (standard mode).
@@ -164,6 +290,15 @@ impl MpiProc {
         coll_vci: Option<usize>,
     ) -> Request {
         padvance(self.backend, self.costs.mpi_sw_send + self.costs.instructions(8));
+        // Serial-execution-stream fast path: when the calling thread owns
+        // this comm's lane, the whole send runs single-writer — no CS, no
+        // VCI lock, lane-local request allocation. Wire format is
+        // identical to the ordered locked path below.
+        if coll_vci.is_none() && my_ep.is_none() {
+            if let Some(lane) = self.stream_lane(comm) {
+                return self.isend_stream(comm, lane, dst, tag, data, sync);
+            }
+        }
         let _cs = self.enter_cs();
         let guard = self.guard();
         // VCI selection, in precedence order:
@@ -292,6 +427,98 @@ impl MpiProc {
         })
     }
 
+    /// Single-writer isend on a stream-owned lane: the same protocols,
+    /// wire format, and modeled instruction costs as the ordered locked
+    /// path in [`MpiProc::isend_inner`], minus the VCI lock and the
+    /// shared request cache — the Table-1 "endpoints without endpoints"
+    /// arm. Only ever entered by the lane's owning thread.
+    fn isend_stream(
+        &self,
+        comm: &Comm,
+        lane: usize,
+        dst: usize,
+        tag: i32,
+        data: &[u8],
+        sync: bool,
+    ) -> Request {
+        let vci = self.vcis().get(lane).clone();
+        let (dst_proc, dst_ctx) = self.route(comm, dst);
+        let eager = data.len() <= self.costs.rendezvous_threshold;
+        let immediate = eager && !sync && data.len() <= self.costs.immediate_completion_max;
+        vci.with_state_stream(|st| {
+            let seq = {
+                let e = st.send_seq.entry((comm.id, dst)).or_insert(0);
+                *e += 1;
+                *e
+            };
+            if immediate {
+                self.lightweight_acquire(st);
+                self.fabric.inject(vci.ctx_index, dst_proc, dst_ctx, Payload::TwoSided {
+                    comm_id: comm.id,
+                    src_rank: comm.rank,
+                    dst_rank: dst,
+                    tag,
+                    seq,
+                    stripe_home: None,
+                    protocol: P2pProtocol::Eager { send_handle: 0 },
+                    needs_ack: false,
+                    data: data.to_vec(),
+                });
+                return Request::Lightweight { vci: lane };
+            }
+            let id = self.alloc_request_stream(st);
+            self.slab.slot(id).vci.store(lane, std::sync::atomic::Ordering::Relaxed);
+            self.slab
+                .slot(id)
+                .flags
+                .store(REQ_FLAG_STREAM, std::sync::atomic::Ordering::Relaxed);
+            padvance(self.backend, self.costs.instructions(3)); // record VCI in request
+            if eager {
+                self.fabric.inject(vci.ctx_index, dst_proc, dst_ctx, Payload::TwoSided {
+                    comm_id: comm.id,
+                    src_rank: comm.rank,
+                    dst_rank: dst,
+                    tag,
+                    seq,
+                    stripe_home: None,
+                    protocol: P2pProtocol::Eager { send_handle: id as u64 },
+                    needs_ack: sync,
+                    data: data.to_vec(),
+                });
+                if !sync {
+                    let done = pnow(self.backend) + self.costs.dma_cost(data.len());
+                    self.slab
+                        .slot(id)
+                        .complete_at
+                        .store(done, std::sync::atomic::Ordering::Release);
+                }
+            } else {
+                st.pending_sends.insert(
+                    id as u64,
+                    super::vci::PendingSend {
+                        data: data.to_vec(),
+                        comm_id: comm.id,
+                        dst_rank: dst,
+                        tag,
+                        req: id,
+                    },
+                );
+                self.fabric.inject(vci.ctx_index, dst_proc, dst_ctx, Payload::TwoSided {
+                    comm_id: comm.id,
+                    src_rank: comm.rank,
+                    dst_rank: dst,
+                    tag,
+                    seq,
+                    stripe_home: None,
+                    protocol: P2pProtocol::Rts { send_handle: id as u64 },
+                    needs_ack: false,
+                    data: Vec::new(),
+                });
+            }
+            Request::Real { id, vci: lane }
+        })
+    }
+
     /// MPI_Irecv. Returns a request whose `wait` yields the payload.
     pub fn irecv(&self, comm: &Comm, src: Src, tag: Tag) -> Request {
         self.irecv_ep(comm, None, src, tag)
@@ -324,6 +551,13 @@ impl MpiProc {
         coll_vci: Option<usize>,
     ) -> Request {
         padvance(self.backend, self.costs.mpi_sw_recv + self.costs.instructions(8));
+        // Serial-execution-stream fast path (see `isend_inner`): posts
+        // into the bound lane's own matching engine, single-writer.
+        if coll_vci.is_none() && my_ep.is_none() {
+            if let Some(lane) = self.stream_lane(comm) {
+                return self.irecv_stream(comm, lane, src, tag);
+            }
+        }
         let _cs = self.enter_cs();
         let guard = self.guard();
         if let Some(v) = coll_vci {
@@ -433,6 +667,28 @@ impl MpiProc {
         })
     }
 
+    /// Single-writer irecv on a stream-owned lane — the lock-free twin of
+    /// the ordered post at the tail of [`MpiProc::irecv_inner`].
+    /// Wildcards stay fully legal: the lane's matching engine is the same
+    /// one the locked path uses, just entered without the lock.
+    fn irecv_stream(&self, comm: &Comm, lane: usize, src: Src, tag: Tag) -> Request {
+        let vci = self.vcis().get(lane).clone();
+        vci.with_state_stream(|st| {
+            let id = self.alloc_request_stream(st);
+            self.slab.slot(id).vci.store(lane, std::sync::atomic::Ordering::Relaxed);
+            self.slab
+                .slot(id)
+                .flags
+                .store(REQ_FLAG_STREAM, std::sync::atomic::Ordering::Relaxed);
+            padvance(self.backend, self.costs.instructions(3) + self.costs.match_cost);
+            let posted = PostedRecv { comm_id: comm.id, src, tag, req: id };
+            if let Some(m) = st.matching.on_post(posted) {
+                self.consume_matched(vci.ctx_index, id, m);
+            }
+            Request::Real { id, vci: lane }
+        })
+    }
+
     /// Deliver a matched unexpected message into recv request `id`
     /// (either eagerly, or by answering an RTS with a CTS).
     pub(super) fn consume_matched(&self, my_ctx_index: usize, id: ReqId, m: UnexpectedMsg) {
@@ -513,15 +769,26 @@ impl MpiProc {
                 // Progress routing per the owning communicator's policy,
                 // recorded in the slot at initiation: striped comms sweep
                 // the stripe lanes (optionally doorbell-gated), ordered
-                // comms poll their own VCI.
+                // comms poll their own VCI, and stream requests waited by
+                // their owning thread spin on the lock-free single-writer
+                // poll (hook checks included for collective liveness —
+                // the hook lock is only taken when a schedule is active).
                 let flags = self.slab.slot(id).flags.load(std::sync::atomic::Ordering::Relaxed);
                 let striped = flags & REQ_FLAG_STRIPED != 0;
                 let doorbell = flags & REQ_FLAG_DOORBELL != 0;
+                let stream = flags & REQ_FLAG_STREAM != 0
+                    && self.vcis().get(vci).stream_owned_by(thread_token());
                 loop {
                     if self.is_complete(id) {
                         break;
                     }
-                    self.progress_with(vci, striped, doorbell);
+                    if stream {
+                        self.progress_stream(vci);
+                        self.check_hooks();
+                        self.relax();
+                    } else {
+                        self.progress_with(vci, striped, doorbell);
+                    }
                 }
                 let data = self.slab.slot(id).data.lock(LockClass::HostSlotData).take();
                 if self.guard() == Guard::GlobalHeld {
@@ -544,8 +811,15 @@ impl MpiProc {
                     return true;
                 }
                 let flags = self.slab.slot(*id).flags.load(std::sync::atomic::Ordering::Relaxed);
-                let striped = flags & REQ_FLAG_STRIPED != 0;
-                self.progress_with(*vci, striped, flags & REQ_FLAG_DOORBELL != 0);
+                if flags & REQ_FLAG_STREAM != 0
+                    && self.vcis().get(*vci).stream_owned_by(thread_token())
+                {
+                    self.progress_stream(*vci);
+                    self.check_hooks();
+                } else {
+                    let striped = flags & REQ_FLAG_STRIPED != 0;
+                    self.progress_with(*vci, striped, flags & REQ_FLAG_DOORBELL != 0);
+                }
                 self.is_complete(*id)
             }
         }

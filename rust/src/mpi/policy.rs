@@ -27,6 +27,16 @@
 //! | `mpi_assert_no_any_tag`    | `true`\|`false`   | receives on this comm never use `MPI_ANY_TAG` |
 //! | `vcmpi_collectives`        | `inherit`\|`dedicated`\|`striped` | how this comm's collectives map onto the VCI pool (see [`CollectivesMode`]) |
 //! | `vcmpi_coll_segments`      | integer ≥ 1 \| `auto` | segments per collective payload (pipelined; clamped to [`MAX_COLL_SEGMENTS`]). `auto` sizes topology-aware from the fabric cost model: per-chunk DMA time balanced against per-segment latency (see `MpiProc::auto_coll_segments`) |
+//! | `vcmpi_stream`             | `local`           | serial execution stream (MPIX-Stream style): the first thread to touch the comm binds it to a dedicated single-writer VCI — no VCI lock, no shared request cache on that path. Mutually exclusive with striping; see the decision table below |
+//!
+//! # Stream vs striping: the policy decision table
+//!
+//! | traffic shape | policy |
+//! |---------------|--------|
+//! | many threads, one hot comm, bulk | `vcmpi_striping=rr`/`hash` (+ shards + doorbell) |
+//! | one thread, one comm, latency/rate-critical | `vcmpi_stream=local` — single-writer lane, zero locks per op |
+//! | one thread per comm, several comms | default ordered comms (pinned lanes), or a stream per comm |
+//! | mixed / unknown | default ordered; measure before opting in |
 //!
 //! Windows resolve a [`WinPolicy`] from the same [`Info`] machinery at
 //! `MpiProc::win_create_with_info` (MPI_Win_create's info argument):
@@ -176,6 +186,14 @@ pub struct CommPolicy {
     ///
     /// [`coll_segments`]: CommPolicy::coll_segments
     pub coll_segments_auto: bool,
+    /// `vcmpi_stream=local`: this communicator is a *serial execution
+    /// stream* (MPIX-Stream style). The first thread to drive it binds
+    /// itself to the comm's VCI (`MpiProc::stream_bind`), which switches
+    /// the lane into single-writer mode: ops on the bound thread skip the
+    /// VCI lock and the shared request cache entirely. Implies ordered
+    /// (non-striped) traffic; combining with `vcmpi_striping` other than
+    /// `off` is erroneous.
+    pub stream: bool,
 }
 
 impl Default for CommPolicy {
@@ -190,6 +208,7 @@ impl Default for CommPolicy {
             collectives: CollectivesMode::Inherit,
             coll_segments: DEFAULT_COLL_SEGMENTS,
             coll_segments_auto: false,
+            stream: false,
         }
     }
 }
@@ -210,6 +229,10 @@ impl CommPolicy {
             collectives: CollectivesMode::Inherit,
             coll_segments: DEFAULT_COLL_SEGMENTS,
             coll_segments_auto: false,
+            // Streams are inherently per-communicator too: a process-wide
+            // "every comm is a stream" default would be self-contradictory
+            // (one thread can only own one lane at a time per comm).
+            stream: false,
         }
     }
 
@@ -264,6 +287,21 @@ impl CommPolicy {
                     .clamp(1, MAX_COLL_SEGMENTS);
                 p.coll_segments_auto = false;
             }
+        }
+        if let Some(v) = info.get("vcmpi_stream") {
+            p.stream = match v {
+                "local" => true,
+                other => panic!(
+                    "info key vcmpi_stream: expected local, got {other:?} (erroneous program)"
+                ),
+            };
+        }
+        if p.stream && p.striped() {
+            panic!(
+                "vcmpi_stream=local is mutually exclusive with vcmpi_striping={:?}: a stream is a \
+                 single-writer ordered lane (erroneous program)",
+                p.striping
+            );
         }
         p
     }
@@ -525,6 +563,35 @@ mod tests {
         let back = auto.with_info(&Info::new().with("vcmpi_coll_segments", "6"));
         assert!(!back.coll_segments_auto, "an explicit count overrides auto");
         assert_eq!(back.coll_segments, 6);
+    }
+
+    #[test]
+    fn stream_key_parses_and_defaults_off() {
+        let base = CommPolicy::default();
+        assert!(!base.stream);
+        let p = base.with_info(&Info::new().with("vcmpi_stream", "local"));
+        assert!(p.stream);
+        assert!(!p.striped(), "a stream is an ordered lane");
+        // A striped process default needs striping explicitly disabled.
+        let striped_base = CommPolicy::from_config(&MpiConfig::striped(8));
+        let q = striped_base.with_info(
+            &Info::new().with("vcmpi_striping", "off").with("vcmpi_stream", "local"),
+        );
+        assert!(q.stream && !q.striped());
+    }
+
+    #[test]
+    #[should_panic(expected = "vcmpi_stream")]
+    fn malformed_stream_value_is_erroneous() {
+        let _ = CommPolicy::default().with_info(&Info::new().with("vcmpi_stream", "global"));
+    }
+
+    #[test]
+    #[should_panic(expected = "mutually exclusive")]
+    fn stream_plus_striping_is_erroneous() {
+        let _ = CommPolicy::default().with_info(
+            &Info::new().with("vcmpi_striping", "rr").with("vcmpi_stream", "local"),
+        );
     }
 
     #[test]

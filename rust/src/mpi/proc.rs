@@ -18,7 +18,7 @@ use super::policy::{CollectivesMode, CommPolicy, Info, WinPolicy, MAX_COLL_SEGME
 use super::request::{RequestSlab, DEFAULT_SLAB_CAPACITY};
 use super::rma::Window;
 use super::shard::{CommMatch, EpochStats};
-use super::vci::{guard_for, Guard, VciPool, VciState, FALLBACK_VCI};
+use super::vci::{guard_for, Guard, Vci, VciPool, VciState, FALLBACK_VCI};
 
 /// Lock-free stripe-lane pin mask: one bit per pool lane, in as many
 /// words as the configured pool needs (the old single-`u64` mask silently
@@ -241,6 +241,19 @@ pub struct MpiProc {
     /// messages dropped by the progress engine instead of panicking
     /// (e.g. a CTS for an unknown rendezvous send).
     pub(super) stale_ctrl_drops: AtomicU64,
+    /// Serial execution streams: lane index → owning thread token, one
+    /// entry per live `stream_bind`. The authoritative ownership bit lives
+    /// on the [`Vci`] itself (`stream_owner`, read lock-free on every
+    /// fast-path op); this table exists for teardown bookkeeping —
+    /// `comm_free` auto-unbind and the finalize leak tripwire. Host mutex:
+    /// bind/unbind only, never on the per-op path.
+    streams: HostMutex<HashMap<usize, u64>>,
+    /// Request ids currently parked in per-thread stream freelists
+    /// (allocated out of the shared slab in chunks by the stream fast
+    /// path). `stream_unbind` drains the caller's freelist back and
+    /// finalize asserts this count returned to zero — the freelist twin of
+    /// the lightweight-refs leak tripwire.
+    pub(super) stream_freelist_outstanding: AtomicUsize,
 }
 
 impl MpiProc {
@@ -290,6 +303,8 @@ impl MpiProc {
             empty_polls: AtomicU64::new(0),
             skip_streak: AtomicUsize::new(0),
             stale_ctrl_drops: AtomicU64::new(0),
+            streams: HostMutex::new(HashMap::new()),
+            stream_freelist_outstanding: AtomicUsize::new(0),
             fabric,
         })
     }
@@ -400,6 +415,28 @@ impl MpiProc {
         // deferred-drain path used to have.
         {
             let _cs = self.enter_cs();
+            // Stream hygiene (mirror of the freed-comm tripwire below): a
+            // lane still in single-writer mode here would be swept by the
+            // context teardown from the wrong thread, and request ids still
+            // parked in a thread-local freelist are slab leaks.
+            {
+                let streams = self.streams.lock(LockClass::HostStreams);
+                assert!(
+                    streams.is_empty(),
+                    "stream-owned VCIs leaked at finalize: {:?} (stream_unbind or comm_free \
+                     every streamed communicator before finalize)",
+                    {
+                        let mut lanes: Vec<usize> = streams.keys().copied().collect();
+                        lanes.sort_unstable();
+                        lanes
+                    }
+                );
+            }
+            let parked = self.stream_freelist_outstanding.load(Ordering::Relaxed);
+            assert_eq!(
+                parked, 0,
+                "{parked} request ids still parked in stream freelists at finalize"
+            );
             if self.cfg.per_vci_lightweight {
                 let guard = self.guard();
                 for i in 0..self.vcis().len() {
@@ -604,6 +641,8 @@ impl MpiProc {
 
     /// Reverse of [`MpiProc::register_comm`], at communicator free.
     pub(super) fn unregister_comm(&self, comm: &Comm) {
+        // Freeing a streamed comm implies unbind (owner only — asserted).
+        self.stream_teardown_on_free(comm);
         self.policies.lock(LockClass::HostPolicies).remove(&comm.id);
         match &comm.kind {
             CommKind::Endpoints { vcis, .. } => {
@@ -667,6 +706,137 @@ impl MpiProc {
         self.stripe_excluded.excluded(idx)
     }
 
+    /// Bind the calling thread to `comm`'s VCI as a *serial execution
+    /// stream* (MPIX-Stream style, paper §8 "what do we lose?"): the lane
+    /// is pinned out of the stripe set (one more refcount on top of the
+    /// ordered-comm pin `register_comm` already took) and switched into
+    /// single-writer mode — subsequent `isend`/`irecv`/`wait` by this
+    /// thread on this comm go through [`Vci::with_state_stream`] and the
+    /// thread-local request freelist, paying zero lock acquisitions per
+    /// op. Any other thread touching the lane trips the SimSan owner
+    /// check. Called explicitly (endpoints-style API) or implicitly by
+    /// the first op on a `vcmpi_stream=local` communicator.
+    ///
+    /// Returns the bound lane index. Erroneous (panics) on: a striped or
+    /// endpoints comm, a comm sharing the fallback VCI (the world lane is
+    /// everyone's), a lane that already carries a stream, or a non-FG
+    /// thread-safety mode (the Global CS / `unsafe_no_thread_safety`
+    /// modes have no per-VCI lock to elide).
+    pub fn stream_bind(&self, comm: &Comm) -> usize {
+        assert!(
+            !comm.is_endpoints(),
+            "stream_bind: endpoints comms already name their lane explicitly (erroneous program)"
+        );
+        assert!(
+            !comm.policy.striped(),
+            "stream_bind: comm {} is striped; a serial execution stream is a single ordered \
+             lane (erroneous program)",
+            comm.id
+        );
+        assert_eq!(
+            self.guard(),
+            Guard::VciLock,
+            "stream_bind requires the fine-grained critical-section mode (vcmpi_cs=fg): \
+             coarser modes have no per-VCI lock for the stream to elide"
+        );
+        let lane = self.comm_vci(comm, None);
+        assert_ne!(
+            lane, FALLBACK_VCI,
+            "stream_bind: comm {} landed on the fallback VCI (pool exhausted or world comm); \
+             the shared world lane cannot become single-writer",
+            comm.id
+        );
+        let token = thread_token();
+        // Pin first: from here the lane is out of the stripe set even if
+        // the owner bit is not yet visible to a concurrent sweep.
+        self.pin_ordered_lane(lane);
+        let v = self.vcis().get(lane).clone();
+        v.stream_set_owner(token);
+        self.streams.lock(LockClass::HostStreams).insert(lane, token);
+        // Ownership transition under the lane's lock: publishes a real
+        // happens-before edge from every earlier locked access to the new
+        // owner's plain-cell accesses, and drains any lightweight releases
+        // other threads deferred onto this lane pre-bind (the fast path
+        // never drains — nothing can defer onto a bound lane).
+        v.stream_transition(self.guard());
+        // Pre-charge the lane-local request freelist so the first window
+        // of stream ops never touches the shared slab lock.
+        self.stream_prefill(lane);
+        padvance(self.backend, self.costs.instructions(300)); // bind bookkeeping
+        lane
+    }
+
+    /// Undo [`MpiProc::stream_bind`]: drain the calling thread's request
+    /// freelist back to the shared slab, hand the lane back to the locked
+    /// world (with a locked transition so the next lock holder acquires
+    /// the stream's writes), and return it to the stripe set. Must be
+    /// called by the owning thread; `comm_free` on a streamed comm does
+    /// this implicitly.
+    pub fn stream_unbind(&self, comm: &Comm) {
+        let lane = self.comm_vci(comm, None);
+        self.stream_unbind_lane(lane);
+    }
+
+    fn stream_unbind_lane(&self, lane: usize) {
+        let v = self.vcis().get(lane).clone();
+        let me = thread_token();
+        assert!(
+            v.stream_owned_by(me),
+            "stream_unbind: lane {lane} is not stream-owned by thread token {me} \
+             (owner: {}); only the binding thread may unbind (erroneous program)",
+            v.stream_owner()
+        );
+        self.stream_drain_freelist(lane);
+        // Reconcile purges that skipped this lane while it was
+        // single-writer: freed comms must not stay cached here (the
+        // finalize freed-comm tripwire sweeps every lane).
+        let freed: Vec<u64> = {
+            let f = self.freed_comms.lock(LockClass::HostFreedComms);
+            f.iter().copied().collect()
+        };
+        if !freed.is_empty() {
+            v.with_state_stream(|st| {
+                st.match_cache.retain(|id, _| !freed.contains(id));
+            });
+        }
+        // Release edge while still the owner: the transition's locked
+        // touch of the witness cell publishes the stream's plain-cell
+        // writes to the next locked accessor.
+        v.stream_transition(self.guard());
+        v.stream_clear_owner();
+        self.streams.lock(LockClass::HostStreams).remove(&lane);
+        self.unpin_ordered_lane(lane);
+        padvance(self.backend, self.costs.instructions(300)); // unbind bookkeeping
+    }
+
+    /// Stream teardown hook for `comm_free`/`unregister_comm`: if this
+    /// comm's lane carries a live stream, the freeing thread must be its
+    /// owner (then the free implies unbind); a free from any other thread
+    /// is a cross-thread touch of a single-writer lane.
+    fn stream_teardown_on_free(&self, comm: &Comm) {
+        if comm.is_endpoints() || self.vcis.get().is_none() {
+            return;
+        }
+        let lane = self.comm_vci(comm, None);
+        let owner = { self.streams.lock(LockClass::HostStreams).get(&lane).copied() };
+        if let Some(token) = owner {
+            assert_eq!(
+                token,
+                thread_token(),
+                "comm {} freed while its lane {lane} is stream-owned by thread token {token}; \
+                 only the stream's owner may free a streamed communicator (erroneous program)",
+                comm.id
+            );
+            self.stream_unbind_lane(lane);
+        }
+    }
+
+    /// Is lane `idx` currently bound as a serial execution stream?
+    /// Test/bench aid.
+    pub fn stream_lane_owned(&self, idx: usize) -> bool {
+        self.vcis().get(idx).is_stream_owned()
+    }
+
     /// If a striped arrival raced this communicator's creation, an engine
     /// was lazily built with the process-default shape; replace it with
     /// one built from the registered policy via a stop-the-world adoption
@@ -728,6 +898,18 @@ impl MpiProc {
         let guard = self.guard();
         for i in 0..self.vcis().len() {
             let vci = self.vcis().get(i).clone();
+            if vci.is_stream_owned() {
+                // Single-writer lanes may only be touched by their owner.
+                // A foreign lane's stale entry is reconciled at its
+                // unbind (`stream_unbind_lane` drops freed-comm cache
+                // entries), keeping the finalize tripwire sound.
+                if vci.stream_owned_by(thread_token()) {
+                    vci.with_state_stream(|st| {
+                        st.match_cache.remove(&comm_id);
+                    });
+                }
+                continue;
+            }
             vci.with_state(guard, |st| {
                 st.match_cache.remove(&comm_id);
             });
@@ -966,6 +1148,18 @@ impl MpiProc {
         let guard = self.guard();
         for i in 0..self.vcis().len() {
             let vci = self.vcis().get(i).clone();
+            if vci.is_stream_owned() {
+                // Stream lanes are pinned out of RMA striping, so they
+                // carry no striped-completion counters; skip rather than
+                // touch single-writer state from a foreign thread.
+                if vci.stream_owned_by(thread_token()) {
+                    vci.with_state_stream(|st| {
+                        st.rma_issued.retain(|(w, _), _| *w != win_id);
+                        st.rma_acked.retain(|(w, _), _| *w != win_id);
+                    });
+                }
+                continue;
+            }
             vci.with_state(guard, |st| {
                 st.rma_issued.retain(|(w, _), _| *w != win_id);
                 st.rma_acked.retain(|(w, _), _| *w != win_id);
@@ -1204,8 +1398,27 @@ impl MpiProc {
         // stripe lanes are pinned and striped traffic funnels through a
         // pinned home). Degrade to a plain poll like the non-doorbell
         // sweep rather than skipping — returning None here would leave
-        // liveness to the paranoid global round alone.
-        Some(cursor)
+        // liveness to the paranoid global round alone. The degraded poll
+        // must still respect single-writer lanes: a pinned *ordered* lane
+        // merely wastes the poll, but sweeping a stream-owned lane from a
+        // foreign thread is a data race (and trips the SimSan owner
+        // check), so step past those like the pin mask steps past pins.
+        Some(self.non_stream_lane(cursor, n))
+    }
+
+    /// First lane at or after `start` (circularly) not bound as a serial
+    /// execution stream. The fallback lane 0 can never be stream-owned
+    /// (`stream_bind` rejects it), so the scan always terminates on a
+    /// sweepable lane.
+    fn non_stream_lane(&self, start: usize, n: usize) -> usize {
+        let mut idx = start;
+        for _ in 0..n {
+            if !self.vcis().get(idx).is_stream_owned() {
+                return idx;
+            }
+            idx = (idx + 1) % n;
+        }
+        FALLBACK_VCI
     }
 
     /// Stale/duplicate/malformed wire control messages dropped so far
@@ -1224,9 +1437,21 @@ impl MpiProc {
         let mut parked = 0usize;
         for i in 0..self.vcis().len() {
             let v = self.vcis().get(i).clone();
-            let (d, p) = v.with_state(guard, |st| {
-                (st.matching.dup_seq_drops(), st.matching.reorder_parked())
-            });
+            let (d, p) = if v.is_stream_owned() {
+                if !v.stream_owned_by(thread_token()) {
+                    // Foreign single-writer lane: skip (diagnostics only;
+                    // the owner's own calls and the post-unbind sweep see
+                    // its counters).
+                    continue;
+                }
+                v.with_state_stream(|st| {
+                    (st.matching.dup_seq_drops(), st.matching.reorder_parked())
+                })
+            } else {
+                v.with_state(guard, |st| {
+                    (st.matching.dup_seq_drops(), st.matching.reorder_parked())
+                })
+            };
             dups += d;
             parked += p;
         }
@@ -1313,5 +1538,60 @@ mod tests {
     fn pin_mask_out_of_range_reads_are_unpinned() {
         let m = PinMask::new(8);
         assert!(!m.excluded(512), "beyond-capacity lanes read unpinned");
+    }
+
+    #[test]
+    fn poll_target_never_sweeps_a_stream_owned_lane() {
+        // Satellite fix: no progress sweep — masked scan or doorbell
+        // degrade — may land on a single-writer VCI from a foreign thread.
+        use crate::fabric::{FabricConfig, Interconnect, Network};
+        use crate::mpi::config::MpiConfig;
+        use crate::platform::Backend;
+        use crate::sim::CostModel;
+        use std::sync::Arc;
+
+        let net = Network::new(
+            FabricConfig {
+                interconnect: Interconnect::Ib,
+                nodes: 1,
+                procs_per_node: 1,
+                max_contexts_per_node: 8,
+            },
+            Backend::Native,
+            Arc::new(CostModel::default()),
+        );
+        let mut cfg = MpiConfig::optimized(1);
+        cfg.num_vcis = 4;
+        let proc = super::MpiProc::new(net.proc_fabric(0), cfg);
+        proc.init();
+        let world = proc.comm_world();
+        let comm = proc.comm_dup(&world);
+        let lane = proc.stream_bind(&comm);
+        assert_ne!(lane, super::FALLBACK_VCI);
+        assert!(proc.stream_lane_owned(lane));
+        assert!(proc.stripe_lane_pinned(lane), "a stream lane is pinned out of the stripe set");
+        let n = proc.vcis().len();
+        // The masked circular scan steps past the stream lane on every
+        // rotation (stream lanes ride the same pin mask as ordered pins).
+        for _ in 0..4 * n {
+            let target = proc.stripe_poll_target(super::FALLBACK_VCI, true, false);
+            assert_ne!(target, Some(lane), "masked sweep landed on a stream-owned lane");
+        }
+        // The doorbell degrade path polls `non_stream_lane(cursor)`: from
+        // any cursor — including the stream lane itself — the degraded
+        // poll must step past single-writer lanes.
+        for start in 0..n {
+            assert_ne!(
+                proc.non_stream_lane(start, n),
+                lane,
+                "doorbell degrade from cursor {start} swept a stream-owned lane"
+            );
+        }
+        // Unbind returns the lane to the sweepable set.
+        proc.stream_unbind(&comm);
+        assert!(!proc.stream_lane_owned(lane));
+        assert_eq!(proc.non_stream_lane(lane, n), lane);
+        proc.comm_free(comm);
+        proc.finalize();
     }
 }

@@ -159,10 +159,45 @@ impl MpiProc {
         })
     }
 
+    /// Poll one stream-owned VCI's context lock-free — the single-writer
+    /// twin of [`MpiProc::progress_vci`], entered only by the lane's
+    /// owning thread (any other caller trips the SimSan owner check in
+    /// `with_state_stream`). Same poll, same dispatch, zero lock
+    /// acquisitions: this is where the streamed arm's wait loop spins.
+    pub(super) fn progress_stream(&self, vci_idx: usize) -> bool {
+        let vci = self.vcis().get(vci_idx).clone();
+        vci.with_state_stream(|st| {
+            let ctx = self.fabric.context(self.rank(), vci.ctx_index);
+            match ctx.poll(&self.costs) {
+                None => {
+                    self.empty_polls.fetch_add(1, Ordering::Relaxed);
+                    instrument::record_empty_poll();
+                    false
+                }
+                Some(msg) => {
+                    self.handle_msg(st, vci.ctx_index, msg);
+                    true
+                }
+            }
+        })
+    }
+
     /// One global round: poll every open VCI (locking each in FG mode —
     /// the contention cost the paper attributes to shared progress).
+    /// Stream-owned lanes are exempt from the sweep: a single-writer VCI
+    /// is polled only by its owner (lock-free when the round runs on the
+    /// owning thread, skipped everywhere else — the owner's own wait loop
+    /// and the eventual unbind keep it live).
     pub fn progress_global_round(&self) {
+        let me = super::proc::thread_token();
         for i in 0..self.vcis().len() {
+            let v = self.vcis().get(i);
+            if v.is_stream_owned() {
+                if v.stream_owned_by(me) {
+                    self.progress_stream(i);
+                }
+                continue;
+            }
             self.progress_vci(i);
         }
     }

@@ -18,6 +18,11 @@ pub const REQ_FLAG_STRIPED: u8 = 1;
 /// [`ReqSlot::flags`] bit: the owning communicator participates in
 /// doorbell-gated progress sweeps.
 pub const REQ_FLAG_DOORBELL: u8 = 2;
+/// [`ReqSlot::flags`] bit: the request was initiated on a lane the
+/// calling thread owns as a serial execution stream — `wait` drives the
+/// lock-free single-writer progress path and releases the id to the
+/// thread-local stream freelist instead of the shared slab.
+pub const REQ_FLAG_STREAM: u8 = 4;
 
 /// How an initiation op completed / will complete.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -45,6 +45,34 @@
 //! collective's per-segment tags over the pool by the pure envelope hash
 //! — matched per VCI, no reorder stage, because the internal collective
 //! tag space never posts wildcards.
+//!
+//! # Serial execution streams (single-writer VCIs)
+//!
+//! The fourth mode is the MPIX-Stream endgame (`vcmpi_stream=local` /
+//! `MpiProc::stream_bind`): one thread declares itself the *sole* driver
+//! of a communicator, binds itself to the comm's VCI, and the lane flips
+//! into **single-writer** mode — [`Vci::with_state_stream`] hands out the
+//! state with *no lock at all* (a plain cell access), `MPI_Wait` polls
+//! only the owned lane, and requests recycle through a thread-local
+//! freelist instead of the shared per-VCI cache. The lane is pinned out
+//! of the stripe set by the same refcounts ordered comms use, and no
+//! progress thread may sweep it (`stripe_poll_target` and the global
+//! round both skip stream-owned lanes) — the owner is the only thread
+//! that ever touches the state, which is what makes the lock elision
+//! sound. A SimSan-integrated tripwire panics deterministically on any
+//! cross-thread state entry, and (under the `simsan` feature) every
+//! stream op touches a *tracked* witness cell so the vector-clock race
+//! checker independently verifies that ownership handoffs (bind/unbind)
+//! carry real happens-before edges.
+//!
+//! Decision table — when to use which lane mapping:
+//!
+//! | traffic shape | policy |
+//! |---------------|--------|
+//! | many threads, one hot comm, bulk | striping (`rr`/`hash`) + shards + doorbell |
+//! | one thread, one comm, rate/latency-critical | `vcmpi_stream=local` — zero locks per op |
+//! | one thread per comm, several comms | ordered comms (pinned lanes) or a stream each |
+//! | collectives head-of-line sensitive | `vcmpi_collectives=dedicated` |
 
 use std::cell::UnsafeCell;
 use std::collections::{HashMap, HashSet};
@@ -79,6 +107,13 @@ pub struct VciState {
     pub pending_sends: HashMap<u64, PendingSend>,
     /// Per-VCI request cache (paper §4.3).
     pub req_cache: Vec<ReqId>,
+    /// Serial-execution-stream request freelist — the lock-free twin of
+    /// `req_cache`, touched only through [`Vci::with_state_stream`] while
+    /// the lane is stream-owned (thread-local by the single-writer
+    /// contract, not by storage). Drained back to the shared slab at
+    /// `stream_unbind`; `MpiProc::stream_freelist_outstanding` accounts
+    /// every id checked out into it.
+    pub stream_freelist: Vec<ReqId>,
     /// Per-VCI lightweight request refcount. Host atomic for correctness
     /// on the native backend, but *modeled* as a plain counter protected by
     /// the VCI lock — no atomic/cacheline cost is charged (the point of the
@@ -128,10 +163,17 @@ pub enum Guard {
 }
 
 struct StateCell(UnsafeCell<VciState>);
-// SAFETY: access is serialized either by the VCI lock, the Global CS, or
+// SAFETY: access is serialized either by the VCI lock, the Global CS,
 // (Guard::None) by the caller's guarantee of single-threaded / DES-serial
-// execution. See `Vci::with_state`.
+// execution, or — for stream-owned VCIs — by the single-writer ownership
+// contract (`Vci::with_state_stream`: only the bound thread ever enters,
+// enforced by the SimSan tripwire and the progress-sweep skips).
 unsafe impl Sync for StateCell {}
+
+/// `Vci::stream_owner` value meaning "not stream-owned". Thread tokens
+/// (`proc::thread_token`) are small sim tids or `1<<32`-based native ids,
+/// so `u64::MAX` can never collide with a real owner.
+pub const STREAM_UNOWNED: u64 = u64::MAX;
 
 /// One virtual communication interface.
 pub struct Vci {
@@ -159,6 +201,21 @@ pub struct Vci {
     /// here and absorbed into `VciState::req_cache` by the next locked
     /// entry instead of paying a dedicated lock acquisition each).
     deferred_frees: HostMutex<Vec<ReqId>>,
+    /// Serial-stream single-writer owner: [`STREAM_UNOWNED`], or the
+    /// owning thread's token (`proc::thread_token`). Host atomic — the
+    /// modeled fast path never pays for it (ownership is checked with a
+    /// relaxed load, and on the owner's path the check is a same-thread
+    /// compare). Set/cleared by `MpiProc::stream_bind`/`stream_unbind`.
+    stream_owner: std::sync::atomic::AtomicU64,
+    /// SimSan happens-before witness for the single-writer fast path: a
+    /// *tracked* plain cell bumped by every stream op and by every
+    /// ownership transition (the transition touch happens under the VCI
+    /// lock, whose release/acquire edges order successive owners). If a
+    /// stream op ever runs without a real happens-before edge from the
+    /// previous owner's accesses, the vector-clock checker reports a data
+    /// race on this cell — independent of the owner-token tripwire.
+    #[cfg(feature = "simsan")]
+    stream_cell: crate::sim::SimCell<u64>,
 }
 
 impl Vci {
@@ -176,7 +233,84 @@ impl Vci {
             progress_failures: AtomicUsize::new(0),
             lw_deferred: std::sync::atomic::AtomicU64::new(0),
             deferred_frees: HostMutex::new(Vec::new()),
+            stream_owner: std::sync::atomic::AtomicU64::new(STREAM_UNOWNED),
+            #[cfg(feature = "simsan")]
+            stream_cell: crate::sim::SimCell::new(0),
         }
+    }
+
+    /// The stream owner's thread token, or [`STREAM_UNOWNED`].
+    pub fn stream_owner(&self) -> u64 {
+        self.stream_owner.load(Ordering::Acquire)
+    }
+
+    /// Is this VCI in single-writer (stream) mode?
+    pub fn is_stream_owned(&self) -> bool {
+        self.stream_owner() != STREAM_UNOWNED
+    }
+
+    /// Is this VCI stream-owned by the thread with `token`?
+    pub fn stream_owned_by(&self, token: u64) -> bool {
+        self.stream_owner() == token
+    }
+
+    /// Flip this VCI into single-writer mode, owned by `token`. Double
+    /// binding (by anyone, including the owner) is erroneous — a stream
+    /// binding is exclusive until `stream_clear_owner`.
+    pub fn stream_set_owner(&self, token: u64) {
+        let prev = self.stream_owner.swap(token, Ordering::AcqRel);
+        assert_eq!(
+            prev, STREAM_UNOWNED,
+            "VCI {} is already stream-owned by thread token {prev}; a lane carries at most one \
+             serial execution stream (erroneous program)",
+            self.idx
+        );
+    }
+
+    /// Return this VCI to normal (locked) multi-writer mode.
+    pub fn stream_clear_owner(&self) {
+        self.stream_owner.store(STREAM_UNOWNED, Ordering::Release);
+    }
+
+    /// SimSan-integrated stream tripwire: any state entry on a
+    /// stream-owned VCI from a thread other than the owner is a
+    /// single-writer discipline violation and panics deterministically.
+    /// Compiled out of `--no-default-features` bench builds.
+    #[inline]
+    fn stream_tripwire(&self) {
+        #[cfg(feature = "simsan")]
+        {
+            let owner = self.stream_owner.load(Ordering::Relaxed);
+            if owner != STREAM_UNOWNED {
+                let me = super::proc::thread_token();
+                assert!(
+                    me == owner,
+                    "SimSan: stream-owned VCI {} touched by thread token {me} (single-writer \
+                     owner is token {owner}); cross-thread use of a serial execution stream is \
+                     erroneous",
+                    self.idx
+                );
+            }
+        }
+    }
+
+    /// Bump the stream happens-before witness cell (tracked access: the
+    /// SimSan race checker sees it). No-op without the `simsan` feature.
+    #[cfg(feature = "simsan")]
+    fn stream_hb_touch(&self) {
+        *self.stream_cell.get() += 1;
+    }
+
+    /// Publish a stream-ownership transition: one locked state entry that
+    /// touches the happens-before witness under the VCI lock, so SimSan
+    /// sees bind/unbind as real release/acquire points between successive
+    /// owners. Called by `stream_bind`/`stream_unbind` while the caller
+    /// still holds (or is) the owner.
+    pub fn stream_transition(&self, guard: Guard) {
+        self.with_state(guard, |_st| {
+            #[cfg(feature = "simsan")]
+            self.stream_hb_touch();
+        });
     }
 
     /// Park one lightweight-request release without entering the VCI
@@ -211,6 +345,7 @@ impl Vci {
     /// Run `f` with exclusive access to the VCI state, honoring the guard
     /// discipline of the configured critical-section mode.
     pub fn with_state<R>(&self, guard: Guard, f: impl FnOnce(&mut VciState) -> R) -> R {
+        self.stream_tripwire();
         let _held: Option<PMutexGuard<'_, ()>> = match guard {
             Guard::VciLock => Some(self.lock.lock_class(LockClass::Vci)),
             Guard::GlobalHeld | Guard::None => None,
@@ -223,6 +358,7 @@ impl Vci {
 
     /// Attempt the same under `try_lock`; `None` if the VCI is busy.
     pub fn try_with_state<R>(&self, guard: Guard, f: impl FnOnce(&mut VciState) -> R) -> Option<R> {
+        self.stream_tripwire();
         match guard {
             Guard::VciLock => {
                 let g = self.lock.try_lock_class(LockClass::Vci)?;
@@ -238,6 +374,29 @@ impl Vci {
                 Some(f(st))
             }
         }
+    }
+
+    /// The single-writer fast path: run `f` with the VCI state and **no
+    /// lock at all** — a plain cell access in the modeled machine (zero
+    /// lock acquisitions, zero atomics; the whole point of the stream
+    /// mode, Table 1's streamed column). Sound only on the stream-owning
+    /// thread: the lane is out of the stripe set, every progress sweep
+    /// skips it, and the tripwire panics on any other thread entering
+    /// through the locked paths. The owner releases directly, so there is
+    /// no deferred state to drain here — `stream_bind`'s locked
+    /// transition drained pre-bind leftovers, and anything a foreign
+    /// thread parks mid-stream (a deferred lightweight release for a
+    /// pre-bind request — the side-lists are host atomics, not state
+    /// entries) is absorbed by `stream_unbind`'s transition.
+    // lint:allow-stream-cell (audited single-writer access; see module doc)
+    pub fn with_state_stream<R>(&self, f: impl FnOnce(&mut VciState) -> R) -> R {
+        self.stream_tripwire();
+        #[cfg(feature = "simsan")]
+        self.stream_hb_touch();
+        super::instrument::count_stream_op();
+        // SAFETY: single-writer ownership (see StateCell and above).
+        let st = unsafe { &mut *self.state.0.get() };
+        f(st)
     }
 
     pub fn is_active(&self) -> bool {
@@ -463,5 +622,41 @@ mod tests {
         let p = pool(2, VciPolicy::FirstComePool);
         p.release(FALLBACK_VCI);
         assert!(p.get(FALLBACK_VCI).is_active());
+    }
+
+    #[test]
+    fn stream_owner_lifecycle() {
+        let p = pool(2, VciPolicy::FirstComePool);
+        let v = p.get(1);
+        assert!(!v.is_stream_owned());
+        v.stream_set_owner(7);
+        assert!(v.is_stream_owned());
+        assert!(v.stream_owned_by(7) && !v.stream_owned_by(8));
+        assert_eq!(v.stream_owner(), 7);
+        v.stream_clear_owner();
+        assert!(!v.is_stream_owned());
+        assert_eq!(v.stream_owner(), STREAM_UNOWNED);
+    }
+
+    #[test]
+    #[should_panic(expected = "already stream-owned")]
+    fn double_stream_bind_is_erroneous() {
+        let p = pool(2, VciPolicy::FirstComePool);
+        let v = p.get(1);
+        v.stream_set_owner(7);
+        v.stream_set_owner(8);
+    }
+
+    #[test]
+    fn stream_fast_path_reaches_state_without_lock() {
+        let p = pool(2, VciPolicy::FirstComePool);
+        let v = p.get(1);
+        // Native backend, current thread as owner: the fast path must see
+        // the same state the locked path wrote.
+        v.stream_set_owner(crate::mpi::proc::thread_token());
+        v.with_state_stream(|st| st.req_cache.push(42));
+        let got = v.with_state_stream(|st| st.req_cache.pop());
+        assert_eq!(got, Some(42));
+        v.stream_clear_owner();
     }
 }

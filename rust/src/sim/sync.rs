@@ -204,9 +204,15 @@ impl<T: Send> Drop for SimMutexGuard<'_, T> {
 pub struct SimAtomicU64 {
     v: SimCell<u64>,
     owner: SimCell<Option<usize>>,
-    /// SimSan: RMWs and stores are modeled as full fences, loads as
-    /// acquires (a deliberate over-approximation — seq-cst hardware
-    /// atomics give at least this much).
+    /// SimSan per-op vector-clock tracking: loads are acquire edges, RMWs
+    /// are full fences (they read *and* publish), but plain stores are
+    /// **release-only**. A store used to be a full fence too, which let
+    /// an unrelated atomic launder app-level races: thread A's
+    /// store(flag) would *acquire* B's entire history through the shared
+    /// clock, manufacturing happens-before edges no real release store
+    /// provides. Message-passing (store-release → load-acquire → read
+    /// payload) still synchronizes; two racing store+read-plain-cell
+    /// threads no longer do — the checker now sees that race.
     clock: SyncClock,
 }
 
@@ -242,7 +248,9 @@ impl SimAtomicU64 {
     pub fn store(&self, v: u64) {
         yield_now();
         self.charge(true);
-        sanitizer::vc_fence(&self.clock);
+        // Release-only: the storer publishes its history but must NOT
+        // acquire prior touchers' histories (see the `clock` field doc).
+        sanitizer::vc_release(&self.clock);
         *self.v.get_raw() = v;
     }
 

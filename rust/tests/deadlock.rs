@@ -250,6 +250,73 @@ fn outstanding_iallreduces_on_distinct_comms_complete_under_striped_storm() {
     assert_eq!(r.outcome, SimOutcome::Completed);
 }
 
+#[test]
+fn streamed_comm_completes_under_striped_p2p_storm() {
+    // Serial-execution-stream deadlock case: thread 0 on every proc drives
+    // a `vcmpi_stream=local` comm (auto-bound to a dedicated single-writer
+    // lane on first use) through a ping-pong while the remaining threads
+    // hammer a striped+sharded hot comm over the same pool. The stream
+    // lane is pinned out of the striped sweep AND skipped by every other
+    // thread's global round (no foreign thread may enter a single-writer
+    // VCI), so the stream's completion depends entirely on its owner's
+    // lock-free polling — it must complete, never starve, and the storm's
+    // sweeps must never trip the cross-thread tripwire.
+    const ROUNDS: usize = 32;
+    let mut spec = ClusterSpec::new(fabric(Interconnect::Ib), MpiConfig::optimized(8), 3);
+    spec.time_limit = Some(1_000_000_000); // 1 virtual s: plenty for valid runs
+    spec.service_threads = false;
+    type CommPair = (vcmpi::mpi::Comm, vcmpi::mpi::Comm);
+    let comms: Arc<Mutex<std::collections::HashMap<usize, CommPair>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let setup: Arc<Vec<PBarrier>> =
+        Arc::new((0..2).map(|_| PBarrier::new(Backend::Sim, 3)).collect());
+    let c2 = comms.clone();
+    let r = run_cluster(spec, move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let streamed = proc.comm_dup_with_info(
+                &world,
+                &vcmpi::mpi::Info::new().with("vcmpi_stream", "local"),
+            );
+            let hot = proc.comm_dup_with_info(
+                &world,
+                &vcmpi::mpi::Info::new()
+                    .with("vcmpi_striping", "rr")
+                    .with("vcmpi_match_shards", "4")
+                    .with("vcmpi_rx_doorbell", "true"),
+            );
+            c2.lock().unwrap().insert(proc.rank(), (streamed, hot));
+        }
+        setup[proc.rank()].wait();
+        let (streamed, hot) = c2.lock().unwrap().get(&proc.rank()).unwrap().clone();
+        let peer = 1 - proc.rank();
+        if t == 0 {
+            for i in 0..ROUNDS {
+                let ball = vec![i as u8; 256];
+                if proc.rank() == 0 {
+                    proc.send(&streamed, peer, 7, &ball);
+                    assert_eq!(proc.recv(&streamed, Src::Rank(peer), Tag::Value(7)), ball);
+                } else {
+                    assert_eq!(proc.recv(&streamed, Src::Rank(peer), Tag::Value(7)), ball);
+                    proc.send(&streamed, peer, 7, &ball);
+                }
+            }
+            // Unbind (and return the lane to the stripe set) before
+            // finalize's no-stream-owned-lanes tripwire runs.
+            proc.comm_free(streamed);
+        } else {
+            // Striped p2p storm, tag-disjoint per thread.
+            let payload = vec![t as u8; 512];
+            for _ in 0..64 {
+                proc.send(&hot, peer, t as i32, &payload);
+                let rr = proc.irecv(&hot, Src::Rank(peer), Tag::Value(t as i32));
+                proc.wait(rr);
+            }
+        }
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed);
+}
+
 /// Fig. 9 (right), transcribed (software-RMA fabric, large Gets):
 /// Rank 0:              Get(win1); Get(win2); flush(win1); flush(win2);
 /// Rank 1 / Thread 0:   Get(win1); B; B; flush(win1);

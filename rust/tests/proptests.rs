@@ -419,6 +419,88 @@ fn prop_random_traffic_striped_eager_and_rendezvous() {
     }
 }
 
+/// Serial execution streams vs the ordered locked oracle: the same
+/// random p2p program (random sizes spanning immediate/eager/rendezvous,
+/// random send/recv interleave decided by a shared seed) runs once on a
+/// `vcmpi_stream=local` comm — whose owner-side ops take the lock-free
+/// single-writer fast path — and once on a plain ordered comm through the
+/// locked path. Payload contents must round-trip intact and the delivery
+/// order observed on the streamed comm must be exactly the locked comm's
+/// (both FIFO per stream: the lock elision must be observationally
+/// invisible).
+#[test]
+fn prop_streamed_vs_locked_comm() {
+    fn drive(proc: &std::sync::Arc<vcmpi::mpi::MpiProc>, comm: &vcmpi::mpi::Comm, seed: u64) -> Vec<u32> {
+        let me = proc.rank();
+        let peer = 1 - me;
+        // Same seed on both ranks and both comms: identical program shape.
+        let mut prng = SplitMix64::new(seed.wrapping_mul(0x6C07) ^ 0x57E4);
+        let nmsgs = 4 + prng.gen_usize(10);
+        let mut order = Vec::new();
+        let mut received = 0usize;
+        let recv_one = |proc: &vcmpi::mpi::MpiProc| {
+            let got = proc.recv(comm, Src::Rank(peer), Tag::Value(5));
+            let k = u32::from_le_bytes(got[0..4].try_into().unwrap());
+            assert!(
+                got[4..].iter().all(|&b| b == k as u8),
+                "seed {seed}: payload {k} corrupted on comm {}",
+                comm.id
+            );
+            k
+        };
+        let mut sreqs = Vec::new();
+        for k in 0..nmsgs as u32 {
+            // Sizes span immediate, eager, and rendezvous.
+            let size = 4 + prng.gen_usize(40_000);
+            let mut data = vec![k as u8; size];
+            data[0..4].copy_from_slice(&k.to_le_bytes());
+            sreqs.push(proc.isend(comm, peer, 5, &data));
+            if prng.gen_bool(0.5) && received < nmsgs {
+                order.push(recv_one(proc));
+                received += 1;
+            }
+        }
+        while received < nmsgs {
+            order.push(recv_one(proc));
+            received += 1;
+        }
+        proc.waitall(sreqs);
+        order
+    }
+    for seed in 0..cases(6) {
+        let spec = ClusterSpec::new(
+            FabricConfig {
+                interconnect: Interconnect::Ib,
+                nodes: 2,
+                procs_per_node: 1,
+                max_contexts_per_node: 64,
+            },
+            MpiConfig::optimized(6),
+            1,
+        );
+        let r = run_cluster(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let streamed =
+                proc.comm_dup_with_info(&world, &Info::new().with("vcmpi_stream", "local"));
+            let locked = proc.comm_dup(&world);
+            let via_stream = drive(proc, &streamed, seed);
+            let via_lock = drive(proc, &locked, seed);
+            assert_eq!(
+                via_stream, via_lock,
+                "seed {seed}: streamed delivery order diverged from the locked oracle"
+            );
+            let fifo: Vec<u32> = (0..via_lock.len() as u32).collect();
+            assert_eq!(via_lock, fifo, "seed {seed}: locked oracle itself must be FIFO");
+            // Owner-side teardown: unbind + drain before finalize's
+            // no-stream-owned-lanes / no-parked-freelist tripwires.
+            proc.comm_free(streamed);
+            proc.comm_free(locked);
+            proc.barrier(&world);
+        });
+        assert_eq!(r.outcome, SimOutcome::Completed, "seed {seed}");
+    }
+}
+
 // ---------------------------------------------------------------------
 // Collectives: the segmented/pipelined engine vs a host-computed
 // reduction oracle, across every `vcmpi_collectives` policy (rides the

@@ -7,16 +7,22 @@
 //! it; release benches run `--no-default-features`).
 #![cfg(feature = "simsan")]
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use vcmpi::fabric::{FabricConfig, Interconnect};
 use vcmpi::mpi::instrument::{HostMutex, LockClass};
+use vcmpi::mpi::{run_cluster, ClusterSpec, Comm, Info, MpiConfig};
 use vcmpi::platform::{Backend, PMutex};
-use vcmpi::sim::{self, CostModel, Sim, SimCell, SimMutex, SimOutcome};
+use vcmpi::sim::{self, CostModel, Sim, SimAtomicU64, SimCell, SimMutex, SimOutcome};
 
 fn expect_simsan(r: vcmpi::sim::SimReport, needle: &str) {
-    match r.outcome {
-        SimOutcome::Panicked(ref m) if m.contains("SimSan") && m.contains(needle) => {}
-        ref other => panic!("expected a SimSan report containing {needle:?}, got {other:?}"),
+    expect_simsan_outcome(&r.outcome, needle);
+}
+
+fn expect_simsan_outcome(outcome: &SimOutcome, needle: &str) {
+    match outcome {
+        SimOutcome::Panicked(m) if m.contains("SimSan") && m.contains(needle) => {}
+        other => panic!("expected a SimSan report containing {needle:?}, got {other:?}"),
     }
 }
 
@@ -131,4 +137,145 @@ fn shard_ordinal_sweeps_check_direction() {
         s.run()
     };
     expect_simsan(descending, "lock-order violation");
+}
+
+/// Seeded violation (d): a second thread touches a stream-owned VCI. The
+/// owner binds a `vcmpi_stream=local` communicator's lane into
+/// single-writer mode and publishes the lane index; the intruder then
+/// drives progress on that lane — a locked `with_state` entry from a
+/// foreign thread — and the ownership tripwire must fire before any state
+/// is read (ISSUE 8's deterministic cross-thread detection).
+#[test]
+fn seeded_cross_thread_stream_touch_is_detected() {
+    let fabric =
+        FabricConfig { interconnect: Interconnect::Ib, nodes: 1, procs_per_node: 1, max_contexts_per_node: 16 };
+    let mut spec = ClusterSpec::new(fabric, MpiConfig::optimized(4), 2);
+    spec.time_limit = Some(10_000_000);
+    spec.service_threads = false;
+    let lane_plus_one = Arc::new(SimAtomicU64::new(0));
+    let flag = lane_plus_one.clone();
+    let r = run_cluster(spec, move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let streamed =
+                proc.comm_dup_with_info(&world, &Info::new().with("vcmpi_stream", "local"));
+            let lane = proc.stream_bind(&streamed);
+            flag.store(lane as u64 + 1); // release: publish the bound lane
+            // Keep the stream bound; the intruder panics before we get here
+            // in any run that reaches the barrier.
+            sim::advance(1_000);
+        } else {
+            let mut lane;
+            loop {
+                lane = lane_plus_one.load(); // acquire: join the owner's bind
+                if lane != 0 {
+                    break;
+                }
+                sim::advance(50);
+                sim::yield_now();
+            }
+            proc.progress_vci(lane as usize - 1); // foreign with_state entry
+            unreachable!("SimSan must reject the cross-thread stream touch");
+        }
+    });
+    expect_simsan_outcome(&r.outcome, "stream-owned VCI");
+}
+
+/// Positive control for the stream layer: bind → unbind → rebind by a
+/// *different* thread is the sanctioned handoff. The unbind/bind
+/// transitions run under the VCI lock, whose release→acquire edge carries
+/// the first owner's plain-cell history (freelist, witness cell) into the
+/// second owner's clock — so the second owner's lock-free entries carry
+/// real happens-before edges and run silent.
+#[test]
+fn stream_handoff_between_threads_is_clean() {
+    let fabric =
+        FabricConfig { interconnect: Interconnect::Ib, nodes: 1, procs_per_node: 1, max_contexts_per_node: 16 };
+    let mut spec = ClusterSpec::new(fabric, MpiConfig::optimized(4), 2);
+    spec.time_limit = Some(10_000_000);
+    spec.service_threads = false;
+    let stash: Arc<Mutex<Option<Comm>>> = Arc::new(Mutex::new(None));
+    let handoff = Arc::new(SimAtomicU64::new(0));
+    let (stash2, handoff2) = (stash.clone(), handoff.clone());
+    let r = run_cluster(spec, move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let streamed =
+                proc.comm_dup_with_info(&world, &Info::new().with("vcmpi_stream", "local"));
+            let lane = proc.stream_bind(&streamed); // prefill: plain-cell writes
+            assert!(proc.stream_lane_owned(lane));
+            proc.stream_unbind(&streamed); // drain + locked transition (release)
+            *stash2.lock().unwrap() = Some(streamed);
+            handoff2.store(1);
+            sim::advance(1_000);
+        } else {
+            loop {
+                if handoff.load() != 0 {
+                    break;
+                }
+                sim::advance(50);
+                sim::yield_now();
+            }
+            let streamed = stash.lock().unwrap().clone().unwrap();
+            let lane = proc.stream_bind(&streamed); // locked transition (acquire)
+            assert!(proc.stream_lane_owned(lane));
+            proc.comm_free(streamed); // teardown unbinds for us
+            assert!(!proc.stream_lane_owned(lane));
+        }
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed, "sanctioned stream handoff must run silent");
+}
+
+/// Seeded violation (e), the satellite-1 fix: `SimAtomicU64::store` is a
+/// *release*, not a fence. A racing thread that merely stores to the same
+/// atomic must NOT inherit the first thread's plain-write history (the old
+/// fence semantics laundered exactly this app-level race), so its
+/// subsequent plain read of the cell is a data race and must be reported.
+#[test]
+fn seeded_atomic_store_store_does_not_launder_a_race() {
+    let cell = Arc::new(SimCell::new(0u64));
+    let flag = Arc::new(SimAtomicU64::new(0));
+    let mut s = Sim::new(CostModel::default());
+    let (wc, wf) = (cell.clone(), flag.clone());
+    s.spawn_setup("publisher", move || {
+        *wc.get() = 1;
+        wf.store(1); // release: joins the flag's clock, acquires nothing back
+        sim::advance(10);
+        sim::yield_now();
+    });
+    s.spawn_setup("store-racer", move || {
+        sim::advance(500); // stay strictly behind the publisher
+        flag.store(2); // store-store: no acquire edge from the publisher
+        let _ = *cell.get(); // publisher's plain write is NOT in our clock
+    });
+    expect_simsan(s.run(), "data race");
+}
+
+/// Positive control for satellite 1: the sanctioned message-passing shape
+/// — plain write, `store` (release), spin `load` (acquire), plain read —
+/// carries the write's epoch through the atomic and runs silent.
+#[test]
+fn atomic_release_acquire_publication_is_clean() {
+    let cell = Arc::new(SimCell::new(0u64));
+    let flag = Arc::new(SimAtomicU64::new(0));
+    let mut s = Sim::new(CostModel::default());
+    let (wc, wf) = (cell.clone(), flag.clone());
+    s.spawn_setup("publisher", move || {
+        *wc.get() = 7;
+        wf.store(1); // release carries the write epoch
+        sim::advance(10);
+        sim::yield_now();
+    });
+    s.spawn_setup("consumer", move || {
+        loop {
+            if flag.load() != 0 {
+                break; // acquire joined the publisher's clock
+            }
+            sim::advance(25);
+            sim::yield_now();
+        }
+        assert_eq!(*cell.get(), 7);
+    });
+    let r = s.run();
+    assert_eq!(r.outcome, SimOutcome::Completed, "release/acquire publication must run silent");
 }

@@ -13,10 +13,19 @@ statically by rejecting, in every .rs file under rust/src/mpi/:
      which SimSan would track only under the anonymous (unordered) tag.
      Sanctioned spellings: `.lock_class(..)`, `.lock_ordinal(..)`,
      `.lock_uncounted(..)`, `.try_lock_class(..)`, and
-     `HostMutex::lock(LockClass::..)`.
+     `HostMutex::lock(LockClass::..)`;
+  3. raw VCI state-cell dereferences (`...0.get()` on the UnsafeCell) —
+     the lock-free stream fast path is a *sanctioned hole* in rules 1-2,
+     so every raw access must sit either in one of the locked entry
+     points (`with_state` / `try_with_state`, serialized by the Guard
+     contract) or in a function explicitly audited with a
+     `lint:allow-stream-cell` marker comment directly above its `fn`
+     (today: `Vci::with_state_stream`, the single-writer entry whose
+     safety rests on stream ownership + the SimSan tripwire). A raw
+     access anywhere else is exactly a stream path dodging the lint.
 
-A line ending in a `lint:allow-host-mutex` comment is exempt from both
-rules — used exactly once, inside `instrument::HostMutex` itself (the
+A line ending in a `lint:allow-host-mutex` comment is exempt from rules
+1-2 — used exactly once, inside `instrument::HostMutex` itself (the
 sanctioned wrapper has to contain the raw mutex it wraps).
 
 Exit status: 0 clean, 1 violations (printed as file:line: message).
@@ -27,6 +36,11 @@ import sys
 from pathlib import Path
 
 ALLOW_MARKER = "lint:allow-host-mutex"
+ALLOW_STREAM_MARKER = "lint:allow-stream-cell"
+
+# Rule 3: locked state entries whose serialization comes from the Guard
+# contract rather than an audit marker.
+LOCKED_STATE_FNS = {"with_state", "try_with_state"}
 
 # Rule 1: raw host lock types. \b keeps std::sync::MutexGuard (in type
 # positions of the sanctioned wrapper) from matching.
@@ -38,6 +52,14 @@ RAW_HOST_LOCK = re.compile(r"\bstd::sync::(Mutex|RwLock)\b|\buse\s+std::sync::.*
 # `.try_lock_class(` do not match because of the word boundary after "lock".
 BARE_ACQUIRE = re.compile(r"\.(lock|try_lock)\(\s*\)")
 
+# Rule 3: a raw dereference of the newtyped UnsafeCell holding VCI state
+# (`self.state.0.get()` and any alias thereof).
+RAW_STATE_CELL = re.compile(r"\.0\s*\.\s*get\(\s*\)")
+
+# A `fn` item declaration (case-sensitive, so `FnOnce(..)` in closure
+# bounds never matches).
+FN_DECL = re.compile(r"\bfn\s+(\w+)")
+
 
 def strip_strings(line: str) -> str:
     """Blank out string literals so quoted examples never trip the rules."""
@@ -46,12 +68,31 @@ def strip_strings(line: str) -> str:
 
 def lint_file(path: Path) -> list[str]:
     errors = []
+    # Rule-3 state: a `lint:allow-stream-cell` marker audits the NEXT `fn`
+    # item; the exemption covers that function's body (until the next fn).
+    pending_stream_marker = False
+    fn_stream_exempt = False
     for lineno, raw in enumerate(path.read_text().splitlines(), start=1):
+        if ALLOW_STREAM_MARKER in raw:
+            pending_stream_marker = True
+            continue
         if ALLOW_MARKER in raw:
             continue
         # Drop line comments (incl. doc comments) before matching: prose is
         # allowed to *name* std::sync::Mutex.
         code = strip_strings(raw).split("//", 1)[0]
+        decl = FN_DECL.search(code)
+        if decl:
+            fn_stream_exempt = pending_stream_marker or decl.group(1) in LOCKED_STATE_FNS
+            pending_stream_marker = False
+        if RAW_STATE_CELL.search(code) and not fn_stream_exempt:
+            errors.append(
+                f"{path}:{lineno}: raw VCI state-cell access outside the "
+                f"locked entries — route through with_state()/"
+                f"try_with_state()/with_state_stream(), or audit the "
+                f"enclosing fn with a `// {ALLOW_STREAM_MARKER}` marker "
+                f"directly above it"
+            )
         if RAW_HOST_LOCK.search(code):
             errors.append(
                 f"{path}:{lineno}: raw std::sync lock in mpi/ — use "
