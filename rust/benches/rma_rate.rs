@@ -1,14 +1,16 @@
 //! Bench: the §7 one-sided rate lane — one origin thread's accumulate
-//! rate on a striped window vs the ordered-window baseline, plus the
-//! program-order correctness probe. Deterministic DES runs; values are
-//! exact per configuration.
+//! rate on a striped window vs the ordered-window baseline, the
+//! program-order correctness probe, and the passive-target lock-epoch
+//! arms (shared-striped vs exclusive-ordered vs `mpi_assert_no_locks`
+//! elision). Deterministic DES runs; values are exact per configuration.
 //!
 //! Environment (mirrors the message_rate bench):
 //!  * `BENCH_MSGS`   — accumulates issued by the origin thread (default 256).
 //!  * `BENCH_JSON`   — write a machine-readable report (rates + counters +
 //!    gate ratios) to this path.
 //!  * `BENCH_GATE=1` — exit nonzero if a gate fails (striped <= ordered,
-//!    or the ordered window reordered same-location accumulates).
+//!    the ordered window reordered same-location accumulates, the
+//!    no_locks elision failed to pay, or epochs erased the striping win).
 
 use vcmpi::bench::{
     ordered_window_program_order_preserved, rma_rate_run, RateReport, RmaRateParams, WinMode,
@@ -20,8 +22,14 @@ struct Scenario {
     report: RateReport,
 }
 
-const COUNTER_KEYS: [&str; 4] =
-    ["stale_ctrl_drops", "empty_polls", "doorbell_skips", "win_lane_pinned"];
+const COUNTER_KEYS: [&str; 6] = [
+    "stale_ctrl_drops",
+    "empty_polls",
+    "doorbell_skips",
+    "win_lane_pinned",
+    "lock_elisions",
+    "lock_wire_reqs",
+];
 
 fn scenario_json(s: &Scenario) -> String {
     let counters: Vec<String> = COUNTER_KEYS
@@ -53,27 +61,40 @@ fn main() {
 
     println!("== rma_rate: 4 KiB SumU64 accumulates, 1 origin thread, {msgs} ops ==");
     println!("{:<16} {:>14}", "scenario", "Mmsg/s");
-    let ordered = Scenario {
-        name: "win_ordered",
+    let run = |mode: WinMode| Scenario {
+        name: mode.label(),
         threads,
-        report: rma_rate_run(RmaRateParams { mode: WinMode::WinOrdered, ..base.clone() }),
+        report: rma_rate_run(RmaRateParams { mode, ..base.clone() }),
     };
-    let striped = Scenario {
-        name: "win_striped",
-        threads,
-        report: rma_rate_run(RmaRateParams { mode: WinMode::WinStriped, ..base }),
-    };
-    let scenarios = [&ordered, &striped];
+    let ordered = run(WinMode::WinOrdered);
+    let striped = run(WinMode::WinStriped);
+    let passive_shared = run(WinMode::PassiveShared);
+    let passive_excl = run(WinMode::PassiveExclusive);
+    let passive_no_locks = run(WinMode::PassiveNoLocks);
+    let scenarios = [&ordered, &striped, &passive_shared, &passive_excl, &passive_no_locks];
     for s in scenarios {
         println!("{:<16} {:>14.3}", s.name, s.report.rate / 1e6);
     }
 
-    // ---- regression gate ----
+    // ---- regression gates ----
     let win_striped_over_ordered = striped.report.rate / ordered.report.rate;
     let program_order = ordered_window_program_order_preserved();
-    let pass = win_striped_over_ordered > 1.0 && program_order;
+    // The mpi_assert_no_locks elision must pay: the same epoch-based
+    // program text on the same striped window, minus the lock protocol.
+    let no_locks_over_locked = passive_no_locks.report.rate / passive_shared.report.rate;
+    // Striping must survive lock epochs: shared epochs on the striped
+    // window beat exclusive epochs on the ordered window.
+    let passive_striped_over_exclusive = passive_shared.report.rate / passive_excl.report.rate;
+    let pass = win_striped_over_ordered > 1.0
+        && program_order
+        && no_locks_over_locked >= 1.0
+        && passive_striped_over_exclusive > 1.0;
     println!("\ngate: win_striped/win_ordered = {win_striped_over_ordered:.3} (> 1.0 required)");
     println!("gate: ordered window program order preserved = {program_order}");
+    println!("gate: passive_no_locks/passive_shared = {no_locks_over_locked:.3} (>= 1.0 required)");
+    println!(
+        "gate: passive_shared/passive_excl = {passive_striped_over_exclusive:.3} (> 1.0 required)"
+    );
     println!("gate: {}", if pass { "PASS" } else { "FAIL" });
 
     if let Ok(path) = std::env::var("BENCH_JSON") {
@@ -82,6 +103,8 @@ fn main() {
              \"scenarios\": [\n{}\n  ],\n  \"gate\": {{\n    \
              \"win_striped_over_ordered\": {win_striped_over_ordered:.4},\n    \
              \"ordered_window_program_order_preserved\": {program_order},\n    \
+             \"no_locks_over_locked\": {no_locks_over_locked:.4},\n    \
+             \"passive_striped_over_exclusive\": {passive_striped_over_exclusive:.4},\n    \
              \"pass\": {pass}\n  }}\n}}\n",
             scenarios.into_iter().map(scenario_json).collect::<Vec<_>>().join(",\n"),
         );

@@ -33,6 +33,14 @@ pub struct BspmmParams {
     pub units_per_worker: usize,
     /// Use the accumulate_ordering=none hint (multi-VCI accumulates).
     pub relaxed_acc: bool,
+    /// True passive-target mode (the hypre/NWChem idiom): thread 0 holds
+    /// `win_lock_all` on the C window for the whole phase (ops still
+    /// complete per-op via flush — MPI allows at most one lock epoch per
+    /// (window, target) per process, so per-thread locks on the shared C
+    /// window would be erroneous), and every get rides a per-access
+    /// shared `win_lock`/`win_unlock` pair on the thread's get window —
+    /// the unlock completes the gets, replacing the explicit flush.
+    pub passive: bool,
 }
 
 impl Default for BspmmParams {
@@ -45,6 +53,7 @@ impl Default for BspmmParams {
             tile_dim: 256,
             units_per_worker: 3,
             relaxed_acc: false,
+            passive: false,
         }
     }
 }
@@ -55,6 +64,11 @@ pub struct BspmmTimes {
     pub get_flush: f64,
     pub acc_init: f64,
     pub acc_flush: f64,
+    /// FNV-1a hash of each rank's local C-window bytes at the end of the
+    /// run, indexed by rank. The C update is a commutative SumU64 keyed by
+    /// the work-unit id, so the flush and passive arms must agree
+    /// byte-for-byte regardless of which worker claimed which unit.
+    pub c_hashes: Vec<u32>,
 }
 
 pub fn run_bspmm(p: BspmmParams) -> BspmmTimes {
@@ -127,6 +141,12 @@ pub fn run_bspmm(p: BspmmParams) -> BspmmTimes {
             AppMode::Endpoints => Some(1 + t),
             _ => None,
         };
+        if p.passive && t == 0 {
+            // One process-wide shared epoch to every rank for the whole
+            // accumulate phase (thread 0 drives it; ops complete per-op
+            // via flush inside the epoch).
+            proc.win_lock_all(&c_win);
+        }
 
         let total_units = workers * p.units_per_worker;
         let mut get_init = 0u64;
@@ -149,18 +169,40 @@ pub fn run_bspmm(p: BspmmParams) -> BspmmTimes {
             let tc = (unit as usize + 2) % nprocs;
 
             let t0 = pnow(proc.backend);
+            if p.passive {
+                // Per-access shared epochs on the (per-thread) get window.
+                proc.win_lock(&get_win, crate::mpi::LockKind::Shared, ta);
+                if tb != ta {
+                    proc.win_lock(&get_win, crate::mpi::LockKind::Shared, tb);
+                }
+            }
             let ha = proc.get_via(&get_win, ep_vci, ta, 0, tile_bytes);
             let hb = proc.get_via(&get_win, ep_vci, tb, tile_bytes, tile_bytes);
             let t1 = pnow(proc.backend);
-            proc.win_flush(&get_win);
+            if p.passive {
+                // The unlocks complete the gets (per-target flush waits).
+                proc.win_unlock(&get_win, ta);
+                if tb != ta {
+                    proc.win_unlock(&get_win, tb);
+                }
+            } else {
+                proc.win_flush(&get_win);
+            }
             let t2 = pnow(proc.backend);
             let _a = proc.get_data(&get_win, ha);
             let _b = proc.get_data(&get_win, hb);
             // Tile multiply: ~2*dim^3 flops at ~16 flops/ns.
             pcompute(proc.backend, (2 * p.tile_dim.pow(3) / 16) as u64);
             let t3 = pnow(proc.backend);
-            let contrib = vec![1u8; tile_bytes.min(8 * 1024)]; // C update payload
-            proc.accumulate_via(&c_win, ep_vci, tc, 0, &contrib, AccOp::Replace);
+            // C update payload: commutative SumU64 lanes keyed by the unit
+            // id, so the final C bytes are order-independent — the basis
+            // of the flush-vs-passive byte-identity check.
+            let contrib_len = tile_bytes.min(8 * 1024) & !7;
+            let mut contrib = vec![0u8; contrib_len];
+            for lane in contrib.chunks_exact_mut(8) {
+                lane.copy_from_slice(&(unit + 1).to_le_bytes());
+            }
+            proc.accumulate_via(&c_win, ep_vci, tc, 0, &contrib, AccOp::SumU64);
             let t4 = pnow(proc.backend);
             proc.win_flush(&c_win);
             let t5 = pnow(proc.backend);
@@ -171,6 +213,11 @@ pub fn run_bspmm(p: BspmmParams) -> BspmmTimes {
         }
         bar.wait();
         if t == 0 {
+            if p.passive {
+                // Close the phase-long epoch before the fence; win_free
+                // would trip its open-epoch assert otherwise.
+                proc.win_unlock_all(&c_win);
+            }
             proc.barrier(&world);
         }
         bar.wait();
@@ -180,6 +227,17 @@ pub fn run_bspmm(p: BspmmParams) -> BspmmTimes {
             crate::mpi::world::record("get_flush", get_flush as f64 / n);
             crate::mpi::world::record("acc_init", acc_init as f64 / n);
             crate::mpi::world::record("acc_flush", acc_flush as f64 / n);
+        }
+        if t == 0 {
+            // Post-fence, every origin's accumulates to this rank are
+            // complete: hash the local C bytes for the arms' byte-identity
+            // check (FNV-1a 32, exact in an f64 measurement).
+            let mut h: u32 = 0x811c_9dc5;
+            for b in c_win.read_local(0, tile_bytes * 2) {
+                h ^= u32::from(b);
+                h = h.wrapping_mul(0x0100_0193);
+            }
+            crate::mpi::world::record(format!("c_hash_p{me}"), f64::from(h));
         }
         bar.wait();
         if t == 0 {
@@ -192,11 +250,15 @@ pub fn run_bspmm(p: BspmmParams) -> BspmmTimes {
         }
     });
     assert_eq!(r.outcome, SimOutcome::Completed, "bspmm run: {:?}", r.outcome);
+    let c_hashes = (0..p.nodes * ppn)
+        .map(|i| r.measurements[&format!("c_hash_p{i}")] as u32)
+        .collect();
     BspmmTimes {
         get_init: r.measurements["get_init"],
         get_flush: r.measurements["get_flush"],
         acc_init: r.measurements["acc_init"],
         acc_flush: r.measurements["acc_flush"],
+        c_hashes,
     }
 }
 
@@ -263,6 +325,30 @@ mod tests {
                 ..Default::default()
             });
             assert!(t.get_init > 0.0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn passive_arm_matches_flush_arm_bytes() {
+        // The C update is a commutative SumU64 keyed by unit id, so the
+        // flush-sync arm and the passive-target lock-epoch arm must leave
+        // byte-identical C windows on every rank, on both interconnects.
+        for interconnect in [Interconnect::Opa, Interconnect::Ib] {
+            let base = BspmmParams {
+                interconnect,
+                nodes: 2,
+                threads: 2,
+                tile_dim: 64,
+                units_per_worker: 2,
+                ..Default::default()
+            };
+            let flush = run_bspmm(base.clone());
+            let passive = run_bspmm(BspmmParams { passive: true, ..base });
+            assert!(!flush.c_hashes.is_empty());
+            assert_eq!(
+                flush.c_hashes, passive.c_hashes,
+                "{interconnect:?}: passive-target arm diverged from flush arm"
+            );
         }
     }
 

@@ -20,13 +20,28 @@
 //! The CI gate requires `win_striped_over_ordered > 1.0` plus the
 //! [`ordered_window_program_order_preserved`] probe (striping must never
 //! leak reordering into the default accumulate path).
+//!
+//! Three passive-target arms ride the same topology, replacing the
+//! explicit flush with a lock epoch per batch (`win_lock` … ops …
+//! `win_unlock`; the unlock completes the batch):
+//!
+//!  * [`WinMode::PassiveShared`]: shared locks on the striped window — the
+//!    lock protocol pays its wire round trips but the ops still stripe.
+//!  * [`WinMode::PassiveExclusive`]: exclusive locks on the ordered
+//!    window — serialized handling *and* the full protocol.
+//!  * [`WinMode::PassiveNoLocks`]: shared locks on the striped window
+//!    with `mpi_assert_no_locks` — identical program text, but the lock
+//!    protocol is elided to a local no-op grant.
+//!
+//! The CI gates: `no_locks_over_locked >= 1.0` (the elision must pay) and
+//! `passive_striped_over_exclusive > 1.0` (striping must survive epochs).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::fabric::{AccOp, FabricConfig, Interconnect};
-use crate::mpi::{run_cluster, ClusterSpec, Info, MpiConfig, Src, Tag};
+use crate::mpi::{run_cluster, ClusterSpec, Info, LockKind, MpiConfig, Src, Tag};
 use crate::platform::{Backend, PBarrier};
 use crate::sim::SimOutcome;
 
@@ -43,6 +58,15 @@ pub enum WinMode {
     /// Info-keyed striped window: `accumulate_ordering=none`,
     /// `vcmpi_striping=rr`, `vcmpi_rx_doorbell=true`.
     WinStriped,
+    /// Striped window WITHOUT `mpi_assert_no_locks`; each batch runs in a
+    /// shared lock epoch (the lock protocol pays real round trips).
+    PassiveShared,
+    /// Ordered (default-policy) window; each batch runs in an exclusive
+    /// lock epoch.
+    PassiveExclusive,
+    /// Striped window WITH `mpi_assert_no_locks`; the same epoch-based
+    /// program text as [`WinMode::PassiveShared`], lock protocol elided.
+    PassiveNoLocks,
 }
 
 impl WinMode {
@@ -50,6 +74,18 @@ impl WinMode {
         match self {
             WinMode::WinOrdered => "win_ordered",
             WinMode::WinStriped => "win_striped",
+            WinMode::PassiveShared => "passive_shared",
+            WinMode::PassiveExclusive => "passive_excl",
+            WinMode::PassiveNoLocks => "passive_no_locks",
+        }
+    }
+
+    /// The lock kind a passive arm's batches run under (`None`: flush arm).
+    fn lock_kind(&self) -> Option<LockKind> {
+        match self {
+            WinMode::WinOrdered | WinMode::WinStriped => None,
+            WinMode::PassiveShared | WinMode::PassiveNoLocks => Some(LockKind::Shared),
+            WinMode::PassiveExclusive => Some(LockKind::Exclusive),
         }
     }
 }
@@ -86,13 +122,16 @@ impl Default for RmaRateParams {
 
 /// Info keys for the arm under test (empty = the default window policy).
 fn win_info(mode: WinMode) -> Info {
+    let striped = Info::new()
+        .with("accumulate_ordering", "none")
+        .with("vcmpi_striping", "rr")
+        .with("vcmpi_rx_doorbell", "true");
     match mode {
-        WinMode::WinOrdered => Info::new(),
-        WinMode::WinStriped => Info::new()
-            .with("accumulate_ordering", "none")
-            .with("vcmpi_striping", "rr")
-            .with("vcmpi_rx_doorbell", "true")
-            .with("mpi_assert_no_locks", "true"),
+        WinMode::WinOrdered | WinMode::PassiveExclusive => Info::new(),
+        WinMode::WinStriped | WinMode::PassiveNoLocks => {
+            striped.with("mpi_assert_no_locks", "true")
+        }
+        WinMode::PassiveShared => striped,
     }
 }
 
@@ -153,12 +192,22 @@ pub fn rma_rate_run(p: RmaRateParams) -> RateReport {
                 let t0 = crate::platform::pnow(proc.backend);
                 let payload = vec![1u8; p.msg_size.max(8)];
                 let batches = p.msgs_per_core / p.window;
+                let kind = p.mode.lock_kind();
                 for _ in 0..batches {
+                    if let Some(k) = kind {
+                        proc.win_lock(&win, k, 1);
+                    }
                     for k in 0..p.window {
                         let offset = (k * p.msg_size.max(8)) % win_size;
                         proc.accumulate(&win, 1, offset, &payload, AccOp::SumU64);
                     }
-                    proc.win_flush(&win);
+                    if kind.is_some() {
+                        // The unlock completes the batch (per-target flush
+                        // waits) and releases the target-side lock.
+                        proc.win_unlock(&win, 1);
+                    } else {
+                        proc.win_flush(&win);
+                    }
                 }
                 let t1 = crate::platform::pnow(proc.backend);
                 let msgs = p.msgs_per_core as f64;
@@ -203,6 +252,14 @@ pub fn rma_rate_run(p: RmaRateParams) -> RateReport {
             crate::mpi::world::record(
                 format!("win_lane_pinned_p{me}"),
                 if proc.stripe_lane_pinned(win.vci) { 1.0 } else { 0.0 },
+            );
+            crate::mpi::world::record(
+                format!("lock_elisions_p{me}"),
+                proc.lock_elision_count() as f64,
+            );
+            crate::mpi::world::record(
+                format!("lock_wire_reqs_p{me}"),
+                proc.lock_wire_req_count() as f64,
             );
         }
 
@@ -287,5 +344,28 @@ mod tests {
     #[test]
     fn ordered_program_order_probe_holds() {
         assert!(ordered_window_program_order_preserved());
+    }
+
+    #[test]
+    fn passive_arms_complete_and_no_locks_elides() {
+        // Small sizes: the point here is completion + counter proof, not
+        // the rate ratios (the CI bench gates check those at full size).
+        let base = RmaRateParams { threads: 4, msgs_per_core: 64, window: 16, ..Default::default() };
+        let shared =
+            rma_rate_run(RmaRateParams { mode: WinMode::PassiveShared, ..base.clone() });
+        let excl =
+            rma_rate_run(RmaRateParams { mode: WinMode::PassiveExclusive, ..base.clone() });
+        let elided = rma_rate_run(RmaRateParams { mode: WinMode::PassiveNoLocks, ..base });
+        for r in [&shared, &excl, &elided] {
+            assert!(r.rate > 0.0);
+            assert_eq!(r.sum_stat("stale_ctrl_drops"), 0.0);
+        }
+        // The locked arms pay wire acquisitions and elide nothing; the
+        // no_locks arm is the exact mirror.
+        assert!(shared.sum_stat("lock_wire_reqs") > 0.0);
+        assert_eq!(shared.sum_stat("lock_elisions"), 0.0);
+        assert!(excl.sum_stat("lock_wire_reqs") > 0.0);
+        assert!(elided.sum_stat("lock_elisions") > 0.0);
+        assert_eq!(elided.sum_stat("lock_wire_reqs"), 0.0);
     }
 }

@@ -23,8 +23,8 @@ mod registry;
 mod wire;
 
 pub use context::{HwContext, Injector, RxDoorbell};
-pub use registry::{FabricConfig, Network, ProcFabric, WindowMem};
-pub use wire::{AccOp, P2pProtocol, Payload, ProcId, RmaCompletion, WireMsg, WinId};
+pub use registry::{FabricConfig, Network, ProcFabric, WindowMem, WinLockWord};
+pub use wire::{AccOp, LockKind, P2pProtocol, Payload, ProcId, RmaCompletion, WireMsg, WinId};
 
 /// Interconnect personality (paper §3: the two testbed families).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -86,13 +86,73 @@ impl WindowMem {
     }
 }
 
+/// The passive-target lock word registered alongside a window's memory:
+/// a reader/writer count the IB personality's origins manipulate
+/// *directly* with NIC atomics (compare-and-swap on target memory — no
+/// target CPU involvement, like hardware Put/Get). There is deliberately
+/// no queue here: hardware CAS has no fairness, so IB exclusive
+/// contenders retry (each retry costing an atomic round trip), while the
+/// OPA personality ignores this word entirely and runs the software
+/// FIFO lock-queue protocol in the target's active-message handlers
+/// (`mpi::rma::WinLockTable`).
+///
+/// Like [`WindowMem`], the host mutex models the NIC's coherent access
+/// and is free in virtual time; the atomic's latency is charged by the
+/// caller per attempt.
+pub struct WinLockWord {
+    state: Mutex<(usize, bool)>, // (shared holders, exclusive held)
+}
+
+impl WinLockWord {
+    pub fn new() -> Arc<Self> {
+        Arc::new(WinLockWord { state: Mutex::new((0, false)) })
+    }
+
+    /// One NIC-atomic acquisition attempt. Shared succeeds unless an
+    /// exclusive holder is present (the IB shared fast path: typically
+    /// one round trip, no target CPU); exclusive additionally requires
+    /// zero shared holders.
+    pub fn try_acquire(&self, exclusive: bool) -> bool {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        match (exclusive, &mut *s) {
+            (false, (readers, false)) => {
+                *readers += 1;
+                true
+            }
+            (true, (0, held @ false)) => {
+                *held = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Release a held lock (one NIC atomic).
+    pub fn release(&self, exclusive: bool) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if exclusive {
+            debug_assert!(s.1, "exclusive release without a holder");
+            s.1 = false;
+        } else {
+            debug_assert!(s.0 > 0, "shared release without a holder");
+            s.0 = s.0.saturating_sub(1);
+        }
+    }
+
+    /// No holder of either flavor (win_free tripwire).
+    pub fn is_idle(&self) -> bool {
+        let s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.0 == 0 && !s.1
+    }
+}
+
 const MAX_CTXS: usize = 1024;
 
 struct ProcEntry {
     /// Fixed-capacity context table (hardware context slots).
     ctxs: Vec<OnceLock<Arc<HwContext>>>,
     n_open: AtomicUsize,
-    windows: Mutex<Vec<(WinId, Arc<WindowMem>)>>,
+    windows: Mutex<Vec<(WinId, Arc<WindowMem>, Arc<WinLockWord>)>>,
 }
 
 /// The whole simulated network.
@@ -272,18 +332,19 @@ impl ProcFabric {
         }
     }
 
-    /// Expose window memory for remote access.
+    /// Expose window memory for remote access (a passive-target
+    /// [`WinLockWord`] is registered alongside it).
     pub fn register_window(&self, win: WinId, mem: Arc<WindowMem>) {
         self.net.procs[self.proc]
             .windows
             .lock()
             .unwrap_or_else(|e| e.into_inner())
-            .push((win, mem));
+            .push((win, mem, WinLockWord::new()));
     }
 
     pub fn deregister_window(&self, win: WinId) {
         let mut w = self.net.procs[self.proc].windows.lock().unwrap_or_else(|e| e.into_inner());
-        w.retain(|(id, _)| *id != win);
+        w.retain(|(id, _, _)| *id != win);
     }
 
     /// Like [`ProcFabric::window`], but `None` for an unknown window —
@@ -295,8 +356,8 @@ impl ProcFabric {
             .lock()
             .unwrap_or_else(|e| e.into_inner())
             .iter()
-            .find(|(id, _)| *id == win)
-            .map(|(_, m)| m.clone())
+            .find(|(id, _, _)| *id == win)
+            .map(|(_, m, _)| m.clone())
     }
 
     /// Resolve a (proc, window) pair to its memory — the hardware
@@ -304,6 +365,26 @@ impl ProcFabric {
     pub fn window(&self, proc: ProcId, win: WinId) -> Arc<WindowMem> {
         self.find_window(proc, win)
             .unwrap_or_else(|| panic!("window {win} of proc {proc} not registered"))
+    }
+
+    /// The passive-target lock word registered with a (proc, window) pair
+    /// — the NIC-atomic path IB origins acquire epochs through. `None`
+    /// for an unknown window (handlers/teardown must tolerate stale ids).
+    pub fn find_win_lock(&self, proc: ProcId, win: WinId) -> Option<Arc<WinLockWord>> {
+        self.net.procs[proc]
+            .windows
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .find(|(id, _, _)| *id == win)
+            .map(|(_, _, l)| l.clone())
+    }
+
+    /// Panicking variant of [`ProcFabric::find_win_lock`], for origin
+    /// paths where the window is known registered (symmetric creation).
+    pub fn win_lock_word(&self, proc: ProcId, win: WinId) -> Arc<WinLockWord> {
+        self.find_win_lock(proc, win)
+            .unwrap_or_else(|| panic!("lock word of window {win} of proc {proc} not registered"))
     }
 }
 
@@ -368,6 +449,23 @@ mod tests {
         assert_eq!(n.node_of(3), 0);
         assert_eq!(n.node_of(4), 1);
         assert_eq!(n.node_of(11), 2);
+    }
+
+    #[test]
+    fn lock_word_shared_excludes_exclusive() {
+        let w = WinLockWord::new();
+        assert!(w.try_acquire(false));
+        assert!(w.try_acquire(false), "shared holders are concurrent");
+        assert!(!w.try_acquire(true), "exclusive blocked by shared holders");
+        w.release(false);
+        assert!(!w.try_acquire(true));
+        w.release(false);
+        assert!(w.is_idle());
+        assert!(w.try_acquire(true));
+        assert!(!w.try_acquire(false), "shared blocked by exclusive holder");
+        assert!(!w.try_acquire(true));
+        w.release(true);
+        assert!(w.is_idle());
     }
 
     #[test]

@@ -17,6 +17,18 @@ pub enum AccOp {
     Replace,
 }
 
+/// Passive-target lock flavor carried by [`Payload::RmaLockReq`] /
+/// [`Payload::RmaUnlock`] (MPI_Win_lock's `lock_type`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockKind {
+    /// MPI_LOCK_SHARED: concurrent holders allowed; the target grants
+    /// immediately unless an exclusive holder (or a queued exclusive
+    /// waiter — FIFO fairness) is in the way.
+    Shared,
+    /// MPI_LOCK_EXCLUSIVE: sole holder; contenders queue FIFO per window.
+    Exclusive,
+}
+
 /// Two-sided wire protocol step.
 #[derive(Clone, Debug)]
 pub enum P2pProtocol {
@@ -118,6 +130,25 @@ pub enum Payload {
     /// lane's per-(window, target) ack counter; `win_flush` waits until
     /// every lane's acked count reaches its issued watermark.
     RmaAckCount { win: WinId, lane: u32 },
+    /// Passive-target lock request (MPI_Win_lock, OPA software protocol):
+    /// the target's lock table either grants now (shared with no
+    /// exclusive holder/waiter, or exclusive on an idle window) or queues
+    /// the request FIFO. `handle` identifies the origin's wait; the grant
+    /// echoes it. Windows whose policy carries `mpi_assert_no_locks`
+    /// never put this on the wire — the epoch is a local no-op grant.
+    RmaLockReq { win: WinId, kind: LockKind, handle: u64 },
+    /// Grant for a queued or immediate [`Payload::RmaLockReq`]: lands in
+    /// the issuing VCI's `lock_granted` set, releasing the origin's
+    /// `win_lock` wait.
+    RmaLockGrant { win: WinId, handle: u64 },
+    /// Passive-target unlock (MPI_Win_unlock): releases the origin's hold
+    /// on the target's lock table and drains the grantable FIFO prefix of
+    /// queued waiters. Acked with [`Payload::RmaAck`] echoing `handle`
+    /// (the same completion set ordered flushes use), so the origin's
+    /// unlock blocks until the epoch is closed at the target — a later
+    /// lock request (possibly relayed through a third rank) can never
+    /// find the old epoch still open.
+    RmaUnlock { win: WinId, kind: LockKind, handle: u64 },
 }
 
 /// Initiator-side record of an RMA operation's completion semantics.
@@ -144,7 +175,10 @@ impl Payload {
             Payload::RmaGetReq { .. }
             | Payload::SendAck { .. }
             | Payload::RmaAck { .. }
-            | Payload::RmaAckCount { .. } => 0,
+            | Payload::RmaAckCount { .. }
+            | Payload::RmaLockReq { .. }
+            | Payload::RmaLockGrant { .. }
+            | Payload::RmaUnlock { .. } => 0,
         }
     }
 }
@@ -167,5 +201,12 @@ mod tests {
         assert_eq!(ack.wire_bytes(), 0);
         let counted = Payload::RmaAckCount { win: 1, lane: 3 };
         assert_eq!(counted.wire_bytes(), 0);
+        // Lock-protocol control traffic is pure latency: zero wire bytes.
+        let lock = Payload::RmaLockReq { win: 1, kind: LockKind::Exclusive, handle: 4 };
+        assert_eq!(lock.wire_bytes(), 0);
+        let grant = Payload::RmaLockGrant { win: 1, handle: 4 };
+        assert_eq!(grant.wire_bytes(), 0);
+        let unlock = Payload::RmaUnlock { win: 1, kind: LockKind::Exclusive, handle: 5 };
+        assert_eq!(unlock.wire_bytes(), 0);
     }
 }

@@ -47,6 +47,11 @@
 //!   `mpi_assert_no_locks` — so one window can stripe a single origin
 //!   thread's accumulates across the pool while another stays ordered on
 //!   a pinned lane.
+//!
+//! The consolidated info-key reference (legal values, defaults, and the
+//! bench lane proving each knob) is the table in `docs/ARCHITECTURE.md`
+//! (§ "Info-key reference"); the per-key parsing rules live in
+//! [`crate::mpi::policy`].
 
 /// Critical-section granularity (paper §4.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -69,6 +69,13 @@ pub enum LockClass {
     HostStreams,
     /// `Window::outstanding` (RMA completion records).
     HostRmaOutstanding,
+    /// `Window::epochs` (origin-side passive-target lock epochs). Never
+    /// held together with `HostRmaOutstanding`: unlock copies the epoch
+    /// out, drops this lock, and only then drains the thread's records.
+    HostRmaEpochs,
+    /// `MpiProc::win_locks` (target-side passive-target lock tables: the
+    /// FIFO reader/writer queue the OPA lock-protocol handlers serve).
+    HostWinLocks,
     /// `Window::get_results` (parked MPI_Get payloads).
     HostRmaResults,
     /// `ReqSlot::data` (received payload parking).
@@ -149,6 +156,8 @@ tags! {
     HostOrderedPins => TAG_HOST_ORDERED_PINS { "host.ordered_pins", 140, false, true },
     HostStreams => TAG_HOST_STREAMS { "host.streams", 142, false, true },
     HostRmaOutstanding => TAG_HOST_RMA_OUTSTANDING { "host.rma_outstanding", 145, false, true },
+    HostRmaEpochs => TAG_HOST_RMA_EPOCHS { "host.rma_epochs", 147, false, true },
+    HostWinLocks => TAG_HOST_WIN_LOCKS { "host.win_locks", 148, false, true },
     HostRmaResults => TAG_HOST_RMA_RESULTS { "host.rma_results", 150, false, true },
     HostSlotData => TAG_HOST_SLOT_DATA { "host.slot_data", 155, false, true },
     HostDeferredFrees => TAG_HOST_DEFERRED_FREES { "host.deferred_frees", 160, false, true },

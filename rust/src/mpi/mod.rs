@@ -49,4 +49,5 @@ pub use shard::{CommMatch, EpochStats};
 pub use proc::MpiProc;
 pub use request::Request;
 pub use rma::{GetHandle, Window};
+pub use crate::fabric::LockKind;
 pub use world::{run_cluster, ClusterSpec, RunReport};

@@ -46,11 +46,17 @@
 //! | `accumulate_ordering`   | `none` \| `rar,raw,war,waw` list | `none` relaxes accumulate program order (MPI-3.1 §11.7.2), enabling accumulate striping |
 //! | `vcmpi_striping`        | `off`\|`rr`\|`hash`  | per-message VCI striping of this window's puts/accumulates |
 //! | `vcmpi_rx_doorbell`     | `true`\|`false`    | flush sweeps are doorbell-gated for this window |
-//! | `mpi_assert_no_locks`   | `true`\|`false`    | promises flush-only passive-target sync (no lock epochs) |
+//! | `mpi_assert_no_locks`   | `true`\|`false`    | promises lock epochs need no mutual exclusion: the lock protocol is elided to a local no-op grant (see `mpi::rma`) |
 //!
 //! Unknown keys are ignored (MPI info semantics); a malformed value for a
 //! known key panics — it is a programming error, like posting a wildcard
 //! under an asserted hint.
+//!
+//! The consolidated reference — every key with its legal values, default,
+//! and the bench lane that proves it — lives in `docs/ARCHITECTURE.md`
+//! (§ "Info-key reference"), kept in sync with these tables by
+//! `scripts/lint_doc_links.py` (it checks the `[[bench gate: …]]` names
+//! against the bench sources).
 //!
 //! # Wire-contract symmetry
 //!
@@ -349,12 +355,15 @@ pub struct WinPolicy {
     pub striping: VciStriping,
     /// Are this window's flush sweeps doorbell-gated (`vcmpi_rx_doorbell`)?
     pub rx_doorbell: bool,
-    /// `mpi_assert_no_locks`: the program promises flush-only passive-
-    /// target synchronization (no lock/unlock epochs). Accepted and
-    /// recorded; this model's only passive-target sync *is* flush, so the
-    /// assert gates nothing today (a conformant library may ignore
-    /// asserts) — it exists so programs can declare the promise now and
-    /// keep working when lock epochs land.
+    /// `mpi_assert_no_locks`: the program promises its lock epochs need
+    /// no mutual exclusion, so `win_lock`/`win_unlock` **elide the whole
+    /// lock protocol** — a local no-op grant instead of the OPA
+    /// request/grant round trip or IB NIC atomics (the unlock's
+    /// flush-completion semantics are kept). Load-bearing: the
+    /// `no_locks_over_locked` bench gate measures the saved round trips,
+    /// and `MpiProc::lock_elision_count` /
+    /// `MpiProc::lock_wire_req_count` prove which path fired. See the
+    /// decision table in `mpi::rma`.
     pub no_locks: bool,
 }
 

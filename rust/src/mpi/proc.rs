@@ -254,6 +254,19 @@ pub struct MpiProc {
     /// finalize asserts this count returned to zero — the freelist twin of
     /// the lightweight-refs leak tripwire.
     pub(super) stream_freelist_outstanding: AtomicUsize,
+    /// Target-side passive-target lock tables (OPA software protocol),
+    /// keyed by window id — this process as the *exposed* side. Served by
+    /// the `RmaLockReq`/`RmaUnlock` wire handlers; `win_free` removes the
+    /// entry and asserts it idle. `LockClass::HostWinLocks`, a leaf class
+    /// never held across a scheduler interaction.
+    pub(super) win_locks: HostMutex<HashMap<u64, super::rma::WinLockTable>>,
+    /// Lock epochs opened without wire traffic because the window promised
+    /// `mpi_assert_no_locks` (the load-bearing elision the
+    /// `no_locks_over_locked` bench gate measures).
+    pub(super) lock_elisions: AtomicU64,
+    /// Lock acquisitions that did pay the wire protocol (OPA request/grant
+    /// round trip) or NIC atomics (IB).
+    pub(super) lock_wire_reqs: AtomicU64,
 }
 
 impl MpiProc {
@@ -305,6 +318,9 @@ impl MpiProc {
             stale_ctrl_drops: AtomicU64::new(0),
             streams: HostMutex::new(HashMap::new()),
             stream_freelist_outstanding: AtomicUsize::new(0),
+            win_locks: HostMutex::new(HashMap::new()),
+            lock_elisions: AtomicU64::new(0),
+            lock_wire_reqs: AtomicU64::new(0),
             fabric,
         })
     }
@@ -1036,6 +1052,19 @@ impl MpiProc {
         self.policy_mismatches.load(Ordering::Relaxed)
     }
 
+    /// Lock epochs opened as local no-op grants because the window
+    /// promised `mpi_assert_no_locks`. Test/bench aid: proves the elision
+    /// actually fired (paired with [`MpiProc::lock_wire_req_count`]).
+    pub fn lock_elision_count(&self) -> u64 {
+        self.lock_elisions.load(Ordering::Relaxed)
+    }
+
+    /// Lock acquisitions that paid the real protocol (OPA wire round trip
+    /// or IB NIC atomics).
+    pub fn lock_wire_req_count(&self) -> u64 {
+        self.lock_wire_reqs.load(Ordering::Relaxed)
+    }
+
     /// [`MpiProc::comm_match`] through the calling VCI's cache: the hot
     /// striped paths run with a VCI's state held anyway, so the engine
     /// handle is resolved there and the process-wide table is touched
@@ -1156,6 +1185,7 @@ impl MpiProc {
                     vci.with_state_stream(|st| {
                         st.rma_issued.retain(|(w, _), _| *w != win_id);
                         st.rma_acked.retain(|(w, _), _| *w != win_id);
+                        st.lock_granted.retain(|h| (h >> 40) != win_id);
                     });
                 }
                 continue;
@@ -1163,6 +1193,7 @@ impl MpiProc {
             vci.with_state(guard, |st| {
                 st.rma_issued.retain(|(w, _), _| *w != win_id);
                 st.rma_acked.retain(|(w, _), _| *w != win_id);
+                st.lock_granted.retain(|h| (h >> 40) != win_id);
             });
         }
     }

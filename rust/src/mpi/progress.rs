@@ -37,6 +37,15 @@
 //! issuing lane, parks the data under the get handle, and bumps the same
 //! per-lane counter.
 //!
+//! Passive-target lock epochs (`mpi::rma`) add three handler arms on the
+//! same dispatch: `RmaLockReq` admits the origin into the per-window FIFO
+//! lock table (granting immediately or queueing behind an exclusive
+//! holder), `RmaUnlock` releases it and drains the grantable FIFO prefix
+//! to the waiting origins, and `RmaLockGrant` marks the origin's pending
+//! handle granted so its `win_lock` spin can return. All three run under
+//! the short `HostWinLocks` leaf lock; the reply injection happens after
+//! it drops.
+//!
 //! Collective segments (see `mpi::collectives`) use explicit lanes
 //! chosen symmetrically from the envelope (dedicated or hashed per
 //! segment): their requests are NOT striped-flagged, so a collective
@@ -474,6 +483,57 @@ impl MpiProc {
             Payload::RmaAck { flush_handle } => {
                 padvance(self.backend, self.costs.completion_process);
                 st.acked.insert(flush_handle);
+            }
+            // ---- passive-target lock protocol (OPA software path) ----
+            Payload::RmaLockReq { win, kind, handle } => {
+                // We are the target: admit through this window's FIFO lock
+                // table (see `mpi::rma::WinLockTable`). The table lock is a
+                // leaf — grant decided inside, grant *message* sent after
+                // the guard drops. A request for an unknown window is a
+                // stale/rogue origin: drop counted, never grant.
+                if self.fabric.find_window(self.rank(), win).is_none() {
+                    self.drop_stale();
+                    return;
+                }
+                padvance(self.backend, self.costs.rma_am_handle);
+                let granted = {
+                    let mut t = self.win_locks.lock(LockClass::HostWinLocks);
+                    t.entry(win).or_default().admit(super::rma::QueuedLock {
+                        kind,
+                        src_proc: sender.src_proc,
+                        src_ctx: sender.src_ctx,
+                        handle,
+                    })
+                };
+                if granted {
+                    self.reply(my_ctx_index, &sender, Payload::RmaLockGrant { win, handle });
+                }
+            }
+            Payload::RmaLockGrant { win: _, handle } => {
+                // We are the origin: the grant lands in the issuing VCI's
+                // wait set (`wait_grant` is spinning on it).
+                padvance(self.backend, self.costs.completion_process);
+                st.lock_granted.insert(handle);
+            }
+            Payload::RmaUnlock { win, kind, handle } => {
+                // We are the target: release, ack the unlocker (via the
+                // ordinary RmaAck path — the unlock handle behaves like a
+                // flush handle), then grant the now-runnable FIFO prefix.
+                if self.fabric.find_window(self.rank(), win).is_none() {
+                    self.drop_stale();
+                    return;
+                }
+                padvance(self.backend, self.costs.rma_am_handle);
+                let grants = {
+                    let mut t = self.win_locks.lock(LockClass::HostWinLocks);
+                    t.entry(win).or_default().release(kind)
+                };
+                self.reply(my_ctx_index, &sender, Payload::RmaAck { flush_handle: handle });
+                for q in grants {
+                    let to =
+                        SenderInfo { src_proc: q.src_proc, src_ctx: q.src_ctx, send_handle: 0 };
+                    self.reply(my_ctx_index, &to, Payload::RmaLockGrant { win, handle: q.handle });
+                }
             }
             Payload::RmaAckCount { win, lane } => {
                 // Counted striped-RMA completion: the ack returned to the

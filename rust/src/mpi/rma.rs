@@ -1,5 +1,8 @@
 //! One-sided communication: windows, MPI_Put / MPI_Get / MPI_Accumulate /
-//! MPI_Fetch_and_op, and passive-target synchronization (MPI_Win_flush).
+//! MPI_Fetch_and_op, and passive-target synchronization — both the
+//! flush family (MPI_Win_flush / MPI_Win_flush_local) and lock epochs
+//! (MPI_Win_lock / MPI_Win_unlock / MPI_Win_lock_all /
+//! MPI_Win_unlock_all).
 //!
 //! Interconnect split (paper §5.2):
 //!  * IB personality: contiguous Put/Get execute in hardware — the
@@ -51,12 +54,78 @@
 //! two-sided or RMA — never queues behind their latency-sensitive ops;
 //! striped windows' lanes stay in the stripe set and their flush sweeps
 //! participate in doorbell-gated striped progress (`vcmpi_rx_doorbell`).
+//!
+//! # Passive-target lock epochs
+//!
+//! [`MpiProc::win_lock`] / [`MpiProc::win_unlock`] (and the `_all`
+//! variants) add MPI-3.1 §11.5.3 lock epochs on top of the flush
+//! machinery. The protocol taken is decided per window by
+//! (lock kind × interconnect × `mpi_assert_no_locks`) — passive-target
+//! rows extending the decision table above:
+//!
+//! | lock kind × window policy     | acquisition protocol                  | unlock completion                      |
+//! |-------------------------------|---------------------------------------|----------------------------------------|
+//! | any kind, `mpi_assert_no_locks` | **elided**: local no-op grant, zero wire traffic | per-target flush waits only (see below) |
+//! | shared / exclusive, OPA       | `RmaLockReq` → target FIFO lock table → `RmaLockGrant` | per-target flush waits, then `RmaUnlock` → `RmaAck` |
+//! | shared, IB                    | NIC-atomic fast path on the target's [`crate::fabric::WinLockWord`] — typically one round trip, no target CPU | per-target flush waits, then one NIC-atomic release |
+//! | exclusive, IB                 | NIC-atomic CAS retry loop (no hardware FIFO; each retry costs an atomic round trip) | per-target flush waits, then one NIC-atomic release |
+//!
+//! "Per-target flush waits" means an unlock completes the calling
+//! thread's outstanding ops *to that target* through exactly the PR 4-5
+//! watermark machinery a flush uses — per-(window, target, lane) counted
+//! acks for striped ops, flush handles for ordered ones, NIC timestamps
+//! on IB — so striped windows compose with epochs for free.
+//! [`MpiProc::win_flush_local`] waits local injection only; in this model
+//! origin buffers are captured at injection, so it is a (charged)
+//! bookkeeping no-op that leaves every record for the next
+//! flush/unlock.
+//!
+//! The target-side OPA state machine (`WinLockTable`, per exposed
+//! window):
+//!
+//! ```text
+//!            RmaLockReq(Shared), no writer & empty queue
+//!   Idle ───────────────────────────────────────────────▶ Readers(n)
+//!     │                                                       │
+//!     │ RmaLockReq(Excl), idle & empty queue                  │ any req while queue nonempty,
+//!     ▼                                                       ▼ or Excl while held
+//!   Writer ◀──────────────────────────────── queue (FIFO) ◀───┘
+//!     │   RmaUnlock: release, then grant the FIFO prefix:
+//!     └──▶ one Exclusive head, or every consecutive Shared head
+//! ```
+//!
+//! A shared request behind a queued exclusive waiter queues too (FIFO
+//! fairness: writers cannot starve), and an unlock batch-grants the
+//! longest grantable prefix. Lock/unlock control ops ride the window's
+//! *home* VCI (like fetch-and-op: blocking round trips striping cannot
+//! help), and grants land in the issuing VCI's `lock_granted` set.
+//!
+//! With `mpi_assert_no_locks` the whole wire protocol is elided to a
+//! local no-op grant (the bench gate `no_locks_over_locked` measures
+//! exactly the saved round trips); the unlock's flush-completion
+//! semantics are kept, so an elided program still observes MPI's
+//! completion rules. The standard's `no_locks` means "lock epochs will
+//! not be used"; this model interprets the promise as "epochs need no
+//! mutual exclusion" and keeps the calls legal as no-ops, so one program
+//! text can run both arms.
+//!
+//! ## Lock-rank placement (SimSan)
+//!
+//! Epoch state adds two *leaf* host classes to the hierarchy
+//! (`mpi::instrument`): `HostRmaEpochs` (rank 147, `Window::epochs` —
+//! the origin's open-epoch map) and `HostWinLocks` (rank 148,
+//! `MpiProc::win_locks` — the target's FIFO tables, taken under the
+//! polled VCI's sim lock, rank 30, by the protocol handlers). Neither is
+//! ever held across a scheduler interaction or together with
+//! `HostRmaOutstanding` (145): unlock copies the epoch out, drops the
+//! lock, then drains records; handlers compute grants under the table
+//! lock and reply after dropping it.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::fabric::{AccOp, Interconnect, Payload, WindowMem};
+use crate::fabric::{AccOp, Interconnect, LockKind, Payload, WindowMem};
 use crate::platform::{padvance, pnow};
 
 use super::instrument::{HostMutex, LockClass};
@@ -77,6 +146,13 @@ pub struct Window {
     outstanding: HostMutex<HashMap<u64, Vec<OpRecord>>>,
     /// Get results retrieved at flush time, keyed by the GetHandle.
     get_results: HostMutex<HashMap<u64, Vec<u8>>>,
+    /// Origin-side passive-target epochs open on this window, by target
+    /// rank. MPI allows at most one lock epoch per (window, target) per
+    /// process (a second `win_lock` is erroneous and asserts), so the
+    /// map is process-wide, not per-thread. `win_free` asserts it empty
+    /// — an open epoch (or a grant still in flight, which also has its
+    /// entry here) at free time is the freed-comm-style tripwire.
+    epochs: HostMutex<HashMap<usize, LockEpoch>>,
     next_handle: AtomicU64,
     /// Per-window policy resolved from info keys at creation — see the
     /// module doc's decision table.
@@ -88,19 +164,123 @@ pub struct Window {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GetHandle(pub u64, pub usize);
 
-/// Initiator-side completion record for one outstanding RMA op.
+/// Initiator-side completion record for one outstanding RMA op. Every
+/// variant carries its target rank so `win_unlock(target)` can drain
+/// exactly the records a per-target flush would (`win_flush` drains all).
 #[derive(Clone, Copy, Debug)]
 enum OpRecord {
     /// Hardware completion at a fixed virtual time (IB personality).
-    AtTime(u64),
+    AtTime { target: usize, at: u64 },
     /// Ack-based completion (software RMA, ordered windows): the ack
     /// arrives on `vci` and lands in its `acked` set.
-    OnAck { flush_handle: u64, vci: usize },
+    OnAck { target: usize, flush_handle: u64, vci: usize },
     /// Counted completion (striped windows): flush is done with this op
     /// once lane `lane`'s ack counter for (window, `target`) reaches
     /// `watermark` — the lane's issue-counter value right after this op
     /// was injected.
     OnCount { target: usize, lane: usize, watermark: u64 },
+}
+
+impl OpRecord {
+    fn target(&self) -> usize {
+        match *self {
+            OpRecord::AtTime { target, .. }
+            | OpRecord::OnAck { target, .. }
+            | OpRecord::OnCount { target, .. } => target,
+        }
+    }
+}
+
+/// One open origin-side lock epoch (see [`Window::epochs`]).
+#[derive(Clone, Copy, Debug)]
+struct LockEpoch {
+    kind: LockKind,
+    /// The window's `mpi_assert_no_locks` policy elided the wire protocol
+    /// for this epoch: nothing to release at the target.
+    elided: bool,
+    /// Opened by `win_lock_all` — must be closed by `win_unlock_all`.
+    all: bool,
+}
+
+/// Target-side passive-target lock state for one exposed window: the
+/// software FIFO lock queue the OPA personality's active-message handlers
+/// serve (see the module doc's state machine). Grant decisions happen
+/// under `MpiProc::win_locks` (`LockClass::HostWinLocks`, a leaf); the
+/// grant *messages* are sent after the lock is dropped.
+#[derive(Default)]
+pub(super) struct WinLockTable {
+    /// Concurrent shared holders.
+    readers: usize,
+    /// The exclusive holder's origin rank, if any.
+    writer: Option<usize>,
+    /// Requests not yet grantable, FIFO. A shared request behind a queued
+    /// exclusive waiter queues too — writers cannot starve.
+    queue: VecDeque<QueuedLock>,
+}
+
+/// One queued (or being-granted) lock request: enough to address the
+/// grant back to the origin's issuing context.
+pub(super) struct QueuedLock {
+    pub kind: LockKind,
+    pub src_proc: usize,
+    pub src_ctx: usize,
+    pub handle: u64,
+}
+
+impl WinLockTable {
+    fn grantable(&self, kind: LockKind) -> bool {
+        match kind {
+            LockKind::Shared => self.writer.is_none(),
+            LockKind::Exclusive => self.writer.is_none() && self.readers == 0,
+        }
+    }
+
+    fn take(&mut self, kind: LockKind, src_proc: usize) {
+        match kind {
+            LockKind::Shared => self.readers += 1,
+            LockKind::Exclusive => {
+                debug_assert!(self.writer.is_none() && self.readers == 0);
+                self.writer = Some(src_proc);
+            }
+        }
+    }
+
+    /// Admit a new request: `true` grants it immediately (the caller
+    /// sends the grant), `false` queued it FIFO for a later unlock.
+    pub(super) fn admit(&mut self, q: QueuedLock) -> bool {
+        if self.queue.is_empty() && self.grantable(q.kind) {
+            self.take(q.kind, q.src_proc);
+            true
+        } else {
+            self.queue.push_back(q);
+            false
+        }
+    }
+
+    /// Release one held lock and pop the now-grantable FIFO prefix (one
+    /// exclusive head, or every consecutive shared head) — the caller
+    /// sends each returned entry its grant.
+    pub(super) fn release(&mut self, kind: LockKind) -> Vec<QueuedLock> {
+        match kind {
+            LockKind::Shared => self.readers = self.readers.saturating_sub(1),
+            LockKind::Exclusive => self.writer = None,
+        }
+        let mut grants = Vec::new();
+        while let Some(head) = self.queue.front() {
+            if !self.grantable(head.kind) {
+                break;
+            }
+            let q = self.queue.pop_front().expect("front checked");
+            self.take(q.kind, q.src_proc);
+            grants.push(q);
+        }
+        grants
+    }
+
+    /// No holder and no waiter (the win_free tripwire's check).
+    pub(super) fn is_idle(&self) -> bool {
+        self.readers == 0 && self.writer.is_none() && self.queue.is_empty()
+    }
 }
 
 /// Apply an accumulate op element-wise under the window-memory lock
@@ -248,6 +428,7 @@ impl MpiProc {
             mem,
             outstanding: HostMutex::new(HashMap::new()),
             get_results: HostMutex::new(HashMap::new()),
+            epochs: HostMutex::new(HashMap::new()),
             next_handle: AtomicU64::new(1),
             policy,
         });
@@ -320,7 +501,7 @@ impl MpiProc {
                     mem.write(offset, data);
                     t
                 });
-                win.record(OpRecord::AtTime(t));
+                win.record(OpRecord::AtTime { target, at: t });
             }
             Interconnect::Opa if striped => {
                 // Striped software put: fan out over the stripe lanes with
@@ -346,7 +527,7 @@ impl MpiProc {
                         lane: None,
                     });
                 });
-                win.record(OpRecord::OnAck { flush_handle: h, vci: vci_idx });
+                win.record(OpRecord::OnAck { target, flush_handle: h, vci: vci_idx });
             }
         }
     }
@@ -387,7 +568,7 @@ impl MpiProc {
                     win.get_results.lock(LockClass::HostRmaResults).insert(h, data);
                     t
                 });
-                win.record(OpRecord::AtTime(t));
+                win.record(OpRecord::AtTime { target, at: t });
             }
             Interconnect::Opa if striped => {
                 // Striped software get: fan out over the stripe lanes with
@@ -413,7 +594,7 @@ impl MpiProc {
                         lane: None,
                     });
                 });
-                win.record(OpRecord::OnAck { flush_handle: h, vci: vci_idx });
+                win.record(OpRecord::OnAck { target, flush_handle: h, vci: vci_idx });
             }
         }
         GetHandle(h, vci_idx)
@@ -478,7 +659,7 @@ impl MpiProc {
                 lane: None,
             });
         });
-        win.record(OpRecord::OnAck { flush_handle: h, vci: vci_idx });
+        win.record(OpRecord::OnAck { target, flush_handle: h, vci: vci_idx });
     }
 
     /// MPI_Fetch_and_op on a u64/f64 cell; blocking (fetch + flush fused,
@@ -531,9 +712,43 @@ impl MpiProc {
     /// calling thread issued on `win`.
     pub fn win_flush(&self, win: &Window) {
         padvance(self.backend, self.costs.instructions(20));
+        self.flush_records(win, None);
+    }
+
+    /// MPI_Win_flush_local: wait only for *local* completion of the
+    /// calling thread's outstanding ops — origin buffers reusable, nothing
+    /// guaranteed at the target. In this model an op's payload is captured
+    /// at injection (and an IB op's source is read before its NIC
+    /// timestamp is recorded), so local completion is already true the
+    /// moment initiation returns: flush_local charges its bookkeeping cost
+    /// and leaves every record in place for the next `win_flush` /
+    /// `win_unlock` to complete remotely.
+    pub fn win_flush_local(&self, win: &Window) {
+        padvance(self.backend, self.costs.instructions(10));
+        // Touch the calling thread's record list so an erroneous handle
+        // still trips the HostMutex discipline in instrumented builds.
+        let _pending = {
+            let t = win.outstanding.lock(LockClass::HostRmaOutstanding);
+            t.get(&thread_token()).map_or(0, Vec::len)
+        };
+    }
+
+    /// The flush/unlock wait engine: drain and complete the calling
+    /// thread's outstanding records on `win` — all of them (`None`, a
+    /// flush) or only those to one target (`Some`, the completion half of
+    /// `win_unlock`).
+    fn flush_records(&self, win: &Window, only_target: Option<usize>) {
         let mine = {
             let mut t = win.outstanding.lock(LockClass::HostRmaOutstanding);
-            t.remove(&thread_token()).unwrap_or_default()
+            match only_target {
+                None => t.remove(&thread_token()).unwrap_or_default(),
+                Some(tg) => {
+                    let recs = t.entry(thread_token()).or_default();
+                    let (mine, keep) = recs.drain(..).partition(|c| c.target() == tg);
+                    *recs = keep;
+                    mine
+                }
+            }
         };
         // Striped ops coalesce into one watermark per (target, lane): the
         // counters are monotone, so only the highest watermark per lane
@@ -549,9 +764,9 @@ impl MpiProc {
         for c in mine {
             match c {
                 OpRecord::OnCount { .. } => {} // waited below, coalesced
-                OpRecord::AtTime(t) => {
+                OpRecord::AtTime { at, .. } => {
                     // Hardware completion: just wait out the NIC.
-                    while pnow(self.backend) < t {
+                    while pnow(self.backend) < at {
                         padvance(self.backend, self.costs.poll_empty);
                         self.relax();
                         if self.backend == crate::platform::Backend::Native {
@@ -559,7 +774,7 @@ impl MpiProc {
                         }
                     }
                 }
-                OpRecord::OnAck { flush_handle, vci } => {
+                OpRecord::OnAck { flush_handle, vci, .. } => {
                     // Software completion: needs progress (ours and the
                     // target's). This is where OPA's shared-progress pain
                     // lives (Figs. 13-16, 24-25).
@@ -605,6 +820,273 @@ impl MpiProc {
         }
     }
 
+    /// MPI_Win_lock: open a passive-target epoch of `kind` to `target`.
+    /// Blocks until the lock is granted (see the module doc's protocol
+    /// table: OPA wire protocol with a target FIFO queue, IB NIC atomics,
+    /// or a local no-op grant under `mpi_assert_no_locks`).
+    pub fn win_lock(&self, win: &Window, kind: LockKind, target: usize) {
+        padvance(self.backend, self.costs.instructions(30));
+        assert!(target < self.nprocs(), "win_lock target {target} out of range");
+        self.lock_one(win, kind, target, false);
+    }
+
+    /// MPI_Win_lock_all: shared epochs to every rank at once. OPA issues
+    /// every lock request before waiting any grant, so the acquisition
+    /// round trips overlap.
+    pub fn win_lock_all(&self, win: &Window) {
+        padvance(self.backend, self.costs.instructions(30));
+        let n = self.nprocs();
+        let elided = win.policy.no_locks;
+        {
+            let mut e = win.epochs.lock(LockClass::HostRmaEpochs);
+            assert!(
+                e.is_empty(),
+                "erroneous program: win_lock_all on window {} with {} epoch(s) already open",
+                win.id,
+                e.len()
+            );
+            for target in 0..n {
+                e.insert(target, LockEpoch { kind: LockKind::Shared, elided, all: true });
+            }
+        }
+        if elided {
+            self.lock_elisions.fetch_add(n as u64, Ordering::Relaxed);
+            return;
+        }
+        self.lock_wire_reqs.fetch_add(n as u64, Ordering::Relaxed);
+        match self.interconnect() {
+            Interconnect::Ib => {
+                for target in 0..n {
+                    self.ib_acquire(win, LockKind::Shared, target);
+                }
+            }
+            Interconnect::Opa => {
+                let vci_idx = self.rma_vci(win, false);
+                let handles: Vec<u64> = (0..n)
+                    .map(|target| self.send_lock_req(win, LockKind::Shared, target, vci_idx))
+                    .collect();
+                for h in handles {
+                    self.wait_grant(win, vci_idx, h);
+                }
+            }
+        }
+    }
+
+    /// MPI_Win_unlock: complete the calling thread's outstanding ops to
+    /// `target` (the same per-lane watermark / flush-handle / NIC-time
+    /// waits a flush performs, filtered to that target), then release the
+    /// target-side lock and block until the epoch is closed there.
+    pub fn win_unlock(&self, win: &Window, target: usize) {
+        padvance(self.backend, self.costs.instructions(30));
+        let ep = {
+            let e = win.epochs.lock(LockClass::HostRmaEpochs);
+            *e.get(&target).unwrap_or_else(|| {
+                panic!(
+                    "erroneous program: win_unlock on window {} target {target} \
+                     without a matching win_lock",
+                    win.id
+                )
+            })
+        };
+        assert!(
+            !ep.all,
+            "erroneous program: epoch on window {} target {target} was opened by \
+             win_lock_all — close it with win_unlock_all",
+            win.id
+        );
+        self.flush_records(win, Some(target));
+        self.release_one(win, target, ep);
+        win.epochs.lock(LockClass::HostRmaEpochs).remove(&target);
+    }
+
+    /// MPI_Win_unlock_all: complete ALL of the calling thread's
+    /// outstanding ops on `win` (a full flush), then release every rank's
+    /// lock. OPA sends every unlock before waiting any ack.
+    pub fn win_unlock_all(&self, win: &Window) {
+        padvance(self.backend, self.costs.instructions(30));
+        let eps: Vec<(usize, LockEpoch)> = {
+            let e = win.epochs.lock(LockClass::HostRmaEpochs);
+            assert!(
+                !e.is_empty() && e.values().all(|ep| ep.all),
+                "erroneous program: win_unlock_all on window {} without win_lock_all",
+                win.id
+            );
+            e.iter().map(|(t, ep)| (*t, *ep)).collect()
+        };
+        self.flush_records(win, None);
+        if eps.iter().all(|(_, ep)| ep.elided) {
+            win.epochs.lock(LockClass::HostRmaEpochs).clear();
+            return;
+        }
+        match self.interconnect() {
+            Interconnect::Ib => {
+                for (target, ep) in &eps {
+                    self.fabric
+                        .win_lock_word(*target, win.id)
+                        .release(ep.kind == LockKind::Exclusive);
+                }
+            }
+            Interconnect::Opa => {
+                let vci_idx = self.rma_vci(win, false);
+                let handles: Vec<u64> = eps
+                    .iter()
+                    .map(|(target, ep)| self.send_unlock(win, ep.kind, *target, vci_idx))
+                    .collect();
+                for h in handles {
+                    self.wait_unlock_ack(vci_idx, h);
+                }
+            }
+        }
+        win.epochs.lock(LockClass::HostRmaEpochs).clear();
+    }
+
+    /// The single-target acquisition path shared by `win_lock`.
+    fn lock_one(&self, win: &Window, kind: LockKind, target: usize, all: bool) {
+        let elided = win.policy.no_locks;
+        {
+            let mut e = win.epochs.lock(LockClass::HostRmaEpochs);
+            assert!(
+                !e.contains_key(&target),
+                "erroneous program: win_lock on window {} target {target} with an \
+                 epoch already open (one lock epoch per (window, target) per process)",
+                win.id
+            );
+            e.insert(target, LockEpoch { kind, elided, all });
+        }
+        if elided {
+            // mpi_assert_no_locks: the protocol collapses to a local
+            // no-op grant — zero wire traffic, zero NIC atomics. The
+            // `no_locks_over_locked` bench gate measures exactly this.
+            self.lock_elisions.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.lock_wire_reqs.fetch_add(1, Ordering::Relaxed);
+        match self.interconnect() {
+            Interconnect::Ib => self.ib_acquire(win, kind, target),
+            Interconnect::Opa => {
+                let vci_idx = self.rma_vci(win, false);
+                let h = self.send_lock_req(win, kind, target, vci_idx);
+                self.wait_grant(win, vci_idx, h);
+            }
+        }
+    }
+
+    /// IB acquisition: NIC-atomic attempts on the target's registered
+    /// lock word, each costing an atomic round trip. Shared is the fast
+    /// path (first attempt succeeds unless an exclusive holder is
+    /// present); exclusive retries until the word frees up, progressing
+    /// between attempts so this origin's own service work keeps moving.
+    fn ib_acquire(&self, win: &Window, kind: LockKind, target: usize) {
+        let word = self.fabric.win_lock_word(target, win.id);
+        let exclusive = kind == LockKind::Exclusive;
+        loop {
+            let t = self.fabric.hw_rma_completion_time(target, 8);
+            while pnow(self.backend) < t {
+                padvance(self.backend, self.costs.poll_empty);
+                self.relax();
+                if self.backend == crate::platform::Backend::Native {
+                    break;
+                }
+            }
+            if word.try_acquire(exclusive) {
+                return;
+            }
+            self.progress_for_request(self.rma_vci(win, false));
+        }
+    }
+
+    /// OPA: inject one `RmaLockReq` on the window's home VCI and return
+    /// the grant handle to wait on.
+    fn send_lock_req(&self, win: &Window, kind: LockKind, target: usize, vci_idx: usize) -> u64 {
+        let h = win.fresh_handle();
+        let vci = self.vcis().get(vci_idx).clone();
+        let _cs = self.enter_cs();
+        vci.with_state(self.guard(), |_st| {
+            let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
+            self.fabric.inject(vci.ctx_index, target, dst_ctx, Payload::RmaLockReq {
+                win: win.id,
+                kind,
+                handle: h,
+            });
+        });
+        h
+    }
+
+    /// Wait for a lock grant to land in the issuing VCI's `lock_granted`
+    /// set (the same blocking-wait shape as `fetch_and_op`).
+    fn wait_grant(&self, win: &Window, vci_idx: usize, h: u64) {
+        loop {
+            let granted = {
+                let _cs = self.enter_cs();
+                let v = self.vcis().get(vci_idx).clone();
+                v.with_state(self.guard(), |st| st.lock_granted.remove(&h))
+            };
+            if granted {
+                return;
+            }
+            self.progress_with(vci_idx, win.policy.striped(), win.policy.rx_doorbell);
+        }
+    }
+
+    /// Release one target's lock per the epoch's protocol (the completion
+    /// half — `flush_records` — has already run).
+    fn release_one(&self, win: &Window, target: usize, ep: LockEpoch) {
+        if ep.elided {
+            return;
+        }
+        match self.interconnect() {
+            Interconnect::Ib => {
+                // One NIC-atomic release; charge the atomic's round trip.
+                let t = self.fabric.hw_rma_completion_time(target, 8);
+                self.fabric.win_lock_word(target, win.id).release(ep.kind == LockKind::Exclusive);
+                while pnow(self.backend) < t {
+                    padvance(self.backend, self.costs.poll_empty);
+                    self.relax();
+                    if self.backend == crate::platform::Backend::Native {
+                        break;
+                    }
+                }
+            }
+            Interconnect::Opa => {
+                let vci_idx = self.rma_vci(win, false);
+                let h = self.send_unlock(win, ep.kind, target, vci_idx);
+                self.wait_unlock_ack(vci_idx, h);
+            }
+        }
+    }
+
+    /// OPA: inject one `RmaUnlock` and return the ack handle to wait on.
+    fn send_unlock(&self, win: &Window, kind: LockKind, target: usize, vci_idx: usize) -> u64 {
+        let h = win.fresh_handle();
+        let vci = self.vcis().get(vci_idx).clone();
+        let _cs = self.enter_cs();
+        vci.with_state(self.guard(), |_st| {
+            let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
+            self.fabric.inject(vci.ctx_index, target, dst_ctx, Payload::RmaUnlock {
+                win: win.id,
+                kind,
+                handle: h,
+            });
+        });
+        h
+    }
+
+    /// Wait the target's `RmaAck` for an unlock (it lands in the issuing
+    /// VCI's `acked` set, like an ordered flush handle).
+    fn wait_unlock_ack(&self, vci_idx: usize, h: u64) {
+        loop {
+            let acked = {
+                let _cs = self.enter_cs();
+                let v = self.vcis().get(vci_idx).clone();
+                v.with_state(self.guard(), |st| st.acked.remove(&h))
+            };
+            if acked {
+                return;
+            }
+            self.progress_for_request(vci_idx);
+        }
+    }
+
     /// Retrieve MPI_Get data after a flush.
     pub fn get_data(&self, win: &Window, h: GetHandle) -> Vec<u8> {
         if let Some(d) = win.get_results.lock(LockClass::HostRmaResults).remove(&h.0) {
@@ -623,9 +1105,46 @@ impl MpiProc {
     /// paper's Fig. 15 ("parallel Win_free restores progress"). Tears the
     /// per-window policy state down: the ordered-lane pin and every VCI's
     /// striped-completion counters for this window.
+    /// Freeing a window with a passive-target epoch still open — or a
+    /// lock grant still in flight, which also holds its `epochs` entry —
+    /// is erroneous and fails loudly here (the freed-communicator-style
+    /// tripwire), as does freeing while this rank's *exposed* side still
+    /// has holders or queued waiters.
     pub fn win_free(&self, comm: &super::Comm, win: Arc<Window>) {
+        {
+            let e = win.epochs.lock(LockClass::HostRmaEpochs);
+            assert!(
+                e.is_empty(),
+                "erroneous program: win_free on window {} with {} open passive-target epoch(s) \
+                 (win_unlock / win_unlock_all them first)",
+                win.id,
+                e.len()
+            );
+        }
         self.win_flush(&win);
         self.barrier_progressing(comm, Some(win.vci % self.vcis().len()));
+        // After the collective point every rank has passed its origin-side
+        // epoch assert, so a non-idle target-side table means a rogue
+        // origin raced the free — fail loudly rather than deregister under
+        // a holder.
+        {
+            let mut t = self.win_locks.lock(LockClass::HostWinLocks);
+            if let Some(table) = t.remove(&win.id) {
+                assert!(
+                    table.is_idle(),
+                    "erroneous program: win_free on window {} while its exposed side still has \
+                     passive-target lock holders or queued waiters",
+                    win.id
+                );
+            }
+        }
+        if let Some(word) = self.fabric.find_win_lock(self.rank(), win.id) {
+            assert!(
+                word.is_idle(),
+                "erroneous program: win_free on window {} while its hardware lock word is held",
+                win.id
+            );
+        }
         self.fabric.deregister_window(win.id);
         if !win.policy.striped() {
             self.unpin_ordered_lane(win.vci);

@@ -139,6 +139,12 @@ pub struct VciState {
     pub get_done: HashMap<u64, Vec<u8>>,
     /// RMA: fetch-and-op replies.
     pub fetch_done: HashMap<u64, Vec<u8>>,
+    /// RMA passive target: lock grants that have arrived
+    /// ([`crate::fabric::Payload::RmaLockGrant`]), by lock handle —
+    /// `win_lock` waits here on the window's home VCI, exactly like
+    /// `fetch_and_op` waits `fetch_done`. Purged with the window's
+    /// counters at `win_free` (handles embed the window id).
+    pub lock_granted: HashSet<u64>,
     /// Send-side FIFO sequence per (comm, dst_rank).
     pub send_seq: HashMap<(u64, usize), u64>,
     /// Cached handles to per-communicator sharded matching engines, so

@@ -8,7 +8,7 @@
 use std::sync::{Arc, Mutex};
 
 use vcmpi::fabric::{FabricConfig, Interconnect};
-use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, Src, Tag};
+use vcmpi::mpi::{run_cluster, ClusterSpec, LockKind, MpiConfig, Src, Tag};
 use vcmpi::platform::{Backend, PBarrier};
 use vcmpi::sim::SimOutcome;
 
@@ -412,6 +412,87 @@ fn psm2_service_thread_rescues_pure_per_vci() {
         }
         proc.barrier(&world);
         proc.win_free(&world, win);
+    });
+    assert_eq!(r.outcome, SimOutcome::Completed);
+}
+
+#[test]
+fn exclusive_lock_contention_serializes_increments_under_striped_storm() {
+    // Passive-target mutual-exclusion liveness: ranks 0-2 contend for an
+    // EXCLUSIVE lock on rank 3's window and each performs 5 lock-protected
+    // read-modify-write increments of the same cell, while a second thread
+    // on every proc drives a striped p2p storm over the same VCI pool.
+    // The target-side FIFO lock table must grant every queued request
+    // exactly once (no starvation behind the storm, no double grant), and
+    // unlock's per-target flush must complete the put before the next
+    // holder's get — the final cell value proves mutual exclusion AND
+    // liveness: 3 ranks x 5 increments == 15 with no lost update.
+    const ROUNDS: usize = 5;
+    let fab = FabricConfig {
+        interconnect: Interconnect::Opa,
+        nodes: 4,
+        procs_per_node: 1,
+        max_contexts_per_node: 64,
+    };
+    let mut spec = ClusterSpec::new(fab, MpiConfig::optimized(8), 2);
+    spec.time_limit = Some(1_000_000_000); // 1 virtual s: plenty for valid runs
+    type Shared = (Arc<vcmpi::mpi::Window>, vcmpi::mpi::Comm);
+    let shared: Arc<Mutex<std::collections::HashMap<usize, Shared>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let setup: Arc<Vec<PBarrier>> =
+        Arc::new((0..4).map(|_| PBarrier::new(Backend::Sim, 2)).collect());
+    let s2 = shared.clone();
+    let r = run_cluster(spec, move |proc, t| {
+        if t == 0 {
+            let world = proc.comm_world();
+            let win = proc.win_create(&world, 64);
+            let hot = proc.comm_dup_with_info(
+                &world,
+                &vcmpi::mpi::Info::new()
+                    .with("vcmpi_striping", "rr")
+                    .with("vcmpi_match_shards", "4"),
+            );
+            s2.lock().unwrap().insert(proc.rank(), (win, hot));
+        }
+        setup[proc.rank()].wait();
+        let (win, hot) = s2.lock().unwrap().get(&proc.rank()).unwrap().clone();
+        if t == 0 {
+            let world = proc.comm_world();
+            if proc.rank() < 3 {
+                for _ in 0..ROUNDS {
+                    proc.win_lock(&win, LockKind::Exclusive, 3);
+                    let h = proc.get(&win, 3, 0, 8);
+                    proc.win_flush(&win);
+                    let cur =
+                        u64::from_le_bytes(proc.get_data(&win, h).try_into().unwrap());
+                    proc.put(&win, 3, 0, &(cur + 1).to_le_bytes());
+                    proc.win_unlock(&win, 3); // completes the put remotely
+                }
+                proc.send(&world, 3, 9, &[]);
+            } else {
+                for rk in 0..3 {
+                    let done = proc.irecv(&world, Src::Rank(rk), Tag::Value(9));
+                    proc.wait(done);
+                }
+                let want = (3 * ROUNDS) as u64;
+                assert_eq!(
+                    win.read_local(0, 8),
+                    want.to_le_bytes().to_vec(),
+                    "lost update: exclusive epochs failed to serialize increments"
+                );
+            }
+            proc.barrier(&world);
+            proc.win_free(&world, win);
+        } else {
+            // Striped p2p storm, tag-disjoint per thread.
+            let peer = proc.rank() ^ 1;
+            let payload = vec![t as u8; 512];
+            for _ in 0..64 {
+                proc.send(&hot, peer, t as i32, &payload);
+                let rr = proc.irecv(&hot, Src::Rank(peer), Tag::Value(t as i32));
+                proc.wait(rr);
+            }
+        }
     });
     assert_eq!(r.outcome, SimOutcome::Completed);
 }

@@ -1009,6 +1009,157 @@ fn prop_rma_striped_vs_ordered_window_oracle() {
 }
 
 // ---------------------------------------------------------------------
+// RMA passive target: the same random commutative program synchronized
+// with lock epochs (shared epochs on the striped window, exclusive
+// epochs on the ordered window) must land the exact bytes the flush
+// arm above lands — both are checked against the same independently
+// computed oracle, so epoch-based completion (unlock = per-target
+// flush) and flush-based completion are interchangeable for data.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_passive_vs_flush_oracle() {
+    use vcmpi::fabric::AccOp;
+    use vcmpi::mpi::LockKind;
+    for seed in 0..cases(6) {
+        // Alternate interconnect (OPA active-message locks vs IB
+        // NIC-atomic lock words) and stripe mode by seed.
+        let ic = if seed % 2 == 0 { Interconnect::Opa } else { Interconnect::Ib };
+        let stripe_mode = if (seed / 2) % 2 == 0 { "rr" } else { "hash" };
+        let spec = ClusterSpec::new(
+            FabricConfig {
+                interconnect: ic,
+                nodes: 2,
+                procs_per_node: 1,
+                max_contexts_per_node: 64,
+            },
+            MpiConfig::optimized(6),
+            2,
+        );
+        use std::collections::HashMap;
+        use std::sync::{Arc, Mutex};
+        type Shared = (vcmpi::mpi::Comm, Arc<vcmpi::mpi::Window>, Arc<vcmpi::mpi::Window>);
+        let shared: Arc<Mutex<HashMap<usize, Shared>>> = Arc::new(Mutex::new(HashMap::new()));
+        let bars: Arc<Vec<vcmpi::platform::PBarrier>> = Arc::new(
+            (0..2)
+                .map(|_| vcmpi::platform::PBarrier::new(vcmpi::platform::Backend::Sim, 2))
+                .collect(),
+        );
+        const WIN_BYTES: usize = 256; // 32 u64 cells
+        let r = run_cluster(spec, move |proc, t| {
+            let world = proc.comm_world();
+            let me = proc.rank();
+            if t == 0 {
+                // Symmetric creation order on both ranks: striped comm,
+                // ordered window, striped window.
+                let hot = proc.comm_dup_with_info(
+                    &world,
+                    &Info::new().with("vcmpi_striping", "rr").with("vcmpi_match_shards", "4"),
+                );
+                let ordered = proc.win_create(&world, WIN_BYTES);
+                let striped = proc.win_create_with_info(
+                    &world,
+                    WIN_BYTES,
+                    &Info::new()
+                        .with("accumulate_ordering", "none")
+                        .with("vcmpi_striping", stripe_mode)
+                        .with("vcmpi_rx_doorbell", "true"),
+                );
+                shared.lock().unwrap().insert(me, (hot, ordered, striped));
+            }
+            bars[me].wait();
+            let (hot, ordered, striped) = shared.lock().unwrap().get(&me).unwrap().clone();
+            if t == 1 {
+                // Concurrent striped p2p storm on the shared pool.
+                if me == 0 {
+                    let reqs: Vec<_> =
+                        (0..48).map(|_| proc.isend(&hot, 1, 3, &[0u8; 24])).collect();
+                    proc.waitall(reqs);
+                } else {
+                    let reqs: Vec<_> = (0..48)
+                        .map(|_| proc.irecv(&hot, Src::Rank(0), Tag::Value(3)))
+                        .collect();
+                    proc.waitall(reqs);
+                }
+            } else if me == 0 {
+                // Generate the op list up front (put-once slots + wrapping
+                // u64-sum accumulates: commutative AND associative, so any
+                // apply order yields identical bytes), compute the oracle,
+                // then REPLAY the ops inside lock epochs instead of with
+                // win_flush: exclusive epochs on the ordered window,
+                // shared epochs on the striped window, one epoch pair per
+                // batch so completion happens only at win_unlock.
+                let mut rng = SplitMix64::new(seed.wrapping_mul(0x51ED) ^ 0x7777);
+                let mut expected = vec![0u8; WIN_BYTES];
+                let nput = rng.gen_usize(8);
+                let mut ops: Vec<(usize, u64, bool)> = Vec::new(); // (cell, val, is_put)
+                for slot in 0..nput {
+                    let b = ((seed as u8) ^ (slot as u8)) | 0x11;
+                    ops.push((slot, u64::from_le_bytes([b; 8]), true));
+                }
+                let nacc = 20 + rng.gen_usize(40);
+                for _ in 0..nacc {
+                    let cell = nput + rng.gen_usize(32 - nput);
+                    ops.push((cell, rng.next_u64(), false));
+                }
+                for &(cell, val, is_put) in &ops {
+                    let o = cell * 8;
+                    if is_put {
+                        expected[o..o + 8].copy_from_slice(&val.to_le_bytes());
+                    } else {
+                        let cur = u64::from_le_bytes(expected[o..o + 8].try_into().unwrap());
+                        expected[o..o + 8].copy_from_slice(&cur.wrapping_add(val).to_le_bytes());
+                    }
+                }
+                for batch in ops.chunks(12) {
+                    proc.win_lock(&ordered, LockKind::Exclusive, 1);
+                    proc.win_lock(&striped, LockKind::Shared, 1);
+                    for &(cell, val, is_put) in batch {
+                        if is_put {
+                            proc.put(&ordered, 1, cell * 8, &val.to_le_bytes());
+                            proc.put(&striped, 1, cell * 8, &val.to_le_bytes());
+                        } else {
+                            let add = val.to_le_bytes();
+                            proc.accumulate(&ordered, 1, cell * 8, &add, AccOp::SumU64);
+                            proc.accumulate(&striped, 1, cell * 8, &add, AccOp::SumU64);
+                        }
+                    }
+                    // flush_local inside an epoch is legal and must not
+                    // disturb the unlock's remote completion.
+                    proc.win_flush_local(&striped);
+                    proc.win_unlock(&ordered, 1);
+                    proc.win_unlock(&striped, 1);
+                }
+                proc.send(&world, 1, 9, &expected);
+            } else {
+                let expected = proc.recv(&world, Src::Rank(0), Tag::Value(9));
+                assert_eq!(
+                    ordered.read_local(0, WIN_BYTES),
+                    expected,
+                    "seed {seed} ({ic:?}): exclusive-epoch ordered window diverged"
+                );
+                assert_eq!(
+                    striped.read_local(0, WIN_BYTES),
+                    expected,
+                    "seed {seed} ({ic:?}, {stripe_mode}): shared-epoch striped window diverged"
+                );
+            }
+            bars[me].wait();
+            if t == 0 {
+                proc.barrier(&world);
+                assert_eq!(proc.policy_mismatch_count(), 0, "seed {seed}: wire contract");
+                let (hot, ordered, striped) = { shared.lock().unwrap().remove(&me).unwrap() };
+                proc.win_free(&world, ordered);
+                proc.win_free(&world, striped);
+                proc.comm_free(hot);
+            }
+            bars[me].wait();
+        });
+        assert_eq!(r.outcome, SimOutcome::Completed, "seed {seed} ({ic:?})");
+    }
+}
+
+// ---------------------------------------------------------------------
 // Determinism: identical seeds -> bit-identical virtual end times.
 // ---------------------------------------------------------------------
 

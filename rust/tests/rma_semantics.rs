@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use vcmpi::fabric::{AccOp, FabricConfig, Interconnect};
-use vcmpi::mpi::{run_cluster, ClusterSpec, Info, MpiConfig, MpiProc};
+use vcmpi::mpi::{run_cluster, ClusterSpec, Info, LockKind, MpiConfig, MpiProc};
 use vcmpi::sim::SimOutcome;
 
 fn fabric(interconnect: Interconnect, nodes: usize) -> FabricConfig {
@@ -468,5 +468,190 @@ fn opa_put_needs_target_progress_ib_does_not() {
     assert!(
         opa > 5.0 * ib,
         "OPA software put should be much slower than IB with a busy target: opa={opa} ib={ib}"
+    );
+}
+
+// ---- passive-target lock epochs ----
+
+#[test]
+fn shared_epoch_put_get_completes_at_unlock() {
+    // win_unlock must complete the epoch's ops to that target: the put is
+    // visible at the target and the get's data is retrievable, with no
+    // explicit flush anywhere. Both interconnect personalities.
+    for ic in [Interconnect::Ib, Interconnect::Opa] {
+        let spec = ClusterSpec::new(fabric(ic, 2), MpiConfig::optimized(4), 1);
+        run_ok(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let win = proc.win_create(&world, 256);
+            if proc.rank() == 1 {
+                win.write_local(64, &[0xAB; 32]);
+            }
+            proc.barrier(&world);
+            if proc.rank() == 0 {
+                proc.win_lock(&win, LockKind::Shared, 1);
+                proc.put(&win, 1, 0, &[5u8; 32]);
+                let h = proc.get(&win, 1, 64, 32);
+                proc.win_unlock(&win, 1);
+                assert_eq!(proc.get_data(&win, h), vec![0xAB; 32], "{ic:?}: get at unlock");
+                proc.send(&world, 1, 7, &[]);
+            } else {
+                proc.recv(&world, vcmpi::mpi::Src::Rank(0), vcmpi::mpi::Tag::Value(7));
+                assert_eq!(win.read_local(0, 32), vec![5u8; 32], "{ic:?}: put at unlock");
+            }
+            proc.win_free(&world, win);
+        });
+    }
+}
+
+#[test]
+fn exclusive_epoch_round_trip_both_fabrics() {
+    // Exclusive acquisition paths (OPA wire queue / IB CAS loop) both
+    // grant an uncontended lock and release it cleanly.
+    for ic in [Interconnect::Ib, Interconnect::Opa] {
+        let spec = ClusterSpec::new(fabric(ic, 2), MpiConfig::optimized(4), 1);
+        run_ok(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let win = proc.win_create(&world, 64);
+            if proc.rank() == 0 {
+                proc.win_lock(&win, LockKind::Exclusive, 1);
+                proc.put(&win, 1, 0, &[9u8; 8]);
+                proc.win_unlock(&win, 1);
+                proc.send(&world, 1, 7, &[]);
+            } else {
+                proc.recv(&world, vcmpi::mpi::Src::Rank(0), vcmpi::mpi::Tag::Value(7));
+                assert_eq!(win.read_local(0, 8), vec![9u8; 8], "{ic:?}");
+            }
+            proc.win_free(&world, win);
+        });
+    }
+}
+
+#[test]
+fn no_locks_elides_the_wire_protocol() {
+    // mpi_assert_no_locks must be load-bearing: the same lock/unlock
+    // program text pays zero protocol acquisitions on the asserted window
+    // and real ones on the default window — proven by the counters.
+    for ic in [Interconnect::Ib, Interconnect::Opa] {
+        for elide in [false, true] {
+            let spec = ClusterSpec::new(fabric(ic, 2), MpiConfig::optimized(4), 1);
+            run_ok(spec, move |proc, _t| {
+                let world = proc.comm_world();
+                let info = if elide {
+                    Info::new().with("mpi_assert_no_locks", "true")
+                } else {
+                    Info::new()
+                };
+                let win = proc.win_create_with_info(&world, 64, &info);
+                if proc.rank() == 0 {
+                    proc.win_lock(&win, LockKind::Shared, 1);
+                    proc.put(&win, 1, 0, &[3u8; 8]);
+                    proc.win_unlock(&win, 1);
+                    proc.send(&world, 1, 7, &[]);
+                    if elide {
+                        assert!(proc.lock_elision_count() > 0, "{ic:?}: elision fired");
+                        assert_eq!(proc.lock_wire_req_count(), 0, "{ic:?}: zero protocol");
+                    } else {
+                        assert_eq!(proc.lock_elision_count(), 0, "{ic:?}");
+                        assert!(proc.lock_wire_req_count() > 0, "{ic:?}: real protocol");
+                    }
+                } else {
+                    proc.recv(&world, vcmpi::mpi::Src::Rank(0), vcmpi::mpi::Tag::Value(7));
+                    // Completion semantics survive the elision.
+                    assert_eq!(win.read_local(0, 8), vec![3u8; 8], "{ic:?} elide={elide}");
+                }
+                proc.win_free(&world, win);
+            });
+        }
+    }
+}
+
+#[test]
+fn flush_local_then_unlock_still_completes_remotely() {
+    // flush_local waits local completion only (payloads are captured at
+    // injection here, so it is a charged bookkeeping no-op); the unlock
+    // must still complete the ops remotely.
+    for ic in [Interconnect::Ib, Interconnect::Opa] {
+        let spec = ClusterSpec::new(fabric(ic, 2), MpiConfig::optimized(4), 1);
+        run_ok(spec, move |proc, _t| {
+            let world = proc.comm_world();
+            let win = proc.win_create(&world, 64);
+            if proc.rank() == 0 {
+                proc.win_lock(&win, LockKind::Shared, 1);
+                proc.put(&win, 1, 0, &[4u8; 16]);
+                proc.win_flush_local(&win);
+                proc.win_unlock(&win, 1);
+                proc.send(&world, 1, 7, &[]);
+            } else {
+                proc.recv(&world, vcmpi::mpi::Src::Rank(0), vcmpi::mpi::Tag::Value(7));
+                assert_eq!(win.read_local(0, 16), vec![4u8; 16], "{ic:?}");
+            }
+            proc.win_free(&world, win);
+        });
+    }
+}
+
+#[test]
+fn lock_all_composes_with_striped_accumulates() {
+    // lock_all/unlock_all over a striped relaxed-ordering window: the
+    // counted-ack completion machinery must serve the unlock's flush, and
+    // every rank's contributions must land.
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 3), MpiConfig::optimized(4), 1);
+    run_ok(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let info = Info::new()
+            .with("accumulate_ordering", "none")
+            .with("vcmpi_striping", "rr")
+            .with("vcmpi_rx_doorbell", "true");
+        let win = proc.win_create_with_info(&world, 64, &info);
+        let n = proc.nprocs();
+        proc.win_lock_all(&win);
+        for target in 0..n {
+            for _ in 0..4 {
+                proc.accumulate(&win, target, 0, &1u64.to_le_bytes(), AccOp::SumU64);
+            }
+        }
+        proc.win_unlock_all(&win);
+        proc.barrier(&world);
+        let got = u64::from_le_bytes(win.read_local(0, 8).try_into().unwrap());
+        assert_eq!(got, (n * 4) as u64, "every rank's striped contributions landed");
+        assert_eq!(proc.policy_mismatch_count(), 0);
+        proc.win_free(&world, win);
+    });
+}
+
+#[test]
+fn win_free_with_open_epoch_panics() {
+    // The freed-comm-style tripwire: freeing a window with a lock epoch
+    // still open is erroneous and must fail loudly, not hang or leak.
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 1), MpiConfig::optimized(4), 1);
+    let r = run_cluster(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let info = Info::new().with("mpi_assert_no_locks", "true");
+        let win = proc.win_create_with_info(&world, 64, &info);
+        proc.win_lock(&win, LockKind::Shared, 0);
+        proc.win_free(&world, win); // erroneous: epoch still open
+    });
+    assert!(
+        matches!(r.outcome, SimOutcome::Panicked(ref m) if m.contains("passive-target epoch")),
+        "expected the open-epoch tripwire, got {:?}",
+        r.outcome
+    );
+}
+
+#[test]
+fn second_lock_to_same_target_panics() {
+    // MPI allows at most one lock epoch per (window, target) per process.
+    let spec = ClusterSpec::new(fabric(Interconnect::Opa, 1), MpiConfig::optimized(4), 1);
+    let r = run_cluster(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let info = Info::new().with("mpi_assert_no_locks", "true");
+        let win = proc.win_create_with_info(&world, 64, &info);
+        proc.win_lock(&win, LockKind::Shared, 0);
+        proc.win_lock(&win, LockKind::Shared, 0); // erroneous
+    });
+    assert!(
+        matches!(r.outcome, SimOutcome::Panicked(ref m) if m.contains("epoch already open")),
+        "expected the double-lock tripwire, got {:?}",
+        r.outcome
     );
 }

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Doc-integrity lint for the markdown guides (docs/ + README.md).
+
+Prose drifts: a renamed module silently breaks the architecture guide's
+links, and a renamed bench gate silently orphans the info-key table's
+"proven by" column. This lint makes both failures loud:
+
+  1. every relative markdown link `[text](path)` in README.md and
+     docs/**/*.md must resolve to an existing file or directory
+     (anchors `#...` are stripped; absolute URLs `http(s)://` and
+     pure-anchor links are skipped);
+  2. every `[[bench gate: NAME]]` marker in docs/**/*.md must name a
+     gate that literally appears in some rust/benches/*.rs source —
+     the same names the bench JSON reports emit and CI's bench job
+     gates on.
+
+Exit status: 0 clean, 1 violations (printed as file:line: message),
+2 usage/setup error. Optional argv[1] overrides the repo root.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — target captured up to the closing paren. Images
+# (![alt](..)) match too, which is what we want.
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+GATE_MARKER = re.compile(r"\[\[bench gate:\s*([A-Za-z0-9_]+)\s*\]\]")
+
+
+def check_links(md: Path, root: Path) -> list[str]:
+    errors = []
+    for lineno, line in enumerate(md.read_text().splitlines(), start=1):
+        for target in MD_LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{md.relative_to(root)}:{lineno}: broken link "
+                    f"{target!r} (resolved to {resolved})"
+                )
+    return errors
+
+
+def check_gates(md: Path, root: Path, bench_text: str) -> list[str]:
+    errors = []
+    for lineno, line in enumerate(md.read_text().splitlines(), start=1):
+        for gate in GATE_MARKER.findall(line):
+            if gate not in bench_text:
+                errors.append(
+                    f"{md.relative_to(root)}:{lineno}: [[bench gate: "
+                    f"{gate}]] names no gate in rust/benches/*.rs — "
+                    f"renamed or removed?"
+                )
+    return errors
+
+
+def main() -> int:
+    root = (Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")).resolve()
+    docs = sorted((root / "docs").rglob("*.md")) if (root / "docs").is_dir() else []
+    readme = root / "README.md"
+    targets = ([readme] if readme.is_file() else []) + docs
+    if not targets:
+        print(f"lint_doc_links: no README.md or docs/*.md under {root}", file=sys.stderr)
+        return 2
+    benches = sorted((root / "rust" / "benches").glob("*.rs"))
+    if not benches:
+        print(f"lint_doc_links: no bench sources under {root}/rust/benches", file=sys.stderr)
+        return 2
+    bench_text = "\n".join(b.read_text() for b in benches)
+    errors = []
+    for md in targets:
+        errors += check_links(md, root)
+        errors += check_gates(md, root, bench_text)
+    for e in errors:
+        print(e)
+    print(
+        f"lint_doc_links: {len(targets)} markdown file(s), "
+        f"{len(errors)} violation(s)",
+        file=sys.stderr,
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
