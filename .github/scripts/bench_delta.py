@@ -15,6 +15,13 @@ dropped more than PCT percent against its baseline — run-over-run
 erosion fails the job instead of only printing. Missing baselines never
 trip the threshold (there is nothing to regress against).
 
+Scenario and gate-ratio sets are allowed to drift between runs: a
+scenario present only in the current report is marked "new", one present
+only in the baseline is noted as removed, and gate keys that appeared or
+disappeared are listed — none of these trip --fail-over. A PR that adds
+a bench lane (or retires one) must not fail the delta job for that
+reason alone.
+
 Output is GitHub-flavored markdown on stdout.
 """
 
@@ -78,7 +85,8 @@ def main():
         print()
         print("| scenario | baseline Mmsg/s | current Mmsg/s | delta |")
         print("|---|---|---|---|")
-        for scen, rate in rates(cur).items():
+        cur_rates = rates(cur)
+        for scen, rate in cur_rates.items():
             prev = base_rates.get(scen)
             if prev and prev > 0.0:
                 pct = (rate - prev) / prev * 100.0
@@ -86,10 +94,19 @@ def main():
                 prev_s = fmt_rate(prev)
                 if fail_over is not None and pct < -fail_over:
                     regressions.append(f"{name}/{scen} {pct:+.1f}%")
+            elif base_rates and scen not in base_rates:
+                # Scenario added since the baseline: nothing to regress
+                # against, and not a reason to fail.
+                delta, prev_s = "new", "–"
             else:
                 delta, prev_s = "–", "–"
             print(f"| {scen} | {prev_s} | {fmt_rate(rate)} | {delta} |")
+        removed = [s for s in base_rates if s not in cur_rates]
+        if removed:
+            print()
+            print(f"_removed since baseline: {', '.join(sorted(removed))}_")
         gate = cur.get("gate", {})
+        base_gate = (base or {}).get("gate", {})
         if gate:
             print()
             ratios = ", ".join(
@@ -97,6 +114,16 @@ def main():
             )
             verdict = "PASS" if gate.get("pass") else "FAIL"
             print(f"gate: {verdict} ({ratios})")
+        gate_new = sorted(k for k in gate if k != "pass" and k not in base_gate)
+        gate_gone = sorted(k for k in base_gate if k != "pass" and k not in gate)
+        if base_gate and (gate_new or gate_gone):
+            notes = []
+            if gate_new:
+                notes.append(f"new gate keys: {', '.join(gate_new)}")
+            if gate_gone:
+                notes.append(f"gate keys removed: {', '.join(gate_gone)}")
+            print()
+            print(f"_{'; '.join(notes)}_")
         print()
     if not any_baseline:
         print("_No baseline reports found (first run on this branch?); "

@@ -94,12 +94,32 @@ pub struct HwContext {
     /// delivery: any message pushed while the bit reads clear is pushed
     /// before the next poll observes the queue.
     doorbell: OnceLock<(Arc<RxDoorbell>, usize)>,
+    /// Virtual time at which this context hard-fails (a FaultPlan
+    /// `kill`); `u64::MAX` = never. Once dead, deliveries are dropped
+    /// on the floor and the owning proc's progress loop fails the lane
+    /// over to a survivor.
+    killed_at: AtomicU64,
     backend: Backend,
 }
 
 impl HwContext {
     pub fn new(backend: Backend) -> Self {
-        HwContext { rx: Mutex::new(VecDeque::new()), doorbell: OnceLock::new(), backend }
+        HwContext {
+            rx: Mutex::new(VecDeque::new()),
+            doorbell: OnceLock::new(),
+            killed_at: AtomicU64::new(u64::MAX),
+            backend,
+        }
+    }
+
+    /// Schedule this context to hard-fail at virtual time `at_ns`.
+    pub fn kill_at(&self, at_ns: u64) {
+        self.killed_at.store(at_ns, Ordering::Release);
+    }
+
+    /// Has the scheduled hard-fail time passed?
+    pub fn is_killed(&self) -> bool {
+        self.killed_at.load(Ordering::Acquire) <= pnow(self.backend)
     }
 
     /// Bind this context's rx queue to `slot` of a pool-wide doorbell.
@@ -109,9 +129,26 @@ impl HwContext {
     }
 
     /// Deliver a message (called by remote injectors / the wire).
+    /// Deliveries to a hard-failed context vanish — the NIC is gone.
+    /// (The fault layer counts these; this uncounted guard also covers
+    /// direct `Injector` use.)
     pub fn deliver(&self, msg: WireMsg) {
+        if self.is_killed() {
+            return;
+        }
         let mut q = self.rx.lock().unwrap_or_else(|e| e.into_inner());
         q.push_back(msg);
+        if let Some((bell, slot)) = self.doorbell.get() {
+            bell.set(*slot);
+        }
+    }
+
+    /// Re-admit a frame at the *front* of the rx queue — used by the
+    /// reliable-delivery layer to splice parked (reordered) frames back
+    /// in sequence ahead of later traffic.
+    pub fn push_front(&self, msg: WireMsg) {
+        let mut q = self.rx.lock().unwrap_or_else(|e| e.into_inner());
+        q.push_front(msg);
         if let Some((bell, slot)) = self.doorbell.get() {
             bell.set(*slot);
         }
@@ -190,6 +227,7 @@ impl Injector {
             arrival,
             src_proc: self.proc,
             src_ctx: self.ctx_index,
+            rel: None,
             payload,
         });
     }

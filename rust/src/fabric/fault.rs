@@ -1,0 +1,374 @@
+//! Deterministic fabric fault injection and the reliable-delivery state
+//! that survives it.
+//!
+//! A [`FaultPlan`] is a seeded, per-link schedule installed on the
+//! [`Network`](super::Network) (config key `vcmpi_fault_plan`). Every
+//! injected frame rolls one fault decision — drop, duplicate,
+//! reorder-delay, corrupt, or nothing — from a SplitMix stream keyed by
+//! (seed, link, wire sequence number, attempt), so a given plan produces
+//! the *same* faults at the same points on every run: chaos tests are
+//! bit-for-bit reproducible under the DES determinism contract.
+//!
+//! When a plan is installed the fabric also turns on **reliable
+//! delivery** ([`RelState`]): frames carry a [`RelHeader`] with a
+//! per-channel sequence number, a payload checksum, and a piggybacked
+//! cumulative ack; receivers drop corrupt and duplicate frames
+//! (counted, never panicking) and re-order parked frames back into
+//! sequence; senders keep the unacked window and retransmit on a
+//! sim-time timeout with exponential backoff. None of this state exists
+//! when no plan is installed — the fault-free path is one `OnceLock`
+//! load.
+//!
+//! Channels are keyed by the **logical** destination context index (the
+//! one the sender addressed), not the physical one a failover redirect
+//! resolves to: sequence continuity survives a lane failover, so the
+//! survivor lane admits the dead lane's in-flight traffic in order.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::mix64;
+
+use super::wire::{ProcId, WireMsg};
+
+/// Golden-ratio increment (SplitMix64 stream constant).
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// Hard-fail one hardware context at a chosen sim time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CtxKill {
+    pub proc: ProcId,
+    pub ctx: usize,
+    /// Virtual time (ns) at which the context dies. Frames delivered at
+    /// or after this instant are dropped on the floor (counted).
+    pub at_ns: u64,
+}
+
+/// One per-frame fault decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultDecision {
+    None,
+    /// Frame never delivered; the retransmit path recovers it.
+    Drop,
+    /// Frame delivered twice (the receiver's dedup drops the echo).
+    Duplicate,
+    /// Payload (or, for dataless control frames, the checksum) is
+    /// bit-flipped in flight; the receiver's checksum drops it.
+    Corrupt,
+    /// Frame parked in limbo for this many extra ns — real reordering,
+    /// since the rx queue is popped in *delivery* order.
+    Delay(u64),
+}
+
+/// Injected-fault and recovery counters. All relaxed atomics: exact
+/// values are deterministic under the DES (single running thread).
+#[derive(Default)]
+pub struct FaultCounters {
+    pub drops: AtomicU64,
+    pub dups: AtomicU64,
+    pub corrupts: AtomicU64,
+    pub delays: AtomicU64,
+    /// Frames dropped because the destination context was hard-failed.
+    pub kill_drops: AtomicU64,
+    pub retransmits: AtomicU64,
+    /// Receiver-side drops: frame already admitted (stale seq).
+    pub rel_dup_drops: AtomicU64,
+    /// Receiver-side drops: checksum mismatch.
+    pub rel_corrupt_drops: AtomicU64,
+    /// Out-of-order frames parked until the gap fills.
+    pub rel_reorders: AtomicU64,
+}
+
+/// Plain snapshot of [`FaultCounters`] for bit-for-bit comparison.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub drops: u64,
+    pub dups: u64,
+    pub corrupts: u64,
+    pub delays: u64,
+    pub kill_drops: u64,
+    pub retransmits: u64,
+    pub rel_dup_drops: u64,
+    pub rel_corrupt_drops: u64,
+    pub rel_reorders: u64,
+}
+
+impl FaultCounters {
+    pub fn snapshot(&self) -> FaultStats {
+        FaultStats {
+            drops: self.drops.load(Ordering::Relaxed),
+            dups: self.dups.load(Ordering::Relaxed),
+            corrupts: self.corrupts.load(Ordering::Relaxed),
+            delays: self.delays.load(Ordering::Relaxed),
+            kill_drops: self.kill_drops.load(Ordering::Relaxed),
+            retransmits: self.retransmits.load(Ordering::Relaxed),
+            rel_dup_drops: self.rel_dup_drops.load(Ordering::Relaxed),
+            rel_corrupt_drops: self.rel_corrupt_drops.load(Ordering::Relaxed),
+            rel_reorders: self.rel_reorders.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Relaxed increment helper for fault counters.
+pub(super) fn bump(which: &AtomicU64) {
+    which.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A seeded per-link fault schedule. Probabilities are per-mille of
+/// injected frames; at most one fault fires per (frame, attempt).
+#[derive(Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub drop_pm: u64,
+    pub dup_pm: u64,
+    pub corrupt_pm: u64,
+    pub delay_pm: u64,
+    /// Extra in-flight time for a `Delay` decision.
+    pub delay_ns: u64,
+    /// Base retransmit timeout (doubles per attempt, capped).
+    pub retransmit_timeout_ns: u64,
+    pub kills: Vec<CtxKill>,
+    pub counters: FaultCounters,
+}
+
+impl FaultPlan {
+    /// A plan with the given seed and no faults enabled; set the
+    /// per-mille fields to taste (tests) or use [`FaultPlan::parse`].
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            drop_pm: 0,
+            dup_pm: 0,
+            corrupt_pm: 0,
+            delay_pm: 0,
+            delay_ns: 20_000,
+            retransmit_timeout_ns: 200_000,
+            kills: Vec::new(),
+            counters: FaultCounters::default(),
+        }
+    }
+
+    /// Parse the `vcmpi_fault_plan` spec string: comma-separated
+    /// `key=value` pairs. Keys: `seed`, `drop`/`dup`/`corrupt`/`delay`
+    /// (per-mille), `delay_ns`, `timeout_ns`, and repeatable
+    /// `kill=<proc>:<ctx>@<at_ns>`.
+    ///
+    /// Example: `seed=42,drop=20,dup=5,corrupt=10,delay=15,kill=1:2@5000000`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new(0);
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault plan: `{part}` is not key=value"))?;
+            let num = |v: &str| -> Result<u64, String> {
+                v.parse::<u64>().map_err(|_| format!("fault plan: `{key}={v}` is not a number"))
+            };
+            match key {
+                "seed" => plan.seed = num(val)?,
+                "drop" => plan.drop_pm = num(val)?,
+                "dup" => plan.dup_pm = num(val)?,
+                "corrupt" => plan.corrupt_pm = num(val)?,
+                "delay" => plan.delay_pm = num(val)?,
+                "delay_ns" => plan.delay_ns = num(val)?,
+                "timeout_ns" => plan.retransmit_timeout_ns = num(val)?,
+                "kill" => {
+                    let (pc, at) = val
+                        .split_once('@')
+                        .ok_or_else(|| format!("fault plan: kill `{val}` wants proc:ctx@ns"))?;
+                    let (p, c) = pc
+                        .split_once(':')
+                        .ok_or_else(|| format!("fault plan: kill `{val}` wants proc:ctx@ns"))?;
+                    plan.kills.push(CtxKill {
+                        proc: num(p)? as ProcId,
+                        ctx: num(c)? as usize,
+                        at_ns: num(at)?,
+                    });
+                }
+                _ => return Err(format!("fault plan: unknown key `{key}`")),
+            }
+        }
+        if plan.drop_pm + plan.dup_pm + plan.corrupt_pm + plan.delay_pm > 1000 {
+            return Err("fault plan: per-mille probabilities exceed 1000".into());
+        }
+        Ok(plan)
+    }
+
+    /// Does any fault class ever fire? (Kills still count.)
+    pub fn any_frame_faults(&self) -> bool {
+        self.drop_pm + self.dup_pm + self.corrupt_pm + self.delay_pm > 0
+    }
+
+    /// The per-frame decision: one SplitMix draw keyed by (seed, link,
+    /// seq, attempt). Attempt participates so a retransmission of a
+    /// dropped frame rolls a fresh (but still reproducible) decision —
+    /// otherwise a dropped seq would be dropped forever.
+    pub fn decide(
+        &self,
+        src_proc: ProcId,
+        src_ctx: usize,
+        dst_proc: ProcId,
+        dst_ctx: usize,
+        seq: u64,
+        attempt: u64,
+    ) -> FaultDecision {
+        let link = mix64(
+            ((src_proc as u64) << 48)
+                ^ ((src_ctx as u64) << 32)
+                ^ ((dst_proc as u64) << 16)
+                ^ (dst_ctx as u64),
+        );
+        let roll = mix64(
+            self.seed ^ link ^ mix64(seq.wrapping_mul(GOLDEN)) ^ attempt.wrapping_mul(GOLDEN),
+        );
+        let r = roll % 1000;
+        if r < self.drop_pm {
+            FaultDecision::Drop
+        } else if r < self.drop_pm + self.dup_pm {
+            FaultDecision::Duplicate
+        } else if r < self.drop_pm + self.dup_pm + self.corrupt_pm {
+            FaultDecision::Corrupt
+        } else if r < self.drop_pm + self.dup_pm + self.corrupt_pm + self.delay_pm {
+            // Vary the delay a little (same stream, different lane of it)
+            // so delayed frames don't all land on one instant.
+            let jitter = mix64(roll.wrapping_add(GOLDEN)) % self.delay_ns.max(1);
+            FaultDecision::Delay(self.delay_ns + jitter)
+        } else {
+            FaultDecision::None
+        }
+    }
+
+    /// Which bit (of the wire payload) a `Corrupt` decision flips, drawn
+    /// from the same stream as the decision itself.
+    pub fn corrupt_bit(&self, seq: u64, len_bits: usize) -> usize {
+        (mix64(self.seed ^ seq.wrapping_mul(GOLDEN) ^ GOLDEN) % len_bits.max(1) as u64) as usize
+    }
+}
+
+/// One sender-side unacked frame.
+#[derive(Debug)]
+pub struct TxEntry {
+    pub payload: super::wire::Payload,
+    /// Next sim time at which this frame is retransmitted.
+    pub resend_at: u64,
+    /// Current backoff interval (doubles per attempt, capped).
+    pub backoff: u64,
+    /// Retransmission count so far (0 = only the original send).
+    pub attempts: u64,
+}
+
+/// Sender side of one reliable channel.
+#[derive(Debug, Default)]
+pub struct TxChannel {
+    /// Next sequence number to assign. Sequences start at 1.
+    pub next_seq: u64,
+    pub unacked: BTreeMap<u64, TxEntry>,
+}
+
+/// Receiver side of one reliable channel.
+#[derive(Debug)]
+pub struct RxChannel {
+    /// Next expected sequence (cumulative delivered = `next - 1`).
+    pub next: u64,
+    /// Out-of-order frames waiting for the gap to fill.
+    pub parked: BTreeMap<u64, WireMsg>,
+}
+
+impl Default for RxChannel {
+    fn default() -> Self {
+        RxChannel { next: 1, parked: BTreeMap::new() }
+    }
+}
+
+/// Reliable channel key: (src proc, src ctx, dst proc, **logical** dst
+/// ctx). BTreeMaps keep every iteration (retransmit scans, limbo
+/// release) in deterministic order — HashMap order is randomized and
+/// would break replay.
+pub type ChanKey = (ProcId, usize, ProcId, usize);
+
+/// All reliable-delivery state, allocated only when a plan is installed.
+#[derive(Default)]
+pub struct RelState {
+    pub tx: Mutex<BTreeMap<ChanKey, TxChannel>>,
+    pub rx: Mutex<BTreeMap<ChanKey, RxChannel>>,
+    /// Reorder-delayed frames, keyed by (dst proc, logical dst ctx),
+    /// each with its release time. Redirects resolve at release.
+    pub limbo: Mutex<BTreeMap<(ProcId, usize), Vec<(u64, WireMsg)>>>,
+    /// Lane-failover context redirects: (proc, logical ctx) → physical
+    /// ctx. Installed by the owning proc; applied at every delivery.
+    pub redirect: Mutex<BTreeMap<(ProcId, usize), usize>>,
+}
+
+impl RelState {
+    /// Resolve a failover redirect (identity when none installed).
+    pub fn resolve(&self, proc: ProcId, ctx: usize) -> usize {
+        let r = self.redirect.lock().unwrap_or_else(|e| e.into_inner());
+        *r.get(&(proc, ctx)).unwrap_or(&ctx)
+    }
+}
+
+/// Cap for exponential backoff so `resend_at` can't overflow u64 even
+/// under absurd virtual times.
+pub const MAX_BACKOFF_NS: u64 = 1 << 40;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let p = FaultPlan::parse("seed=42, drop=20,dup=5,corrupt=10,delay=15,delay_ns=2000,timeout_ns=9000,kill=1:2@5000000,kill=0:1@7")
+            .expect("parses");
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.drop_pm, 20);
+        assert_eq!(p.dup_pm, 5);
+        assert_eq!(p.corrupt_pm, 10);
+        assert_eq!(p.delay_pm, 15);
+        assert_eq!(p.delay_ns, 2000);
+        assert_eq!(p.retransmit_timeout_ns, 9000);
+        assert_eq!(
+            p.kills,
+            vec![
+                CtxKill { proc: 1, ctx: 2, at_ns: 5_000_000 },
+                CtxKill { proc: 0, ctx: 1, at_ns: 7 }
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("drop").is_err());
+        assert!(FaultPlan::parse("drop=many").is_err());
+        assert!(FaultPlan::parse("frobnicate=1").is_err());
+        assert!(FaultPlan::parse("kill=1@2").is_err());
+        assert!(FaultPlan::parse("drop=600,dup=600").is_err());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::parse("seed=1,drop=100,dup=50,corrupt=50,delay=50").unwrap();
+        let b = FaultPlan::parse("seed=1,drop=100,dup=50,corrupt=50,delay=50").unwrap();
+        let c = FaultPlan::parse("seed=2,drop=100,dup=50,corrupt=50,delay=50").unwrap();
+        let mut differs = false;
+        for seq in 0..512 {
+            let da = a.decide(0, 1, 1, 2, seq, 0);
+            assert_eq!(da, b.decide(0, 1, 1, 2, seq, 0), "same seed, same decision");
+            // Attempt participates: a retransmit rolls fresh.
+            let _ = a.decide(0, 1, 1, 2, seq, 1);
+            if da != c.decide(0, 1, 1, 2, seq, 0) {
+                differs = true;
+            }
+        }
+        assert!(differs, "different seeds should diverge somewhere in 512 draws");
+    }
+
+    #[test]
+    fn decision_rates_roughly_match_per_mille() {
+        let p = FaultPlan::parse("seed=7,drop=200").unwrap();
+        let drops = (0..10_000)
+            .filter(|&s| p.decide(0, 0, 1, 0, s, 0) == FaultDecision::Drop)
+            .count();
+        // 200 per mille of 10k = 2000; allow a generous band.
+        assert!((1500..2500).contains(&drops), "drop rate {drops}/10000 far from 20%");
+    }
+}

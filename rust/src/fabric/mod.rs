@@ -19,12 +19,16 @@
 //! (160 on the Intel HFI).
 
 mod context;
+mod fault;
 mod registry;
 mod wire;
 
 pub use context::{HwContext, Injector, RxDoorbell};
+pub use fault::{CtxKill, FaultDecision, FaultPlan, FaultStats};
 pub use registry::{FabricConfig, Network, ProcFabric, WindowMem, WinLockWord};
-pub use wire::{AccOp, LockKind, P2pProtocol, Payload, ProcId, RmaCompletion, WireMsg, WinId};
+pub use wire::{
+    AccOp, LockKind, P2pProtocol, Payload, ProcId, RelHeader, RmaCompletion, WireMsg, WinId,
+};
 
 /// Interconnect personality (paper §3: the two testbed families).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

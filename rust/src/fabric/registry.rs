@@ -10,11 +10,12 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::platform::{padvance, Backend};
+use crate::platform::{padvance, pnow, Backend};
 use crate::sim::CostModel;
 
 use super::context::{HwContext, Injector};
-use super::wire::{ProcId, WinId};
+use super::fault::{self, ChanKey, FaultDecision, FaultPlan, RelState, RxChannel, TxEntry};
+use super::wire::{Payload, ProcId, RelHeader, WinId, WireMsg};
 use super::Interconnect;
 
 /// Fabric/topology configuration.
@@ -163,6 +164,11 @@ pub struct Network {
     procs: Vec<ProcEntry>,
     /// Open contexts per node (hardware limit accounting).
     node_open: Vec<AtomicUsize>,
+    /// Installed fault schedule (`vcmpi_fault_plan`). Empty on the
+    /// fault-free path: every hot-path check is one `OnceLock` load.
+    fault: OnceLock<Arc<FaultPlan>>,
+    /// Reliable-delivery state; allocated with the plan, never before.
+    rel: OnceLock<RelState>,
 }
 
 impl Network {
@@ -175,7 +181,36 @@ impl Network {
             })
             .collect();
         let node_open = (0..cfg.nodes).map(|_| AtomicUsize::new(0)).collect();
-        Arc::new(Network { cfg, backend, costs, procs, node_open })
+        Arc::new(Network {
+            cfg,
+            backend,
+            costs,
+            procs,
+            node_open,
+            fault: OnceLock::new(),
+            rel: OnceLock::new(),
+        })
+    }
+
+    /// Install a fault schedule. Must happen before the program's
+    /// traffic starts (run_cluster installs it before procs spawn);
+    /// scheduled context kills are also applied to any already-open
+    /// contexts. Installing twice panics — a plan is per-run.
+    pub fn install_fault_plan(&self, plan: Arc<FaultPlan>) {
+        for k in &plan.kills {
+            if k.proc < self.cfg.nprocs() {
+                if let Some(ctx) = self.procs[k.proc].ctxs.get(k.ctx).and_then(|c| c.get()) {
+                    ctx.kill_at(k.at_ns);
+                }
+            }
+        }
+        self.rel.set(RelState::default()).ok().expect("fault plan already installed");
+        self.fault.set(plan).ok().expect("fault plan already installed");
+    }
+
+    /// The installed fault schedule, if any.
+    pub fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        self.fault.get()
     }
 
     pub fn config(&self) -> &FabricConfig {
@@ -250,6 +285,13 @@ impl ProcFabric {
         let idx = entry.n_open.fetch_add(1, Ordering::SeqCst);
         assert!(idx < MAX_CTXS, "context table overflow");
         let ctx = Arc::new(HwContext::new(self.net.backend));
+        if let Some(plan) = self.net.fault.get() {
+            for k in &plan.kills {
+                if k.proc == self.proc && k.ctx == idx {
+                    ctx.kill_at(k.at_ns);
+                }
+            }
+        }
         entry.ctxs[idx].set(ctx.clone()).ok().expect("slot already set");
         Some((idx, ctx))
     }
@@ -298,24 +340,387 @@ impl ProcFabric {
         dst_ctx: usize,
         payload: crate::fabric::Payload,
     ) {
+        let arrival = self.charge_inject(dst_proc, payload.wire_bytes());
+        if let Some(plan) = self.net.fault.get() {
+            return self.inject_faulted(plan, src_ctx, dst_proc, dst_ctx, payload, arrival);
+        }
+        let target = self.context(dst_proc, dst_ctx);
+        target.deliver(WireMsg { arrival, src_proc: self.proc, src_ctx, rel: None, payload });
+    }
+
+    /// Charge the caller the per-message injection cost (shm or NIC by
+    /// topology) and stamp the arrival time.
+    fn charge_inject(&self, dst_proc: ProcId, bytes: usize) -> u64 {
         let costs = &self.net.costs;
         let backend = self.net.backend;
-        let bytes = payload.wire_bytes();
         let intranode = self.net.node_of(self.proc) == self.net.node_of(dst_proc);
-        let arrival = if intranode {
+        if intranode {
             padvance(backend, costs.shm_inject);
-            crate::platform::pnow(backend) + costs.shm_latency + costs.memcpy_cost(bytes)
+            pnow(backend) + costs.shm_latency + costs.memcpy_cost(bytes)
         } else {
             padvance(backend, costs.nic_inject);
-            crate::platform::pnow(backend) + costs.dma_cost(bytes) + costs.wire_latency
+            pnow(backend) + costs.dma_cost(bytes) + costs.wire_latency
+        }
+    }
+
+    /// Slow-path inject while a fault plan is installed: stamp a
+    /// reliable-delivery header (sequence, checksum, piggyback ack),
+    /// record the frame in the unacked window, then roll the fault
+    /// decision and deliver/drop/dup/corrupt/delay accordingly.
+    fn inject_faulted(
+        &self,
+        plan: &Arc<FaultPlan>,
+        src_ctx: usize,
+        dst_proc: ProcId,
+        dst_ctx: usize,
+        payload: Payload,
+        arrival: u64,
+    ) {
+        let rel = self.net.rel.get().expect("rel state installed with plan");
+        let now = pnow(self.net.backend);
+        let chan: ChanKey = (self.proc, src_ctx, dst_proc, dst_ctx);
+        let seq = {
+            let mut tx = rel.tx.lock().unwrap_or_else(|e| e.into_inner());
+            let ch = tx.entry(chan).or_default();
+            ch.next_seq += 1;
+            let seq = ch.next_seq;
+            ch.unacked.insert(
+                seq,
+                TxEntry {
+                    payload: payload.clone(),
+                    resend_at: now + plan.retransmit_timeout_ns,
+                    backoff: plan.retransmit_timeout_ns,
+                    attempts: 0,
+                },
+            );
+            seq
         };
-        let target = self.context(dst_proc, dst_ctx);
-        target.deliver(crate::fabric::WireMsg {
+        let header = RelHeader {
+            seq,
+            checksum: payload.digest(),
+            ack: self.rx_cumulative(rel, (dst_proc, dst_ctx, self.proc, src_ctx)),
+            chan_dst_ctx: dst_ctx as u32,
+        };
+        let mut msg =
+            WireMsg { arrival, src_proc: self.proc, src_ctx, rel: Some(header), payload };
+        match plan.decide(self.proc, src_ctx, dst_proc, dst_ctx, seq, 0) {
+            FaultDecision::Drop => {
+                fault::bump(&plan.counters.drops);
+            }
+            FaultDecision::Duplicate => {
+                fault::bump(&plan.counters.dups);
+                self.deliver_resolved(rel, plan, dst_proc, dst_ctx, msg.clone());
+                self.deliver_resolved(rel, plan, dst_proc, dst_ctx, msg);
+            }
+            FaultDecision::Corrupt => {
+                fault::bump(&plan.counters.corrupts);
+                let bit = plan.corrupt_bit(seq, msg.payload.wire_bytes() * 8);
+                if !msg.payload.flip_data_bit(bit) {
+                    // Dataless control frame: corrupt the checksum
+                    // header instead — same receiver-side outcome.
+                    if let Some(h) = msg.rel.as_mut() {
+                        h.checksum ^= 1 << (bit % 64);
+                    }
+                }
+                self.deliver_resolved(rel, plan, dst_proc, dst_ctx, msg);
+            }
+            FaultDecision::Delay(extra) => {
+                fault::bump(&plan.counters.delays);
+                let release = msg.arrival + extra;
+                let mut limbo = rel.limbo.lock().unwrap_or_else(|e| e.into_inner());
+                limbo.entry((dst_proc, dst_ctx)).or_default().push((release, msg));
+            }
+            FaultDecision::None => {
+                self.deliver_resolved(rel, plan, dst_proc, dst_ctx, msg);
+            }
+        }
+    }
+
+    /// Cumulative admitted sequence on one of our rx channels (what we
+    /// piggyback as an ack on reverse traffic).
+    fn rx_cumulative(&self, rel: &RelState, chan: ChanKey) -> u64 {
+        let rx = rel.rx.lock().unwrap_or_else(|e| e.into_inner());
+        rx.get(&chan).map_or(0, |c| c.next - 1)
+    }
+
+    /// Deliver through the failover redirect table; frames landing on a
+    /// hard-failed context vanish (counted — retransmit recovers them
+    /// once the owning proc installs a redirect).
+    fn deliver_resolved(
+        &self,
+        rel: &RelState,
+        plan: &Arc<FaultPlan>,
+        dst_proc: ProcId,
+        logical_dst: usize,
+        msg: WireMsg,
+    ) {
+        let phys = rel.resolve(dst_proc, logical_dst);
+        let target = self.context(dst_proc, phys);
+        if target.is_killed() {
+            fault::bump(&plan.counters.kill_drops);
+            return;
+        }
+        target.deliver(msg);
+    }
+
+    /// Poll local context `ctx_index` for one admissible message.
+    ///
+    /// Fault-free path: exactly `HwContext::poll` (one `OnceLock` load
+    /// of overhead). With a plan installed, this is the
+    /// reliable-delivery admission point: due limbo frames are released
+    /// first, then frames are popped and checked — corrupt frames
+    /// (checksum mismatch) and duplicates (stale sequence) are dropped
+    /// and counted, out-of-order frames are parked until the gap fills,
+    /// piggybacked acks prune the reverse unacked window, and NIC-level
+    /// `RelAck` frames are consumed here so the MPI layer never sees
+    /// them.
+    pub fn poll_ctx(&self, ctx_index: usize) -> Option<WireMsg> {
+        let ctx = self.context(self.proc, ctx_index);
+        let Some(plan) = self.net.fault.get() else {
+            return ctx.poll(&self.net.costs);
+        };
+        let rel = self.net.rel.get().expect("rel state installed with plan");
+        self.release_due_limbo(rel, plan);
+        loop {
+            let msg = ctx.poll(&self.net.costs)?;
+            let Some(hdr) = msg.rel else {
+                if let Payload::RelAck { ack, chan_src_ctx, chan_dst_ctx } = msg.payload {
+                    // Ack for frames WE sent: (us, chan_src_ctx) →
+                    // (them, chan_dst_ctx).
+                    self.prune_acked(
+                        rel,
+                        (self.proc, chan_src_ctx as usize, msg.src_proc, chan_dst_ctx as usize),
+                        ack,
+                    );
+                    continue;
+                }
+                return Some(msg);
+            };
+            // Piggybacked ack covers the reverse channel: frames we
+            // sent from the context they addressed.
+            self.prune_acked(
+                rel,
+                (self.proc, hdr.chan_dst_ctx as usize, msg.src_proc, msg.src_ctx),
+                hdr.ack,
+            );
+            if msg.payload.digest() != hdr.checksum {
+                fault::bump(&plan.counters.rel_corrupt_drops);
+                continue;
+            }
+            let chan: ChanKey = (msg.src_proc, msg.src_ctx, self.proc, hdr.chan_dst_ctx as usize);
+            let mut rx = rel.rx.lock().unwrap_or_else(|e| e.into_inner());
+            let ch = rx.entry(chan).or_default();
+            if hdr.seq < ch.next {
+                // Already admitted: the sender is retransmitting past
+                // our piggyback window — answer with a standalone ack.
+                fault::bump(&plan.counters.rel_dup_drops);
+                let ack = ch.next - 1;
+                drop(rx);
+                self.send_rel_ack(rel, msg.src_proc, msg.src_ctx, hdr.chan_dst_ctx, ack);
+                continue;
+            }
+            if hdr.seq > ch.next {
+                // Gap: park until the missing frames arrive. A parked
+                // duplicate is dropped.
+                if ch.parked.insert(hdr.seq, msg).is_none() {
+                    fault::bump(&plan.counters.rel_reorders);
+                } else {
+                    fault::bump(&plan.counters.rel_dup_drops);
+                }
+                continue;
+            }
+            // In sequence: admit, then splice any contiguous parked run
+            // back into the rx queue front (order-preserving).
+            ch.next += 1;
+            let mut run = Vec::new();
+            while let Some(parked) = ch.parked.remove(&ch.next) {
+                ch.next += 1;
+                run.push(parked);
+            }
+            drop(rx);
+            let now = pnow(self.net.backend);
+            for mut parked in run.into_iter().rev() {
+                parked.rel = None; // already admitted; bypass re-checks
+                parked.arrival = parked.arrival.min(now);
+                ctx.push_front(parked);
+            }
+            return Some(msg);
+        }
+    }
+
+    /// Deliver every limbo (reorder-delayed) frame destined to this
+    /// process whose release time has passed.
+    fn release_due_limbo(&self, rel: &RelState, plan: &Arc<FaultPlan>) {
+        let now = pnow(self.net.backend);
+        let due: Vec<(usize, WireMsg)> = {
+            let mut limbo = rel.limbo.lock().unwrap_or_else(|e| e.into_inner());
+            let mut due = Vec::new();
+            for ((dst_proc, logical), frames) in limbo.iter_mut() {
+                if *dst_proc != self.proc {
+                    continue;
+                }
+                let mut i = 0;
+                while i < frames.len() {
+                    if frames[i].0 <= now {
+                        let (_, mut msg) = frames.remove(i);
+                        // The frame sat in limbo past its stamped
+                        // arrival; it lands now.
+                        msg.arrival = msg.arrival.max(now);
+                        due.push((*logical, msg));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            limbo.retain(|_, v| !v.is_empty());
+            due
+        };
+        for (logical, msg) in due {
+            self.deliver_resolved(rel, plan, self.proc, logical, msg);
+        }
+    }
+
+    /// Drop acked entries from one of our tx channels.
+    fn prune_acked(&self, rel: &RelState, chan: ChanKey, ack: u64) {
+        if ack == 0 {
+            return;
+        }
+        let mut tx = rel.tx.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(ch) = tx.get_mut(&chan) {
+            ch.unacked.retain(|&seq, _| seq > ack);
+        }
+    }
+
+    /// Emit a standalone NIC-level ack (fault-exempt, no rel header).
+    fn send_rel_ack(
+        &self,
+        rel: &RelState,
+        dst_proc: ProcId,
+        dst_ctx: usize,
+        chan_dst_ctx: u32,
+        ack: u64,
+    ) {
+        let phys = rel.resolve(dst_proc, dst_ctx);
+        let target = self.context(dst_proc, phys);
+        if target.is_killed() {
+            return;
+        }
+        let arrival = pnow(self.net.backend) + self.net.costs.wire_latency;
+        target.deliver(WireMsg {
             arrival,
             src_proc: self.proc,
-            src_ctx,
-            payload,
+            src_ctx: chan_dst_ctx as usize,
+            rel: None,
+            payload: Payload::RelAck { ack, chan_src_ctx: dst_ctx as u32, chan_dst_ctx },
         });
+    }
+
+    /// Retransmit every timed-out unacked frame this process sent.
+    /// Driven from the MPI progress loop while a plan is installed
+    /// (gated there on a cached flag — the fault-free path never calls
+    /// this). Retransmissions roll a *fresh* fault decision (attempt
+    /// participates in the key), so a dropped frame is eventually
+    /// delivered with probability → 1 while staying deterministic.
+    pub fn drive_retransmits(&self) {
+        let Some(plan) = self.net.fault.get() else {
+            return;
+        };
+        let rel = self.net.rel.get().expect("rel state installed with plan");
+        let now = pnow(self.net.backend);
+        let mut resend: Vec<(ChanKey, u64, u64, Payload)> = Vec::new();
+        {
+            let mut tx = rel.tx.lock().unwrap_or_else(|e| e.into_inner());
+            for (&chan, ch) in tx.iter_mut() {
+                if chan.0 != self.proc {
+                    continue;
+                }
+                for (&seq, e) in ch.unacked.iter_mut() {
+                    if e.resend_at <= now {
+                        e.attempts += 1;
+                        e.backoff = (e.backoff * 2).min(fault::MAX_BACKOFF_NS);
+                        e.resend_at = now + e.backoff;
+                        resend.push((chan, seq, e.attempts, e.payload.clone()));
+                    }
+                }
+            }
+        }
+        for ((_, src_ctx, dst_proc, dst_ctx), seq, attempt, payload) in resend {
+            fault::bump(&plan.counters.retransmits);
+            let arrival = self.charge_inject(dst_proc, payload.wire_bytes());
+            let header = RelHeader {
+                seq,
+                checksum: payload.digest(),
+                ack: self.rx_cumulative(rel, (dst_proc, dst_ctx, self.proc, src_ctx)),
+                chan_dst_ctx: dst_ctx as u32,
+            };
+            let mut msg =
+                WireMsg { arrival, src_proc: self.proc, src_ctx, rel: Some(header), payload };
+            match plan.decide(self.proc, src_ctx, dst_proc, dst_ctx, seq, attempt) {
+                FaultDecision::Drop => {
+                    fault::bump(&plan.counters.drops);
+                }
+                FaultDecision::Duplicate => {
+                    fault::bump(&plan.counters.dups);
+                    self.deliver_resolved(rel, plan, dst_proc, dst_ctx, msg.clone());
+                    self.deliver_resolved(rel, plan, dst_proc, dst_ctx, msg);
+                }
+                FaultDecision::Corrupt => {
+                    fault::bump(&plan.counters.corrupts);
+                    let bit = plan.corrupt_bit(seq ^ attempt, msg.payload.wire_bytes() * 8);
+                    if !msg.payload.flip_data_bit(bit) {
+                        if let Some(h) = msg.rel.as_mut() {
+                            h.checksum ^= 1 << (bit % 64);
+                        }
+                    }
+                    self.deliver_resolved(rel, plan, dst_proc, dst_ctx, msg);
+                }
+                FaultDecision::Delay(extra) => {
+                    fault::bump(&plan.counters.delays);
+                    let release = msg.arrival + extra;
+                    let mut limbo = rel.limbo.lock().unwrap_or_else(|e| e.into_inner());
+                    limbo.entry((dst_proc, dst_ctx)).or_default().push((release, msg));
+                }
+                FaultDecision::None => {
+                    self.deliver_resolved(rel, plan, dst_proc, dst_ctx, msg);
+                }
+            }
+        }
+    }
+
+    /// Has local context `ctx_index` hard-failed (FaultPlan kill whose
+    /// time has passed)?
+    pub fn ctx_killed(&self, ctx_index: usize) -> bool {
+        self.net.procs[self.proc].ctxs[ctx_index].get().is_some_and(|c| c.is_killed())
+    }
+
+    /// Install a lane-failover redirect for one of this process's
+    /// contexts: traffic addressed to `from_ctx` (including in-flight
+    /// retransmits and limbo frames) is delivered to `to_ctx` instead.
+    /// Reliable-channel keys stay logical, so sequence continuity is
+    /// preserved across the move. No-op without a fault plan.
+    pub fn install_ctx_redirect(&self, from_ctx: usize, to_ctx: usize) {
+        if let Some(rel) = self.net.rel.get() {
+            let mut r = rel.redirect.lock().unwrap_or_else(|e| e.into_inner());
+            // Collapse chains: anything of ours already pointing at
+            // `from_ctx` now points at `to_ctx`.
+            for ((p, _), v) in r.iter_mut() {
+                if *p == self.proc && *v == from_ctx {
+                    *v = to_ctx;
+                }
+            }
+            r.insert((self.proc, from_ctx), to_ctx);
+        }
+    }
+
+    /// Whether a fault plan is installed (cached by the MPI layer to
+    /// gate every chaos-only branch on one bool).
+    pub fn has_fault_plan(&self) -> bool {
+        self.net.fault.get().is_some()
+    }
+
+    /// Installed fault plan, if any (chaos tests read its counters).
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.net.fault.get().cloned()
     }
 
     /// Completion stamp for a hardware-executed RMA (IB personality):

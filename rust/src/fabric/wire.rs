@@ -45,6 +45,25 @@ pub enum P2pProtocol {
     Data { recv_handle: u64 },
 }
 
+/// Reliable-delivery header stamped on every frame while a
+/// [`FaultPlan`](crate::fabric::FaultPlan) is installed; `None` on the
+/// fault-free path (zero cost, zero state).
+#[derive(Clone, Copy, Debug)]
+pub struct RelHeader {
+    /// Per-channel wire sequence number (1-based). The channel is
+    /// (src proc, src ctx, dst proc, logical dst ctx).
+    pub seq: u64,
+    /// [`Payload::digest`] at injection; admission drops on mismatch.
+    pub checksum: u64,
+    /// Piggybacked cumulative ack for the *reverse* channel: the sender
+    /// has admitted everything up to this sequence from the receiver.
+    pub ack: u64,
+    /// The destination context the sender addressed — the channel key —
+    /// which may differ from the context the frame physically lands on
+    /// after a lane-failover redirect.
+    pub chan_dst_ctx: u32,
+}
+
 /// A message sitting in (or headed for) a hardware context's rx queue.
 #[derive(Clone, Debug)]
 pub struct WireMsg {
@@ -53,6 +72,9 @@ pub struct WireMsg {
     pub src_proc: ProcId,
     /// Index of the source context (for addressing replies).
     pub src_ctx: usize,
+    /// Reliable-delivery header; `None` when no fault plan is installed
+    /// (and on NIC-level [`Payload::RelAck`] frames, which are exempt).
+    pub rel: Option<RelHeader>,
     pub payload: Payload,
 }
 
@@ -149,6 +171,14 @@ pub enum Payload {
     /// lock request (possibly relayed through a third rank) can never
     /// find the old epoch still open.
     RmaUnlock { win: WinId, kind: LockKind, handle: u64 },
+    /// Standalone reliable-delivery ack, emitted when a receiver drops a
+    /// duplicate frame (the sender is clearly retransmitting past the
+    /// piggyback window). Modeled as NIC-level traffic: fault-exempt,
+    /// zero wire bytes, and consumed inside the fabric's poll wrapper —
+    /// the MPI layer never sees it. `chan_src_ctx`/`chan_dst_ctx`
+    /// identify the acked channel from the *original sender's*
+    /// perspective; `ack` is the cumulative admitted sequence.
+    RelAck { ack: u64, chan_src_ctx: u32, chan_dst_ctx: u32 },
 }
 
 /// Initiator-side record of an RMA operation's completion semantics.
@@ -178,8 +208,132 @@ impl Payload {
             | Payload::RmaAckCount { .. }
             | Payload::RmaLockReq { .. }
             | Payload::RmaLockGrant { .. }
-            | Payload::RmaUnlock { .. } => 0,
+            | Payload::RmaUnlock { .. }
+            | Payload::RelAck { .. } => 0,
         }
+    }
+
+    /// Checksum over every field that crosses the wire — a mix64 chain,
+    /// not a CRC, but collision-resistant enough to catch the fault
+    /// layer's single-bit flips with certainty. Stamped into
+    /// [`RelHeader::checksum`] at injection and re-computed at
+    /// admission.
+    pub fn digest(&self) -> u64 {
+        use crate::util::mix64;
+        fn fold(h: u64, v: u64) -> u64 {
+            mix64(h.wrapping_mul(0x9E3779B97F4A7C15) ^ v)
+        }
+        fn fold_bytes(mut h: u64, data: &[u8]) -> u64 {
+            for chunk in data.chunks(8) {
+                let mut w = [0u8; 8];
+                w[..chunk.len()].copy_from_slice(chunk);
+                h = fold(h, u64::from_le_bytes(w));
+            }
+            fold(h, data.len() as u64)
+        }
+        match self {
+            Payload::TwoSided {
+                comm_id,
+                src_rank,
+                dst_rank,
+                tag,
+                seq,
+                stripe_home,
+                protocol,
+                needs_ack,
+                data,
+            } => {
+                let mut h = fold(1, *comm_id);
+                h = fold(h, *src_rank as u64);
+                h = fold(h, *dst_rank as u64);
+                h = fold(h, *tag as u64);
+                h = fold(h, *seq);
+                h = fold(h, stripe_home.map_or(u64::MAX, |s| s as u64));
+                h = match protocol {
+                    P2pProtocol::Eager { send_handle } => fold(fold(h, 10), *send_handle),
+                    P2pProtocol::Rts { send_handle } => fold(fold(h, 11), *send_handle),
+                    P2pProtocol::Cts { send_handle, recv_handle } => {
+                        fold(fold(fold(h, 12), *send_handle), *recv_handle)
+                    }
+                    P2pProtocol::Data { recv_handle } => fold(fold(h, 13), *recv_handle),
+                };
+                h = fold(h, *needs_ack as u64);
+                fold_bytes(h, data)
+            }
+            Payload::SendAck { send_handle } => fold(2, *send_handle),
+            Payload::RmaPut { win, offset, data, flush_handle, lane } => {
+                let mut h = fold(3, *win);
+                h = fold(h, *offset as u64);
+                h = fold(h, *flush_handle);
+                h = fold(h, lane.map_or(u64::MAX, u64::from));
+                fold_bytes(h, data)
+            }
+            Payload::RmaGetReq { win, offset, len, get_handle, lane } => {
+                let mut h = fold(4, *win);
+                h = fold(h, *offset as u64);
+                h = fold(h, *len as u64);
+                h = fold(h, *get_handle);
+                fold(h, lane.map_or(u64::MAX, u64::from))
+            }
+            Payload::RmaGetReply { win, get_handle, data, lane } => {
+                let mut h = fold(5, *win);
+                h = fold(h, *get_handle);
+                h = fold(h, lane.map_or(u64::MAX, u64::from));
+                fold_bytes(h, data)
+            }
+            Payload::RmaAcc { win, offset, data, op, flush_handle, lane } => {
+                let mut h = fold(6, *win);
+                h = fold(h, *offset as u64);
+                h = fold(h, *op as u64);
+                h = fold(h, *flush_handle);
+                h = fold(h, lane.map_or(u64::MAX, u64::from));
+                fold_bytes(h, data)
+            }
+            Payload::RmaFetchOp { win, offset, operand, op, fetch_handle } => {
+                let mut h = fold(7, *win);
+                h = fold(h, *offset as u64);
+                h = fold(h, *op as u64);
+                h = fold(h, *fetch_handle);
+                fold_bytes(h, operand)
+            }
+            Payload::RmaFetchOpReply { fetch_handle, data } => {
+                fold_bytes(fold(8, *fetch_handle), data)
+            }
+            Payload::RmaAck { flush_handle } => fold(9, *flush_handle),
+            Payload::RmaAckCount { win, lane } => fold(fold(14, *win), u64::from(*lane)),
+            Payload::RmaLockReq { win, kind, handle } => {
+                fold(fold(fold(15, *win), *kind as u64), *handle)
+            }
+            Payload::RmaLockGrant { win, handle } => fold(fold(16, *win), *handle),
+            Payload::RmaUnlock { win, kind, handle } => {
+                fold(fold(fold(17, *win), *kind as u64), *handle)
+            }
+            Payload::RelAck { ack, chan_src_ctx, chan_dst_ctx } => {
+                fold(fold(fold(18, *ack), u64::from(*chan_src_ctx)), u64::from(*chan_dst_ctx))
+            }
+        }
+    }
+
+    /// Flip one bit of the wire payload data (a `Corrupt` fault). For
+    /// dataless control frames there is nothing to flip; the caller
+    /// corrupts the checksum header instead. Returns true if a data bit
+    /// was flipped.
+    pub fn flip_data_bit(&mut self, bit: usize) -> bool {
+        let data = match self {
+            Payload::TwoSided { data, .. }
+            | Payload::RmaPut { data, .. }
+            | Payload::RmaAcc { data, .. }
+            | Payload::RmaGetReply { data, .. }
+            | Payload::RmaFetchOpReply { data, .. } => data,
+            Payload::RmaFetchOp { operand, .. } => operand,
+            _ => return false,
+        };
+        if data.is_empty() {
+            return false;
+        }
+        let bit = bit % (data.len() * 8);
+        data[bit / 8] ^= 1 << (bit % 8);
+        true
     }
 }
 

@@ -391,10 +391,18 @@ impl MpiProc {
     pub fn coll_wait(&self, req: CollReq) -> Vec<u8> {
         let sched = req.sched;
         let wait_entry = pnow(self.backend);
+        let deadline = super::proc::SpinDeadline::new(self.backend);
         loop {
             match self.coll_advance(&sched) {
                 CollStatus::Done => break,
                 CollStatus::Blocked { vci, striped, doorbell } => {
+                    deadline.check(|| {
+                        format!(
+                            "coll_wait (nonblocking collective on comm {}, blocked on \
+                             lane {vci})",
+                            sched.comm.id
+                        )
+                    });
                     self.progress_with(vci, striped, doorbell);
                 }
             }

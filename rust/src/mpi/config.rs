@@ -164,6 +164,23 @@ pub struct MpiConfig {
     pub rx_doorbell: bool,
     /// Eagerly claimed hints (MPI-4.0 info-style, §7): see [`Hints`].
     pub hints: Hints,
+    /// Deterministic fabric fault plan (`vcmpi_fault_plan` info/config
+    /// key), parsed by `crate::fabric::FaultPlan::parse` and installed on
+    /// the network before any process opens a context. `None` (the
+    /// default everywhere) keeps the fabric exact: no reliability
+    /// headers, no retransmit state, no per-frame fault rolls — the
+    /// fault-free path pays nothing. Spec grammar:
+    /// `seed=N,drop=PM,dup=PM,corrupt=PM,delay=PM[,delay_ns=N]
+    /// [,timeout_ns=N][,kill=proc:ctx@ns]...` (per-mille rates).
+    pub fault_plan: Option<String>,
+    /// Transparent VCI lane failover (`vcmpi_lane_failover`): when a
+    /// hardware context hard-fails (a `kill=` entry in the fault plan),
+    /// the owning process quarantines the lane, migrates its matching
+    /// and completion state to a survivor lane, and redirects both local
+    /// ops and inbound wire traffic there. Off: a killed lane's waiters
+    /// run into the spin-deadline diagnostic instead (the ablation arm).
+    /// Irrelevant without a fault plan.
+    pub lane_failover: bool,
 }
 
 /// MPI-4.0-style info hints (paper §7) plus MPI-3.1's accumulate_ordering.
@@ -201,6 +218,8 @@ impl MpiConfig {
             wildcard_epoch_linger: 0,
             rx_doorbell: false,
             hints: Hints::default(),
+            fault_plan: None,
+            lane_failover: true,
         }
     }
 
@@ -226,6 +245,8 @@ impl MpiConfig {
             wildcard_epoch_linger: 0,
             rx_doorbell: false,
             hints: Hints::default(),
+            fault_plan: None,
+            lane_failover: true,
         }
     }
 
@@ -265,6 +286,8 @@ impl MpiConfig {
             wildcard_epoch_linger: 0,
             rx_doorbell: false,
             hints: Hints::default(),
+            fault_plan: None,
+            lane_failover: true,
         }
     }
 }
@@ -300,6 +323,20 @@ mod tests {
         assert_eq!(s.vci_striping, VciStriping::RoundRobin);
         assert_eq!(s.num_vcis, 8);
         assert_eq!(s.cs_mode, CsMode::Fg, "striping rides on the optimized config");
+    }
+
+    #[test]
+    fn fault_injection_is_off_in_every_preset() {
+        for cfg in [
+            MpiConfig::original(),
+            MpiConfig::fg_single_vci(),
+            MpiConfig::optimized(8),
+            MpiConfig::striped_sharded(8),
+            MpiConfig::everywhere(),
+        ] {
+            assert!(cfg.fault_plan.is_none(), "presets must keep the fabric exact");
+            assert!(cfg.lane_failover, "failover defaults on (inert without a plan)");
+        }
     }
 
     #[test]

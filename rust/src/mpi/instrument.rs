@@ -21,6 +21,7 @@ thread_local! {
     static COLL_OVERLAP_NS: Cell<u64> = const { Cell::new(0) };
     static STREAM_OPS: Cell<u64> = const { Cell::new(0) };
     static STREAM_FREELIST_HITS: Cell<u64> = const { Cell::new(0) };
+    static FAILOVERS: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Which class of lock was taken.
@@ -67,6 +68,10 @@ pub enum LockClass {
     HostOrderedPins,
     /// `MpiProc::streams` (serial-execution-stream bind table).
     HostStreams,
+    /// `MpiProc::failed_lanes` (lane-failover dead→survivor table). Held
+    /// only for the idempotence check — never across a state migration
+    /// (VCI locks park, and host mutexes must not be held across one).
+    HostFailover,
     /// `Window::outstanding` (RMA completion records).
     HostRmaOutstanding,
     /// `Window::epochs` (origin-side passive-target lock epochs). Never
@@ -155,6 +160,7 @@ tags! {
     HostCollScheds => TAG_HOST_COLL_SCHEDS { "host.coll_scheds", 137, false, true },
     HostOrderedPins => TAG_HOST_ORDERED_PINS { "host.ordered_pins", 140, false, true },
     HostStreams => TAG_HOST_STREAMS { "host.streams", 142, false, true },
+    HostFailover => TAG_HOST_FAILOVER { "host.failover", 143, false, true },
     HostRmaOutstanding => TAG_HOST_RMA_OUTSTANDING { "host.rma_outstanding", 145, false, true },
     HostRmaEpochs => TAG_HOST_RMA_EPOCHS { "host.rma_epochs", 147, false, true },
     HostWinLocks => TAG_HOST_WIN_LOCKS { "host.win_locks", 148, false, true },
@@ -262,6 +268,13 @@ pub fn count_stream_freelist_hit() {
     STREAM_FREELIST_HITS.with(|c| c.set(c.get() + 1));
 }
 
+/// One VCI lane failover completed by the calling thread (a hard-failed
+/// hardware context was quarantined and its matching state migrated to a
+/// survivor lane — see `MpiProc::failover_vci`).
+pub fn count_failover() {
+    FAILOVERS.with(|c| c.set(c.get() + 1));
+}
+
 /// Snapshot of the calling thread's critical-path counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounters {
@@ -289,6 +302,9 @@ pub struct OpCounters {
     /// Stream request allocations served by the thread-local freelist
     /// (no Request lock, no shared cache).
     pub stream_freelist_hits: u64,
+    /// VCI lane failovers completed by this thread (dead hardware context
+    /// quarantined, state migrated to a survivor lane).
+    pub failovers: u64,
 }
 
 impl OpCounters {
@@ -314,6 +330,7 @@ impl std::ops::Sub for OpCounters {
             coll_overlap_ns: self.coll_overlap_ns - rhs.coll_overlap_ns,
             stream_ops: self.stream_ops - rhs.stream_ops,
             stream_freelist_hits: self.stream_freelist_hits - rhs.stream_freelist_hits,
+            failovers: self.failovers - rhs.failovers,
         }
     }
 }
@@ -334,6 +351,7 @@ pub fn snapshot() -> OpCounters {
         coll_overlap_ns: COLL_OVERLAP_NS.with(|c| c.get()),
         stream_ops: STREAM_OPS.with(|c| c.get()),
         stream_freelist_hits: STREAM_FREELIST_HITS.with(|c| c.get()),
+        failovers: FAILOVERS.with(|c| c.get()),
     }
 }
 
@@ -354,6 +372,7 @@ static EPOCH_UNFLIPS: AtomicU64 = AtomicU64::new(0);
 static WILDCARD_POSTS: AtomicU64 = AtomicU64::new(0);
 static EMPTY_POLLS: AtomicU64 = AtomicU64::new(0);
 static DOORBELL_SKIPS: AtomicU64 = AtomicU64::new(0);
+static LANE_FAILOVERS: AtomicU64 = AtomicU64::new(0);
 
 pub fn record_stale_ctrl_drop() {
     STALE_CTRL_DROPS.fetch_add(1, Ordering::Relaxed);
@@ -388,6 +407,12 @@ pub fn record_doorbell_skip() {
     DOORBELL_SKIPS.fetch_add(1, Ordering::Relaxed);
 }
 
+/// One VCI lane failover completed anywhere in the process (chaos runs
+/// assert this is nonzero after a context hard-fail).
+pub fn record_failover() {
+    LANE_FAILOVERS.fetch_add(1, Ordering::Relaxed);
+}
+
 /// Aggregate engine diagnostics since the last [`reset_proc_counters`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ProcCounters {
@@ -405,6 +430,8 @@ pub struct ProcCounters {
     pub empty_polls: u64,
     /// Striped sweeps skipped because no doorbell bit was set.
     pub doorbell_skips: u64,
+    /// VCI lane failovers (dead context quarantined, state migrated).
+    pub failovers: u64,
 }
 
 pub fn proc_counters() -> ProcCounters {
@@ -416,6 +443,7 @@ pub fn proc_counters() -> ProcCounters {
         wildcard_posts: WILDCARD_POSTS.load(Ordering::Relaxed),
         empty_polls: EMPTY_POLLS.load(Ordering::Relaxed),
         doorbell_skips: DOORBELL_SKIPS.load(Ordering::Relaxed),
+        failovers: LANE_FAILOVERS.load(Ordering::Relaxed),
     }
 }
 
@@ -429,6 +457,7 @@ pub fn reset_proc_counters() {
     WILDCARD_POSTS.store(0, Ordering::Relaxed);
     EMPTY_POLLS.store(0, Ordering::Relaxed);
     DOORBELL_SKIPS.store(0, Ordering::Relaxed);
+    LANE_FAILOVERS.store(0, Ordering::Relaxed);
 }
 
 /// A completion/reference counter whose *data* is always a host atomic
@@ -513,6 +542,7 @@ mod tests {
         count_stream_op();
         count_stream_op();
         count_stream_freelist_hit();
+        count_failover();
         let d = snapshot() - base;
         assert_eq!(d.vci_locks, 2);
         assert_eq!(d.request_locks, 1);
@@ -524,6 +554,7 @@ mod tests {
         assert_eq!(d.coll_overlap_ns, 1500);
         assert_eq!(d.stream_ops, 3);
         assert_eq!(d.stream_freelist_hits, 1);
+        assert_eq!(d.failovers, 1);
         assert_eq!(d.total_locks(), 4, "anchored allocs / coll segments / stream ops are not locks");
     }
 
@@ -539,6 +570,7 @@ mod tests {
         record_wildcard_post();
         record_empty_poll();
         record_doorbell_skip();
+        record_failover();
         let after = proc_counters();
         assert!(after.stale_ctrl_drops >= before.stale_ctrl_drops + 1);
         assert!(after.dup_seq_drops >= before.dup_seq_drops + 1);
@@ -547,6 +579,7 @@ mod tests {
         assert!(after.wildcard_posts >= before.wildcard_posts + 1);
         assert!(after.empty_polls >= before.empty_polls + 1);
         assert!(after.doorbell_skips >= before.doorbell_skips + 1);
+        assert!(after.failovers >= before.failovers + 1);
     }
 
     #[test]

@@ -312,7 +312,7 @@ impl MpiProc {
         //     one (wildcards are asserted away).
         //  3. The communicator's / endpoint's assigned VCI.
         let striped = coll_vci.is_none() && my_ep.is_none() && self.striping_active(comm);
-        let (vci_idx, stripe_seq) = if let Some(v) = coll_vci {
+        let (wire_idx, stripe_seq) = if let Some(v) = coll_vci {
             (v, None)
         } else if striped {
             let seq = self.next_stripe_seq(comm.id, dst);
@@ -322,15 +322,24 @@ impl MpiProc {
         } else {
             (self.comm_vci(comm, my_ep), None)
         };
+        // Lane failover: issue from the survivor when the derived lane's
+        // context hard-failed. Only the LOCAL lane resolves — the
+        // wire-visible derivation below stays in the unresolved lane
+        // space, because the receiver (healthy) posts and polls on the
+        // lane both sides derive from the envelope; frames aimed at a
+        // context that later dies are re-homed by the fabric's own
+        // redirect at delivery. Identity (one plain load) without a
+        // fault plan.
+        let vci_idx = self.vcis().resolve(wire_idx);
         let vci = self.vcis().get(vci_idx).clone();
         let (dst_proc, base_dst_ctx) = self.route(comm, dst);
         let dst_ctx = if striped
             || coll_vci.is_some()
-            || (my_ep.is_none() && vci_idx != self.comm_vci(comm, None))
+            || (my_ep.is_none() && wire_idx != self.comm_vci(comm, None))
         {
             // Striped / hinted / collective-lane spread: target the mirror
             // context on the receiver.
-            self.remote_ctx_for_vci(dst_proc, vci_idx)
+            self.remote_ctx_for_vci(dst_proc, wire_idx)
         } else {
             base_dst_ctx
         };
@@ -564,7 +573,10 @@ impl MpiProc {
             // Collective segment on an explicit lane: post into that VCI's
             // own matching engine (never the sharded striped path — the
             // matching sender marked no stripe_home, so its arrival is
-            // handled by this engine too).
+            // handled by this engine too). A failed lane resolves to its
+            // survivor — the matching sender's frame is re-homed to the
+            // same survivor context by the fabric redirect.
+            let v = self.vcis().resolve(v);
             let vci = self.vcis().get(v).clone();
             return vci.with_state(guard, |st| {
                 let id = self.alloc_request(st);
@@ -609,6 +621,7 @@ impl MpiProc {
             if vci_idx != home {
                 super::instrument::count_anchored_alloc();
             }
+            let vci_idx = self.vcis().resolve(vci_idx);
             let vci = self.vcis().get(vci_idx).clone();
             let rf = req_flags(comm, true);
             let (id, cm) = vci.with_state(guard, |st| {
@@ -654,6 +667,7 @@ impl MpiProc {
         } else {
             self.comm_vci(comm, my_ep)
         };
+        let vci_idx = self.vcis().resolve(vci_idx);
         let vci = self.vcis().get(vci_idx).clone();
         vci.with_state(guard, |st| {
             let id = self.alloc_request(st);

@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 use crate::fabric::{Interconnect, ProcFabric};
-use crate::platform::{padvance, pyield, Backend, PMutex};
+use crate::platform::{padvance, pnow, pyield, Backend, PMutex};
 use crate::sim::CostModel;
 
 use super::comm::{Comm, CommKind};
@@ -267,6 +267,17 @@ pub struct MpiProc {
     /// Lock acquisitions that did pay the wire protocol (OPA request/grant
     /// round trip) or NIC atomics (IB).
     pub(super) lock_wire_reqs: AtomicU64,
+    /// Cached `fabric.has_fault_plan()` — true iff a deterministic fault
+    /// plan is installed on the network. Gates every chaos-only branch
+    /// (kill detection, retransmit driving) behind one plain bool load so
+    /// the fault-free path pays nothing.
+    pub(super) chaos: bool,
+    /// Transparent lane failover enabled (`MpiConfig::lane_failover`).
+    pub(super) lane_failover: bool,
+    /// Lane-failover table: dead lane -> survivor lane, one entry per
+    /// completed [`MpiProc::failover_vci`]. The idempotence gate — held
+    /// only for the check/insert, never across VCI state migration.
+    failed_lanes: HostMutex<HashMap<usize, usize>>,
 }
 
 impl MpiProc {
@@ -278,6 +289,7 @@ impl MpiProc {
         let default_policy = Arc::new(CommPolicy::from_config(&cfg));
         let default_win_policy = Arc::new(WinPolicy::from_config(&cfg));
         let pin_lanes = cfg.num_vcis.max(1);
+        let lane_failover_cfg = cfg.lane_failover;
         // MPI_COMM_WORLD (id 0) carries the default policy from birth.
         let mut policies = HashMap::new();
         policies.insert(0u64, default_policy.clone());
@@ -321,6 +333,9 @@ impl MpiProc {
             win_locks: HostMutex::new(HashMap::new()),
             lock_elisions: AtomicU64::new(0),
             lock_wire_reqs: AtomicU64::new(0),
+            chaos: fabric.has_fault_plan(),
+            lane_failover: lane_failover_cfg,
+            failed_lanes: HostMutex::new(HashMap::new()),
             fabric,
         })
     }
@@ -423,6 +438,27 @@ impl MpiProc {
     pub fn finalize(self: &Arc<Self>) {
         let world = self.comm_world();
         self.barrier(&world);
+        // Reliability linger (chaos runs only): the finalize barrier's own
+        // last frames can be fault-dropped, and a peer that exits before
+        // its retransmit timer fires would strand the blocked rank
+        // forever. Each rank therefore keeps polling + retransmitting for
+        // a bounded virtual-time window after its barrier completes —
+        // long enough for many backoff doublings, so a straggler's
+        // recovery cycle (retransmit → dup-ack → prune) converges while
+        // its peers are still responsive. Zero cost without a fault plan.
+        if self.chaos {
+            if let Some(plan) = self.fabric.fault_plan() {
+                let linger = (plan.retransmit_timeout_ns * 64).max(5_000_000);
+                let until = pnow(self.backend).saturating_add(linger);
+                while pnow(self.backend) < until {
+                    padvance(self.backend, self.costs.psm2_progress_interval.max(1));
+                    self.service_progress_round();
+                    if self.backend == Backend::Native {
+                        break; // wallclock backends have no virtual clock to wait out
+                    }
+                }
+            }
+        }
         // Lightweight-request refcounts must balance once every thread has
         // quiesced: each immediate `isend` acquired one reference and each
         // `wait` released one (for per-VCI replication the release was
@@ -1525,6 +1561,218 @@ impl MpiProc {
     /// Cooperative yield used inside progress/wait loops.
     pub fn relax(&self) {
         pyield(self.backend);
+    }
+
+    // -----------------------------------------------------------------
+    // Lane failover (deterministic fault injection — see fabric::fault)
+    // -----------------------------------------------------------------
+
+    /// Deterministic survivor choice: the first pool lane that is not the
+    /// dead lane, not already failed over, not bound as a serial
+    /// execution stream, and whose hardware context is still alive. Lane
+    /// 0 (the fallback funnel) is a legal survivor — it can never be
+    /// stream-owned. First-index order keeps the choice a pure function
+    /// of (pool, kill schedule), so a seeded replay picks the same lane.
+    fn pick_survivor(&self, dead: usize, failed: &HashMap<usize, usize>) -> Option<usize> {
+        (0..self.vcis().len()).find(|&i| {
+            i != dead
+                && !failed.contains_key(&i)
+                && !self.vcis().get(i).is_stream_owned()
+                && !self.fabric.ctx_killed(self.vcis().get(i).ctx_index)
+        })
+    }
+
+    /// Quarantine a hard-failed VCI lane and migrate its state to a
+    /// survivor (the recovery half of the deterministic fault layer; see
+    /// docs/ARCHITECTURE.md § "Fault model & lane failover"). Returns
+    /// true iff this call performed the migration — a second detection
+    /// of the same dead lane (any thread) is a counted no-op.
+    ///
+    /// Sequence, each step shaped by a lock-discipline constraint:
+    ///  1. Idempotence gate + survivor choice under the `HostFailover`
+    ///     leaf lock, released before any VCI lock is taken (host
+    ///     mutexes must never be held across a PMutex park).
+    ///  2. Publish the redirects — pool (`VciPool::set_redirect`) for
+    ///     local ops and polls, fabric (`install_ctx_redirect`) for
+    ///     inbound wire frames still targeting the dead context.
+    ///  3. Quarantine the dead lane out of the stripe set and transfer
+    ///     its ordered-pin refcounts and dedicated collective lanes to
+    ///     the survivor.
+    ///  4. Migrate matching/completion state dead -> survivor strictly
+    ///     SEQUENTIALLY: take under the dead lane's lock, release,
+    ///     absorb under the survivor's — the Vci lock class forbids
+    ///     holding two at once.
+    ///
+    /// A lane bound as a serial execution stream cannot fail over
+    /// transparently (the single-writer contract pins it 1:1 to its
+    /// context); that case is a deterministic diagnostic panic telling
+    /// the owner to rebind.
+    pub(super) fn failover_vci(&self, dead: usize) -> bool {
+        let survivor = {
+            let mut failed = self.failed_lanes.lock(LockClass::HostFailover);
+            if failed.contains_key(&dead) {
+                return false;
+            }
+            let dv = self.vcis().get(dead);
+            assert!(
+                !dv.is_stream_owned(),
+                "VCI lane {dead} (ctx {}) hard-failed at t={}ns while bound as a serial \
+                 execution stream: a stream pins its lane 1:1, so transparent failover would \
+                 break the single-writer contract — the owner must rebind (stream_unbind + \
+                 stream_bind on a surviving lane) to recover",
+                dv.ctx_index,
+                pnow(self.backend),
+            );
+            let survivor = self.pick_survivor(dead, &failed).unwrap_or_else(|| {
+                panic!(
+                    "VCI lane {dead} hard-failed at t={}ns with no survivor left: every \
+                     other lane is already failed, stream-owned, or on a killed context",
+                    pnow(self.backend),
+                )
+            });
+            failed.insert(dead, survivor);
+            survivor
+        };
+        let dv = self.vcis().get(dead).clone();
+        let sv = self.vcis().get(survivor).clone();
+        dv.set_failed();
+        // Publish the redirects: from here, new local ops resolve to the
+        // survivor and the fabric delivers frames aimed at the dead
+        // context to the survivor's (the reliability layer's logical
+        // channel keys keep sequence continuity across the switch).
+        self.vcis().set_redirect(dead, survivor);
+        self.fabric.install_ctx_redirect(dv.ctx_index, sv.ctx_index);
+        // Quarantine the dead lane out of the stripe set and move its
+        // ordered-comm pins onto the survivor, in one pin-table critical
+        // section. The fallback lane is exempt on both ends: lane 0 is
+        // never a stripe lane, carries no pins, and the sweep's circular
+        // scans rely on it staying unpinned.
+        if dead != FALLBACK_VCI {
+            let mut pins = self.ordered_pins.lock(LockClass::HostOrderedPins);
+            let inherited = pins.get(&dead).copied().unwrap_or(0);
+            *pins.entry(dead).or_insert(0) += 1; // quarantine pin, never released
+            self.stripe_excluded.pin(dead);
+            if inherited > 0 && survivor != FALLBACK_VCI {
+                *pins.entry(survivor).or_insert(0) += inherited;
+                self.stripe_excluded.pin(survivor);
+            }
+        }
+        // Dedicated collective lanes parked on the dead lane move whole:
+        // their segments' wire derivation is unchanged (remote members
+        // are healthy), only the local issue/poll lane switches.
+        {
+            let mut lanes = self.coll_lanes.lock(LockClass::HostCollLanes);
+            for l in lanes.values_mut() {
+                if *l == dead {
+                    *l = survivor;
+                }
+            }
+        }
+        // State migration, sequential. Everything a waiter could still
+        // depend on moves; the dead lane's request cache stays parked
+        // (ids idle until finalize — bounded, never reused).
+        let guard = self.guard();
+        let moved = dv.with_state(guard, |st| MigratedLane {
+            matching: st.matching.take_parts(),
+            pending_sends: std::mem::take(&mut st.pending_sends),
+            acked: std::mem::take(&mut st.acked),
+            rma_issued: std::mem::take(&mut st.rma_issued),
+            rma_acked: std::mem::take(&mut st.rma_acked),
+            get_done: std::mem::take(&mut st.get_done),
+            fetch_done: std::mem::take(&mut st.fetch_done),
+            lock_granted: std::mem::take(&mut st.lock_granted),
+            send_seq: std::mem::take(&mut st.send_seq),
+            // Dropped, not migrated: the survivor re-resolves engine
+            // handles through the process table on first use.
+            match_cache: std::mem::take(&mut st.match_cache),
+        });
+        sv.with_state(guard, |st| {
+            st.matching.absorb_parts(moved.matching);
+            st.pending_sends.extend(moved.pending_sends);
+            st.acked.extend(moved.acked);
+            for (k, v) in moved.rma_issued {
+                *st.rma_issued.entry(k).or_insert(0) += v;
+            }
+            for (k, v) in moved.rma_acked {
+                *st.rma_acked.entry(k).or_insert(0) += v;
+            }
+            st.get_done.extend(moved.get_done);
+            st.fetch_done.extend(moved.fetch_done);
+            st.lock_granted.extend(moved.lock_granted);
+            for (k, v) in moved.send_seq {
+                let e = st.send_seq.entry(k).or_insert(0);
+                *e = (*e).max(v);
+            }
+        });
+        drop(moved.match_cache);
+        super::instrument::count_failover();
+        super::instrument::record_failover();
+        // Flush anything the dead context's unacked ring still owes the
+        // wire: retransmits re-roll their fault decision and re-inject
+        // immediately instead of waiting for the next timeout sweep.
+        self.fabric.drive_retransmits();
+        true
+    }
+
+    /// The survivor lane `idx` failed over to, if it hard-failed.
+    /// Test/bench aid (proves the quarantine/migration lifecycle).
+    pub fn failed_lane_target(&self, idx: usize) -> Option<usize> {
+        self.failed_lanes.lock(LockClass::HostFailover).get(&idx).copied()
+    }
+}
+
+/// State moved off a dead lane by [`MpiProc::failover_vci`]: everything
+/// in a `VciState` an in-flight operation could still depend on. Taken
+/// whole under the dead lane's lock, absorbed under the survivor's — the
+/// two locks are never held together.
+struct MigratedLane {
+    matching: super::matching::MatchingParts,
+    pending_sends: HashMap<u64, super::vci::PendingSend>,
+    acked: HashSet<u64>,
+    rma_issued: HashMap<(u64, usize), u64>,
+    rma_acked: HashMap<(u64, usize), u64>,
+    get_done: HashMap<u64, Vec<u8>>,
+    fetch_done: HashMap<u64, Vec<u8>>,
+    lock_granted: HashSet<u64>,
+    send_seq: HashMap<(u64, usize), u64>,
+    match_cache: HashMap<u64, Arc<CommMatch>>,
+}
+
+/// Virtual-time budget for any single unbounded progress-spin window
+/// (`wait_grant`, flush watermarks, `coll_wait`, fetch-op spins): far
+/// past any legitimate wait in the shipped scenarios, comfortably before
+/// the DES's own 300s wall so the diagnostic names the stuck wait
+/// instead of the generic time-limit abort.
+pub(super) const SPIN_DEADLINE_NS: u64 = 120_000_000_000;
+
+/// Diagnostic watchdog for unbounded progress-spin loops (sim backend
+/// only — native time is wall-clock). Construct at wait entry, call
+/// [`SpinDeadline::check`] each iteration with a closure naming the
+/// window/target/lane; past the deadline it panics with that context —
+/// the deadlock diagnostic the fault plans' dropped-frame storms turn
+/// from a silent hang into an actionable message.
+pub(super) struct SpinDeadline {
+    deadline: u64,
+    backend: Backend,
+}
+
+impl SpinDeadline {
+    pub(super) fn new(backend: Backend) -> Self {
+        SpinDeadline {
+            deadline: pnow(backend).saturating_add(SPIN_DEADLINE_NS),
+            backend,
+        }
+    }
+
+    #[track_caller]
+    pub(super) fn check(&self, context: impl FnOnce() -> String) {
+        if self.backend == Backend::Sim && pnow(self.backend) > self.deadline {
+            panic!(
+                "progress spin exceeded {}s of virtual time: {}",
+                SPIN_DEADLINE_NS / 1_000_000_000,
+                context()
+            );
+        }
     }
 }
 

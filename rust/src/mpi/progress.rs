@@ -98,6 +98,13 @@ impl MpiProc {
     /// `doorbell` gates the sweep on the pool's rx-nonempty bitmask.
     pub(super) fn progress_with(&self, vci_idx: usize, striped: bool, doorbell: bool) {
         let _cs = self.enter_cs();
+        if self.chaos {
+            // Reliability-layer retransmit sweep: sim-time timeouts
+            // re-inject this process's unacked frames (exponential
+            // backoff, re-rolled fault decisions). Compiled to one bool
+            // load when no fault plan is installed.
+            self.fabric.drive_retransmits();
+        }
         match self.stripe_poll_target(vci_idx, striped, doorbell) {
             None => {
                 // Doorbell-gated skip: no VCI has anything queued, so the
@@ -150,11 +157,23 @@ impl MpiProc {
     /// additionally take their matching shard's lock (a leaf lock), so no
     /// second VCI lock and no re-route buffer are ever needed.
     pub fn progress_vci(&self, vci_idx: usize) -> bool {
+        // Lane failover: a request pinned to a failed lane makes progress
+        // on its survivor (this is the chokepoint every wait loop funnels
+        // through), and a freshly killed context is detected here — the
+        // poll that would have found its rx queue dead instead quarantines
+        // the lane and migrates its state.
+        let mut vci_idx = self.vcis().resolve(vci_idx);
+        if self.chaos
+            && self.lane_failover
+            && self.fabric.ctx_killed(self.vcis().get(vci_idx).ctx_index)
+        {
+            self.failover_vci(vci_idx);
+            vci_idx = self.vcis().resolve(vci_idx);
+        }
         let vci = self.vcis().get(vci_idx).clone();
         let guard = self.guard();
         vci.with_state(guard, |st| {
-            let ctx = self.fabric.context(self.rank(), vci.ctx_index);
-            match ctx.poll(&self.costs) {
+            match self.fabric.poll_ctx(vci.ctx_index) {
                 None => {
                     self.empty_polls.fetch_add(1, Ordering::Relaxed);
                     instrument::record_empty_poll();
@@ -175,9 +194,20 @@ impl MpiProc {
     /// acquisitions: this is where the streamed arm's wait loop spins.
     pub(super) fn progress_stream(&self, vci_idx: usize) -> bool {
         let vci = self.vcis().get(vci_idx).clone();
+        if self.chaos && self.fabric.ctx_killed(vci.ctx_index) {
+            // The deterministic rebind trap: a stream pins its lane 1:1,
+            // so transparent failover would break the single-writer
+            // contract — tell the owner instead of silently stalling.
+            panic!(
+                "stream-owned VCI lane {vci_idx} (ctx {}) hard-failed at t={}ns: a serial \
+                 execution stream pins its lane 1:1, so it cannot fail over transparently — \
+                 rebind (stream_unbind + stream_bind on a surviving lane) to recover",
+                vci.ctx_index,
+                crate::platform::pnow(self.backend),
+            );
+        }
         vci.with_state_stream(|st| {
-            let ctx = self.fabric.context(self.rank(), vci.ctx_index);
-            match ctx.poll(&self.costs) {
+            match self.fabric.poll_ctx(vci.ctx_index) {
                 None => {
                     self.empty_polls.fetch_add(1, Ordering::Relaxed);
                     instrument::record_empty_poll();
@@ -535,6 +565,14 @@ impl MpiProc {
                     self.reply(my_ctx_index, &to, Payload::RmaLockGrant { win, handle: q.handle });
                 }
             }
+            Payload::RelAck { .. } => {
+                // Reliability-layer cumulative acks are NIC-level traffic
+                // consumed inside `ProcFabric::poll_ctx` and never
+                // surfaced to the MPI dispatch; one arriving here means a
+                // forged or misrouted frame (the fuzz suite injects
+                // exactly these) — drop counted, like any stale control.
+                self.drop_stale();
+            }
             Payload::RmaAckCount { win, lane } => {
                 // Counted striped-RMA completion: the ack returned to the
                 // issuing stripe lane's context (the target replies toward
@@ -546,7 +584,11 @@ impl MpiProc {
                 // are never recycled).
                 debug_assert!(
                     (lane as usize) >= self.vcis().len()
-                        || self.vcis().get(lane as usize).ctx_index == my_ctx_index,
+                        || self
+                            .vcis()
+                            .get(self.vcis().resolve(lane as usize))
+                            .ctx_index
+                            == my_ctx_index,
                     "counted RMA ack landed off its issuing lane {lane}"
                 );
                 padvance(self.backend, self.costs.completion_process);
@@ -563,6 +605,9 @@ impl MpiProc {
             return;
         }
         let _cs = self.enter_cs();
+        if self.chaos {
+            self.fabric.drive_retransmits();
+        }
         self.progress_global_round();
     }
 }

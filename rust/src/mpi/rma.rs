@@ -130,7 +130,7 @@ use crate::platform::{padvance, pnow};
 
 use super::instrument::{HostMutex, LockClass};
 use super::policy::{Info, WinPolicy};
-use super::proc::{thread_token, MpiProc};
+use super::proc::{thread_token, MpiProc, SpinDeadline};
 
 /// An RMA window.
 pub struct Window {
@@ -453,7 +453,11 @@ impl MpiProc {
     /// under its own lock, injects, and records the calling thread's
     /// watermark for `win_flush`.
     fn issue_counted(&self, win: &Window, target: usize, vci_idx: usize, payload: Payload) {
-        let vci = self.vcis().get(vci_idx).clone();
+        // Resolve only the LOCAL lane (failover redirect); the wire-visible
+        // remote-context derivation and the lane marker in the payload stay
+        // on the logical index — the receiver is healthy and its
+        // envelope-derived lane must not change.
+        let vci = self.vcis().get(self.vcis().resolve(vci_idx)).clone();
         let wm = vci.with_state(self.guard(), |st| {
             let e = st.rma_issued.entry((win.id, target)).or_insert(0);
             *e += 1;
@@ -489,7 +493,7 @@ impl MpiProc {
             None if striped => self.stripe_win_vci(win, target, h),
             None => self.rma_vci(win, false),
         };
-        let vci = self.vcis().get(vci_idx).clone();
+        let vci = self.vcis().get(self.vcis().resolve(vci_idx)).clone();
         match self.interconnect() {
             Interconnect::Ib => {
                 // Hardware put: initiator-side DMA into the target window.
@@ -556,7 +560,7 @@ impl MpiProc {
             None if striped => self.stripe_win_vci(win, target, h),
             None => self.rma_vci(win, false),
         };
-        let vci = self.vcis().get(vci_idx).clone();
+        let vci = self.vcis().get(self.vcis().resolve(vci_idx)).clone();
         match self.interconnect() {
             Interconnect::Ib => {
                 // Hardware get: striping only spreads which context reads;
@@ -647,7 +651,7 @@ impl MpiProc {
             });
             return;
         }
-        let vci = self.vcis().get(vci_idx).clone();
+        let vci = self.vcis().get(self.vcis().resolve(vci_idx)).clone();
         vci.with_state(self.guard(), |_st| {
             let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
             self.fabric.inject(vci.ctx_index, target, dst_ctx, Payload::RmaAcc {
@@ -679,7 +683,7 @@ impl MpiProc {
             _ => operand.len().max(8),
         });
         let vci_idx = self.rma_vci(win, false);
-        let vci = self.vcis().get(vci_idx).clone();
+        let vci = self.vcis().get(self.vcis().resolve(vci_idx)).clone();
         let h = win.fresh_handle();
         {
             let _cs = self.enter_cs();
@@ -694,16 +698,26 @@ impl MpiProc {
                 });
             });
         }
-        // Wait for the reply on this VCI.
+        // Wait for the reply on this VCI (re-resolving the lane each
+        // iteration: a failover mid-wait migrates `fetch_done` entries to
+        // the survivor).
+        let deadline = SpinDeadline::new(self.backend);
         loop {
             let got = {
                 let _cs = self.enter_cs();
-                let vci = self.vcis().get(vci_idx).clone();
+                let vci = self.vcis().get(self.vcis().resolve(vci_idx)).clone();
                 vci.with_state(self.guard(), |st| st.fetch_done.remove(&h))
             };
             if let Some(data) = got {
                 return data;
             }
+            deadline.check(|| {
+                format!(
+                    "fetch_and_op reply (window {}, target {target}, lane {vci_idx}, \
+                     fetch handle {h})",
+                    win.id
+                )
+            });
             self.progress_for_request(vci_idx);
         }
     }
@@ -774,14 +788,17 @@ impl MpiProc {
                         }
                     }
                 }
-                OpRecord::OnAck { flush_handle, vci, .. } => {
+                OpRecord::OnAck { target, flush_handle, vci } => {
                     // Software completion: needs progress (ours and the
                     // target's). This is where OPA's shared-progress pain
-                    // lives (Figs. 13-16, 24-25).
+                    // lives (Figs. 13-16, 24-25). The lane is re-resolved
+                    // each iteration: a failover mid-wait migrates the
+                    // `acked`/`get_done` entries to the survivor.
+                    let deadline = SpinDeadline::new(self.backend);
                     loop {
                         let acked = {
                             let _cs = self.enter_cs();
-                            let v = self.vcis().get(vci).clone();
+                            let v = self.vcis().get(self.vcis().resolve(vci)).clone();
                             v.with_state(self.guard(), |st| {
                                 // Puts/accs complete via RmaAck; gets via
                                 // their parked RmaGetReply (consumed later
@@ -793,6 +810,13 @@ impl MpiProc {
                         if acked {
                             break;
                         }
+                        deadline.check(|| {
+                            format!(
+                                "win_flush ack (window {}, target {target}, lane {vci}, \
+                                 flush handle {flush_handle})",
+                                win.id
+                            )
+                        });
                         self.progress_for_request(vci);
                     }
                 }
@@ -804,10 +828,11 @@ impl MpiProc {
         // sweeps the stripe lanes (doorbell-gated per the window policy)
         // since acks for the remaining lanes drain concurrently.
         for ((target, lane), watermark) in counted {
+            let deadline = SpinDeadline::new(self.backend);
             loop {
                 let acked = {
                     let _cs = self.enter_cs();
-                    let v = self.vcis().get(lane).clone();
+                    let v = self.vcis().get(self.vcis().resolve(lane)).clone();
                     v.with_state(self.guard(), |st| {
                         st.rma_acked.get(&(win.id, target)).copied().unwrap_or(0)
                     })
@@ -815,6 +840,13 @@ impl MpiProc {
                 if acked >= watermark {
                     break;
                 }
+                deadline.check(|| {
+                    format!(
+                        "striped flush watermark (window {}, target {target}, lane {lane}, \
+                         acked {acked} < watermark {watermark})",
+                        win.id
+                    )
+                });
                 self.progress_with(lane, true, win.policy.rx_doorbell);
             }
         }
@@ -979,6 +1011,7 @@ impl MpiProc {
     fn ib_acquire(&self, win: &Window, kind: LockKind, target: usize) {
         let word = self.fabric.win_lock_word(target, win.id);
         let exclusive = kind == LockKind::Exclusive;
+        let deadline = SpinDeadline::new(self.backend);
         loop {
             let t = self.fabric.hw_rma_completion_time(target, 8);
             while pnow(self.backend) < t {
@@ -991,6 +1024,13 @@ impl MpiProc {
             if word.try_acquire(exclusive) {
                 return;
             }
+            deadline.check(|| {
+                format!(
+                    "IB {} lock acquisition (window {}, target {target})",
+                    if exclusive { "exclusive" } else { "shared" },
+                    win.id
+                )
+            });
             self.progress_for_request(self.rma_vci(win, false));
         }
     }
@@ -999,7 +1039,7 @@ impl MpiProc {
     /// the grant handle to wait on.
     fn send_lock_req(&self, win: &Window, kind: LockKind, target: usize, vci_idx: usize) -> u64 {
         let h = win.fresh_handle();
-        let vci = self.vcis().get(vci_idx).clone();
+        let vci = self.vcis().get(self.vcis().resolve(vci_idx)).clone();
         let _cs = self.enter_cs();
         vci.with_state(self.guard(), |_st| {
             let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
@@ -1015,15 +1055,22 @@ impl MpiProc {
     /// Wait for a lock grant to land in the issuing VCI's `lock_granted`
     /// set (the same blocking-wait shape as `fetch_and_op`).
     fn wait_grant(&self, win: &Window, vci_idx: usize, h: u64) {
+        let deadline = SpinDeadline::new(self.backend);
         loop {
             let granted = {
                 let _cs = self.enter_cs();
-                let v = self.vcis().get(vci_idx).clone();
+                let v = self.vcis().get(self.vcis().resolve(vci_idx)).clone();
                 v.with_state(self.guard(), |st| st.lock_granted.remove(&h))
             };
             if granted {
                 return;
             }
+            deadline.check(|| {
+                format!(
+                    "win_lock grant (window {}, lane {vci_idx}, grant handle {h})",
+                    win.id
+                )
+            });
             self.progress_with(vci_idx, win.policy.striped(), win.policy.rx_doorbell);
         }
     }
@@ -1058,7 +1105,7 @@ impl MpiProc {
     /// OPA: inject one `RmaUnlock` and return the ack handle to wait on.
     fn send_unlock(&self, win: &Window, kind: LockKind, target: usize, vci_idx: usize) -> u64 {
         let h = win.fresh_handle();
-        let vci = self.vcis().get(vci_idx).clone();
+        let vci = self.vcis().get(self.vcis().resolve(vci_idx)).clone();
         let _cs = self.enter_cs();
         vci.with_state(self.guard(), |_st| {
             let dst_ctx = self.remote_ctx_for_vci(target, vci_idx);
@@ -1074,15 +1121,17 @@ impl MpiProc {
     /// Wait the target's `RmaAck` for an unlock (it lands in the issuing
     /// VCI's `acked` set, like an ordered flush handle).
     fn wait_unlock_ack(&self, vci_idx: usize, h: u64) {
+        let deadline = SpinDeadline::new(self.backend);
         loop {
             let acked = {
                 let _cs = self.enter_cs();
-                let v = self.vcis().get(vci_idx).clone();
+                let v = self.vcis().get(self.vcis().resolve(vci_idx)).clone();
                 v.with_state(self.guard(), |st| st.acked.remove(&h))
             };
             if acked {
                 return;
             }
+            deadline.check(|| format!("win_unlock ack (lane {vci_idx}, ack handle {h})"));
             self.progress_for_request(vci_idx);
         }
     }
@@ -1092,8 +1141,9 @@ impl MpiProc {
         if let Some(d) = win.get_results.lock(LockClass::HostRmaResults).remove(&h.0) {
             return d;
         }
-        // OPA path: the reply was parked in the issuing VCI's state.
-        let vci = self.vcis().get(h.1).clone();
+        // OPA path: the reply was parked in the issuing VCI's state (or
+        // migrated to the survivor if the issuing lane failed over).
+        let vci = self.vcis().get(self.vcis().resolve(h.1)).clone();
         let _cs = self.enter_cs();
         vci.with_state(self.guard(), |st| {
             st.get_done.remove(&h.0).expect("get_data before flush completed")

@@ -192,6 +192,10 @@ pub struct Vci {
     state: StateCell,
     /// Assigned to at least one live communicator/window?
     active: AtomicBool,
+    /// Hard-failed (fault-plan context kill): the lane is quarantined,
+    /// its state migrated to a survivor, and the pool redirect maps it
+    /// away. Set once by `MpiProc::failover_vci`.
+    failed: AtomicBool,
     /// Per-VCI progress bookkeeping: consecutive unsuccessful polls (drives
     /// the hybrid global-progress fallback).
     pub progress_failures: AtomicUsize,
@@ -236,6 +240,7 @@ impl Vci {
             lock,
             state: StateCell(UnsafeCell::new(VciState::default())),
             active: AtomicBool::new(false),
+            failed: AtomicBool::new(false),
             progress_failures: AtomicUsize::new(0),
             lw_deferred: std::sync::atomic::AtomicU64::new(0),
             deferred_frees: HostMutex::new(Vec::new()),
@@ -408,6 +413,16 @@ impl Vci {
     pub fn is_active(&self) -> bool {
         self.active.load(Ordering::Acquire)
     }
+
+    /// Mark this lane hard-failed (its hardware context died).
+    pub fn set_failed(&self) {
+        self.failed.store(true, Ordering::Release);
+    }
+
+    /// Has this lane been failed over away from?
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::Acquire)
+    }
 }
 
 /// The per-process VCI pool (paper §4.2's "VCI pool design").
@@ -423,6 +438,13 @@ pub struct VciPool {
     /// context has messages queued. Installed onto the contexts by
     /// `MpiProc::init`; consulted by the doorbell-gated striped sweep.
     doorbell: Arc<RxDoorbell>,
+    /// Lane-failover redirect: `redirect[i]` is the lane that now
+    /// serves traffic logically addressed to lane `i` (identity until a
+    /// failover). Checked via [`VciPool::resolve`] by every lane
+    /// resolution; the fast path is one relaxed bool load.
+    redirect: Vec<AtomicUsize>,
+    /// True once any redirect is installed.
+    any_redirect: AtomicBool,
 }
 
 /// Index of the fallback VCI (assigned to MPI_COMM_WORLD).
@@ -466,7 +488,32 @@ impl VciPool {
             rr_next: AtomicUsize::new(1),
             policy,
             doorbell: RxDoorbell::new(n),
+            redirect: (0..n).map(AtomicUsize::new).collect(),
+            any_redirect: AtomicBool::new(false),
         }
+    }
+
+    /// Resolve a lane index through the failover redirect table. The
+    /// common (no failover ever happened) path is one relaxed load.
+    #[inline]
+    pub fn resolve(&self, idx: usize) -> usize {
+        if !self.any_redirect.load(Ordering::Relaxed) {
+            return idx;
+        }
+        self.redirect[idx].load(Ordering::Acquire)
+    }
+
+    /// Install a failover redirect `from → to`. Chains collapse so a
+    /// double failover never leaves a lane pointing at a dead lane.
+    pub fn set_redirect(&self, from: usize, to: usize) {
+        assert_ne!(from, to, "lane cannot fail over to itself");
+        for r in &self.redirect {
+            if r.load(Ordering::Acquire) == from {
+                r.store(to, Ordering::Release);
+            }
+        }
+        self.redirect[from].store(to, Ordering::Release);
+        self.any_redirect.store(true, Ordering::Release);
     }
 
     /// The pool-wide rx-nonempty doorbell (one bit per VCI).
@@ -651,6 +698,20 @@ mod tests {
         let v = p.get(1);
         v.stream_set_owner(7);
         v.stream_set_owner(8);
+    }
+
+    #[test]
+    fn redirect_resolves_and_collapses_chains() {
+        let p = pool(4, VciPolicy::FirstComePool);
+        assert_eq!(p.resolve(2), 2, "identity before any failover");
+        p.set_redirect(2, 3);
+        assert_eq!(p.resolve(2), 3);
+        assert_eq!(p.resolve(3), 3);
+        // Second failover: 3 dies too; 2's redirect must follow.
+        p.set_redirect(3, 1);
+        assert_eq!(p.resolve(2), 1);
+        assert_eq!(p.resolve(3), 1);
+        assert!(!p.get(2).is_failed(), "failed flag is set by the proc, not the pool");
     }
 
     #[test]

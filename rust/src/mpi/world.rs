@@ -55,6 +55,21 @@ pub struct RunReport {
 
 static NATIVE_MEASUREMENTS: OnceLock<HostMutex<HashMap<String, f64>>> = OnceLock::new();
 
+/// Fold the fault plan's counters into the run's measurement map so chaos
+/// tests can assert on them (and replay tests compare them bit-for-bit)
+/// without reaching into the network.
+fn record_fault_stats(m: &mut HashMap<String, f64>, s: &crate::fabric::FaultStats) {
+    m.insert("fault_drops".into(), s.drops as f64);
+    m.insert("fault_dups".into(), s.dups as f64);
+    m.insert("fault_corrupts".into(), s.corrupts as f64);
+    m.insert("fault_delays".into(), s.delays as f64);
+    m.insert("fault_kill_drops".into(), s.kill_drops as f64);
+    m.insert("fault_retransmits".into(), s.retransmits as f64);
+    m.insert("fault_rel_dup_drops".into(), s.rel_dup_drops as f64);
+    m.insert("fault_rel_corrupt_drops".into(), s.rel_corrupt_drops as f64);
+    m.insert("fault_rel_reorders".into(), s.rel_reorders as f64);
+}
+
 /// Record a named measurement from inside a workload body (both backends).
 pub fn record(name: impl Into<String>, value: f64) {
     if crate::sim::in_sim() {
@@ -75,6 +90,12 @@ where
     let wall_start = std::time::Instant::now();
     let costs = Arc::new(spec.costs.clone());
     let net = Network::new(spec.fabric.clone(), spec.backend, costs.clone());
+    if let Some(spec_str) = &spec.mpi.fault_plan {
+        let plan = crate::fabric::FaultPlan::parse(spec_str).unwrap_or_else(|e| {
+            panic!("invalid vcmpi_fault_plan {spec_str:?}: {e}");
+        });
+        net.install_fault_plan(Arc::new(plan));
+    }
     let nprocs = spec.fabric.nprocs();
     let procs: Vec<Arc<MpiProc>> =
         (0..nprocs).map(|p| MpiProc::new(net.proc_fabric(p), spec.mpi.clone())).collect();
@@ -144,10 +165,14 @@ where
                 }
             }
             let r = sim.run();
+            let mut measurements = r.measurements;
+            if let Some(plan) = net.fault_plan() {
+                record_fault_stats(&mut measurements, &plan.counters.snapshot());
+            }
             RunReport {
                 outcome: r.outcome,
                 time_ns: r.end_time,
-                measurements: r.measurements,
+                measurements,
                 wall_ms: wall_start.elapsed().as_secs_f64() * 1e3,
             }
         }
@@ -185,10 +210,13 @@ where
                     panicked = Some(msg);
                 }
             }
-            let measurements = NATIVE_MEASUREMENTS
+            let mut measurements = NATIVE_MEASUREMENTS
                 .get_or_init(|| HostMutex::new(HashMap::new()))
                 .lock(LockClass::HostMeasurements)
                 .clone();
+            if let Some(plan) = net.fault_plan() {
+                record_fault_stats(&mut measurements, &plan.counters.snapshot());
+            }
             RunReport {
                 outcome: match panicked {
                     Some(m) => SimOutcome::Panicked(m),

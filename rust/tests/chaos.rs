@@ -1,0 +1,318 @@
+//! Chaos lane: deterministic fabric fault injection (`vcmpi_fault_plan`)
+//! exercised end to end. Every arm runs a seeded per-link fault schedule
+//! — drops, duplicates, corruption, reorder-delays, hard context kills —
+//! against the same exactly-once / FIFO-per-stream oracle the fault-free
+//! property tests use, and asserts the reliability counters actually
+//! fired (a chaos run that injected nothing proves nothing).
+//!
+//! Determinism contract: a `FaultPlan` rolls every decision from a
+//! SplitMix stream keyed by (seed, link, seq, attempt), so one plan
+//! string produces the same faults at the same points on every run —
+//! `chaos_replay_is_bit_for_bit` pins that down to the virtual end time
+//! and the full measurement map.
+//!
+//! Case counts scale with `PROPTEST_CASES` (CI: small on PRs, large on
+//! the nightly soak), like `proptests.rs`.
+
+use std::sync::Arc;
+
+use vcmpi::fabric::{
+    FabricConfig, FaultPlan, Interconnect, Network, Payload, RelHeader, WireMsg,
+};
+use vcmpi::mpi::{run_cluster, ClusterSpec, MpiConfig, RunReport, Src, Tag};
+use vcmpi::platform::Backend;
+use vcmpi::sim::{CostModel, SimOutcome};
+use vcmpi::util::SplitMix64;
+
+/// Seed count for one property: `PROPTEST_CASES` if set, else `default`.
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Run the standard chaos storm under `plan`: numbered p2p streams
+/// (exactly-once, FIFO per stream — the oracle is the in-order assert),
+/// an allreduce against the host-computed sum, and a closing barrier.
+fn chaos_storm(plan: &str, mut cfg: MpiConfig, nprocs: usize, msgs: usize) -> RunReport {
+    cfg.fault_plan = Some(plan.to_string());
+    let spec = ClusterSpec::new(
+        FabricConfig {
+            interconnect: Interconnect::Opa,
+            nodes: nprocs,
+            procs_per_node: 1,
+            max_contexts_per_node: 64,
+        },
+        cfg,
+        1,
+    );
+    run_cluster(spec, move |proc, _t| {
+        let world = proc.comm_world();
+        let me = proc.rank();
+        let n = proc.nprocs();
+        // Deterministic per-rank payload sizes spanning immediate + eager.
+        let mut rng = SplitMix64::new(0xC4A0 ^ (me as u64));
+        let mut sreqs = Vec::new();
+        for dst in 0..n {
+            if dst == me {
+                continue;
+            }
+            for k in 0..msgs {
+                let size = 8 + rng.gen_usize(1500);
+                let mut data = vec![(k % 251) as u8; size];
+                data[0] = k as u8;
+                sreqs.push(proc.isend(&world, dst, 5, &data));
+            }
+        }
+        for src in 0..n {
+            if src == me {
+                continue;
+            }
+            for k in 0..msgs {
+                let got = proc.recv(&world, Src::Rank(src), Tag::Value(5));
+                assert_eq!(
+                    got[0], k as u8,
+                    "stream {src}->{me} lost/duplicated/reordered under faults"
+                );
+            }
+        }
+        proc.waitall(sreqs);
+        // A collective through the same faulted fabric.
+        let mut data: Vec<f32> = (0..64).map(|i| (me * 100 + i) as f32).collect();
+        proc.allreduce_f32(&world, &mut data);
+        for (i, &v) in data.iter().enumerate() {
+            let want: f32 = (0..n).map(|r| (r * 100 + i) as f32).sum();
+            assert!((v - want).abs() < 1e-3, "allreduce[{i}] diverged under faults");
+        }
+        proc.barrier(&world);
+    })
+}
+
+fn stat(r: &RunReport, key: &str) -> f64 {
+    *r.measurements.get(key).unwrap_or_else(|| {
+        panic!("fault counter `{key}` missing from measurements: a plan was installed")
+    })
+}
+
+/// The determinism pin: the same seeded plan twice must produce an
+/// identical run — same outcome, bit-identical virtual end time, and an
+/// identical measurement map including every fault counter.
+#[test]
+fn chaos_replay_is_bit_for_bit() {
+    let plan = "seed=42,drop=40,dup=15,corrupt=20,delay=25,delay_ns=30000";
+    let run = || chaos_storm(plan, MpiConfig::optimized(6), 3, 20);
+    let a = run();
+    let b = run();
+    assert_eq!(a.outcome, SimOutcome::Completed);
+    assert_eq!(b.outcome, SimOutcome::Completed);
+    assert_eq!(a.time_ns, b.time_ns, "virtual end time must replay bit-for-bit");
+    assert_eq!(a.measurements, b.measurements, "measurements (incl. fault counters) must replay");
+    // A replay of a fault-free run proves nothing.
+    assert!(stat(&a, "fault_drops") > 0.0, "plan never dropped a frame");
+    assert!(stat(&a, "fault_corrupts") > 0.0, "plan never corrupted a frame");
+    assert!(stat(&a, "fault_retransmits") > 0.0, "nothing was ever retransmitted");
+}
+
+/// Drop-heavy arm: 8% of frames (plus reorder-delays) vanish on first
+/// transmission; the retransmit path must recover every one, and the
+/// storm's exactly-once / FIFO oracle must hold.
+#[test]
+fn chaos_drop_heavy_storm_completes() {
+    let r = chaos_storm("seed=11,drop=80,delay=40", MpiConfig::optimized(6), 2, 40);
+    assert_eq!(r.outcome, SimOutcome::Completed);
+    assert!(stat(&r, "fault_drops") > 0.0);
+    assert!(stat(&r, "fault_delays") > 0.0);
+    assert!(stat(&r, "fault_retransmits") > 0.0, "drops must force retransmissions");
+}
+
+/// Corrupt-heavy arm: bit-flipped frames must be caught by the checksum
+/// and dropped-and-counted (never panicking a decoder), duplicates must
+/// be deduplicated, and the oracle must hold.
+#[test]
+fn chaos_corrupt_heavy_storm_completes() {
+    let r = chaos_storm("seed=22,corrupt=80,dup=40", MpiConfig::optimized(6), 2, 40);
+    assert_eq!(r.outcome, SimOutcome::Completed);
+    assert!(stat(&r, "fault_corrupts") > 0.0);
+    assert!(stat(&r, "fault_dups") > 0.0);
+    assert!(
+        stat(&r, "fault_rel_corrupt_drops") > 0.0,
+        "corrupted frames must be dropped by the receiver's checksum"
+    );
+}
+
+/// Context-kill arm: proc 1's hardware context 2 is dead from the first
+/// instant, under background drops, on a *striped* pool (so the dead
+/// lane provably carries traffic). The run must complete via transparent
+/// lane failover — quarantine, state migration, redirect — and the
+/// Table-1 failover counter must show it happened.
+#[test]
+fn chaos_context_kill_fails_over() {
+    let before = vcmpi::mpi::instrument::proc_counters().failovers;
+    let r = chaos_storm("seed=33,drop=40,kill=1:2@1", MpiConfig::striped(6), 2, 40);
+    assert_eq!(r.outcome, SimOutcome::Completed, "a dead lane must fail over, not hang");
+    let after = vcmpi::mpi::instrument::proc_counters().failovers;
+    assert!(after > before, "completion without a recorded lane failover");
+    assert!(stat(&r, "fault_drops") > 0.0);
+}
+
+/// Replay of the kill arm: failover decisions (survivor choice, migration
+/// order) are part of the deterministic schedule too.
+#[test]
+fn chaos_context_kill_replay_is_bit_for_bit() {
+    let run = || chaos_storm("seed=77,drop=30,kill=0:1@1", MpiConfig::striped(4), 2, 24);
+    let a = run();
+    let b = run();
+    assert_eq!(a.outcome, SimOutcome::Completed);
+    assert_eq!(a.time_ns, b.time_ns, "failover must not break replay determinism");
+    assert_eq!(a.measurements, b.measurements);
+}
+
+/// Wire-decoder fuzz (receiver side, fabric level): a storm of forged
+/// and corrupted frames — wrong checksums, bit-flipped payloads, stale
+/// and future sequence numbers, duplicated valid frames, forged NIC
+/// `RelAck`s with garbage channel ids — is delivered straight into a
+/// context and polled through the reliable-delivery admission point.
+/// The decoder must never panic, must admit exactly the valid frames in
+/// sequence order, and must count every drop.
+#[test]
+fn prop_forged_frames_drop_and_count_never_panic() {
+    for seed in 0..cases(60) {
+        let mut rng = SplitMix64::new(0xF0A6 ^ seed.wrapping_mul(0x9E37));
+        let net = Network::new(
+            FabricConfig {
+                interconnect: Interconnect::Opa,
+                nodes: 2,
+                procs_per_node: 1,
+                max_contexts_per_node: 8,
+            },
+            Backend::Native,
+            Arc::new(CostModel::default()),
+        );
+        net.install_fault_plan(Arc::new(FaultPlan::parse("seed=1").expect("plan parses")));
+        let tx = net.proc_fabric(0);
+        let rx = net.proc_fabric(1);
+        let (src_ctx, _) = tx.open_context().expect("tx context");
+        let (dst_idx, dst_ctx) = rx.open_context().expect("rx context");
+
+        let payload_for = |seq: u64| Payload::RmaPut {
+            win: 7,
+            offset: seq as usize,
+            data: vec![seq as u8; 16],
+            flush_handle: seq,
+            lane: None,
+        };
+        let frame = |seq: u64, checksum: u64, payload: Payload| WireMsg {
+            arrival: 0,
+            src_proc: 0,
+            src_ctx,
+            rel: Some(RelHeader { seq, checksum, ack: 0, chan_dst_ctx: dst_idx as u32 }),
+            payload,
+        };
+
+        let nvalid = 1 + rng.gen_usize(20) as u64;
+        let mut frames: Vec<WireMsg> = Vec::new();
+        for seq in 1..=nvalid {
+            let p = payload_for(seq);
+            frames.push(frame(seq, p.digest(), p));
+        }
+        // Duplicates of valid frames (same correct header).
+        let ndup = rng.gen_usize(6);
+        for _ in 0..ndup {
+            let seq = 1 + rng.gen_usize(nvalid as usize) as u64;
+            let p = payload_for(seq);
+            frames.push(frame(seq, p.digest(), p));
+        }
+        // Corrupt class 1: checksum header trashed.
+        let nbadsum = rng.gen_usize(6);
+        for _ in 0..nbadsum {
+            let seq = 1 + rng.gen_usize(nvalid as usize + 5) as u64;
+            let p = payload_for(seq);
+            let bad = p.digest() ^ (rng.next_u64() | 1);
+            frames.push(frame(seq, bad, p));
+        }
+        // Corrupt class 2: payload bit flipped in flight, checksum stale.
+        let nbadbit = rng.gen_usize(6);
+        for _ in 0..nbadbit {
+            let seq = 1 + rng.gen_usize(nvalid as usize + 5) as u64;
+            let p = payload_for(seq);
+            let good = p.digest();
+            let mut flipped = p;
+            assert!(flipped.flip_data_bit(rng.gen_usize(16 * 8)), "RmaPut carries data");
+            frames.push(frame(seq, good, flipped));
+        }
+        // Forged NIC-level acks with garbage channel ids (rel-exempt).
+        let nack = rng.gen_usize(6);
+        for _ in 0..nack {
+            frames.push(WireMsg {
+                arrival: 0,
+                src_proc: 0,
+                src_ctx,
+                rel: None,
+                payload: Payload::RelAck {
+                    ack: rng.next_u64() % 64,
+                    chan_src_ctx: (rng.next_u64() % 8) as u32,
+                    chan_dst_ctx: (rng.next_u64() % 8) as u32,
+                },
+            });
+        }
+        rng.shuffle(&mut frames);
+        for f in frames {
+            dst_ctx.deliver(f);
+        }
+
+        // Poll the whole queue through the admission point: must never
+        // panic, and must admit exactly seqs 1..=nvalid in order.
+        let mut admitted = Vec::new();
+        while let Some(m) = rx.poll_ctx(dst_idx) {
+            match m.payload {
+                Payload::RmaPut { flush_handle, data, .. } => {
+                    assert_eq!(data, vec![flush_handle as u8; 16], "admitted frame mangled");
+                    admitted.push(flush_handle);
+                }
+                other => panic!("seed {seed}: decoder leaked a non-data frame: {other:?}"),
+            }
+        }
+        let want: Vec<u64> = (1..=nvalid).collect();
+        assert_eq!(admitted, want, "seed {seed}: admission diverged from the seq oracle");
+        let s = net.fault_plan().expect("plan installed").counters.snapshot();
+        assert_eq!(
+            s.rel_corrupt_drops,
+            (nbadsum + nbadbit) as u64,
+            "seed {seed}: every corrupt frame must be counted"
+        );
+        assert_eq!(s.rel_dup_drops, ndup as u64, "seed {seed}: every duplicate counted");
+    }
+}
+
+/// The zero-cost claim, structurally: without a `vcmpi_fault_plan` no
+/// reliability state exists, no frame carries a rel header, and no fault
+/// counters appear in the measurement map.
+#[test]
+fn fault_free_runs_carry_no_reliability_state() {
+    let r = chaos_storm_free();
+    assert_eq!(r.outcome, SimOutcome::Completed);
+    assert!(
+        !r.measurements.keys().any(|k| k.starts_with("fault_")),
+        "fault counters recorded without a fault plan"
+    );
+}
+
+fn chaos_storm_free() -> RunReport {
+    let spec = ClusterSpec::new(
+        FabricConfig {
+            interconnect: Interconnect::Opa,
+            nodes: 2,
+            procs_per_node: 1,
+            max_contexts_per_node: 64,
+        },
+        MpiConfig::optimized(4),
+        1,
+    );
+    run_cluster(spec, |proc, _t| {
+        let world = proc.comm_world();
+        let peer = 1 - proc.rank();
+        let sreq = proc.isend(&world, peer, 1, &[9u8; 64]);
+        let got = proc.recv(&world, Src::Rank(peer), Tag::Value(1));
+        assert_eq!(got, vec![9u8; 64]);
+        proc.wait(sreq);
+        proc.barrier(&world);
+    })
+}

@@ -496,3 +496,54 @@ fn exclusive_lock_contention_serializes_increments_under_striped_storm() {
     });
     assert_eq!(r.outcome, SimOutcome::Completed);
 }
+
+#[test]
+fn context_hard_fail_mid_storm_completes_via_failover() {
+    // Robustness companion to the Fig. 9 cases: instead of a progress
+    // policy starving a lane, the *hardware* takes one away. Proc 1's
+    // context 3 hard-fails at t = 150 us — mid-storm, with eager frames,
+    // acks and reorder state in flight on that lane — under a background
+    // drop plan that keeps the retransmit path busy at the same time.
+    // The run must complete (quarantine the lane, migrate its state to a
+    // survivor, redirect in-flight frames, replay the unacked window) and
+    // the Table-1 failover counter must show the recovery actually ran;
+    // completion-by-luck with a silently idle dead lane would not count.
+    let kill_at_ns: u64 = 150_000;
+    let mut cfg = MpiConfig::striped(6);
+    cfg.fault_plan = Some(format!("seed=99,drop=30,kill=1:3@{kill_at_ns}"));
+    let mut spec = ClusterSpec::new(fabric(Interconnect::Opa), cfg, 3);
+    spec.time_limit = Some(60_000_000_000); // 60 virtual s: storm + recovery
+    let failovers_before = vcmpi::mpi::instrument::proc_counters().failovers;
+    let r = run_cluster(spec, |proc, t| {
+        let world = proc.comm_world();
+        let peer = proc.rank() ^ 1;
+        // Tag-disjoint striped streams per thread, long enough to
+        // straddle the kill time comfortably on every lane.
+        let payload = vec![t as u8; 768];
+        for k in 0..96u64 {
+            let sr = proc.isend(&world, peer, t as i32, &payload);
+            let got = proc.recv(&world, Src::Rank(peer), Tag::Value(t as i32));
+            assert_eq!(got.len(), 768, "storm payload truncated (iteration {k})");
+            assert!(got.iter().all(|&b| b == t as u8), "storm payload mangled");
+            proc.wait(sr);
+        }
+        proc.barrier(&world);
+    });
+    assert_eq!(
+        r.outcome,
+        SimOutcome::Completed,
+        "a context hard-fail mid-storm must fail over, not deadlock"
+    );
+    assert!(
+        r.time_ns > kill_at_ns,
+        "run ended before the scheduled kill ({} <= {kill_at_ns}): not mid-storm",
+        r.time_ns
+    );
+    let failovers_after = vcmpi::mpi::instrument::proc_counters().failovers;
+    assert!(
+        failovers_after > failovers_before,
+        "completed without recording a lane failover — the dead lane was never recovered"
+    );
+    let drops = r.measurements.get("fault_drops").copied().unwrap_or(0.0);
+    assert!(drops > 0.0, "background drop plan never fired");
+}
